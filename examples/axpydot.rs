@@ -1,0 +1,34 @@
+//! The paper's flagship composition (Fig. 1): axpydot, β = zᵀu with
+//! z = w − αv, as an on-chip dataflow pipeline vs the non-dataflow
+//! two-design variant — reproducing the ~2× pipelining win of Fig. 3.
+//!
+//! Run: `cargo run --release --example axpydot`
+
+use aieblas::coordinator::{AieBlas, Config};
+use aieblas::spec::Spec;
+
+fn main() -> anyhow::Result<()> {
+    aieblas::init();
+    let system = AieBlas::new(Config::default())?;
+
+    println!("axpydot: beta = (w - alpha*v)^T u   [paper Fig. 1 / Fig. 3]\n");
+    println!("{:>10}  {:>14}  {:>14}  {:>8}", "n", "w/ DF", "w/o DF", "speedup");
+    for exp in [14usize, 16, 18, 20] {
+        let n = 1 << exp;
+        let df = system.run_axpydot(n, true)?;
+        let nodf = system.run_axpydot(n, false)?;
+        println!(
+            "{:>10}  {:>11.3} ms  {:>11.3} ms  {:>7.2}x",
+            n,
+            df.makespan_s * 1e3,
+            nodf.makespan_s * 1e3,
+            nodf.makespan_s / df.makespan_s
+        );
+    }
+
+    // numerics through the fused PJRT artifact (the dataflow analog at L1:
+    // z never leaves the chip / the kernel).
+    let rep = system.run_spec(&Spec::axpydot_dataflow(65536, 2.0))?;
+    println!("\ndataflow design details:\n{}", rep.summary());
+    Ok(())
+}

@@ -1,0 +1,112 @@
+//! End-to-end driver: the full AIEBLAS system on the paper's entire
+//! evaluation (Fig. 3), proving all layers compose:
+//!
+//!   L1/L2  Pallas kernels -> JAX -> HLO artifacts   (make artifacts)
+//!   L3     spec -> codegen -> graph -> place/route -> DES simulation
+//!   rt     PJRT executes the HLO artifacts; outputs checked against the
+//!          Rust reference for every routine/size in the sweep
+//!
+//! Prints the three Fig. 3 panels (axpy, gemv, axpydot) with the paper's
+//! variants, the §IV claim checks, and a numerics table. Results are
+//! recorded in EXPERIMENTS.md.
+//!
+//! Run: `cargo run --release --example e2e_fig3`
+
+use aieblas::blas::RoutineKind;
+use aieblas::coordinator::{experiments, AieBlas, Config};
+use aieblas::runtime::Backend;
+
+fn main() -> anyhow::Result<()> {
+    aieblas::init();
+    let system = AieBlas::new(Config::default())?;
+
+    println!("== artifacts ==");
+    println!(
+        "{} precompiled HLO modules under {:?}\n",
+        system.executor().manifest().len(),
+        system.config.artifacts_dir
+    );
+
+    // --- Fig. 3 panels -----------------------------------------------------
+    let axpy = experiments::single_routine_panel(
+        &system,
+        RoutineKind::Axpy,
+        &experiments::VEC_SIZES,
+    )?;
+    println!("{}", experiments::panel_table("axpy", &axpy).render());
+
+    let gemv = experiments::single_routine_panel(
+        &system,
+        RoutineKind::Gemv,
+        &experiments::MAT_SIZES,
+    )?;
+    println!("{}", experiments::panel_table("gemv", &gemv).render());
+
+    let axpydot = experiments::axpydot_panel(&system, &experiments::VEC_SIZES)?;
+    println!("{}", experiments::panel_table("axpydot", &axpydot).render());
+
+    // --- §IV claims ----------------------------------------------------------
+    println!("== paper claims (§IV) ==");
+    let mut ok = true;
+    for &n in &experiments::VEC_SIZES {
+        let pl = experiments::lookup(&axpy, n, "aie (PL)").unwrap();
+        let nopl = experiments::lookup(&axpy, n, "aie (no PL)").unwrap();
+        let cpu = experiments::lookup(&axpy, n, "cpu").unwrap();
+        let df = experiments::lookup(&axpydot, n, "aie (w/ DF)").unwrap();
+        let nodf = experiments::lookup(&axpydot, n, "aie (w/o DF)").unwrap();
+        let c1 = nopl < pl;
+        let c2 = (1.5..3.5).contains(&(nodf / df));
+        let c3 = cpu < pl;
+        ok &= c1 && c2 && c3;
+        println!(
+            "n={n:>8}: C1 no-PL<PL {}  C2 DF speedup {:.2}x {}  C3 CPU {:.1}x faster {}",
+            if c1 { "OK" } else { "FAIL" },
+            nodf / df,
+            if c2 { "OK" } else { "FAIL" },
+            pl / cpu,
+            if c3 { "OK" } else { "FAIL" },
+        );
+    }
+
+    // --- numerics through the real artifacts ---------------------------------
+    println!("\n== numerics (PJRT artifacts vs Rust reference) ==");
+    let mut pjrt_count = 0;
+    for kind in [
+        RoutineKind::Axpy,
+        RoutineKind::Dot,
+        RoutineKind::Gemv,
+        RoutineKind::Axpydot,
+        RoutineKind::Nrm2,
+        RoutineKind::Asum,
+        RoutineKind::Scal,
+        RoutineKind::Iamax,
+    ] {
+        let sizes = system.executor().manifest().sizes_for(kind.name());
+        let Some(&n) = sizes.iter().find(|&&s| s >= 16384).or(sizes.first()) else {
+            println!("  {:8} (no artifact; run `make artifacts`)", kind.name());
+            continue;
+        };
+        let num = system.run_numeric(kind, n)?;
+        if num.backend == Backend::Pjrt {
+            pjrt_count += 1;
+        }
+        println!(
+            "  {:8} n={n:>7}  backend {:?}  max rel err {:.2e}",
+            kind.name(),
+            num.backend,
+            num.max_rel_err
+        );
+        assert!(num.max_rel_err < 1e-2, "{} numerics out of tolerance", kind.name());
+    }
+
+    println!(
+        "\nE2E {}: {} routines served by PJRT artifacts; claims {}",
+        if ok { "PASS" } else { "FAIL" },
+        pjrt_count,
+        if ok { "hold" } else { "FAILED" }
+    );
+    if !ok {
+        std::process::exit(1);
+    }
+    Ok(())
+}

@@ -1,0 +1,39 @@
+//! gemv across matrix sizes with placement hints — the Fig. 3 gemv panel
+//! plus the §III placement-constraint feature.
+//!
+//! Run: `cargo run --release --example gemv_sweep`
+
+use aieblas::blas::RoutineKind;
+use aieblas::coordinator::{experiments, AieBlas, Config};
+use aieblas::spec::{DataSource, Placement, Spec};
+
+fn main() -> anyhow::Result<()> {
+    aieblas::init();
+    let system = AieBlas::new(Config::default())?;
+
+    // Fig. 3 gemv panel: PL vs no-PL vs CPU model.
+    let rows = experiments::single_routine_panel(
+        &system,
+        RoutineKind::Gemv,
+        &experiments::MAT_SIZES,
+    )?;
+    println!("{}", experiments::panel_table("gemv", &rows).render());
+
+    // placement hints (paper §III): pin the kernel near the shim, compare
+    // the router's view.
+    for (label, placement) in [
+        ("auto", None),
+        ("pinned (0,0)", Some(Placement { col: 0, row: 0 })),
+        ("pinned far (49,7)", Some(Placement { col: 49, row: 7 })),
+    ] {
+        let mut spec = Spec::single(RoutineKind::Gemv, "mv", 256, DataSource::Pl);
+        spec.routines[0].placement = placement;
+        let rep = system.run_spec_sim_only(&spec)?;
+        println!(
+            "gemv n=256 {label:18} -> {:.3} ms ({} NoC hops)",
+            rep.makespan_s * 1e3,
+            rep.noc_hops
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,93 @@
+"""AOT driver: lower every registered routine/size to artifacts/.
+
+Emits one ``<routine>_n<size>.hlo.txt`` per (routine, size) pair plus a
+``manifest.json`` the Rust runtime uses to locate artifacts
+(rust/src/runtime/manifest.rs). Python runs ONCE here — never on the
+request path; after ``make artifacts`` the Rust binary is self-contained.
+
+HLO *text* (NOT ``lowered.compile()`` / proto ``.serialize()``) is the
+interchange format — see model.lower_hlo_text for why.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+from . import model
+
+
+def artifact_key(name: str, size: int) -> str:
+    return f"{name}_n{size}"
+
+
+def input_signature(example_args) -> list[dict]:
+    return [
+        {"shape": list(a.shape), "dtype": str(a.dtype)} for a in example_args
+    ]
+
+
+def build_all(out_dir: str, *, sizes_cap: int | None = None,
+              routines: list[str] | None = None) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    names = routines or sorted(model.REGISTRY)
+    for name in names:
+        rdef = model.REGISTRY[name]
+        sizes = list(rdef.aot_sizes)
+        if sizes_cap is not None:
+            sizes = [s for s in sizes if s <= sizes_cap]
+        for size in sizes:
+            t0 = time.time()
+            text = model.lower_hlo_text(name, size)
+            fname = artifact_key(name, size) + ".hlo.txt"
+            path = os.path.join(out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            import jax
+            fn, example_args = model.build(name, size)
+            out_shapes = jax.eval_shape(fn, *example_args)
+            entries.append({
+                "key": artifact_key(name, size),
+                "routine": name,
+                "size": size,
+                "file": fname,
+                "inputs": input_signature(example_args),
+                "num_outputs": len(out_shapes),
+                "doc": rdef.doc,
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            })
+            print(f"  {artifact_key(name, size):24s} "
+                  f"{len(text) / 1024:8.1f} KiB  {time.time() - t0:5.2f}s",
+                  file=sys.stderr)
+    manifest = {
+        "version": 1,
+        "generator": "aieblas python/compile/aot.py",
+        "interchange": "hlo-text",
+        "entries": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts",
+                   help="output directory for HLO artifacts + manifest")
+    p.add_argument("--max-size", type=int, default=None,
+                   help="cap precompiled sizes (faster dev builds)")
+    p.add_argument("--routines", nargs="*", default=None,
+                   help="subset of routines to build")
+    args = p.parse_args()
+    manifest = build_all(args.out, sizes_cap=args.max_size,
+                         routines=args.routines)
+    print(f"wrote {len(manifest['entries'])} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

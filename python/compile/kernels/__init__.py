@@ -1,0 +1,19 @@
+"""L1: AIEBLAS Pallas kernels (window-tiled, interpret=True).
+
+One module per BLAS level plus the composed dataflow routines; ``ref``
+holds the pure-jnp oracles.
+"""
+
+from . import ref  # noqa: F401
+from .common import DEFAULT_WINDOW, F32_LANES, VECTOR_BITS, pick_window  # noqa: F401
+from .composed import axpydot  # noqa: F401
+from .level1 import asum, axpby, axpy, copy, dot, iamax, nrm2, rot, scal  # noqa: F401
+from .level2 import gemv, ger  # noqa: F401
+from .level3 import gemm  # noqa: F401
+
+__all__ = [
+    "ref",
+    "axpy", "axpby", "rot", "scal", "copy", "dot", "nrm2", "asum", "iamax",
+    "gemv", "ger", "gemm", "axpydot",
+    "DEFAULT_WINDOW", "VECTOR_BITS", "F32_LANES", "pick_window",
+]

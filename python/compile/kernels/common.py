@@ -1,0 +1,114 @@
+"""Shared helpers for the AIEBLAS Pallas kernels.
+
+The AIE analog (DESIGN.md SS2): a *window* is a block staged into the 32 KB
+tile-local memory; we express the same HBM<->local schedule with Pallas
+``BlockSpec``s. Kernels are always lowered with ``interpret=True`` — the CPU
+PJRT client cannot execute Mosaic custom-calls, and correctness (not
+wallclock) is the signal we take from this path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default window: 65536 f32 elements = 256 KB per buffer. The hardware
+# adaptation rule (DESIGN.md SS2): Pallas windows tile for *VMEM* (~16 MB),
+# not the AIE's 32 KB local memory — the 32 KB constraint lives in the L3
+# simulator, while the L1 kernel should use the TPU-appropriate block size.
+# 3 input buffers x 256 KB double-buffered ~ 1.5 MB, comfortably in VMEM,
+# and n = 2^20 lowers to 16 grid steps instead of 256 (PJRT hot-path time
+# dropped 6x; EXPERIMENTS.md SSPerf L2).
+DEFAULT_WINDOW = 65536
+
+# AIE vector datapath is 512 bits = 16 f32 lanes; kept for documentation of
+# the lane-utilization estimates in DESIGN.md §7 (Pallas vectorizes blocks
+# itself, so lanes are implicit).
+VECTOR_BITS = 512
+F32_LANES = VECTOR_BITS // 32
+
+
+def cdiv(a: int, b: int) -> int:
+    """Ceiling division."""
+    return -(-a // b)
+
+
+def pick_window(n: int, window: int | None = None) -> int:
+    """Choose a window (block) size that divides ``n``.
+
+    AIEBLAS requires the window to divide the problem size (the generated
+    ADF kernels iterate whole windows); we enforce the same invariant and
+    shrink to the largest divisor <= requested window.
+    """
+    w = min(window or DEFAULT_WINDOW, n)
+    while n % w != 0:
+        w -= 1
+    return max(w, 1)
+
+
+def scalar_spec():
+    """BlockSpec for a broadcast scalar passed as a shape-(1,) array."""
+    return pl.BlockSpec((1,), lambda *_: (0,))
+
+
+def vec_spec(window: int):
+    """BlockSpec for a 1-D vector tiled into windows over a 1-D grid."""
+    return pl.BlockSpec((window,), lambda i: (i,))
+
+
+def reduction_out_spec():
+    """BlockSpec for a shape-(1,) accumulator output shared by all steps."""
+    return pl.BlockSpec((1,), lambda *_: (0,))
+
+
+def pallas_call_1d(kernel, n: int, window: int, num_in: int, dtype,
+                   *, scalars: int = 0, out_reduce: bool = False):
+    """Build a 1-D windowed ``pallas_call``.
+
+    ``scalars`` leading inputs are shape-(1,) broadcast scalars; the
+    remaining ``num_in`` inputs are length-``n`` vectors. The output is
+    either a length-``n`` vector (elementwise) or a shape-(1,) reduction.
+    """
+    grid = (cdiv(n, window),)
+    in_specs = [scalar_spec() for _ in range(scalars)]
+    in_specs += [vec_spec(window) for _ in range(num_in)]
+    if out_reduce:
+        out_spec = reduction_out_spec()
+        out_shape = jax.ShapeDtypeStruct((1,), dtype)
+    else:
+        out_spec = vec_spec(window)
+        out_shape = jax.ShapeDtypeStruct((n,), dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=out_shape,
+        interpret=True,
+    )
+
+
+def first_step():
+    """Predicate: true on the first grid step (for accumulator init)."""
+    return pl.program_id(0) == 0
+
+
+__all__ = [
+    "DEFAULT_WINDOW",
+    "VECTOR_BITS",
+    "F32_LANES",
+    "cdiv",
+    "pick_window",
+    "scalar_spec",
+    "vec_spec",
+    "reduction_out_spec",
+    "pallas_call_1d",
+    "first_step",
+    "jnp",
+    "jax",
+    "pl",
+    "functools",
+]

@@ -1,0 +1,51 @@
+"""Composed (dataflow) AIEBLAS routines.
+
+``axpydot`` (paper §III, Fig. 1): beta = z^T u with z = w - alpha*v. On the
+AIE this is an axpy kernel streaming its output window directly into a dot
+kernel over the NoC — never touching off-chip memory. The Pallas analog is a
+single *fused* kernel: the z window lives only in local memory (VMEM) and
+the dot partial accumulates across the grid sweep.
+
+The non-dataflow variant (two separate HLO modules with a host round-trip
+for z) is intentionally NOT fused here — the Rust coordinator materializes
+it from the standalone ``axpy`` and ``dot`` artifacts, mirroring the paper's
+"w/o DF" configuration that bounces z through DDR.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import first_step, pick_window, reduction_out_spec, scalar_spec, vec_spec
+
+
+def _axpydot_kernel(alpha_ref, w_ref, v_ref, u_ref, o_ref):
+    # axpy stage: z window, produced and consumed entirely on-chip.
+    z = w_ref[...] - alpha_ref[0] * v_ref[...]
+    # dot stage: consumes the z window immediately (the DF edge).
+    partial = jnp.sum(z * u_ref[...])
+
+    @pl.when(first_step())
+    def _init():
+        o_ref[0] = partial
+
+    @pl.when(jnp.logical_not(first_step()))
+    def _acc():
+        o_ref[0] += partial
+
+
+def axpydot(alpha, w, v, u, *, window=None):
+    """beta = (w - alpha*v)^T u, fused dataflow implementation."""
+    n = w.shape[0]
+    ww = pick_window(n, window)
+    call = pl.pallas_call(
+        _axpydot_kernel,
+        grid=(n // ww,),
+        in_specs=[scalar_spec(), vec_spec(ww), vec_spec(ww), vec_spec(ww)],
+        out_specs=reduction_out_spec(),
+        out_shape=jax.ShapeDtypeStruct((1,), w.dtype),
+        interpret=True,
+    )
+    return call(jnp.reshape(alpha, (1,)).astype(w.dtype), w, v, u)[0]

@@ -1,0 +1,232 @@
+"""Level-1 AIEBLAS routines as window-tiled Pallas kernels.
+
+Each routine mirrors the structure of the generated ADF kernel (see
+rust/src/codegen/aie_kernel.rs): the input vectors arrive window by window
+(BlockSpec blocks = ADF windows staged in tile-local memory), the body is a
+vectorized loop over the window, and reductions carry an accumulator across
+grid steps (the ADF analog keeps it in a register across window
+acquisitions).
+
+All kernels are out-of-place, like AIEBLAS routines, because dataflow
+composition needs distinct input/output streams.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import first_step, pallas_call_1d, pick_window
+
+
+# --------------------------------------------------------------------------
+# elementwise kernels
+# --------------------------------------------------------------------------
+
+def _axpy_kernel(alpha_ref, x_ref, y_ref, o_ref):
+    o_ref[...] = alpha_ref[0] * x_ref[...] + y_ref[...]
+
+
+def axpy(alpha, x, y, *, window=None):
+    """z = alpha*x + y, windowed over a 1-D grid."""
+    n = x.shape[0]
+    w = pick_window(n, window)
+    call = pallas_call_1d(_axpy_kernel, n, w, num_in=2, dtype=x.dtype,
+                          scalars=1)
+    return call(jnp.reshape(alpha, (1,)).astype(x.dtype), x, y)
+
+
+def _scal_kernel(alpha_ref, x_ref, o_ref):
+    o_ref[...] = alpha_ref[0] * x_ref[...]
+
+
+def scal(alpha, x, *, window=None):
+    """z = alpha*x."""
+    n = x.shape[0]
+    w = pick_window(n, window)
+    call = pallas_call_1d(_scal_kernel, n, w, num_in=1, dtype=x.dtype,
+                          scalars=1)
+    return call(jnp.reshape(alpha, (1,)).astype(x.dtype), x)
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def copy(x, *, window=None):
+    """z = x (window-by-window move, the ADF passthrough kernel)."""
+    n = x.shape[0]
+    w = pick_window(n, window)
+    call = pallas_call_1d(_copy_kernel, n, w, num_in=1, dtype=x.dtype)
+    return call(x)
+
+
+# --------------------------------------------------------------------------
+# reduction kernels
+# --------------------------------------------------------------------------
+
+def _dot_kernel(x_ref, y_ref, o_ref):
+    partial = jnp.sum(x_ref[...] * y_ref[...])
+
+    @pl.when(first_step())
+    def _init():
+        o_ref[0] = partial
+
+    @pl.when(jnp.logical_not(first_step()))
+    def _acc():
+        o_ref[0] += partial
+
+
+def dot(x, y, *, window=None):
+    """x^T y as a windowed reduction; returns a scalar."""
+    n = x.shape[0]
+    w = pick_window(n, window)
+    call = pallas_call_1d(_dot_kernel, n, w, num_in=2, dtype=x.dtype,
+                          out_reduce=True)
+    return call(x, y)[0]
+
+
+def _sumsq_kernel(x_ref, o_ref):
+    xb = x_ref[...]
+    partial = jnp.sum(xb * xb)
+
+    @pl.when(first_step())
+    def _init():
+        o_ref[0] = partial
+
+    @pl.when(jnp.logical_not(first_step()))
+    def _acc():
+        o_ref[0] += partial
+
+
+def nrm2(x, *, window=None):
+    """||x||_2 — windowed sum of squares, sqrt applied at L2.
+
+    The generated ADF kernel accumulates the sum of squares on-tile and the
+    final sqrt runs once on the last window; lowering the sqrt outside the
+    pallas_call produces the identical fused HLO.
+    """
+    n = x.shape[0]
+    w = pick_window(n, window)
+    call = pallas_call_1d(_sumsq_kernel, n, w, num_in=1, dtype=x.dtype,
+                          out_reduce=True)
+    return jnp.sqrt(call(x)[0])
+
+
+def _asum_kernel(x_ref, o_ref):
+    partial = jnp.sum(jnp.abs(x_ref[...]))
+
+    @pl.when(first_step())
+    def _init():
+        o_ref[0] = partial
+
+    @pl.when(jnp.logical_not(first_step()))
+    def _acc():
+        o_ref[0] += partial
+
+
+def asum(x, *, window=None):
+    """sum |x_i|."""
+    n = x.shape[0]
+    w = pick_window(n, window)
+    call = pallas_call_1d(_asum_kernel, n, w, num_in=1, dtype=x.dtype,
+                          out_reduce=True)
+    return call(x)[0]
+
+
+def _iamax_kernel(x_ref, val_ref, idx_ref):
+    """Running (max |x|, first index) pair across windows."""
+    xb = jnp.abs(x_ref[...])
+    local_idx = jnp.argmax(xb).astype(jnp.int32)
+    local_val = xb[local_idx]
+    w = x_ref.shape[0]
+    global_idx = (pl.program_id(0) * w + local_idx).astype(jnp.int32)
+
+    @pl.when(first_step())
+    def _init():
+        val_ref[0] = local_val
+        idx_ref[0] = global_idx
+
+    @pl.when(jnp.logical_not(first_step()))
+    def _acc():
+        # strict > keeps the FIRST maximal index, per BLAS ixamax.
+        better = local_val > val_ref[0]
+        val_ref[0] = jnp.where(better, local_val, val_ref[0])
+        idx_ref[0] = jnp.where(better, global_idx, idx_ref[0])
+
+
+def iamax(x, *, window=None):
+    """First index of the element with maximum magnitude."""
+    n = x.shape[0]
+    w = pick_window(n, window)
+    grid = (n // w,)
+    call = pl.pallas_call(
+        _iamax_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((w,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1,), x.dtype),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        interpret=True,
+    )
+    _, idx = call(x)
+    return idx[0]
+
+
+def _axpby_kernel(alpha_ref, beta_ref, x_ref, y_ref, o_ref):
+    o_ref[...] = alpha_ref[0] * x_ref[...] + beta_ref[0] * y_ref[...]
+
+
+def axpby(alpha, beta, x, y, *, window=None):
+    """z = alpha*x + beta*y (extended-BLAS axpby)."""
+    n = x.shape[0]
+    w = pick_window(n, window)
+    call = pallas_call_1d(_axpby_kernel, n, w, num_in=2, dtype=x.dtype,
+                          scalars=2)
+    one = lambda s: jnp.reshape(s, (1,)).astype(x.dtype)
+    return call(one(alpha), one(beta), x, y)
+
+
+def _rot_kernel(c_ref, s_ref, x_ref, y_ref, xo_ref, yo_ref):
+    c, s = c_ref[0], s_ref[0]
+    xb, yb = x_ref[...], y_ref[...]
+    xo_ref[...] = c * xb + s * yb
+    yo_ref[...] = c * yb - s * xb
+
+
+def rot(c, s, x, y, *, window=None):
+    """Apply a Givens plane rotation: returns (c*x + s*y, c*y - s*x).
+
+    Two windowed outputs — exercises the multi-output path end to end
+    (Pallas multi-out_specs, HLO tuple, rust decompose_tuple).
+    """
+    import jax as _jax
+    n = x.shape[0]
+    w = pick_window(n, window)
+    call = pl.pallas_call(
+        _rot_kernel,
+        grid=(n // w,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((w,), lambda i: (i,)),
+            pl.BlockSpec((w,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((w,), lambda i: (i,)),
+            pl.BlockSpec((w,), lambda i: (i,)),
+        ],
+        out_shape=[
+            _jax.ShapeDtypeStruct((n,), x.dtype),
+            _jax.ShapeDtypeStruct((n,), x.dtype),
+        ],
+        interpret=True,
+    )
+    one = lambda v: jnp.reshape(v, (1,)).astype(x.dtype)
+    return call(one(c), one(s), x, y)

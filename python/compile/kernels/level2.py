@@ -1,0 +1,91 @@
+"""Level-2 AIEBLAS routines (gemv) as tiled Pallas kernels.
+
+The AIE mapping (DESIGN.md §2): the matrix is streamed through the tile as
+(bm x bn) windows; a row-block of the result vector is accumulated across the
+column-tile sweep, exactly like the generated ADF gemv kernel that acquires
+one matrix window per iteration and keeps the partial y-block in registers.
+
+Grid iteration order: the *last* grid dimension varies fastest, so with grid
+(rows, cols) the column sweep is innermost and the accumulator pattern
+(init at j == 0, add afterwards) is sound.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import pick_window
+
+
+def _gemv_kernel(alpha_ref, beta_ref, a_ref, x_ref, y_ref, o_ref):
+    partial = alpha_ref[0] * (a_ref[...] @ x_ref[...])
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = beta_ref[0] * y_ref[...] + partial
+
+    @pl.when(pl.program_id(1) != 0)
+    def _acc():
+        o_ref[...] += partial
+
+
+def gemv(alpha, a, x, beta, y, *, block_m=None, block_n=None):
+    """y' = alpha*A@x + beta*y with (bm x bn) matrix windows.
+
+    Default tile 16 x 256 f32 = 16 KB: half of the 32 KB AIE local memory,
+    leaving room for the ping-pong buffer, the x/y blocks and the
+    accumulator. ``pick_window`` shrinks each dimension to a divisor of the
+    problem size (the AIEBLAS window-divisibility invariant).
+    """
+    m, n = a.shape
+    bm = pick_window(m, block_m or 16)
+    bn = pick_window(n, block_n or 256)
+    grid = (m // bm, n // bn)
+    call = pl.pallas_call(
+        _gemv_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (0,)),          # alpha
+            pl.BlockSpec((1,), lambda i, j: (0,)),          # beta
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),    # A window
+            pl.BlockSpec((bn,), lambda i, j: (j,)),         # x block
+            pl.BlockSpec((bm,), lambda i, j: (i,)),         # y block
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), a.dtype),
+        interpret=True,
+    )
+    one = lambda s: jnp.reshape(s, (1,)).astype(a.dtype)
+    return call(one(alpha), one(beta), a, x, y)
+
+
+def _ger_kernel(alpha_ref, x_ref, y_ref, a_ref, o_ref):
+    # rank-1 update of an (bm x bn) window: A + alpha * x_block y_block^T
+    o_ref[...] = a_ref[...] + alpha_ref[0] * (
+        x_ref[...][:, None] * y_ref[...][None, :]
+    )
+
+
+def ger(alpha, x, y, a, *, block_m=None, block_n=None):
+    """A' = A + alpha * x y^T (BLAS sger), tiled over matrix windows."""
+    m, n = a.shape
+    bm = pick_window(m, block_m or 16)
+    bn = pick_window(n, block_n or 256)
+    grid = (m // bm, n // bn)
+    call = pl.pallas_call(
+        _ger_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )
+    one = lambda s: jnp.reshape(s, (1,)).astype(a.dtype)
+    return call(one(alpha), x, y, a)

@@ -1,0 +1,55 @@
+"""Level-3 AIEBLAS routines (gemm) as tiled Pallas kernels.
+
+gemm is listed by the paper as BLAS-coverage future work (§V); it is
+implemented here with the same window discipline as gemv: a 3-D grid
+(i, j, k) with k innermost, accumulating an (bm x bn) C tile across the
+k-sweep — the TPU/VMEM re-think of the ACAP GEMM designs the paper cites
+([14], [16]).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import pick_window
+
+
+def _gemm_kernel(alpha_ref, beta_ref, a_ref, b_ref, c_ref, o_ref):
+    partial = alpha_ref[0] * (a_ref[...] @ b_ref[...])
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = beta_ref[0] * c_ref[...] + partial
+
+    @pl.when(pl.program_id(2) != 0)
+    def _acc():
+        o_ref[...] += partial
+
+
+def gemm(alpha, a, b, beta, c, *, block_m=None, block_n=None, block_k=None):
+    """C' = alpha*A@B + beta*C with (bm x bk)·(bk x bn) windows."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    bm = pick_window(m, block_m or 32)
+    bn = pick_window(n, block_n or 32)
+    bk = pick_window(k, block_k or 64)
+    grid = (m // bm, n // bn, k // bk)
+    call = pl.pallas_call(
+        _gemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j, l: (0,)),           # alpha
+            pl.BlockSpec((1,), lambda i, j, l: (0,)),           # beta
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),     # A window
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),     # B window
+            pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),     # C input
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )
+    one = lambda s: jnp.reshape(s, (1,)).astype(a.dtype)
+    return call(one(alpha), one(beta), a, b, c)

@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for every AIEBLAS routine.
+
+These are the correctness references the Pallas kernels are tested against
+(pytest + hypothesis in python/tests/). They mirror the scalar reference
+implementations in rust/src/blas/reference.rs; the Rust test-suite checks
+the two references against each other through the PJRT artifacts.
+
+BLAS semantics follow the updated BLAS standard [Blackford et al., 2002],
+the same reference the paper cites ([13]).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def axpy(alpha, x, y):
+    """z = alpha * x + y  (BLAS saxpy, out-of-place as in AIEBLAS)."""
+    return alpha * x + y
+
+
+def scal(alpha, x):
+    """z = alpha * x."""
+    return alpha * x
+
+
+def copy(x):
+    """z = x."""
+    return x
+
+
+def dot(x, y):
+    """x^T y."""
+    return jnp.dot(x, y)
+
+
+def nrm2(x):
+    """||x||_2."""
+    return jnp.sqrt(jnp.sum(x * x))
+
+
+def asum(x):
+    """sum |x_i| (1-norm)."""
+    return jnp.sum(jnp.abs(x))
+
+
+def iamax(x):
+    """argmax_i |x_i| (first index of max magnitude, BLAS ixamax)."""
+    return jnp.argmax(jnp.abs(x)).astype(jnp.int32)
+
+
+def gemv(alpha, a, x, beta, y):
+    """y' = alpha * A @ x + beta * y."""
+    return alpha * (a @ x) + beta * y
+
+
+def gemm(alpha, a, b, beta, c):
+    """C' = alpha * A @ B + beta * C."""
+    return alpha * (a @ b) + beta * c
+
+
+def axpydot(alpha, w, v, u):
+    """beta = z^T u with z = w - alpha * v (composed routine, paper §III).
+
+    Matches the paper's axpydot definition from the updated BLAS [13]:
+    an axpy (with negated alpha) feeding a dot product.
+    """
+    z = w - alpha * v
+    return jnp.dot(z, u)
+
+
+def axpby(alpha, beta, x, y):
+    """z = alpha*x + beta*y."""
+    return alpha * x + beta * y
+
+
+def rot(c, s, x, y):
+    """Givens rotation: (c*x + s*y, c*y - s*x)."""
+    return c * x + s * y, c * y - s * x
+
+
+def ger(alpha, x, y, a):
+    """A' = A + alpha * x y^T."""
+    return a + alpha * jnp.outer(x, y)

@@ -1,0 +1,194 @@
+"""L2: AIEBLAS routine compute graphs in JAX.
+
+The *routine registry* maps a routine name + problem size to a jittable
+function built on the L1 Pallas kernels. This mirrors the Rust-side registry
+(rust/src/blas/mod.rs); the two are kept in sync by the manifest that
+``aot.py`` emits and the Rust runtime consumes.
+
+Every routine function:
+  * takes only array arguments (scalars as shape-(1,) f32 arrays so the
+    lowered HLO has a stable parameter signature for the Rust loader);
+  * returns a tuple (lowered with return_tuple=True on the XLA side).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels as K
+
+
+@dataclass(frozen=True)
+class RoutineDef:
+    """Registry entry: how to build + lower one routine at a given size."""
+
+    name: str
+    #: builder(size) -> (fn, example_args); fn takes/returns jnp arrays.
+    build: Callable[[int], tuple]
+    #: human description used in the manifest.
+    doc: str = ""
+    #: sizes precompiled into artifacts/ by aot.py.
+    aot_sizes: Sequence[int] = field(default_factory=tuple)
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _scalar():
+    return _f32(1)
+
+
+# --------------------------------------------------------------------------
+# builders — each returns (fn, example_args)
+# --------------------------------------------------------------------------
+
+def _build_axpy(n, window=None):
+    def fn(alpha, x, y):
+        return (K.axpy(alpha[0], x, y, window=window),)
+    return fn, (_scalar(), _f32(n), _f32(n))
+
+
+def _build_scal(n, window=None):
+    def fn(alpha, x):
+        return (K.scal(alpha[0], x, window=window),)
+    return fn, (_scalar(), _f32(n))
+
+
+def _build_copy(n, window=None):
+    def fn(x):
+        return (K.copy(x, window=window),)
+    return fn, (_f32(n),)
+
+
+def _build_dot(n, window=None):
+    def fn(x, y):
+        return (jnp.reshape(K.dot(x, y, window=window), (1,)),)
+    return fn, (_f32(n), _f32(n))
+
+
+def _build_nrm2(n, window=None):
+    def fn(x):
+        return (jnp.reshape(K.nrm2(x, window=window), (1,)),)
+    return fn, (_f32(n),)
+
+
+def _build_asum(n, window=None):
+    def fn(x):
+        return (jnp.reshape(K.asum(x, window=window), (1,)),)
+    return fn, (_f32(n),)
+
+
+def _build_iamax(n, window=None):
+    def fn(x):
+        return (jnp.reshape(K.iamax(x, window=window), (1,)),)
+    return fn, (_f32(n),)
+
+
+def _build_axpby(n, window=None):
+    def fn(alpha, beta, x, y):
+        return (K.axpby(alpha[0], beta[0], x, y, window=window),)
+    return fn, (_scalar(), _scalar(), _f32(n), _f32(n))
+
+
+def _build_rot(n, window=None):
+    def fn(c, s, x, y):
+        xo, yo = K.rot(c[0], s[0], x, y, window=window)
+        return (xo, yo)
+    return fn, (_scalar(), _scalar(), _f32(n), _f32(n))
+
+
+def _build_ger(n, block_m=None, block_n=None):
+    def fn(alpha, x, y, a):
+        return (K.ger(alpha[0], x, y, a, block_m=block_m, block_n=block_n),)
+    return fn, (_scalar(), _f32(n), _f32(n), _f32(n, n))
+
+
+def _build_gemv(n, block_m=None, block_n=None):
+    def fn(alpha, a, x, beta, y):
+        return (K.gemv(alpha[0], a, x, beta[0], y,
+                       block_m=block_m, block_n=block_n),)
+    return fn, (_scalar(), _f32(n, n), _f32(n), _scalar(), _f32(n))
+
+
+def _build_gemm(n, **blocks):
+    def fn(alpha, a, b, beta, c):
+        return (K.gemm(alpha[0], a, b, beta[0], c, **blocks),)
+    return fn, (_scalar(), _f32(n, n), _f32(n, n), _scalar(), _f32(n, n))
+
+
+def _build_axpydot(n, window=None):
+    """Dataflow (fused) axpydot: one HLO module, z never leaves the chip."""
+    def fn(alpha, w, v, u):
+        return (jnp.reshape(K.axpydot(alpha[0], w, v, u, window=window), (1,)),)
+    return fn, (_scalar(), _f32(n), _f32(n), _f32(n))
+
+
+def _build_axpy_neg(n, window=None):
+    """axpy with negated alpha: the first stage of non-dataflow axpydot.
+
+    The Rust coordinator composes no-DF axpydot as axpy_neg -> (DDR round
+    trip) -> dot, so the stage artifact must match the paper's z = w -
+    alpha*v definition.
+    """
+    def fn(alpha, v, w):
+        return (K.axpy(-alpha[0], v, w, window=window),)
+    return fn, (_scalar(), _f32(n), _f32(n))
+
+
+# Vector sizes swept by Fig. 3 (axpy / dot / axpydot panels).
+VEC_SIZES = (4096, 16384, 65536, 262144, 1048576)
+# Matrix sizes swept by Fig. 3 (gemv panel).
+MAT_SIZES = (64, 128, 256, 512)
+GEMM_SIZES = (64, 128, 256)
+
+REGISTRY: dict[str, RoutineDef] = {
+    r.name: r
+    for r in [
+        RoutineDef("axpy", _build_axpy, "z = alpha*x + y", VEC_SIZES),
+        RoutineDef("axpy_neg", _build_axpy_neg,
+                   "z = w - alpha*v (no-DF axpydot stage 1)", VEC_SIZES),
+        RoutineDef("scal", _build_scal, "z = alpha*x", VEC_SIZES[:3]),
+        RoutineDef("copy", _build_copy, "z = x", VEC_SIZES[:3]),
+        RoutineDef("dot", _build_dot, "x^T y", VEC_SIZES),
+        RoutineDef("nrm2", _build_nrm2, "||x||_2", VEC_SIZES[:3]),
+        RoutineDef("asum", _build_asum, "sum |x_i|", VEC_SIZES[:3]),
+        RoutineDef("iamax", _build_iamax, "argmax |x_i|", VEC_SIZES[:3]),
+        RoutineDef("axpby", _build_axpby, "z = alpha*x + beta*y", VEC_SIZES[:3]),
+        RoutineDef("rot", _build_rot, "Givens rotation (2 outputs)", VEC_SIZES[:3]),
+        RoutineDef("ger", _build_ger, "A += alpha*x@y^T", MAT_SIZES[:3]),
+        RoutineDef("gemv", _build_gemv, "y = alpha*A@x + beta*y", MAT_SIZES),
+        RoutineDef("gemm", _build_gemm, "C = alpha*A@B + beta*C", GEMM_SIZES),
+        RoutineDef("axpydot", _build_axpydot,
+                   "beta = (w - alpha*v)^T u, fused dataflow", VEC_SIZES),
+    ]
+}
+
+
+def build(name: str, size: int, **params):
+    """Build (fn, example_args) for a registered routine at ``size``."""
+    if name not in REGISTRY:
+        raise KeyError(f"unknown routine {name!r}; have {sorted(REGISTRY)}")
+    return REGISTRY[name].build(size, **params)
+
+
+def lower_hlo_text(name: str, size: int, **params) -> str:
+    """Lower a routine to HLO *text* (the Rust interchange format).
+
+    HLO text, not ``.serialize()``: jax >= 0.5 emits protos with 64-bit
+    instruction ids that xla_extension 0.5.1 rejects; the text parser
+    reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+    """
+    from jax._src.lib import xla_client as xc
+
+    fn, example_args = build(name, size, **params)
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()

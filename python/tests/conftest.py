@@ -1,0 +1,29 @@
+"""Shared fixtures/strategies for the AIEBLAS python test-suite."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, settings
+
+# Pallas interpret mode is slow; keep example counts modest but meaningful.
+settings.register_profile(
+    "aieblas",
+    max_examples=20,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+settings.load_profile("aieblas")
+
+# f32 windowed reductions accumulate rounding; these are the tolerances the
+# Rust-side numeric validation uses as well (rust/src/runtime/exec.rs).
+TOL = dict(rtol=2e-4, atol=2e-5)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0xA1EB1A5)
+
+
+def finite_f32(rng_, shape, scale=1.0):
+    return (rng_.standard_normal(shape) * scale).astype(np.float32)

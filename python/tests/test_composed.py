@@ -1,0 +1,57 @@
+"""Composed-routine (dataflow) correctness: fused axpydot.
+
+The key property behind Fig. 3's DF/no-DF comparison: the fused dataflow
+kernel and the two-stage (axpy_neg then dot) composition must agree — the
+performance differs, the numerics must not.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref
+
+from .conftest import TOL, finite_f32
+
+sizes = st.integers(min_value=1, max_value=768)
+windows = st.one_of(st.none(), st.integers(min_value=1, max_value=256))
+alphas = st.floats(min_value=-4.0, max_value=4.0, width=32)
+
+
+@given(n=sizes, w=windows, alpha=alphas, seed=st.integers(0, 2**31))
+def test_axpydot_matches_ref(n, w, alpha, seed):
+    r = np.random.default_rng(seed)
+    wv, vv, uv = (finite_f32(r, n) for _ in range(3))
+    got = K.axpydot(np.float32(alpha), wv, vv, uv, window=w)
+    want = ref.axpydot(np.float32(alpha), wv, vv, uv)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+@given(n=sizes, alpha=alphas, seed=st.integers(0, 2**31))
+def test_fused_equals_staged(n, alpha, seed):
+    """DF (fused) == no-DF (axpy with -alpha, then dot)."""
+    r = np.random.default_rng(seed)
+    wv, vv, uv = (finite_f32(r, n) for _ in range(3))
+    a = np.float32(alpha)
+    fused = K.axpydot(a, wv, vv, uv, window=64)
+    z = K.axpy(np.float32(-a), vv, wv, window=64)  # z = w - alpha*v
+    staged = K.dot(np.asarray(z), uv, window=64)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(staged), **TOL)
+
+
+def test_axpydot_orthogonal_is_zero():
+    n = 128
+    wv = np.zeros(n, np.float32)
+    vv = np.zeros(n, np.float32)
+    uv = np.ones(n, np.float32)
+    assert float(K.axpydot(np.float32(3.0), wv, vv, uv, window=32)) == 0.0
+
+
+def test_axpydot_alpha_zero_reduces_to_dot():
+    r = np.random.default_rng(3)
+    n = 256
+    wv, vv, uv = (finite_f32(r, n) for _ in range(3))
+    got = K.axpydot(np.float32(0.0), wv, vv, uv, window=64)
+    np.testing.assert_allclose(got, ref.dot(wv, uv), **TOL)

@@ -1,0 +1,73 @@
+"""Extended BLAS coverage (paper §V): axpby, rot (multi-output), ger."""
+
+from __future__ import annotations
+
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref
+
+from .conftest import TOL, finite_f32
+
+sizes = st.integers(min_value=1, max_value=512)
+windows = st.one_of(st.none(), st.integers(min_value=1, max_value=128))
+scalars = st.floats(min_value=-3.0, max_value=3.0, width=32)
+
+
+@given(n=sizes, w=windows, alpha=scalars, beta=scalars, seed=st.integers(0, 2**31))
+def test_axpby_matches_ref(n, w, alpha, beta, seed):
+    r = np.random.default_rng(seed)
+    x, y = finite_f32(r, n), finite_f32(r, n)
+    got = K.axpby(np.float32(alpha), np.float32(beta), x, y, window=w)
+    np.testing.assert_allclose(
+        got, ref.axpby(np.float32(alpha), np.float32(beta), x, y), **TOL
+    )
+
+
+@given(n=sizes, w=windows, theta=st.floats(0.0, 6.3), seed=st.integers(0, 2**31))
+def test_rot_matches_ref(n, w, theta, seed):
+    r = np.random.default_rng(seed)
+    c, s = np.float32(np.cos(theta)), np.float32(np.sin(theta))
+    x, y = finite_f32(r, n), finite_f32(r, n)
+    xo, yo = K.rot(c, s, x, y, window=w)
+    rxo, ryo = ref.rot(c, s, x, y)
+    np.testing.assert_allclose(xo, rxo, **TOL)
+    np.testing.assert_allclose(yo, ryo, **TOL)
+
+
+def test_rot_preserves_norm():
+    """A Givens rotation is orthogonal: ||(x', y')|| == ||(x, y)||."""
+    r = np.random.default_rng(5)
+    x, y = finite_f32(r, 256), finite_f32(r, 256)
+    c, s = np.float32(np.cos(0.7)), np.float32(np.sin(0.7))
+    xo, yo = K.rot(c, s, x, y, window=64)
+    before = np.sum(x * x + y * y)
+    after = np.sum(np.asarray(xo) ** 2 + np.asarray(yo) ** 2)
+    np.testing.assert_allclose(after, before, rtol=1e-4)
+
+
+@given(m=st.integers(1, 64), n=st.integers(1, 64), alpha=scalars,
+       seed=st.integers(0, 2**31))
+def test_ger_matches_ref(m, n, alpha, seed):
+    r = np.random.default_rng(seed)
+    x, y = finite_f32(r, m), finite_f32(r, n)
+    a = finite_f32(r, (m, n))
+    got = K.ger(np.float32(alpha), x, y, a, block_m=16, block_n=16)
+    np.testing.assert_allclose(got, ref.ger(np.float32(alpha), x, y, a),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_ger_alpha_zero_is_identity():
+    r = np.random.default_rng(9)
+    a = finite_f32(r, (32, 32))
+    got = K.ger(np.float32(0.0), finite_f32(r, 32), finite_f32(r, 32), a)
+    np.testing.assert_array_equal(np.asarray(got), a)
+
+
+def test_rot_lowered_has_two_outputs():
+    from compile import model
+    text = model.lower_hlo_text("rot", 64)
+    assert "HloModule" in text
+    # tuple of two f32[64] results
+    assert text.count("f32[64]") >= 2

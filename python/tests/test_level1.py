@@ -1,0 +1,100 @@
+"""L1 correctness: every level-1 Pallas kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps sizes (including non-power-of-two, which exercises the
+window-divisor shrink in ``pick_window``) and window hints, asserting
+allclose against ref.py — the core correctness signal of the build path.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref
+from compile.kernels.common import pick_window
+
+from .conftest import TOL, finite_f32
+
+sizes = st.integers(min_value=1, max_value=768)
+windows = st.one_of(st.none(), st.integers(min_value=1, max_value=256))
+alphas = st.floats(min_value=-4.0, max_value=4.0, width=32)
+
+
+def _vec(seed, n, scale=1.0):
+    return finite_f32(np.random.default_rng(seed), n, scale)
+
+
+@given(n=sizes, w=windows, alpha=alphas, seed=st.integers(0, 2**31))
+def test_axpy_matches_ref(n, w, alpha, seed):
+    x, y = _vec(seed, n), _vec(seed + 1, n)
+    got = K.axpy(np.float32(alpha), x, y, window=w)
+    np.testing.assert_allclose(got, ref.axpy(np.float32(alpha), x, y), **TOL)
+
+
+@given(n=sizes, w=windows, alpha=alphas, seed=st.integers(0, 2**31))
+def test_scal_matches_ref(n, w, alpha, seed):
+    x = _vec(seed, n)
+    got = K.scal(np.float32(alpha), x, window=w)
+    np.testing.assert_allclose(got, ref.scal(np.float32(alpha), x), **TOL)
+
+
+@given(n=sizes, w=windows, seed=st.integers(0, 2**31))
+def test_copy_is_identity(n, w, seed):
+    x = _vec(seed, n)
+    np.testing.assert_array_equal(np.asarray(K.copy(x, window=w)), x)
+
+
+@given(n=sizes, w=windows, seed=st.integers(0, 2**31))
+def test_dot_matches_ref(n, w, seed):
+    x, y = _vec(seed, n), _vec(seed + 1, n)
+    got = K.dot(x, y, window=w)
+    np.testing.assert_allclose(got, ref.dot(x, y), **TOL)
+
+
+@given(n=sizes, w=windows, seed=st.integers(0, 2**31))
+def test_nrm2_matches_ref(n, w, seed):
+    x = _vec(seed, n)
+    np.testing.assert_allclose(K.nrm2(x, window=w), ref.nrm2(x), **TOL)
+
+
+@given(n=sizes, w=windows, seed=st.integers(0, 2**31))
+def test_asum_matches_ref(n, w, seed):
+    x = _vec(seed, n)
+    np.testing.assert_allclose(K.asum(x, window=w), ref.asum(x), **TOL)
+
+
+@given(n=sizes, w=windows, seed=st.integers(0, 2**31))
+def test_iamax_matches_ref(n, w, seed):
+    x = _vec(seed, n)
+    assert int(K.iamax(x, window=w)) == int(ref.iamax(x))
+
+
+def test_iamax_prefers_first_index():
+    """BLAS ixamax returns the FIRST maximal index on ties."""
+    x = np.array([1.0, -3.0, 3.0, 3.0], dtype=np.float32)
+    assert int(K.iamax(x, window=2)) == 1
+
+
+def test_axpy_zero_alpha_is_y():
+    y = np.arange(64, dtype=np.float32)
+    got = K.axpy(np.float32(0.0), np.ones(64, np.float32), y, window=16)
+    np.testing.assert_array_equal(np.asarray(got), y)
+
+
+def test_dot_zero_vectors():
+    z = np.zeros(128, np.float32)
+    assert float(K.dot(z, z, window=32)) == 0.0
+
+
+def test_nrm2_unit_basis():
+    e = np.zeros(256, np.float32)
+    e[17] = -5.0
+    np.testing.assert_allclose(K.nrm2(e, window=64), 5.0, rtol=1e-6)
+
+
+@pytest.mark.parametrize("n,w", [(1, 1), (1, None), (7, 3), (4096, 4096)])
+def test_pick_window_divides(n, w):
+    chosen = pick_window(n, w)
+    assert n % chosen == 0 and 1 <= chosen <= n

@@ -1,0 +1,81 @@
+"""L1 correctness for gemv (level 2) and gemm (level 3) window tilings."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref
+
+from .conftest import finite_f32
+
+# gemv/gemm accumulate across tiles: scale tolerance with problem size.
+TOL = dict(rtol=5e-4, atol=5e-4)
+
+dims = st.integers(min_value=1, max_value=96)
+blocks = st.one_of(st.none(), st.integers(min_value=1, max_value=48))
+scalars = st.floats(min_value=-2.0, max_value=2.0, width=32)
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+@given(m=dims, n=dims, bm=blocks, bn=blocks, alpha=scalars, beta=scalars,
+       seed=st.integers(0, 2**31))
+def test_gemv_matches_ref(m, n, bm, bn, alpha, beta, seed):
+    r = _rng(seed)
+    a = finite_f32(r, (m, n))
+    x = finite_f32(r, n)
+    y = finite_f32(r, m)
+    got = K.gemv(np.float32(alpha), a, x, np.float32(beta), y,
+                 block_m=bm, block_n=bn)
+    want = ref.gemv(np.float32(alpha), a, x, np.float32(beta), y)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+@given(m=dims, k=dims, n=dims, alpha=scalars, beta=scalars,
+       seed=st.integers(0, 2**31))
+def test_gemm_matches_ref(m, k, n, alpha, beta, seed):
+    r = _rng(seed)
+    a = finite_f32(r, (m, k))
+    b = finite_f32(r, (k, n))
+    c = finite_f32(r, (m, n))
+    got = K.gemm(np.float32(alpha), a, b, np.float32(beta), c,
+                 block_m=16, block_n=16, block_k=16)
+    want = ref.gemm(np.float32(alpha), a, b, np.float32(beta), c)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+@pytest.mark.parametrize("m,n", [(1, 1), (1, 64), (64, 1), (33, 65)])
+def test_gemv_degenerate_shapes(m, n):
+    r = _rng(7)
+    a = finite_f32(r, (m, n))
+    x = finite_f32(r, n)
+    y = finite_f32(r, m)
+    got = K.gemv(np.float32(1.5), a, x, np.float32(-0.5), y)
+    want = ref.gemv(np.float32(1.5), a, x, np.float32(-0.5), y)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+def test_gemv_identity_matrix():
+    n = 64
+    a = np.eye(n, dtype=np.float32)
+    x = np.arange(n, dtype=np.float32)
+    y = np.zeros(n, dtype=np.float32)
+    got = K.gemv(np.float32(1.0), a, x, np.float32(0.0), y,
+                 block_m=16, block_n=16)
+    np.testing.assert_allclose(got, x, rtol=1e-6)
+
+
+def test_gemm_beta_only():
+    """alpha=0 must reduce to beta*C regardless of A, B contents."""
+    r = _rng(11)
+    a = finite_f32(r, (32, 32)) * 1e3
+    b = finite_f32(r, (32, 32)) * 1e3
+    c = finite_f32(r, (32, 32))
+    got = K.gemm(np.float32(0.0), a, b, np.float32(2.0), c,
+                 block_m=16, block_n=16, block_k=16)
+    np.testing.assert_allclose(got, 2.0 * c, rtol=1e-5)

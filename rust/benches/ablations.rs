@@ -1,0 +1,53 @@
+//! §V ablation benches (A1–A4): burst movers, multi-AIE splits, window
+//! size, vector width, and gemv tiling — the paper's future-work levers,
+//! quantified on the simulator.
+//!
+//! Run: `cargo bench --bench ablations`
+
+use aieblas::blas::RoutineKind;
+use aieblas::coordinator::{experiments, AieBlas, Config};
+
+fn main() {
+    aieblas::init();
+    let sys = AieBlas::new(Config { check_numerics: false, ..Default::default() }).unwrap();
+
+    println!("\n== A1: burst-optimized vs naive PL movers (axpy) ==");
+    println!(
+        "{}",
+        experiments::ablation_burst(&sys, RoutineKind::Axpy, &[1 << 14, 1 << 17, 1 << 20])
+            .unwrap()
+            .render()
+    );
+
+    println!("== A2: multi-AIE / multi-port split (axpy, n = 2^20) ==");
+    println!(
+        "{}",
+        experiments::ablation_multi_port(&sys, 1 << 20, &[1, 2, 4, 8, 16])
+            .unwrap()
+            .render()
+    );
+
+    println!("== A3a: window-size sweep (axpy, n = 2^20) ==");
+    println!(
+        "{}",
+        experiments::ablation_window(&sys, RoutineKind::Axpy, 1 << 20, &[64, 128, 256, 512, 1024])
+            .unwrap()
+            .render()
+    );
+
+    println!("== A3b: vector-width sweep (axpy, n = 2^20, on-chip) ==");
+    println!(
+        "{}",
+        experiments::ablation_vector_width(&sys, RoutineKind::Axpy, 1 << 20)
+            .unwrap()
+            .render()
+    );
+
+    println!("== A4: gemv window (tiling) sweep (n = 512) ==");
+    println!(
+        "{}",
+        experiments::ablation_window(&sys, RoutineKind::Gemv, 512, &[16, 32, 64])
+            .unwrap()
+            .render()
+    );
+}

@@ -1,0 +1,56 @@
+//! CPU baseline microbenchmarks: the threaded Rust BLAS (OpenBLAS
+//! stand-in) across routines/sizes, with achieved-GB/s so the roofline
+//! calibration in arch::HostConfig can be checked against this machine.
+//!
+//! Run: `cargo bench --bench cpu_baseline`
+
+use aieblas::blas::{cpu, RoutineKind};
+use aieblas::util::bench::Bench;
+use aieblas::util::rng::Rng;
+
+fn main() {
+    aieblas::init();
+    let mut b = Bench::new("cpu_baseline");
+    let mut rng = Rng::new(1);
+
+    for exp in [14usize, 17, 20] {
+        let n = 1 << exp;
+        let x = rng.normal_vec_f32(n);
+        let y = rng.normal_vec_f32(n);
+        let u = rng.normal_vec_f32(n);
+        let mut z = vec![0.0f32; n];
+
+        let s = b.bench(&format!("axpy/n=2^{exp}"), || {
+            cpu::axpy(1.5, &x, &y, &mut z);
+            z[0]
+        });
+        eprintln!(
+            "  axpy n=2^{exp}: {:.2} GB/s",
+            (3.0 * 4.0 * n as f64) / s.median / 1e9
+        );
+        b.bench(&format!("dot/n=2^{exp}"), || cpu::dot(&x, &y));
+        b.bench(&format!("axpydot/n=2^{exp}"), || cpu::axpydot(1.5, &x, &y, &u));
+        b.bench(&format!("nrm2/n=2^{exp}"), || cpu::nrm2(&x));
+    }
+
+    for n in [128usize, 512] {
+        let a = rng.normal_vec_f32(n * n);
+        let x = rng.normal_vec_f32(n);
+        let y = rng.normal_vec_f32(n);
+        let mut out = vec![0.0f32; n];
+        b.bench(&format!("gemv/n={n}"), || {
+            cpu::gemv(1.0, &a, n, n, &x, 0.5, &y, &mut out);
+            out[0]
+        });
+    }
+
+    // model-vs-measured calibration table
+    eprintln!("\n  paper-testbed model vs this machine (axpy):");
+    for exp in [14usize, 17, 20] {
+        let n = 1 << exp;
+        let model = aieblas::arch::HostConfig::default()
+            .blas_call_time(RoutineKind::Axpy.flops(n), RoutineKind::Axpy.offchip_bytes(n));
+        eprintln!("    n=2^{exp}: model {:.1} µs", model * 1e6);
+    }
+    b.finish();
+}

@@ -1,0 +1,41 @@
+//! Fig. 3 axpy panel: AIE w/ PL movers vs AIE no-PL vs CPU, across input
+//! sizes. The simulated-device series are measured as wallclock of the
+//! simulation *plus* reported as simulated device time (the figure's
+//! quantity); CPU is the measured Rust baseline + the paper-testbed model.
+//!
+//! Run: `cargo bench --bench fig3_axpy`
+
+use aieblas::blas::RoutineKind;
+use aieblas::coordinator::{experiments, AieBlas, Config};
+use aieblas::util::bench::{Bench, Stats};
+
+fn main() {
+    aieblas::init();
+    let sys = AieBlas::new(Config { check_numerics: false, ..Default::default() }).unwrap();
+    let mut b = Bench::new("fig3_axpy");
+
+    for &n in &experiments::VEC_SIZES {
+        let rows = experiments::single_routine_panel(&sys, RoutineKind::Axpy, &[n]).unwrap();
+        for r in &rows {
+            // simulated device time is deterministic: record as 1 sample.
+            b.record(
+                &format!("axpy/n={n}/{}", r.variant),
+                Stats::from_samples(vec![r.seconds]),
+            );
+        }
+    }
+
+    // harness overhead: how long one full pipeline (build->place->route->
+    // simulate) takes on the host.
+    b.bench("axpy/harness/sim-pipeline n=2^20", || {
+        sys.run_spec_sim_only(&aieblas::spec::Spec::single(
+            RoutineKind::Axpy,
+            "a",
+            1 << 20,
+            aieblas::spec::DataSource::Pl,
+        ))
+        .unwrap()
+        .makespan_s
+    });
+    b.finish();
+}

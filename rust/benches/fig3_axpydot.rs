@@ -1,0 +1,23 @@
+//! Fig. 3 axpydot panel: dataflow vs non-dataflow vs CPU — the paper's
+//! composition experiment (pipelined on-chip execution ≈ 2×).
+//!
+//! Run: `cargo bench --bench fig3_axpydot`
+
+use aieblas::coordinator::{experiments, AieBlas, Config};
+use aieblas::util::bench::{Bench, Stats};
+
+fn main() {
+    aieblas::init();
+    let sys = AieBlas::new(Config { check_numerics: false, ..Default::default() }).unwrap();
+    let mut b = Bench::new("fig3_axpydot");
+    for &n in &experiments::VEC_SIZES {
+        let rows = experiments::axpydot_panel(&sys, &[n]).unwrap();
+        for r in &rows {
+            b.record(
+                &format!("axpydot/n={n}/{}", r.variant),
+                Stats::from_samples(vec![r.seconds]),
+            );
+        }
+    }
+    b.finish();
+}

@@ -1,0 +1,24 @@
+//! Fig. 3 gemv panel: AIE w/ PL movers vs AIE no-PL vs CPU across matrix
+//! sizes (n×n).
+//!
+//! Run: `cargo bench --bench fig3_gemv`
+
+use aieblas::blas::RoutineKind;
+use aieblas::coordinator::{experiments, AieBlas, Config};
+use aieblas::util::bench::{Bench, Stats};
+
+fn main() {
+    aieblas::init();
+    let sys = AieBlas::new(Config { check_numerics: false, ..Default::default() }).unwrap();
+    let mut b = Bench::new("fig3_gemv");
+    for &n in &experiments::MAT_SIZES {
+        let rows = experiments::single_routine_panel(&sys, RoutineKind::Gemv, &[n]).unwrap();
+        for r in &rows {
+            b.record(
+                &format!("gemv/n={n}/{}", r.variant),
+                Stats::from_samples(vec![r.seconds]),
+            );
+        }
+    }
+    b.finish();
+}

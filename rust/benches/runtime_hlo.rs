@@ -1,0 +1,62 @@
+//! PJRT runtime benches: artifact compile time (cold) vs cached execution
+//! (hot) — verifying the request path never recompiles (§Perf L3 target).
+//!
+//! Run: `cargo bench --bench runtime_hlo` (needs `make artifacts`)
+
+use aieblas::runtime::NumericExecutor;
+use aieblas::util::bench::Bench;
+use aieblas::util::rng::Rng;
+
+fn main() {
+    aieblas::init();
+    let dir = std::path::Path::new("artifacts");
+    let ex = NumericExecutor::new(dir).unwrap();
+    if ex.manifest().is_empty() {
+        eprintln!("no artifacts found — run `make artifacts` first; skipping");
+        return;
+    }
+    let mut b = Bench::new("runtime_hlo");
+    let mut rng = Rng::new(3);
+
+    for &n in &[4096usize, 65536, 1048576] {
+        if !ex.has_artifact("axpy", n) {
+            continue;
+        }
+        let inputs = vec![vec![1.5f32], rng.normal_vec_f32(n), rng.normal_vec_f32(n)];
+        // first call compiles (cold) — measured separately
+        let t0 = std::time::Instant::now();
+        ex.execute("axpy", n, &inputs).unwrap();
+        eprintln!("  axpy n={n}: cold compile+run {:.2} ms", t0.elapsed().as_secs_f64() * 1e3);
+        b.bench(&format!("pjrt/axpy/n={n}/hot"), || {
+            ex.execute("axpy", n, &inputs).unwrap().0[0]
+        });
+    }
+
+    if ex.has_artifact("axpydot", 65536) {
+        let n = 65536;
+        let inputs = vec![
+            vec![2.0f32],
+            rng.normal_vec_f32(n),
+            rng.normal_vec_f32(n),
+            rng.normal_vec_f32(n),
+        ];
+        b.bench("pjrt/axpydot/n=65536/hot", || {
+            ex.execute("axpydot", n, &inputs).unwrap().0[0]
+        });
+    }
+
+    if ex.has_artifact("gemv", 256) {
+        let n = 256;
+        let inputs = vec![
+            vec![1.0f32],
+            rng.normal_vec_f32(n * n),
+            rng.normal_vec_f32(n),
+            vec![0.5f32],
+            rng.normal_vec_f32(n),
+        ];
+        b.bench("pjrt/gemv/n=256/hot", || {
+            ex.execute("gemv", n, &inputs).unwrap().0[0]
+        });
+    }
+    b.finish();
+}

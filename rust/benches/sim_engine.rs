@@ -1,0 +1,59 @@
+//! Simulator-engine microbenchmarks: host wallclock of the DES itself
+//! (the L3 hot path the §Perf pass optimizes) across graph shapes.
+//!
+//! Run: `cargo bench --bench sim_engine`
+
+use aieblas::blas::RoutineKind;
+use aieblas::coordinator::{AieBlas, Config};
+use aieblas::spec::{DataSource, Spec};
+use aieblas::util::bench::Bench;
+
+fn main() {
+    aieblas::init();
+    let sys = AieBlas::new(Config { check_numerics: false, ..Default::default() }).unwrap();
+    let mut b = Bench::new("sim_engine");
+
+    // single kernel, many windows (token-loop throughput)
+    for exp in [16usize, 20, 22] {
+        let spec = Spec::single(RoutineKind::Axpy, "a", 1 << exp, DataSource::Pl);
+        b.bench(&format!("sim/axpy_pl/n=2^{exp}"), || {
+            sys.run_spec_sim_only(&spec).unwrap().makespan_s
+        });
+    }
+
+    // composed pipeline
+    let spec = Spec::axpydot_dataflow(1 << 20, 2.0);
+    b.bench("sim/axpydot_df/n=2^20", || {
+        sys.run_spec_sim_only(&spec).unwrap().makespan_s
+    });
+
+    // wide graph: 16 independent kernels (placement + routing pressure)
+    let mut wide = Spec { platform: "vck5000".into(), ..Default::default() };
+    for i in 0..16 {
+        wide.routines.push(aieblas::spec::RoutineSpec {
+            kind: RoutineKind::Axpy,
+            name: format!("k{i}"),
+            size: 1 << 16,
+            window: None,
+            vector_bits: 512,
+            placement: None,
+            burst: false,
+            alpha: None,
+            beta: None,
+            split: 1,
+        });
+    }
+    b.bench("sim/wide16/n=2^16", || {
+        sys.run_spec_sim_only(&wide).unwrap().makespan_s
+    });
+
+    // pipeline stages separately: build+place+route without simulate
+    let arch = aieblas::arch::ArchConfig::vck5000();
+    let spec2 = Spec::single(RoutineKind::Axpy, "a", 1 << 20, DataSource::Pl);
+    b.bench("graph/build+place+route/n=2^20", || {
+        let built = aieblas::graph::build::build_graph(&spec2).unwrap();
+        let p = aieblas::graph::place::place(&built.graph, &arch).unwrap();
+        aieblas::graph::route::route(&built.graph, &p, &arch).unwrap().total_hops()
+    });
+    b.finish();
+}

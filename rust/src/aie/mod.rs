@@ -1,0 +1,124 @@
+//! AIE tile compute model: cycles a kernel spends per window.
+//!
+//! The AIE1 core is a VLIW vector processor that can issue two vector
+//! loads, one vector store and one vector arithmetic op per cycle, with an
+//! fp32 datapath retiring 8 MACs/cycle (paper §II; AM009 AIE architecture
+//! manual). Our per-window cost model:
+//!
+//! * MAC-bound kernels (axpy, dot, nrm2, asum, gemv, gemm): one MAC per
+//!   element pair → `elements / fp32_macs_per_cycle` cycles, scaled by the
+//!   configured vector width (a 256-bit kernel does half the MACs/cycle);
+//! * move/scale kernels (copy, scal, iamax compare): lane-bound →
+//!   `elements / lanes` cycles;
+//! * every window acquisition pays `window_overhead_cycles` (DMA + lock),
+//!   and every kernel invocation pays `kernel_call_cycles` once.
+//!
+//! This is a *structural* model — it deliberately ignores pipeline stalls
+//! and models only what the paper's analysis depends on: vectorization
+//! width, window amortization, and compute-vs-transfer balance.
+
+use crate::arch::ArchConfig;
+use crate::blas::RoutineKind;
+
+/// Cycles one kernel invocation spends computing on one window of
+/// `window_elements` (vector elements or matrix-window elements).
+pub fn cycles_per_window(
+    kind: RoutineKind,
+    window_elements: usize,
+    vector_bits: usize,
+    arch: &ArchConfig,
+) -> u64 {
+    let width_scale = vector_bits as f64 / arch.vector_bits as f64;
+    let macs_per_cycle = (arch.fp32_macs_per_cycle as f64 * width_scale).max(1.0);
+    let lanes = (arch.f32_lanes(vector_bits)) as f64;
+    let e = window_elements as f64;
+    let compute = match kind {
+        // one MAC per element
+        RoutineKind::Axpy
+        | RoutineKind::Axpby
+        | RoutineKind::Dot
+        | RoutineKind::Nrm2
+        | RoutineKind::Asum
+        | RoutineKind::Axpydot => e / macs_per_cycle,
+        // rot: two MACs per element pair (both outputs)
+        RoutineKind::Rot => 2.0 * e / macs_per_cycle,
+        // matrix windows: one MAC per matrix element
+        RoutineKind::Gemv | RoutineKind::Ger | RoutineKind::Gemm => e / macs_per_cycle,
+        // pure data movement / single vector op per element
+        RoutineKind::Scal | RoutineKind::Copy | RoutineKind::Iamax => e / lanes,
+    };
+    compute.ceil() as u64 + arch.window_overhead_cycles
+}
+
+/// Seconds one kernel invocation spends on one window.
+pub fn seconds_per_window(
+    kind: RoutineKind,
+    window_elements: usize,
+    vector_bits: usize,
+    arch: &ArchConfig,
+) -> f64 {
+    cycles_per_window(kind, window_elements, vector_bits, arch) as f64 * arch.aie_cycle_s()
+}
+
+/// Peak-achievable fraction of the tile's MAC throughput for a routine at
+/// a given window size — the roofline-style efficiency figure DESIGN.md §7
+/// reports (window overhead amortization).
+pub fn window_efficiency(kind: RoutineKind, window_elements: usize, arch: &ArchConfig) -> f64 {
+    let ideal = window_elements as f64 / arch.fp32_macs_per_cycle as f64;
+    let actual = cycles_per_window(kind, window_elements, arch.vector_bits, arch) as f64;
+    (ideal / actual).min(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arch() -> ArchConfig {
+        ArchConfig::vck5000()
+    }
+
+    #[test]
+    fn axpy_window_cost_scales_with_elements() {
+        let a = arch();
+        let c1 = cycles_per_window(RoutineKind::Axpy, 1024, 512, &a);
+        let c2 = cycles_per_window(RoutineKind::Axpy, 2048, 512, &a);
+        assert!(c2 > c1);
+        // 1024 elements at 8 MACs/cycle = 128 cycles + overhead
+        assert_eq!(c1, 128 + a.window_overhead_cycles);
+    }
+
+    #[test]
+    fn narrower_vectors_cost_more() {
+        let a = arch();
+        let wide = cycles_per_window(RoutineKind::Axpy, 1024, 512, &a);
+        let narrow = cycles_per_window(RoutineKind::Axpy, 1024, 128, &a);
+        assert!(narrow > wide, "{narrow} vs {wide}");
+    }
+
+    #[test]
+    fn copy_is_lane_bound() {
+        let a = arch();
+        // 1024/16 lanes = 64 cycles + overhead
+        assert_eq!(
+            cycles_per_window(RoutineKind::Copy, 1024, 512, &a),
+            64 + a.window_overhead_cycles
+        );
+    }
+
+    #[test]
+    fn larger_windows_amortize_overhead() {
+        let a = arch();
+        let small = window_efficiency(RoutineKind::Axpy, 64, &a);
+        let large = window_efficiency(RoutineKind::Axpy, 2048, &a);
+        assert!(large > small);
+        assert!(large > 0.7, "2048-element window should amortize: {large}");
+    }
+
+    #[test]
+    fn seconds_match_cycles() {
+        let a = arch();
+        let c = cycles_per_window(RoutineKind::Dot, 512, 512, &a) as f64;
+        let s = seconds_per_window(RoutineKind::Dot, 512, 512, &a);
+        assert!((s - c / a.aie_clock_hz).abs() < 1e-15);
+    }
+}

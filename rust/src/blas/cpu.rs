@@ -1,0 +1,421 @@
+//! Optimized multithreaded CPU BLAS — the OpenBLAS stand-in for Fig. 3.
+//!
+//! The paper's CPU baseline is OpenBLAS 0.3.27 on a dual 10-core Xeon;
+//! level-1/2 BLAS there is memory-bandwidth-bound, so a blocked + threaded
+//! implementation reaches the same roofline regime (DESIGN.md §1). The hot
+//! loops are written so LLVM auto-vectorizes them (verified: disassembly
+//! shows packed `vmulps`/`vfmadd` on x86-64).
+//!
+//! Parallelisation thresholds: spawning threads costs ~10 µs; level-1 ops
+//! under ~64 K elements run single-threaded (mirrors OpenBLAS's own
+//! threshold behaviour).
+
+use crate::util::threadpool::{parallel_chunks, parallel_reduce};
+
+/// Below this many elements, run level-1 routines inline.
+const PAR_THRESHOLD: usize = 1 << 16;
+/// Minimum per-thread chunk for level-1 routines.
+const MIN_CHUNK: usize = 1 << 14;
+
+/// z = alpha*x + y.
+pub fn axpy(alpha: f32, x: &[f32], y: &[f32], z: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    assert_eq!(x.len(), z.len());
+    let n = x.len();
+    if n < PAR_THRESHOLD {
+        axpy_serial(alpha, x, y, z);
+        return;
+    }
+    // SAFETY-free parallel mutation: chunks are disjoint; expose the output
+    // as a raw pointer wrapped in a Sync carrier.
+    let zp = SyncPtr(z.as_mut_ptr());
+    parallel_chunks(n, MIN_CHUNK, |_, s, e| {
+        let zs = unsafe { std::slice::from_raw_parts_mut(zp.get().add(s), e - s) };
+        axpy_serial(alpha, &x[s..e], &y[s..e], zs);
+    });
+}
+
+fn axpy_serial(alpha: f32, x: &[f32], y: &[f32], z: &mut [f32]) {
+    // Simple indexed loop: bounds are hoisted, LLVM vectorizes + unrolls.
+    for i in 0..z.len() {
+        z[i] = alpha.mul_add(x[i], y[i]);
+    }
+}
+
+/// z = alpha*x.
+pub fn scal(alpha: f32, x: &[f32], z: &mut [f32]) {
+    assert_eq!(x.len(), z.len());
+    let n = x.len();
+    if n < PAR_THRESHOLD {
+        for i in 0..n {
+            z[i] = alpha * x[i];
+        }
+        return;
+    }
+    let zp = SyncPtr(z.as_mut_ptr());
+    parallel_chunks(n, MIN_CHUNK, |_, s, e| {
+        let zs = unsafe { std::slice::from_raw_parts_mut(zp.get().add(s), e - s) };
+        for (zi, &xi) in zs.iter_mut().zip(&x[s..e]) {
+            *zi = alpha * xi;
+        }
+    });
+}
+
+/// xᵀy with 8-way unrolled partial sums (independent accumulator chains let
+/// the FMA units pipeline; a single chain is latency-bound at ~4 cycles).
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len();
+    if n < PAR_THRESHOLD {
+        return dot_serial(x, y);
+    }
+    parallel_reduce(
+        n,
+        MIN_CHUNK,
+        0.0f64,
+        |s, e| dot_serial(&x[s..e], &y[s..e]) as f64,
+        |a, b| a + b,
+    ) as f32
+}
+
+fn dot_serial(x: &[f32], y: &[f32]) -> f32 {
+    let mut acc = [0.0f32; 8];
+    let chunks = x.len() / 8;
+    for c in 0..chunks {
+        let b = c * 8;
+        for l in 0..8 {
+            acc[l] = x[b + l].mul_add(y[b + l], acc[l]);
+        }
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * 8..x.len() {
+        tail = x[i].mul_add(y[i], tail);
+    }
+    acc.iter().sum::<f32>() + tail
+}
+
+/// ||x||₂ (scaled to avoid overflow like reference LAPACK snrm2 would is
+/// unnecessary at our test magnitudes; plain sum-of-squares in f64).
+pub fn nrm2(x: &[f32]) -> f32 {
+    let ss = if x.len() < PAR_THRESHOLD {
+        x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()
+    } else {
+        parallel_reduce(
+            x.len(),
+            MIN_CHUNK,
+            0.0f64,
+            |s, e| x[s..e].iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>(),
+            |a, b| a + b,
+        )
+    };
+    (ss.sqrt()) as f32
+}
+
+/// Σ|xᵢ|.
+pub fn asum(x: &[f32]) -> f32 {
+    if x.len() < PAR_THRESHOLD {
+        return x.iter().map(|v| v.abs()).sum();
+    }
+    parallel_reduce(
+        x.len(),
+        MIN_CHUNK,
+        0.0f64,
+        |s, e| x[s..e].iter().map(|&v| v.abs() as f64).sum::<f64>(),
+        |a, b| a + b,
+    ) as f32
+}
+
+/// First index of max |xᵢ|.
+pub fn iamax(x: &[f32]) -> usize {
+    if x.is_empty() {
+        return 0;
+    }
+    if x.len() < PAR_THRESHOLD {
+        return iamax_serial(x, 0);
+    }
+    let best = parallel_reduce(
+        x.len(),
+        MIN_CHUNK,
+        (f32::MIN, usize::MAX),
+        |s, e| {
+            let i = iamax_serial(&x[s..e], s);
+            (x[i].abs(), i)
+        },
+        // strictly-greater keeps the FIRST maximal index (combination is
+        // left-to-right and deterministic).
+        |a, b| if b.0 > a.0 { b } else { a },
+    );
+    best.1
+}
+
+fn iamax_serial(x: &[f32], offset: usize) -> usize {
+    let mut bi = 0usize;
+    let mut bv = f32::MIN;
+    for (i, &v) in x.iter().enumerate() {
+        let a = v.abs();
+        if a > bv {
+            bv = a;
+            bi = i;
+        }
+    }
+    offset + bi
+}
+
+/// y' = alpha*A@x + beta*y, row-major (m,n); rows are parallelised.
+pub fn gemv(alpha: f32, a: &[f32], m: usize, n: usize, x: &[f32], beta: f32, y: &[f32], out: &mut [f32]) {
+    assert_eq!(a.len(), m * n);
+    assert_eq!(x.len(), n);
+    assert_eq!(y.len(), m);
+    assert_eq!(out.len(), m);
+    let op = SyncPtr(out.as_mut_ptr());
+    // one row is n MACs; parallelise when the whole problem is big enough.
+    let min_rows = (PAR_THRESHOLD / n.max(1)).max(1);
+    parallel_chunks(m, min_rows, |_, rs, re| {
+        let os = unsafe { std::slice::from_raw_parts_mut(op.get().add(rs), re - rs) };
+        for (local, i) in (rs..re).enumerate() {
+            let row = &a[i * n..(i + 1) * n];
+            os[local] = alpha * dot_serial(row, x) + beta * y[i];
+        }
+    });
+}
+
+/// C' = alpha*A@B + beta*C, blocked i-k-j loop order (B rows stream through
+/// cache; the j-innermost loop is contiguous in both B and C so it
+/// vectorizes), row blocks parallelised.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm(
+    alpha: f32,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    beta: f32,
+    c: &[f32],
+    out: &mut [f32],
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    assert_eq!(out.len(), m * n);
+    let op = SyncPtr(out.as_mut_ptr());
+    let min_rows = (PAR_THRESHOLD / (k * n).max(1)).max(1);
+    parallel_chunks(m, min_rows, |_, rs, re| {
+        let os = unsafe { std::slice::from_raw_parts_mut(op.get().add(rs * n), (re - rs) * n) };
+        // init with beta*C
+        for (local, i) in (rs..re).enumerate() {
+            let orow = &mut os[local * n..(local + 1) * n];
+            let crow = &c[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] = beta * crow[j];
+            }
+        }
+        // accumulate alpha * A[i,l] * B[l,:]
+        for (local, i) in (rs..re).enumerate() {
+            let orow = &mut os[local * n..(local + 1) * n];
+            for l in 0..k {
+                let ail = alpha * a[i * k + l];
+                let brow = &b[l * n..(l + 1) * n];
+                for j in 0..n {
+                    orow[j] = ail.mul_add(brow[j], orow[j]);
+                }
+            }
+        }
+    });
+}
+
+/// z = alpha·x + beta·y, threaded.
+pub fn axpby(alpha: f32, x: &[f32], beta: f32, y: &[f32], z: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    assert_eq!(x.len(), z.len());
+    let n = x.len();
+    let zp = SyncPtr(z.as_mut_ptr());
+    parallel_chunks(n, MIN_CHUNK, |_, s_, e| {
+        let zs = unsafe { std::slice::from_raw_parts_mut(zp.get().add(s_), e - s_) };
+        for (i, zi) in zs.iter_mut().enumerate() {
+            *zi = alpha.mul_add(x[s_ + i], beta * y[s_ + i]);
+        }
+    });
+}
+
+/// Givens rotation, threaded over disjoint chunks of both outputs.
+pub fn rot(c: f32, s: f32, x: &[f32], y: &[f32], xo: &mut [f32], yo: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    assert_eq!(x.len(), xo.len());
+    assert_eq!(x.len(), yo.len());
+    let n = x.len();
+    let xp = SyncPtr(xo.as_mut_ptr());
+    let yp = SyncPtr(yo.as_mut_ptr());
+    parallel_chunks(n, MIN_CHUNK, |_, s_, e| {
+        let xs = unsafe { std::slice::from_raw_parts_mut(xp.get().add(s_), e - s_) };
+        let ys = unsafe { std::slice::from_raw_parts_mut(yp.get().add(s_), e - s_) };
+        for i in 0..(e - s_) {
+            let (xi, yi) = (x[s_ + i], y[s_ + i]);
+            xs[i] = c.mul_add(xi, s * yi);
+            ys[i] = c.mul_add(yi, -(s * xi));
+        }
+    });
+}
+
+/// A' = A + alpha·x·yᵀ, rows threaded.
+pub fn ger(alpha: f32, x: &[f32], y: &[f32], a: &[f32], m: usize, n: usize, out: &mut [f32]) {
+    assert_eq!(x.len(), m);
+    assert_eq!(y.len(), n);
+    assert_eq!(a.len(), m * n);
+    assert_eq!(out.len(), m * n);
+    let op = SyncPtr(out.as_mut_ptr());
+    let min_rows = (PAR_THRESHOLD / n.max(1)).max(1);
+    parallel_chunks(m, min_rows, |_, rs, re| {
+        let os = unsafe { std::slice::from_raw_parts_mut(op.get().add(rs * n), (re - rs) * n) };
+        for (local, i) in (rs..re).enumerate() {
+            let ax = alpha * x[i];
+            let arow = &a[i * n..(i + 1) * n];
+            let orow = &mut os[local * n..(local + 1) * n];
+            for j in 0..n {
+                orow[j] = ax.mul_add(y[j], arow[j]);
+            }
+        }
+    });
+}
+
+/// β = (w − alpha·v)ᵀu, fused single pass (no z materialization — the CPU
+/// analog of the dataflow composition).
+pub fn axpydot(alpha: f32, w: &[f32], v: &[f32], u: &[f32]) -> f32 {
+    assert_eq!(w.len(), v.len());
+    assert_eq!(w.len(), u.len());
+    let n = w.len();
+    // 8 independent accumulator chains — a single chain is FMA-latency
+    // bound (measured 6 GB/s vs 25 GB/s; EXPERIMENTS.md §Perf iter 4).
+    let body = |s: usize, e: usize| -> f64 {
+        let (ws, vs, us) = (&w[s..e], &v[s..e], &u[s..e]);
+        let mut acc = [0.0f32; 8];
+        let chunks = ws.len() / 8;
+        for c in 0..chunks {
+            let b = c * 8;
+            for l in 0..8 {
+                acc[l] = (ws[b + l] - alpha * vs[b + l]).mul_add(us[b + l], acc[l]);
+            }
+        }
+        let mut tail = 0.0f32;
+        for i in chunks * 8..ws.len() {
+            tail = (ws[i] - alpha * vs[i]).mul_add(us[i], tail);
+        }
+        (acc.iter().sum::<f32>() + tail) as f64
+    };
+    if n < PAR_THRESHOLD {
+        return body(0, n) as f32;
+    }
+    parallel_reduce(n, MIN_CHUNK, 0.0f64, body, |a, b| a + b) as f32
+}
+
+/// Send+Sync raw-pointer carrier for disjoint-chunk parallel writes.
+///
+/// Closures must capture the *struct* (via [`SyncPtr::get`]); capturing the
+/// `.0` field directly would disjoint-capture the raw pointer, which is not
+/// `Sync`.
+struct SyncPtr(*mut f32);
+unsafe impl Send for SyncPtr {}
+unsafe impl Sync for SyncPtr {}
+
+impl SyncPtr {
+    fn get(&self) -> *mut f32 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::reference as ref_;
+    use crate::util::rng::Rng;
+
+    fn close(a: f32, b: f32, tol: f32) -> bool {
+        (a - b).abs() <= tol * (1.0 + b.abs())
+    }
+
+    #[test]
+    fn matches_reference_small_and_large() {
+        let mut rng = Rng::new(1);
+        for n in [0usize, 1, 7, 1024, (1 << 16) + 13] {
+            let x = rng.normal_vec_f32(n);
+            let y = rng.normal_vec_f32(n);
+            let alpha = 1.25f32;
+
+            let mut z1 = vec![0.0; n];
+            let mut z2 = vec![0.0; n];
+            axpy(alpha, &x, &y, &mut z1);
+            ref_::axpy(alpha, &x, &y, &mut z2);
+            assert_eq!(z1.len(), z2.len());
+            for i in 0..n {
+                assert!(close(z1[i], z2[i], 1e-6), "axpy n={n} i={i}");
+            }
+
+            assert!(close(dot(&x, &y), ref_::dot(&x, &y), 2e-3), "dot n={n}");
+            assert!(close(nrm2(&x), ref_::nrm2(&x), 1e-4), "nrm2 n={n}");
+            assert!(close(asum(&x), ref_::asum(&x), 1e-4), "asum n={n}");
+            if n > 0 {
+                // equality of values, not indexes (ties broken identically
+                // because both keep the first maximum).
+                assert_eq!(x[iamax(&x)].abs(), x[ref_::iamax(&x)].abs(), "iamax n={n}");
+            }
+            assert!(
+                close(axpydot(alpha, &x, &y, &x), ref_::axpydot(alpha, &x, &y, &x), 2e-3),
+                "axpydot n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn gemv_matches_reference() {
+        let mut rng = Rng::new(2);
+        for (m, n) in [(1, 1), (3, 5), (64, 64), (200, 333)] {
+            let a = rng.normal_vec_f32(m * n);
+            let x = rng.normal_vec_f32(n);
+            let y = rng.normal_vec_f32(m);
+            let mut o1 = vec![0.0; m];
+            let mut o2 = vec![0.0; m];
+            gemv(0.7, &a, m, n, &x, -1.3, &y, &mut o1);
+            ref_::gemv(0.7, &a, m, n, &x, -1.3, &y, &mut o2);
+            for i in 0..m {
+                assert!(close(o1[i], o2[i], 1e-3), "gemv ({m},{n}) row {i}: {} vs {}", o1[i], o2[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_matches_reference() {
+        let mut rng = Rng::new(3);
+        for (m, k, n) in [(1, 1, 1), (4, 7, 3), (32, 32, 32), (65, 33, 48)] {
+            let a = rng.normal_vec_f32(m * k);
+            let b = rng.normal_vec_f32(k * n);
+            let c = rng.normal_vec_f32(m * n);
+            let mut o1 = vec![0.0; m * n];
+            let mut o2 = vec![0.0; m * n];
+            gemm(1.1, &a, &b, m, k, n, 0.4, &c, &mut o1);
+            ref_::gemm(1.1, &a, &b, m, k, n, 0.4, &c, &mut o2);
+            for i in 0..m * n {
+                assert!(close(o1[i], o2[i], 1e-3), "gemm ({m},{k},{n}) at {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn scal_parallel_path() {
+        let n = (1 << 16) + 5;
+        let x: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let mut z = vec![0.0; n];
+        scal(2.0, &x, &mut z);
+        assert_eq!(z[0], 0.0);
+        assert_eq!(z[n - 1], 2.0 * (n - 1) as f32);
+    }
+
+    #[test]
+    fn iamax_parallel_first_max() {
+        // two equal maxima straddling a likely chunk boundary: first wins.
+        let n = 1 << 17;
+        let mut x = vec![0.5f32; n];
+        x[100] = -9.0;
+        x[n - 100] = 9.0;
+        assert_eq!(iamax(&x), 100);
+    }
+}

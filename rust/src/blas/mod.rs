@@ -1,0 +1,312 @@
+//! BLAS routine registry: kinds, signatures and cost models.
+//!
+//! Mirrors the L2 registry in `python/compile/model.py`; the artifact
+//! manifest keeps the two sides in sync. Each routine declares its
+//! input/output *ports* — the unit the dataflow-graph builder composes
+//! (paper §III: scalars travel on streams, vectors/matrices on windows).
+
+pub mod cpu;
+pub mod reference;
+
+use std::fmt;
+
+/// Data carried on one routine port.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PortType {
+    /// A scalar (travels on an AXI stream in AIEBLAS).
+    Scalar,
+    /// A length-`n` vector (travels window-by-window).
+    Vector,
+    /// An `n×n` matrix (travels as 2-D windows).
+    Matrix,
+}
+
+impl PortType {
+    /// Number of f32 elements for problem size `n`.
+    pub fn elements(self, n: usize) -> usize {
+        match self {
+            PortType::Scalar => 1,
+            PortType::Vector => n,
+            PortType::Matrix => n * n,
+        }
+    }
+}
+
+/// A named input or output port of a routine.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Port {
+    pub name: &'static str,
+    pub ty: PortType,
+}
+
+const fn port(name: &'static str, ty: PortType) -> Port {
+    Port { name, ty }
+}
+
+/// Every routine AIEBLAS knows how to generate.
+///
+/// `Axpydot` is the paper's composed example (β = zᵀu, z = w − αv); in a
+/// *dataflow* build it is a two-kernel subgraph connected on-chip, in a
+/// *non-dataflow* build two independent designs bouncing z through DDR.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RoutineKind {
+    Axpy,
+    Axpby,
+    Rot,
+    Scal,
+    Copy,
+    Dot,
+    Nrm2,
+    Asum,
+    Iamax,
+    Gemv,
+    Ger,
+    Gemm,
+    Axpydot,
+}
+
+impl RoutineKind {
+    pub const ALL: [RoutineKind; 13] = [
+        RoutineKind::Axpy,
+        RoutineKind::Axpby,
+        RoutineKind::Rot,
+        RoutineKind::Scal,
+        RoutineKind::Copy,
+        RoutineKind::Dot,
+        RoutineKind::Nrm2,
+        RoutineKind::Asum,
+        RoutineKind::Iamax,
+        RoutineKind::Gemv,
+        RoutineKind::Ger,
+        RoutineKind::Gemm,
+        RoutineKind::Axpydot,
+    ];
+
+    /// Registry name (matches the JSON spec and the python registry).
+    pub fn name(self) -> &'static str {
+        match self {
+            RoutineKind::Axpy => "axpy",
+            RoutineKind::Axpby => "axpby",
+            RoutineKind::Rot => "rot",
+            RoutineKind::Scal => "scal",
+            RoutineKind::Copy => "copy",
+            RoutineKind::Dot => "dot",
+            RoutineKind::Nrm2 => "nrm2",
+            RoutineKind::Asum => "asum",
+            RoutineKind::Iamax => "iamax",
+            RoutineKind::Gemv => "gemv",
+            RoutineKind::Ger => "ger",
+            RoutineKind::Gemm => "gemm",
+            RoutineKind::Axpydot => "axpydot",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<RoutineKind> {
+        RoutineKind::ALL.iter().copied().find(|k| k.name() == name)
+    }
+
+    /// BLAS level (axpydot is a level-1 composition).
+    pub fn level(self) -> u8 {
+        match self {
+            RoutineKind::Gemv | RoutineKind::Ger => 2,
+            RoutineKind::Gemm => 3,
+            _ => 1,
+        }
+    }
+
+    /// Is this a composite routine lowered to a multi-kernel subgraph?
+    pub fn is_composite(self) -> bool {
+        matches!(self, RoutineKind::Axpydot)
+    }
+
+    /// Input ports, in artifact parameter order.
+    pub fn inputs(self) -> &'static [Port] {
+        use PortType::*;
+        macro_rules! ports {
+            ($($p:expr),* $(,)?) => {{
+                const P: &[Port] = &[$($p),*];
+                P
+            }};
+        }
+        match self {
+            RoutineKind::Axpy => ports![port("alpha", Scalar), port("x", Vector), port("y", Vector)],
+            RoutineKind::Axpby => ports![
+                port("alpha", Scalar),
+                port("beta", Scalar),
+                port("x", Vector),
+                port("y", Vector),
+            ],
+            RoutineKind::Rot => ports![
+                port("c", Scalar),
+                port("s", Scalar),
+                port("x", Vector),
+                port("y", Vector),
+            ],
+            RoutineKind::Scal => ports![port("alpha", Scalar), port("x", Vector)],
+            RoutineKind::Copy => ports![port("x", Vector)],
+            RoutineKind::Dot => ports![port("x", Vector), port("y", Vector)],
+            RoutineKind::Nrm2 => ports![port("x", Vector)],
+            RoutineKind::Asum => ports![port("x", Vector)],
+            RoutineKind::Iamax => ports![port("x", Vector)],
+            RoutineKind::Gemv => ports![
+                port("alpha", Scalar),
+                port("a", Matrix),
+                port("x", Vector),
+                port("beta", Scalar),
+                port("y", Vector),
+            ],
+            RoutineKind::Ger => ports![
+                port("alpha", Scalar),
+                port("x", Vector),
+                port("y", Vector),
+                port("a", Matrix),
+            ],
+            RoutineKind::Gemm => ports![
+                port("alpha", Scalar),
+                port("a", Matrix),
+                port("b", Matrix),
+                port("beta", Scalar),
+                port("c", Matrix),
+            ],
+            RoutineKind::Axpydot => ports![
+                port("alpha", Scalar),
+                port("w", Vector),
+                port("v", Vector),
+                port("u", Vector),
+            ],
+        }
+    }
+
+    /// Output ports.
+    pub fn outputs(self) -> &'static [Port] {
+        use PortType::*;
+        macro_rules! ports {
+            ($($p:expr),* $(,)?) => {{
+                const P: &[Port] = &[$($p),*];
+                P
+            }};
+        }
+        match self {
+            RoutineKind::Axpy | RoutineKind::Axpby | RoutineKind::Scal | RoutineKind::Copy => {
+                ports![port("z", Vector)]
+            }
+            RoutineKind::Rot => ports![port("x_out", Vector), port("y_out", Vector)],
+            RoutineKind::Dot => ports![port("result", Scalar)],
+            RoutineKind::Nrm2 | RoutineKind::Asum => ports![port("result", Scalar)],
+            RoutineKind::Iamax => ports![port("index", Scalar)],
+            RoutineKind::Gemv => ports![port("y_out", Vector)],
+            RoutineKind::Ger => ports![port("a_out", Matrix)],
+            RoutineKind::Gemm => ports![port("c_out", Matrix)],
+            RoutineKind::Axpydot => ports![port("beta_out", Scalar)],
+        }
+    }
+
+    /// Floating-point operations for problem size `n` (square matrices).
+    pub fn flops(self, n: usize) -> u64 {
+        let n = n as u64;
+        match self {
+            RoutineKind::Axpy => 2 * n,
+            RoutineKind::Axpby => 3 * n,
+            RoutineKind::Rot => 6 * n,
+            RoutineKind::Scal => n,
+            RoutineKind::Copy => 0,
+            RoutineKind::Dot => 2 * n,
+            RoutineKind::Nrm2 => 2 * n + 1,
+            RoutineKind::Asum => 2 * n,
+            RoutineKind::Iamax => 2 * n,
+            RoutineKind::Gemv => 2 * n * n + 3 * n,
+            RoutineKind::Ger => 2 * n * n,
+            RoutineKind::Gemm => 2 * n * n * n + 3 * n * n,
+            RoutineKind::Axpydot => 4 * n,
+        }
+    }
+
+    /// Bytes moved to/from off-chip memory for size `n` (f32), assuming all
+    /// unconnected ports go through PL movers (the Fig. 3 "PL" variant).
+    pub fn offchip_bytes(self, n: usize) -> u64 {
+        let io: usize = self
+            .inputs()
+            .iter()
+            .chain(self.outputs())
+            .map(|p| p.ty.elements(n))
+            .sum();
+        (io * crate::arch::F32_BYTES) as u64
+    }
+
+    /// Arithmetic intensity (flops per off-chip byte) — classifies the
+    /// routine as memory- or compute-bound, the axis the paper's analysis
+    /// (§IV) hinges on.
+    pub fn arithmetic_intensity(self, n: usize) -> f64 {
+        let b = self.offchip_bytes(n);
+        if b == 0 {
+            return 0.0;
+        }
+        self.flops(n) as f64 / b as f64
+    }
+}
+
+impl fmt::Display for RoutineKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_round_trip() {
+        for k in RoutineKind::ALL {
+            assert_eq!(RoutineKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(RoutineKind::from_name("nope"), None);
+    }
+
+    #[test]
+    fn levels() {
+        assert_eq!(RoutineKind::Axpy.level(), 1);
+        assert_eq!(RoutineKind::Gemv.level(), 2);
+        assert_eq!(RoutineKind::Gemm.level(), 3);
+    }
+
+    #[test]
+    fn axpy_signature() {
+        let k = RoutineKind::Axpy;
+        assert_eq!(k.inputs().len(), 3);
+        assert_eq!(k.inputs()[0].ty, PortType::Scalar);
+        assert_eq!(k.outputs()[0].ty, PortType::Vector);
+    }
+
+    #[test]
+    fn flop_counts() {
+        assert_eq!(RoutineKind::Axpy.flops(1000), 2000);
+        assert_eq!(RoutineKind::Dot.flops(1000), 2000);
+        assert_eq!(RoutineKind::Gemv.flops(100), 2 * 100 * 100 + 300);
+        assert_eq!(RoutineKind::Axpydot.flops(1000), 4000);
+    }
+
+    #[test]
+    fn level1_is_memory_bound() {
+        // Level-1 BLAS: O(1) flops per byte — the regime where Fig. 3 shows
+        // off-chip access dominating.
+        for k in [RoutineKind::Axpy, RoutineKind::Dot, RoutineKind::Axpydot] {
+            assert!(k.arithmetic_intensity(1 << 20) < 1.0, "{k}");
+        }
+        // Level-3 is compute-bound at scale.
+        assert!(RoutineKind::Gemm.arithmetic_intensity(512) > 10.0);
+    }
+
+    #[test]
+    fn offchip_bytes_axpy() {
+        // alpha(1) + x(n) + y(n) + z(n) floats
+        assert_eq!(RoutineKind::Axpy.offchip_bytes(1024), (3 * 1024 + 1) as u64 * 4);
+    }
+
+    #[test]
+    fn port_type_elements() {
+        assert_eq!(PortType::Scalar.elements(99), 1);
+        assert_eq!(PortType::Vector.elements(99), 99);
+        assert_eq!(PortType::Matrix.elements(8), 64);
+    }
+}

@@ -1,0 +1,235 @@
+//! Scalar reference implementations of every routine.
+//!
+//! These are the Rust-side ground truth: the CPU baseline, the simulator's
+//! numeric sanity checks and the PJRT artifacts are all validated against
+//! them (and the artifacts are in turn validated against the pure-jnp
+//! oracles in python, closing the loop across the language boundary).
+//!
+//! Deliberately naive: clarity over speed. Speed lives in [`super::cpu`].
+
+/// z = alpha*x + y (out of place, like AIEBLAS routines).
+pub fn axpy(alpha: f32, x: &[f32], y: &[f32], z: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    assert_eq!(x.len(), z.len());
+    for i in 0..x.len() {
+        z[i] = alpha * x[i] + y[i];
+    }
+}
+
+/// z = alpha*x.
+pub fn scal(alpha: f32, x: &[f32], z: &mut [f32]) {
+    assert_eq!(x.len(), z.len());
+    for i in 0..x.len() {
+        z[i] = alpha * x[i];
+    }
+}
+
+/// z = x.
+pub fn copy(x: &[f32], z: &mut [f32]) {
+    z.copy_from_slice(x);
+}
+
+/// xᵀy.
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    assert_eq!(x.len(), y.len());
+    let mut acc = 0.0f32;
+    for i in 0..x.len() {
+        acc += x[i] * y[i];
+    }
+    acc
+}
+
+/// ||x||₂.
+pub fn nrm2(x: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for &v in x {
+        acc += v * v;
+    }
+    acc.sqrt()
+}
+
+/// Σ|xᵢ|.
+pub fn asum(x: &[f32]) -> f32 {
+    x.iter().map(|v| v.abs()).sum()
+}
+
+/// First index of the maximum-magnitude element (BLAS ixamax). Returns 0
+/// for an empty slice, matching the BLAS convention of 1-based 0 meaning
+/// "invalid" shifted to 0-based.
+pub fn iamax(x: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut best_val = f32::MIN;
+    for (i, &v) in x.iter().enumerate() {
+        let a = v.abs();
+        if a > best_val {
+            best_val = a;
+            best = i;
+        }
+    }
+    best
+}
+
+/// y' = alpha*A@x + beta*y for row-major `a` of shape (m, n).
+pub fn gemv(alpha: f32, a: &[f32], m: usize, n: usize, x: &[f32], beta: f32, y: &[f32], out: &mut [f32]) {
+    assert_eq!(a.len(), m * n);
+    assert_eq!(x.len(), n);
+    assert_eq!(y.len(), m);
+    assert_eq!(out.len(), m);
+    for i in 0..m {
+        let row = &a[i * n..(i + 1) * n];
+        let mut acc = 0.0f32;
+        for j in 0..n {
+            acc += row[j] * x[j];
+        }
+        out[i] = alpha * acc + beta * y[i];
+    }
+}
+
+/// C' = alpha*A@B + beta*C for row-major (m,k)·(k,n).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm(
+    alpha: f32,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    beta: f32,
+    c: &[f32],
+    out: &mut [f32],
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for l in 0..k {
+                acc += a[i * k + l] * b[l * n + j];
+            }
+            out[i * n + j] = alpha * acc + beta * c[i * n + j];
+        }
+    }
+}
+
+/// z = alpha·x + beta·y (extended-BLAS axpby).
+pub fn axpby(alpha: f32, x: &[f32], beta: f32, y: &[f32], z: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    assert_eq!(x.len(), z.len());
+    for i in 0..x.len() {
+        z[i] = alpha * x[i] + beta * y[i];
+    }
+}
+
+/// Givens rotation: (x', y') = (c·x + s·y, c·y − s·x).
+pub fn rot(c: f32, s: f32, x: &[f32], y: &[f32], xo: &mut [f32], yo: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    assert_eq!(x.len(), xo.len());
+    assert_eq!(x.len(), yo.len());
+    for i in 0..x.len() {
+        xo[i] = c * x[i] + s * y[i];
+        yo[i] = c * y[i] - s * x[i];
+    }
+}
+
+/// A' = A + alpha·x·yᵀ (rank-1 update, row-major (m,n)).
+pub fn ger(alpha: f32, x: &[f32], y: &[f32], a: &[f32], m: usize, n: usize, out: &mut [f32]) {
+    assert_eq!(x.len(), m);
+    assert_eq!(y.len(), n);
+    assert_eq!(a.len(), m * n);
+    assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        for j in 0..n {
+            out[i * n + j] = a[i * n + j] + alpha * x[i] * y[j];
+        }
+    }
+}
+
+/// β = zᵀu with z = w − alpha·v (the paper's composed axpydot).
+pub fn axpydot(alpha: f32, w: &[f32], v: &[f32], u: &[f32]) -> f32 {
+    assert_eq!(w.len(), v.len());
+    assert_eq!(w.len(), u.len());
+    let mut acc = 0.0f32;
+    for i in 0..w.len() {
+        acc += (w[i] - alpha * v[i]) * u[i];
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: f32, b: f32, tol: f32) {
+        assert!((a - b).abs() <= tol * (1.0 + b.abs()), "{a} vs {b}");
+    }
+
+    #[test]
+    fn axpy_basic() {
+        let mut z = vec![0.0; 3];
+        axpy(2.0, &[1.0, 2.0, 3.0], &[10.0, 20.0, 30.0], &mut z);
+        assert_eq!(z, vec![12.0, 24.0, 36.0]);
+    }
+
+    #[test]
+    fn dot_and_norms() {
+        let x = [3.0, 4.0];
+        assert_eq!(dot(&x, &x), 25.0);
+        assert_eq!(nrm2(&x), 5.0);
+        assert_eq!(asum(&[-1.0, 2.0, -3.0]), 6.0);
+    }
+
+    #[test]
+    fn iamax_first_on_tie() {
+        assert_eq!(iamax(&[1.0, -3.0, 3.0]), 1);
+        assert_eq!(iamax(&[]), 0);
+    }
+
+    #[test]
+    fn gemv_identity() {
+        // 2x2 identity
+        let a = [1.0, 0.0, 0.0, 1.0];
+        let mut out = vec![0.0; 2];
+        gemv(1.0, &a, 2, 2, &[5.0, 7.0], 0.0, &[0.0, 0.0], &mut out);
+        assert_eq!(out, vec![5.0, 7.0]);
+    }
+
+    #[test]
+    fn gemv_alpha_beta() {
+        let a = [1.0, 2.0, 3.0, 4.0]; // [[1,2],[3,4]]
+        let mut out = vec![0.0; 2];
+        gemv(2.0, &a, 2, 2, &[1.0, 1.0], -1.0, &[1.0, 2.0], &mut out);
+        // 2*[3,7] - [1,2] = [5,12]
+        assert_eq!(out, vec![5.0, 12.0]);
+    }
+
+    #[test]
+    fn gemm_small() {
+        let a = [1.0, 2.0, 3.0, 4.0]; // 2x2
+        let b = [5.0, 6.0, 7.0, 8.0];
+        let c = [1.0; 4];
+        let mut out = vec![0.0; 4];
+        gemm(1.0, &a, &b, 2, 2, 2, 1.0, &c, &mut out);
+        // A@B = [[19,22],[43,50]] + 1
+        assert_eq!(out, vec![20.0, 23.0, 44.0, 51.0]);
+    }
+
+    #[test]
+    fn axpydot_matches_manual_composition() {
+        let w = [1.0, 2.0, 3.0];
+        let v = [0.5, 0.5, 0.5];
+        let u = [2.0, 2.0, 2.0];
+        let alpha = 2.0;
+        let mut z = vec![0.0; 3];
+        axpy(-alpha, &v, &w, &mut z); // z = w - alpha*v
+        assert_close(axpydot(alpha, &w, &v, &u), dot(&z, &u), 1e-6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn axpy_length_mismatch_panics() {
+        let mut z = vec![0.0; 2];
+        axpy(1.0, &[1.0], &[1.0, 2.0], &mut z);
+    }
+}

@@ -1,0 +1,247 @@
+//! ADF dataflow-graph generation (`graph.h` / `graph.cpp`, Fig. 1 ③).
+//!
+//! Emits the `adf::graph` subclass wiring the generated kernels: window
+//! connections between composed kernels (on-chip dataflow), PLIO
+//! connections to the mm2s/s2mm movers for off-chip ports, and
+//! `adf::location` constraints for kernels the spec pins (paper §III's
+//! placement hints).
+
+use crate::graph::build::BuildOutput;
+use crate::graph::{EdgeKind, NodeKind};
+use crate::spec::Spec;
+use crate::Result;
+
+/// `aie/graph.h` — the design's ADF graph class.
+pub fn graph_header(spec: &Spec, built: &BuildOutput) -> Result<String> {
+    let g = &built.graph;
+    let mut kernels = String::new();
+    let mut includes = String::new();
+    let mut creates = String::new();
+    let mut constraints = String::new();
+    let mut plio_decls = String::new();
+    let mut connects = String::new();
+
+    for node in &g.nodes {
+        match &node.kind {
+            NodeKind::AieKernel { kind, window, hint, .. } => {
+                includes.push_str(&format!("#include \"kernels/{}.h\"\n", node.name));
+                kernels.push_str(&format!("    adf::kernel k_{};\n", node.name));
+                creates.push_str(&format!(
+                    "        k_{n} = adf::kernel::create({n});\n\
+                     \x20       adf::source(k_{n}) = \"kernels/{n}.cc\";\n\
+                     \x20       adf::runtime<ratio>(k_{n}) = 0.9;\n",
+                    n = node.name
+                ));
+                if let Some((col, row)) = hint {
+                    constraints.push_str(&format!(
+                        "        adf::location<adf::kernel>(k_{}) = adf::tile({col}, {row});\n",
+                        node.name
+                    ));
+                }
+                let _ = (kind, window);
+            }
+            NodeKind::Combine { parts } => {
+                kernels.push_str(&format!(
+                    "    adf::kernel k_{}; // {parts}-way partial-sum combiner\n",
+                    node.name
+                ));
+                creates.push_str(&format!(
+                    "        k_{n} = adf::kernel::create(combine{parts});\n\
+                     \x20       adf::source(k_{n}) = \"kernels/combine.cc\";\n",
+                    n = node.name,
+                    parts = parts
+                ));
+            }
+            NodeKind::PlMm2s { .. } => {
+                plio_decls.push_str(&format!(
+                    "    adf::input_plio p_{n};\n",
+                    n = node.name
+                ));
+            }
+            NodeKind::PlS2mm { .. } => {
+                plio_decls.push_str(&format!(
+                    "    adf::output_plio p_{n};\n",
+                    n = node.name
+                ));
+            }
+            _ => {}
+        }
+    }
+
+    for e in &g.edges {
+        let src = g.node(e.src);
+        let dst = g.node(e.dst);
+        let window_bytes = e.window_bytes();
+        match (&src.kind, &dst.kind) {
+            (NodeKind::AieKernel { .. }, NodeKind::AieKernel { .. }) => {
+                // on-chip dataflow connection — the paper's composition.
+                let conn = match e.kind {
+                    EdgeKind::Window => format!(
+                        "        adf::connect<adf::window<{window_bytes}>>(k_{}.out[{}], k_{}.in[{}]); // {} -> {}\n",
+                        src.name,
+                        out_index(src, &e.src_port),
+                        dst.name,
+                        in_index(dst, &e.dst_port),
+                        e.src_port,
+                        e.dst_port,
+                    ),
+                    EdgeKind::Stream => format!(
+                        "        adf::connect<adf::stream>(k_{}.out[{}], k_{}.in[{}]);\n",
+                        src.name,
+                        out_index(src, &e.src_port),
+                        dst.name,
+                        in_index(dst, &e.dst_port),
+                    ),
+                };
+                connects.push_str(&conn);
+            }
+            (NodeKind::PlMm2s { .. }, NodeKind::AieKernel { .. }) => {
+                connects.push_str(&format!(
+                    "        p_{s} = adf::input_plio::create(\"{s}\", adf::plio_128_bits, \"data/{s}.txt\");\n\
+                     \x20       adf::connect<adf::window<{window_bytes}>>(p_{s}.out[0], k_{d}.in[{i}]);\n",
+                    s = src.name,
+                    d = dst.name,
+                    i = in_index(dst, &e.dst_port),
+                ));
+            }
+            (NodeKind::AieKernel { .. }, NodeKind::PlS2mm { .. }) => {
+                connects.push_str(&format!(
+                    "        p_{d} = adf::output_plio::create(\"{d}\", adf::plio_128_bits, \"data/{d}.txt\");\n\
+                     \x20       adf::connect<adf::window<{window_bytes}>>(k_{s}.out[{o}], p_{d}.in[0]);\n",
+                    s = src.name,
+                    d = dst.name,
+                    o = out_index(src, &e.src_port),
+                ));
+            }
+            // on-chip generators become kernels producing synthetic data in
+            // the real AIEBLAS no-PL builds; model them as comments so the
+            // generated graph stays compilable.
+            _ => {
+                connects.push_str(&format!(
+                    "        // on-chip {}: {} -> {} ({} B windows)\n",
+                    match src.kind {
+                        NodeKind::OnChipSource => "generator",
+                        _ => "sink",
+                    },
+                    src.name,
+                    dst.name,
+                    window_bytes,
+                ));
+            }
+        }
+    }
+
+    Ok(format!(
+        "// Generated by AIEBLAS — do not edit.\n\
+         // Design: {} routine(s), data_source = {}\n\
+         #pragma once\n\
+         #include <adf.h>\n\
+         {includes}\n\
+         class aieblas_graph : public adf::graph {{\n\
+         public:\n\
+         {kernels}{plio_decls}\n\
+         \x20   aieblas_graph() {{\n\
+         {creates}{constraints}{connects}\
+         \x20   }}\n\
+         }};\n",
+        spec.routines.len(),
+        spec.data_source.name(),
+    ))
+}
+
+/// `aie/graph.cpp` — instantiation + main for aiesimulator.
+pub fn graph_source(spec: &Spec) -> String {
+    format!(
+        "// Generated by AIEBLAS — do not edit.\n\
+         #include \"graph.h\"\n\n\
+         aieblas_graph g;\n\n\
+         #if defined(__AIESIM__) || defined(__X86SIM__)\n\
+         int main() {{\n\
+         \x20   g.init();\n\
+         \x20   g.run({iterations});\n\
+         \x20   g.end();\n\
+         \x20   return 0;\n\
+         }}\n\
+         #endif\n",
+        iterations = spec
+            .routines
+            .iter()
+            .map(|r| r.size / r.effective_window().max(1))
+            .max()
+            .unwrap_or(1),
+    )
+}
+
+fn in_index(node: &crate::graph::Node, port: &str) -> usize {
+    if let NodeKind::AieKernel { kind, .. } = &node.kind {
+        kind.inputs().iter().position(|p| p.name == port).unwrap_or(0)
+    } else {
+        0
+    }
+}
+
+fn out_index(node: &crate::graph::Node, port: &str) -> usize {
+    if let NodeKind::AieKernel { kind, .. } = &node.kind {
+        kind.outputs().iter().position(|p| p.name == port).unwrap_or(0)
+    } else {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::RoutineKind;
+    use crate::graph::build::build_graph;
+    use crate::spec::{DataSource, Spec};
+
+    fn header_for(spec: &Spec) -> String {
+        let built = build_graph(spec).unwrap();
+        graph_header(spec, &built).unwrap()
+    }
+
+    #[test]
+    fn axpy_graph_declares_kernel_and_plios() {
+        let spec = Spec::single(RoutineKind::Axpy, "vadd", 4096, DataSource::Pl);
+        let h = header_for(&spec);
+        assert!(h.contains("adf::kernel k_vadd;"));
+        assert!(h.contains("adf::kernel::create(vadd)"));
+        assert!(h.contains("input_plio p_vadd_x_mm2s"));
+        assert!(h.contains("output_plio p_vadd_z_s2mm"));
+        assert!(h.contains("class aieblas_graph : public adf::graph"));
+    }
+
+    #[test]
+    fn dataflow_connection_is_window_connect() {
+        let spec = Spec::axpydot_dataflow(65536, 2.0);
+        let h = header_for(&spec);
+        assert!(
+            h.contains("adf::connect<adf::window<4096>>(k_axpy_stage.out[0], k_dot_stage.in[0])"),
+            "{h}"
+        );
+    }
+
+    #[test]
+    fn placement_hint_becomes_location_constraint() {
+        let mut spec = Spec::single(RoutineKind::Dot, "vdot", 4096, DataSource::Pl);
+        spec.routines[0].placement = Some(crate::spec::Placement { col: 12, row: 4 });
+        let h = header_for(&spec);
+        assert!(h.contains("adf::location<adf::kernel>(k_vdot) = adf::tile(12, 4);"));
+    }
+
+    #[test]
+    fn graph_source_runs_expected_iterations() {
+        let spec = Spec::single(RoutineKind::Axpy, "vadd", 8192, DataSource::Pl);
+        let src = graph_source(&spec);
+        let w = spec.routines[0].effective_window();
+        assert!(src.contains(&format!("g.run({})", 8192 / w)));
+    }
+
+    #[test]
+    fn onchip_variant_has_generator_comments_not_plio() {
+        let spec = Spec::single(RoutineKind::Axpy, "vadd", 4096, DataSource::OnChip);
+        let h = header_for(&spec);
+        assert!(!h.contains("input_plio"));
+        assert!(h.contains("// on-chip generator"));
+    }
+}

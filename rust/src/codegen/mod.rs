@@ -1,0 +1,170 @@
+//! Template-based code generation (paper §III, Fig. 1 ①–④).
+//!
+//! From the validated spec AIEBLAS generates the complete Vitis design a
+//! user would compile for a real VCK5000:
+//!
+//! 1. **AIE kernels** (`aie/<name>.cc/.h`) — vectorized ADF C++ using the
+//!    window/stream APIs ([`aie_kernel`]);
+//! 2. **PL kernels** (`pl/mm2s.cpp`, `pl/s2mm.cpp`) — HLS data movers
+//!    ([`pl_kernel`]);
+//! 3. **dataflow graph** (`aie/graph.h`, `aie/graph.cpp`) — the ADF graph
+//!    connecting kernels and movers ([`adf_graph`]);
+//! 4. **build project** (`CMakeLists.txt`, `system.cfg`, `host.cpp`)
+//!    ([`project`]).
+//!
+//! Since no Vitis toolchain exists in this environment, the generated
+//! sources are validated structurally (golden tests, determinism,
+//! C-identifier hygiene) and the *behaviour* of the generated design is
+//! what the simulator executes; the generated text matches the AIEBLAS
+//! repository's layout so it would drop into a real Vitis flow.
+
+pub mod adf_graph;
+pub mod aie_kernel;
+pub mod pl_kernel;
+pub mod project;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::spec::Spec;
+use crate::Result;
+
+/// A generated source tree: path → file contents. BTreeMap for
+/// deterministic iteration (stable golden tests).
+#[derive(Debug, Clone, Default)]
+pub struct GeneratedProject {
+    pub files: BTreeMap<String, String>,
+}
+
+impl GeneratedProject {
+    pub fn insert(&mut self, path: impl Into<String>, contents: String) {
+        self.files.insert(path.into(), contents);
+    }
+
+    pub fn get(&self, path: &str) -> Option<&str> {
+        self.files.get(path).map(String::as_str)
+    }
+
+    /// Total generated lines (reported by the CLI).
+    pub fn total_lines(&self) -> usize {
+        self.files.values().map(|c| c.lines().count()).sum()
+    }
+
+    /// Write all files under `root`, creating directories as needed.
+    pub fn write_to(&self, root: &Path) -> Result<()> {
+        for (rel, contents) in &self.files {
+            let path = root.join(rel);
+            if let Some(parent) = path.parent() {
+                std::fs::create_dir_all(parent)?;
+            }
+            std::fs::write(path, contents)?;
+        }
+        Ok(())
+    }
+}
+
+/// Generate the complete project for a validated spec.
+pub fn generate(spec: &Spec) -> Result<GeneratedProject> {
+    crate::spec::validate(spec)?;
+    let built = crate::graph::build::build_graph(spec)?;
+    let mut proj = GeneratedProject::default();
+
+    // 1. AIE kernels
+    for node in &built.graph.nodes {
+        if let crate::graph::NodeKind::AieKernel { kind, size, window, vector_bits, .. } =
+            &node.kind
+        {
+            let header = aie_kernel::kernel_header(&node.name, *kind);
+            let source = aie_kernel::kernel_source(
+                &node.name,
+                *kind,
+                *size,
+                *window,
+                *vector_bits,
+                spec,
+            );
+            proj.insert(format!("aie/kernels/{}.h", node.name), header);
+            proj.insert(format!("aie/kernels/{}.cc", node.name), source);
+        }
+    }
+
+    // 2. PL movers (one shared implementation each, instantiated per port
+    //    in the connectivity config)
+    let any_burst = spec.routines.iter().any(|r| r.burst);
+    if built.graph.num_pl_movers() > 0 {
+        proj.insert("pl/mm2s.cpp".to_string(), pl_kernel::mm2s_source(any_burst));
+        proj.insert("pl/s2mm.cpp".to_string(), pl_kernel::s2mm_source(any_burst));
+    }
+
+    // 3. dataflow graph
+    proj.insert("aie/graph.h".to_string(), adf_graph::graph_header(spec, &built)?);
+    proj.insert("aie/graph.cpp".to_string(), adf_graph::graph_source(spec));
+
+    // 4. build project
+    proj.insert("CMakeLists.txt".to_string(), project::cmake(spec, &built));
+    proj.insert("system.cfg".to_string(), project::connectivity(spec, &built));
+    proj.insert("host/host.cpp".to_string(), project::host(spec, &built));
+    proj.insert("README.md".to_string(), project::readme(spec));
+
+    Ok(proj)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::RoutineKind;
+    use crate::spec::{DataSource, Spec};
+
+    #[test]
+    fn generates_expected_file_set_for_axpy() {
+        let spec = Spec::single(RoutineKind::Axpy, "vadd", 4096, DataSource::Pl);
+        let p = generate(&spec).unwrap();
+        for f in [
+            "aie/kernels/vadd.h",
+            "aie/kernels/vadd.cc",
+            "pl/mm2s.cpp",
+            "pl/s2mm.cpp",
+            "aie/graph.h",
+            "aie/graph.cpp",
+            "CMakeLists.txt",
+            "system.cfg",
+            "host/host.cpp",
+            "README.md",
+        ] {
+            assert!(p.get(f).is_some(), "missing {f}");
+        }
+    }
+
+    #[test]
+    fn onchip_design_has_no_pl_kernels() {
+        let spec = Spec::single(RoutineKind::Axpy, "vadd", 4096, DataSource::OnChip);
+        let p = generate(&spec).unwrap();
+        assert!(p.get("pl/mm2s.cpp").is_none());
+        assert!(p.get("pl/s2mm.cpp").is_none());
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let spec = Spec::axpydot_dataflow(65536, 2.0);
+        let a = generate(&spec).unwrap();
+        let b = generate(&spec).unwrap();
+        assert_eq!(a.files, b.files);
+    }
+
+    #[test]
+    fn invalid_spec_rejected() {
+        let spec = Spec { routines: vec![], ..Default::default() };
+        assert!(generate(&spec).is_err());
+    }
+
+    #[test]
+    fn write_to_roundtrip(){
+        let spec = Spec::single(RoutineKind::Dot, "vdot", 1024, DataSource::Pl);
+        let p = generate(&spec).unwrap();
+        let dir = std::env::temp_dir().join(format!("aieblas_codegen_test_{}", std::process::id()));
+        p.write_to(&dir).unwrap();
+        let on_disk = std::fs::read_to_string(dir.join("aie/kernels/vdot.cc")).unwrap();
+        assert_eq!(on_disk, *p.get("aie/kernels/vdot.cc").unwrap());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

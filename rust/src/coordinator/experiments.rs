@@ -1,0 +1,268 @@
+//! The Fig. 3 experiment harness and §V ablations.
+//!
+//! One function per paper panel, each returning a [`Table`] whose rows are
+//! the series the figure plots (input size × variant → execution time).
+//! Shared by `cargo bench` targets, the `examples/e2e_fig3.rs` driver and
+//! the `aieblas fig3` CLI subcommand.
+
+use super::{cpu_run, AieBlas};
+use crate::blas::RoutineKind;
+use crate::spec::{DataSource, Spec};
+use crate::util::rng::Rng;
+use crate::util::table::{fmt_time, Table};
+use crate::Result;
+
+/// Fig. 3 vector sizes (axpy / axpydot panels).
+pub const VEC_SIZES: [usize; 5] = [4096, 16384, 65536, 262144, 1048576];
+/// Fig. 3 matrix sizes (gemv panel).
+pub const MAT_SIZES: [usize; 4] = [64, 128, 256, 512];
+
+/// Analytic CPU time from the paper-testbed roofline model (see
+/// [`crate::arch::HostConfig::blas_call_time`]): the Fig. 3 "CPU" series
+/// anchored to the published 2×10-core Xeon, independent of the machine
+/// running the benches.
+pub fn cpu_time_model(kind: RoutineKind, size: usize) -> f64 {
+    let host = crate::arch::HostConfig::default();
+    host.blas_call_time(kind.flops(size), kind.offchip_bytes(size))
+}
+
+/// Median *measured* CPU time for one routine at one size (seconds) on the
+/// local machine's threaded Rust BLAS (meaningful in release builds).
+pub fn cpu_time(kind: RoutineKind, size: usize, samples: usize) -> f64 {
+    let mut rng = Rng::new(size as u64 ^ 0xC0FFEE);
+    let inputs: Vec<Vec<f32>> = kind
+        .inputs()
+        .iter()
+        .map(|p| rng.normal_vec_f32(p.ty.elements(size)))
+        .collect();
+    let mut ts: Vec<f64> = (0..samples.max(1))
+        .map(|_| {
+            let t0 = std::time::Instant::now();
+            std::hint::black_box(cpu_run(kind, size, &inputs));
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ts[ts.len() / 2]
+}
+
+/// One row of a Fig. 3 panel.
+#[derive(Debug, Clone)]
+pub struct PanelRow {
+    pub size: usize,
+    pub variant: &'static str,
+    pub seconds: f64,
+}
+
+/// Fig. 3 panel for a single routine: AIE w/ PL movers vs AIE no-PL vs CPU.
+pub fn single_routine_panel(
+    sys: &AieBlas,
+    kind: RoutineKind,
+    sizes: &[usize],
+) -> Result<Vec<PanelRow>> {
+    let mut rows = Vec::new();
+    for &n in sizes {
+        let pl = sys.run_spec_sim_only(&Spec::single(kind, "k", n, DataSource::Pl))?;
+        rows.push(PanelRow { size: n, variant: "aie (PL)", seconds: pl.makespan_s });
+        let onchip = sys.run_spec_sim_only(&Spec::single(kind, "k", n, DataSource::OnChip))?;
+        rows.push(PanelRow { size: n, variant: "aie (no PL)", seconds: onchip.makespan_s });
+        rows.push(PanelRow { size: n, variant: "cpu", seconds: cpu_time_model(kind, n) });
+        rows.push(PanelRow { size: n, variant: "cpu (measured)", seconds: cpu_time(kind, n, 5) });
+    }
+    Ok(rows)
+}
+
+/// Fig. 3 axpydot panel: dataflow vs non-dataflow vs CPU.
+pub fn axpydot_panel(sys: &AieBlas, sizes: &[usize]) -> Result<Vec<PanelRow>> {
+    let mut rows = Vec::new();
+    for &n in sizes {
+        let df = sys.run_axpydot(n, true)?;
+        rows.push(PanelRow { size: n, variant: "aie (w/ DF)", seconds: df.makespan_s });
+        let nodf = sys.run_axpydot(n, false)?;
+        rows.push(PanelRow { size: n, variant: "aie (w/o DF)", seconds: nodf.makespan_s });
+        rows.push(PanelRow {
+            size: n,
+            variant: "cpu",
+            seconds: cpu_time_model(RoutineKind::Axpydot, n),
+        });
+        rows.push(PanelRow {
+            size: n,
+            variant: "cpu (measured)",
+            seconds: cpu_time(RoutineKind::Axpydot, n, 5),
+        });
+    }
+    Ok(rows)
+}
+
+/// Render panel rows as the table the paper's figure plots.
+pub fn panel_table(title: &str, rows: &[PanelRow]) -> Table {
+    let mut t = Table::new(vec!["panel", "n", "variant", "time"]);
+    for r in rows {
+        t.row(vec![
+            title.to_string(),
+            r.size.to_string(),
+            r.variant.to_string(),
+            fmt_time(r.seconds),
+        ]);
+    }
+    t
+}
+
+/// Seconds for (size, variant) in a panel (test helper).
+pub fn lookup(rows: &[PanelRow], size: usize, variant: &str) -> Option<f64> {
+    rows.iter()
+        .find(|r| r.size == size && r.variant == variant)
+        .map(|r| r.seconds)
+}
+
+// ---------------------------------------------------------------------------
+// §V ablations
+// ---------------------------------------------------------------------------
+
+/// A1: burst-optimized vs naive movers for one routine across sizes.
+pub fn ablation_burst(sys: &AieBlas, kind: RoutineKind, sizes: &[usize]) -> Result<Table> {
+    let mut t = Table::new(vec!["n", "naive", "burst", "speedup"]);
+    for &n in sizes {
+        let mut naive = Spec::single(kind, "k", n, DataSource::Pl);
+        naive.routines[0].burst = false;
+        let mut burst = naive.clone();
+        burst.routines[0].burst = true;
+        let tn = sys.run_spec_sim_only(&naive)?.makespan_s;
+        let tb = sys.run_spec_sim_only(&burst)?.makespan_s;
+        t.row(vec![
+            n.to_string(),
+            fmt_time(tn),
+            fmt_time(tb),
+            format!("{:.2}x", tn / tb),
+        ]);
+    }
+    Ok(t)
+}
+
+/// A3 (window): window-size sweep for one routine at fixed n.
+pub fn ablation_window(sys: &AieBlas, kind: RoutineKind, n: usize, windows: &[usize]) -> Result<Table> {
+    let mut t = Table::new(vec!["window", "time", "windows/edge"]);
+    for &w in windows {
+        let mut spec = Spec::single(kind, "k", n, DataSource::Pl);
+        spec.routines[0].window = Some(w);
+        let r = sys.run_spec_sim_only(&spec)?;
+        t.row(vec![
+            w.to_string(),
+            fmt_time(r.makespan_s),
+            (n / spec.routines[0].effective_window()).to_string(),
+        ]);
+    }
+    Ok(t)
+}
+
+/// A3 (vector width): vector-width sweep at fixed n.
+pub fn ablation_vector_width(sys: &AieBlas, kind: RoutineKind, n: usize) -> Result<Table> {
+    let mut t = Table::new(vec!["vector_bits", "time"]);
+    for bits in [64usize, 128, 256, 512] {
+        let mut spec = Spec::single(kind, "k", n, DataSource::OnChip);
+        spec.routines[0].vector_bits = bits;
+        let r = sys.run_spec_sim_only(&spec)?;
+        t.row(vec![bits.to_string(), fmt_time(r.makespan_s)]);
+    }
+    Ok(t)
+}
+
+/// A2: multi-AIE split — the first-class `split` spec field partitions the
+/// routine across k kernels, each with its own PL ports (the paper's
+/// "exploit the several AIE-PL interfaces" future work), with an on-chip
+/// combiner for reductions.
+pub fn ablation_multi_port(sys: &AieBlas, n: usize, splits: &[usize]) -> Result<Table> {
+    let mut t = Table::new(vec!["kernels", "time", "speedup_vs_1"]);
+    let mut base = None;
+    for &k in splits {
+        let mut spec = Spec::single(RoutineKind::Axpy, "k", n, DataSource::Pl);
+        spec.routines[0].split = k;
+        let r = sys.run_spec_sim_only(&spec)?;
+        let b = *base.get_or_insert(r.makespan_s);
+        t.row(vec![
+            k.to_string(),
+            fmt_time(r.makespan_s),
+            format!("{:.2}x", b / r.makespan_s),
+        ]);
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Config;
+
+    fn system() -> AieBlas {
+        AieBlas::new(Config {
+            artifacts_dir: "/nonexistent".into(),
+            cpu_samples: 1,
+            check_numerics: false,
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn axpy_panel_has_paper_shape() {
+        let sys = system();
+        let sizes = [1usize << 14, 1 << 18];
+        let rows = single_routine_panel(&sys, RoutineKind::Axpy, &sizes).unwrap();
+        assert_eq!(rows.len(), sizes.len() * 4);
+        for &n in &sizes {
+            let pl = lookup(&rows, n, "aie (PL)").unwrap();
+            let nopl = lookup(&rows, n, "aie (no PL)").unwrap();
+            let cpu = lookup(&rows, n, "cpu").unwrap();
+            assert!(nopl < pl, "n={n}: no-PL should beat PL");
+            assert!(cpu < pl, "n={n}: cpu should beat AIE-PL");
+            // paper: "up to 10x" — the gap stays within an order of
+            // magnitude band, not orders beyond it.
+            assert!(pl / cpu < 40.0, "n={n}: CPU advantage {:.1}x implausibly large", pl / cpu);
+        }
+    }
+
+    #[test]
+    fn axpydot_df_beats_nodf_about_2x() {
+        let sys = system();
+        let rows = axpydot_panel(&sys, &[1 << 18]).unwrap();
+        let df = lookup(&rows, 1 << 18, "aie (w/ DF)").unwrap();
+        let nodf = lookup(&rows, 1 << 18, "aie (w/o DF)").unwrap();
+        let speedup = nodf / df;
+        assert!((1.5..3.5).contains(&speedup), "speedup {speedup}");
+    }
+
+    #[test]
+    fn burst_ablation_speedup_above_one() {
+        let sys = system();
+        let t = ablation_burst(&sys, RoutineKind::Axpy, &[1 << 16]).unwrap();
+        let rendered = t.to_csv();
+        let speedup: f64 = rendered
+            .lines()
+            .nth(1)
+            .unwrap()
+            .split(',')
+            .nth(3)
+            .unwrap()
+            .trim_end_matches('x')
+            .parse()
+            .unwrap();
+        assert!(speedup > 1.0, "{rendered}");
+    }
+
+    #[test]
+    fn multi_port_scales() {
+        let sys = system();
+        let t = ablation_multi_port(&sys, 1 << 20, &[1, 4]).unwrap();
+        let csv = t.to_csv();
+        let last = csv.lines().last().unwrap();
+        let speedup: f64 = last.split(',').nth(2).unwrap().trim_end_matches('x').parse().unwrap();
+        assert!(speedup > 1.5, "4-way split should speed up: {csv}");
+    }
+
+    #[test]
+    fn panel_table_renders() {
+        let rows = vec![PanelRow { size: 4096, variant: "cpu", seconds: 1e-4 }];
+        let t = panel_table("axpy", &rows);
+        assert!(t.render().contains("axpy"));
+    }
+}

@@ -1,0 +1,71 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// All the ways an AIEBLAS operation can fail.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// User specification problems (paper §III JSON spec).
+    #[error("spec error: {0}")]
+    Spec(String),
+
+    /// JSON syntax errors in spec/manifest files.
+    #[error(transparent)]
+    Json(#[from] crate::util::json::JsonError),
+
+    /// Dataflow-graph construction/validation problems.
+    #[error("graph error: {0}")]
+    Graph(String),
+
+    /// Placement/floorplanning failures (grid exhausted, conflicting hints).
+    #[error("placement error: {0}")]
+    Placement(String),
+
+    /// Stream routing failures (no path, port over-subscription).
+    #[error("routing error: {0}")]
+    Routing(String),
+
+    /// Simulation-time failures (deadlock, conservation violation).
+    #[error("simulation error: {0}")]
+    Sim(String),
+
+    /// PJRT runtime failures (artifact missing, compile/execute errors).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Code-generation failures.
+    #[error("codegen error: {0}")]
+    Codegen(String),
+
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes() {
+        assert_eq!(Error::Spec("bad".into()).to_string(), "spec error: bad");
+        assert_eq!(Error::Sim("stuck".into()).to_string(), "simulation error: stuck");
+    }
+
+    #[test]
+    fn json_error_converts() {
+        let e = crate::util::json::Json::parse("{").unwrap_err();
+        let err: Error = e.into();
+        assert!(err.to_string().contains("json parse error"));
+    }
+}

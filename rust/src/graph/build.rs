@@ -1,0 +1,429 @@
+//! Spec → Graph lowering (Fig. 1 ②③: insert PL movers, expand composites,
+//! wire dataflow connections).
+//!
+//! Rules (paper §III):
+//! * every routine becomes one AIE kernel node (composites expand to their
+//!   pipeline: axpydot → axpy kernel + dot kernel with an on-chip edge);
+//! * a connection in the spec becomes a direct AIE→AIE *window* edge
+//!   (scalars would use streams);
+//! * every unconnected vector/matrix input gets a PL mm2s mover (or an
+//!   on-chip generator in the "no PL" configuration), every unconnected
+//!   output a PL s2mm mover (or on-chip sink);
+//! * scalar inputs ride a stream from the host/PL unless a compile-time
+//!   constant (alpha/beta in the spec) bakes them into the kernel.
+
+use super::{EdgeKind, Graph, NodeId, NodeKind};
+use crate::blas::{PortType, RoutineKind};
+use crate::spec::{DataSource, RoutineSpec, Spec};
+use crate::Result;
+
+/// A kernel node together with the spec routine it implements (composites
+/// produce several kernels per routine). Used by placement and codegen to
+/// recover spec-level options (burst, placement hints).
+#[derive(Debug, Clone)]
+pub struct BuildOutput {
+    pub graph: Graph,
+    /// For each graph node: the index of the originating routine in the
+    /// spec, if any.
+    pub node_routine: Vec<Option<usize>>,
+}
+
+/// Lower a *validated* spec into a dataflow graph.
+pub fn build_graph(spec: &Spec) -> Result<BuildOutput> {
+    let mut b = Builder {
+        graph: Graph::default(),
+        node_routine: Vec::new(),
+        source: spec.data_source,
+    };
+
+    // kernel nodes (expanding composites)
+    let mut kernel_nodes: Vec<Vec<(NodeId, RoutineKind)>> = Vec::new();
+    for (ri, r) in spec.routines.iter().enumerate() {
+        let nodes = if r.kind.is_composite() {
+            b.expand_composite(r, ri)
+        } else if r.split > 1 {
+            b.expand_split(r, ri)
+        } else {
+            vec![(b.add_kernel(&r.name, r.kind, r, ri), r.kind)]
+        };
+        kernel_nodes.push(nodes);
+    }
+
+    // spec-level connections: window edge between the producing kernel's
+    // output port and the consuming kernel's input port.
+    let mut connected_in: Vec<(usize, String)> = Vec::new();
+    let mut connected_out: Vec<(usize, String)> = Vec::new();
+    for c in &spec.connections {
+        let (fi, from) = find_routine(spec, &c.from_kernel);
+        let (ti, to) = find_routine(spec, &c.to_kernel);
+        // composites expose their boundary kernels' ports
+        let src_node = kernel_nodes[fi].last().unwrap().0;
+        let dst_node = kernel_nodes[ti].first().unwrap().0;
+        let ty = port_ty(from.kind.outputs(), &c.from_port);
+        let window = from.effective_window().min(to.effective_window());
+        b.graph.add_edge(
+            src_node,
+            c.from_port.clone(),
+            dst_node,
+            c.to_port.clone(),
+            ty,
+            edge_kind(ty),
+            elements(ty, from.size),
+            window_elements(ty, from.size, window),
+        );
+        connected_out.push((fi, c.from_port.clone()));
+        connected_in.push((ti, c.to_port.clone()));
+    }
+
+    // movers / generators for unconnected ports
+    for (ri, r) in spec.routines.iter().enumerate() {
+        let nodes = &kernel_nodes[ri];
+        if r.kind.is_composite() {
+            b.wire_composite_io(r, ri, nodes, &connected_in, &connected_out);
+            continue;
+        }
+        if r.split > 1 {
+            // already fully wired (movers per part + combiner) in
+            // expand_split; validation guarantees no spec connections.
+            continue;
+        }
+        let (node, kind) = nodes[0];
+        for p in kind.inputs() {
+            if connected_in.contains(&(ri, p.name.to_string())) {
+                continue;
+            }
+            // compile-time constants need no edge-feeding kernel... except
+            // the graph invariant wants every input driven; model baked
+            // scalars as zero-cost on-chip sources.
+            b.drive_input(node, r, ri, p.name, p.ty);
+        }
+        for p in kind.outputs() {
+            if connected_out.contains(&(ri, p.name.to_string())) {
+                continue;
+            }
+            b.consume_output(node, r, ri, p.name, p.ty);
+        }
+    }
+
+    b.graph.check_invariants()?;
+    Ok(BuildOutput { graph: b.graph, node_routine: b.node_routine })
+}
+
+fn find_routine<'s>(spec: &'s Spec, name: &str) -> (usize, &'s RoutineSpec) {
+    spec.routines
+        .iter()
+        .enumerate()
+        .find(|(_, r)| r.name == name)
+        .expect("validated spec has the kernel")
+}
+
+fn port_ty(ports: &[crate::blas::Port], name: &str) -> PortType {
+    ports.iter().find(|p| p.name == name).expect("validated port").ty
+}
+
+fn elements(ty: PortType, n: usize) -> usize {
+    ty.elements(n)
+}
+
+fn window_elements(ty: PortType, n: usize, window: usize) -> usize {
+    match ty {
+        PortType::Scalar => 1,
+        // Matrix windows stage `rb` rows × `window` columns; rb is 16
+        // shrunk to a divisor of n so whole blocks tile the matrix exactly
+        // ((n/rb)·(n/w) windows, both factors integral).
+        PortType::Matrix => {
+            let mut rb = 16.min(n).max(1);
+            while n % rb != 0 {
+                rb -= 1;
+            }
+            rb * window.min(n)
+        }
+        PortType::Vector => window.min(n),
+    }
+}
+
+fn edge_kind(ty: PortType) -> EdgeKind {
+    match ty {
+        PortType::Scalar => EdgeKind::Stream,
+        _ => EdgeKind::Window,
+    }
+}
+
+struct Builder {
+    graph: Graph,
+    node_routine: Vec<Option<usize>>,
+    source: DataSource,
+}
+
+impl Builder {
+    fn add_kernel(&mut self, name: &str, kind: RoutineKind, r: &RoutineSpec, ri: usize) -> NodeId {
+        let id = self.graph.add_node(
+            name,
+            NodeKind::AieKernel {
+                kind,
+                size: r.size,
+                window: r.effective_window(),
+                vector_bits: r.vector_bits,
+                hint: r.placement.map(|p| (p.col, p.row)),
+            },
+        );
+        self.node_routine.push(Some(ri));
+        id
+    }
+
+    fn add_aux(&mut self, name: String, kind: NodeKind, ri: usize) -> NodeId {
+        let id = self.graph.add_node(name, kind);
+        self.node_routine.push(Some(ri));
+        id
+    }
+
+    /// Expand a split routine into `split` part kernels over `size/split`
+    /// elements each, every part with its own PL ports (leveraging the
+    /// multiple PL↔AIE interfaces, §V), plus an on-chip combiner when the
+    /// routine reduces to a scalar.
+    fn expand_split(&mut self, r: &RoutineSpec, ri: usize) -> Vec<(NodeId, RoutineKind)> {
+        let k = r.split;
+        let part_size = r.size / k;
+        let mut part_spec = r.clone();
+        part_spec.size = part_size;
+        part_spec.split = 1;
+        let mut parts = Vec::with_capacity(k);
+        let reduces = r
+            .kind
+            .outputs()
+            .iter()
+            .all(|p| p.ty == PortType::Scalar);
+        for i in 0..k {
+            part_spec.name = format!("{}_p{i}", r.name);
+            let node = self.add_kernel(&part_spec.name.clone(), r.kind, &part_spec, ri);
+            // per-part inputs from their own movers/generators
+            for p in r.kind.inputs() {
+                self.drive_input(node, &part_spec, ri, p.name, p.ty);
+            }
+            if !reduces {
+                // striped vector/matrix outputs: each part writes its slice
+                for p in r.kind.outputs() {
+                    self.consume_output(node, &part_spec, ri, p.name, p.ty);
+                }
+            }
+            parts.push((node, r.kind));
+        }
+        if reduces {
+            // additive combine of the k scalar partials (dot/asum).
+            let combine = self.add_aux(format!("{}_combine", r.name), NodeKind::Combine { parts: k }, ri);
+            for (i, &(node, _)) in parts.iter().enumerate() {
+                let out_port = r.kind.outputs()[0].name;
+                self.graph.add_edge(
+                    node,
+                    out_port,
+                    combine,
+                    format!("in{i}"),
+                    PortType::Scalar,
+                    EdgeKind::Stream,
+                    1,
+                    1,
+                );
+            }
+            self.consume_output(combine, &part_spec, ri, "out", PortType::Scalar);
+        }
+        parts
+    }
+
+    /// Expand axpydot into axpy(z = w − αv) → dot(z·u): the paper's Fig. 1
+    /// dataflow composition as a prebuilt subgraph.
+    fn expand_composite(&mut self, r: &RoutineSpec, ri: usize) -> Vec<(NodeId, RoutineKind)> {
+        assert_eq!(r.kind, RoutineKind::Axpydot);
+        let axpy = self.add_kernel(&format!("{}_axpy", r.name), RoutineKind::Axpy, r, ri);
+        let dot = self.add_kernel(&format!("{}_dot", r.name), RoutineKind::Dot, r, ri);
+        let w = r.effective_window();
+        self.graph.add_edge(
+            axpy,
+            "z",
+            dot,
+            "x",
+            PortType::Vector,
+            EdgeKind::Window,
+            r.size,
+            w.min(r.size),
+        );
+        vec![(axpy, RoutineKind::Axpy), (dot, RoutineKind::Dot)]
+    }
+
+    /// Wire the unbound ports of an expanded composite:
+    /// axpy gets alpha, x(=v), y(=w); dot gets y(=u); dot.result exits.
+    fn wire_composite_io(
+        &mut self,
+        r: &RoutineSpec,
+        ri: usize,
+        nodes: &[(NodeId, RoutineKind)],
+        connected_in: &[(usize, String)],
+        connected_out: &[(usize, String)],
+    ) {
+        let (axpy, _) = nodes[0];
+        let (dot, _) = nodes[1];
+        for (node, port, ty) in [
+            (axpy, "alpha", PortType::Scalar),
+            (axpy, "x", PortType::Vector),
+            (axpy, "y", PortType::Vector),
+            (dot, "y", PortType::Vector),
+        ] {
+            if !connected_in.contains(&(ri, port.to_string())) {
+                self.drive_input(node, r, ri, port, ty);
+            }
+        }
+        if !connected_out.contains(&(ri, "result".to_string())) {
+            self.consume_output(dot, r, ri, "result", PortType::Scalar);
+        }
+    }
+
+    fn drive_input(&mut self, node: NodeId, r: &RoutineSpec, ri: usize, port: &str, ty: PortType) {
+        let kernel_name = self.graph.node(node).name.clone();
+        let w = r.effective_window();
+        let baked_scalar = ty == PortType::Scalar
+            && ((port == "alpha" && r.alpha.is_some()) || (port == "beta" && r.beta.is_some()));
+        let src_kind = if baked_scalar || self.source == DataSource::OnChip {
+            // on-chip generation (or a compile-time constant): no PL mover.
+            NodeKind::OnChipSource
+        } else {
+            NodeKind::PlMm2s { burst: r.burst }
+        };
+        let label = match src_kind {
+            NodeKind::OnChipSource => format!("{kernel_name}_{port}_gen"),
+            _ => format!("{kernel_name}_{port}_mm2s"),
+        };
+        let src = self.add_aux(label, src_kind, ri);
+        self.graph.add_edge(
+            src,
+            "out",
+            node,
+            port,
+            ty,
+            edge_kind(ty),
+            elements(ty, r.size),
+            window_elements(ty, r.size, w),
+        );
+    }
+
+    fn consume_output(&mut self, node: NodeId, r: &RoutineSpec, ri: usize, port: &str, ty: PortType) {
+        let kernel_name = self.graph.node(node).name.clone();
+        let w = r.effective_window();
+        let dst_kind = if self.source == DataSource::OnChip {
+            NodeKind::OnChipSink
+        } else {
+            NodeKind::PlS2mm { burst: r.burst }
+        };
+        let label = match dst_kind {
+            NodeKind::OnChipSink => format!("{kernel_name}_{port}_sink"),
+            _ => format!("{kernel_name}_{port}_s2mm"),
+        };
+        let dst = self.add_aux(label, dst_kind, ri);
+        self.graph.add_edge(
+            node,
+            port,
+            dst,
+            "in",
+            ty,
+            edge_kind(ty),
+            elements(ty, r.size),
+            window_elements(ty, r.size, w),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::{DataSource, Spec};
+
+    #[test]
+    fn single_axpy_pl_gets_movers() {
+        let spec = Spec::single(RoutineKind::Axpy, "a", 4096, DataSource::Pl);
+        let out = build_graph(&spec).unwrap();
+        let g = &out.graph;
+        g.check_invariants().unwrap();
+        assert_eq!(g.num_aie_kernels(), 1);
+        // alpha, x, y movers in + z mover out
+        assert_eq!(g.num_pl_movers(), 4);
+        let kernel = g.node_by_name("a").unwrap();
+        assert_eq!(g.in_edges(kernel.id).count(), 3);
+        assert_eq!(g.out_edges(kernel.id).count(), 1);
+    }
+
+    #[test]
+    fn single_axpy_onchip_has_no_pl() {
+        let spec = Spec::single(RoutineKind::Axpy, "a", 4096, DataSource::OnChip);
+        let g = build_graph(&spec).unwrap().graph;
+        assert_eq!(g.num_pl_movers(), 0);
+        assert!(g
+            .nodes
+            .iter()
+            .any(|n| matches!(n.kind, NodeKind::OnChipSource)));
+    }
+
+    #[test]
+    fn baked_alpha_skips_scalar_mover() {
+        let mut spec = Spec::single(RoutineKind::Axpy, "a", 4096, DataSource::Pl);
+        spec.routines[0].alpha = Some(2.0);
+        let g = build_graph(&spec).unwrap().graph;
+        // x, y, z movers; alpha is an on-chip constant source
+        assert_eq!(g.num_pl_movers(), 3);
+    }
+
+    #[test]
+    fn connection_becomes_direct_edge() {
+        let spec = Spec::axpydot_dataflow(4096, 2.0);
+        let g = build_graph(&spec).unwrap().graph;
+        g.check_invariants().unwrap();
+        let axpy = g.node_by_name("axpy_stage").unwrap();
+        let dot = g.node_by_name("dot_stage").unwrap();
+        let direct: Vec<_> = g
+            .edges
+            .iter()
+            .filter(|e| e.src == axpy.id && e.dst == dot.id)
+            .collect();
+        assert_eq!(direct.len(), 1);
+        assert_eq!(direct[0].kind, EdgeKind::Window);
+        // dot.x is fed on-chip, so no mover for it
+        assert!(g.node_by_name("dot_stage_x_mm2s").is_none());
+    }
+
+    #[test]
+    fn composite_axpydot_expands() {
+        let spec = Spec::single(RoutineKind::Axpydot, "ad", 4096, DataSource::Pl);
+        let out = build_graph(&spec).unwrap();
+        let g = &out.graph;
+        g.check_invariants().unwrap();
+        assert_eq!(g.num_aie_kernels(), 2);
+        assert!(g.node_by_name("ad_axpy").is_some());
+        assert!(g.node_by_name("ad_dot").is_some());
+        // internal z edge is AIE->AIE
+        let axpy = g.node_by_name("ad_axpy").unwrap();
+        let dot = g.node_by_name("ad_dot").unwrap();
+        assert!(g.edges.iter().any(|e| e.src == axpy.id && e.dst == dot.id));
+        // movers: axpy alpha/x/y + dot y in, dot result out = 5
+        assert_eq!(g.num_pl_movers(), 5);
+    }
+
+    #[test]
+    fn gemv_matrix_edge_windows() {
+        let spec = Spec::single(RoutineKind::Gemv, "g", 256, DataSource::Pl);
+        let g = build_graph(&spec).unwrap().graph;
+        g.check_invariants().unwrap();
+        let kernel = g.node_by_name("g").unwrap();
+        let a_edge = g
+            .in_edges(kernel.id)
+            .find(|e| e.dst_port == "a")
+            .unwrap();
+        assert_eq!(a_edge.ty, PortType::Matrix);
+        assert_eq!(a_edge.total_elements, 256 * 256);
+        assert_eq!(a_edge.total_elements % a_edge.window_elements, 0);
+    }
+
+    #[test]
+    fn node_routine_mapping_covers_all_nodes() {
+        let spec = Spec::axpydot_dataflow(1024, 1.0);
+        let out = build_graph(&spec).unwrap();
+        assert_eq!(out.node_routine.len(), out.graph.nodes.len());
+        assert!(out.node_routine.iter().all(|r| r.is_some()));
+    }
+}

@@ -1,0 +1,357 @@
+//! ADF-style dataflow graph IR (paper §III, Fig. 1 ③).
+//!
+//! The generator lowers a validated [`Spec`](crate::spec::Spec) to this
+//! graph: one node per AIE kernel, plus PL data-mover nodes for every
+//! routine port not connected to another routine (the paper: "If a routine
+//! input/output is not connected to another routine, AIEBLAS will create a
+//! PL kernel to load/store the data from off-chip memory"). Composite
+//! routines (axpydot) are expanded into their kernel pipeline here.
+
+pub mod build;
+pub mod place;
+pub mod route;
+
+use std::collections::BTreeMap;
+
+use crate::blas::{PortType, RoutineKind};
+use crate::{Error, Result};
+
+/// Node identifier (index into [`Graph::nodes`]).
+pub type NodeId = usize;
+/// Edge identifier (index into [`Graph::edges`]).
+pub type EdgeId = usize;
+
+/// What a node is.
+#[derive(Debug, Clone, PartialEq)]
+pub enum NodeKind {
+    /// A compute kernel scheduled on one AIE tile.
+    AieKernel {
+        kind: RoutineKind,
+        /// Problem size `n` of the originating routine.
+        size: usize,
+        /// Window size in elements.
+        window: usize,
+        /// Vector datapath width in bits.
+        vector_bits: usize,
+        /// Optional placement hint (col,row) from the spec.
+        hint: Option<(usize, usize)>,
+    },
+    /// PL kernel streaming DDR → AIE (mm2s).
+    PlMm2s { burst: bool },
+    /// PL kernel streaming AIE → DDR (s2mm).
+    PlS2mm { burst: bool },
+    /// On-chip combiner summing the partial results of a multi-AIE split
+    /// reduction (paper §V future work 2).
+    Combine { parts: usize },
+    /// Synthetic on-chip data generator (the Fig. 3 "no PL" variant).
+    OnChipSource,
+    /// On-chip sink (result kept in local memory / discarded).
+    OnChipSink,
+}
+
+impl NodeKind {
+    pub fn is_aie(&self) -> bool {
+        matches!(
+            self,
+            NodeKind::AieKernel { .. }
+                | NodeKind::Combine { .. }
+                | NodeKind::OnChipSource
+                | NodeKind::OnChipSink
+        )
+    }
+
+    pub fn is_pl(&self) -> bool {
+        matches!(self, NodeKind::PlMm2s { .. } | NodeKind::PlS2mm { .. })
+    }
+}
+
+/// A graph node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Node {
+    pub id: NodeId,
+    /// Unique name (kernel name from the spec, or generated mover name).
+    pub name: String,
+    pub kind: NodeKind,
+}
+
+/// How data travels on an edge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgeKind {
+    /// Block transfer into tile-local memory (ADF *window*).
+    Window,
+    /// Element-by-element AXI4 stream (ADF *stream*).
+    Stream,
+}
+
+/// A directed dataflow edge carrying `total_elements` f32 values in
+/// `window_elements`-sized chunks from `src`'s output port to `dst`'s
+/// input port.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Edge {
+    pub id: EdgeId,
+    pub src: NodeId,
+    pub src_port: String,
+    pub dst: NodeId,
+    pub dst_port: String,
+    pub ty: PortType,
+    pub kind: EdgeKind,
+    pub total_elements: usize,
+    pub window_elements: usize,
+}
+
+impl Edge {
+    /// Number of window transfers needed to move all elements.
+    pub fn num_windows(&self) -> usize {
+        if self.total_elements == 0 {
+            0
+        } else {
+            self.total_elements.div_ceil(self.window_elements.max(1))
+        }
+    }
+
+    pub fn window_bytes(&self) -> usize {
+        self.window_elements * crate::arch::F32_BYTES
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.total_elements * crate::arch::F32_BYTES
+    }
+}
+
+/// The dataflow graph.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Graph {
+    pub nodes: Vec<Node>,
+    pub edges: Vec<Edge>,
+}
+
+impl Graph {
+    pub fn add_node(&mut self, name: impl Into<String>, kind: NodeKind) -> NodeId {
+        let id = self.nodes.len();
+        self.nodes.push(Node { id, name: name.into(), kind });
+        id
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn add_edge(
+        &mut self,
+        src: NodeId,
+        src_port: impl Into<String>,
+        dst: NodeId,
+        dst_port: impl Into<String>,
+        ty: PortType,
+        kind: EdgeKind,
+        total_elements: usize,
+        window_elements: usize,
+    ) -> EdgeId {
+        let id = self.edges.len();
+        self.edges.push(Edge {
+            id,
+            src,
+            src_port: src_port.into(),
+            dst,
+            dst_port: dst_port.into(),
+            ty,
+            kind,
+            total_elements,
+            window_elements,
+        });
+        id
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    pub fn node_by_name(&self, name: &str) -> Option<&Node> {
+        self.nodes.iter().find(|n| n.name == name)
+    }
+
+    /// Edges entering `id`.
+    pub fn in_edges(&self, id: NodeId) -> impl Iterator<Item = &Edge> {
+        self.edges.iter().filter(move |e| e.dst == id)
+    }
+
+    /// Edges leaving `id`.
+    pub fn out_edges(&self, id: NodeId) -> impl Iterator<Item = &Edge> {
+        self.edges.iter().filter(move |e| e.src == id)
+    }
+
+    /// Number of AIE-mapped kernel nodes.
+    pub fn num_aie_kernels(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n.kind, NodeKind::AieKernel { .. }))
+            .count()
+    }
+
+    /// Number of PL mover nodes.
+    pub fn num_pl_movers(&self) -> usize {
+        self.nodes.iter().filter(|n| n.kind.is_pl()).count()
+    }
+
+    /// Topological order of node ids; errors on cycles.
+    pub fn topo_order(&self) -> Result<Vec<NodeId>> {
+        let n = self.nodes.len();
+        let mut indeg = vec![0usize; n];
+        for e in &self.edges {
+            indeg[e.dst] += 1;
+        }
+        let mut queue: Vec<NodeId> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(u) = queue.pop() {
+            order.push(u);
+            for e in self.out_edges(u) {
+                indeg[e.dst] -= 1;
+                if indeg[e.dst] == 0 {
+                    queue.push(e.dst);
+                }
+            }
+        }
+        if order.len() != n {
+            return Err(Error::Graph("graph contains a cycle".into()));
+        }
+        Ok(order)
+    }
+
+    /// Structural invariants the builder must uphold (property-tested):
+    /// unique names, valid endpoints, windows dividing totals, every AIE
+    /// kernel input driven, acyclicity.
+    pub fn check_invariants(&self) -> Result<()> {
+        let mut names = BTreeMap::new();
+        for node in &self.nodes {
+            if let Some(prev) = names.insert(node.name.as_str(), node.id) {
+                return Err(Error::Graph(format!(
+                    "duplicate node name {:?} (ids {} and {})",
+                    node.name, prev, node.id
+                )));
+            }
+        }
+        for e in &self.edges {
+            if e.src >= self.nodes.len() || e.dst >= self.nodes.len() {
+                return Err(Error::Graph(format!("edge {} has dangling endpoint", e.id)));
+            }
+            if e.src == e.dst {
+                return Err(Error::Graph(format!("edge {} is a self-loop", e.id)));
+            }
+            if e.window_elements == 0 || e.total_elements == 0 {
+                return Err(Error::Graph(format!("edge {} moves zero data", e.id)));
+            }
+            if e.total_elements % e.window_elements != 0 {
+                return Err(Error::Graph(format!(
+                    "edge {}: window {} does not divide total {}",
+                    e.id, e.window_elements, e.total_elements
+                )));
+            }
+        }
+        // every AIE kernel input port must be driven exactly once
+        for node in &self.nodes {
+            if let NodeKind::AieKernel { kind, .. } = &node.kind {
+                for p in kind.inputs() {
+                    let drivers = self
+                        .in_edges(node.id)
+                        .filter(|e| e.dst_port == p.name)
+                        .count();
+                    if drivers != 1 {
+                        return Err(Error::Graph(format!(
+                            "kernel {} input {} has {} drivers (want 1)",
+                            node.name, p.name, drivers
+                        )));
+                    }
+                }
+                for p in kind.outputs() {
+                    let consumers = self
+                        .out_edges(node.id)
+                        .filter(|e| e.src_port == p.name)
+                        .count();
+                    if consumers != 1 {
+                        return Err(Error::Graph(format!(
+                            "kernel {} output {} has {} consumers (want 1)",
+                            node.name, p.name, consumers
+                        )));
+                    }
+                }
+            }
+        }
+        self.topo_order()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Graph {
+        let mut g = Graph::default();
+        let src = g.add_node("src", NodeKind::PlMm2s { burst: false });
+        let k = g.add_node(
+            "k",
+            NodeKind::AieKernel {
+                kind: RoutineKind::Scal,
+                size: 64,
+                window: 16,
+                vector_bits: 512,
+                hint: None,
+            },
+        );
+        let sink = g.add_node("sink", NodeKind::PlS2mm { burst: false });
+        let alpha_src = g.add_node("alpha_src", NodeKind::PlMm2s { burst: false });
+        g.add_edge(alpha_src, "out", k, "alpha", PortType::Scalar, EdgeKind::Stream, 1, 1);
+        g.add_edge(src, "out", k, "x", PortType::Vector, EdgeKind::Window, 64, 16);
+        g.add_edge(k, "z", sink, "in", PortType::Vector, EdgeKind::Window, 64, 16);
+        g
+    }
+
+    #[test]
+    fn tiny_graph_invariants_hold() {
+        tiny().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn topo_order_is_consistent() {
+        let g = tiny();
+        let order = g.topo_order().unwrap();
+        let pos: BTreeMap<NodeId, usize> =
+            order.iter().enumerate().map(|(i, &n)| (n, i)).collect();
+        for e in &g.edges {
+            assert!(pos[&e.src] < pos[&e.dst], "edge {} -> {}", e.src, e.dst);
+        }
+    }
+
+    #[test]
+    fn num_windows() {
+        let g = tiny();
+        assert_eq!(g.edges[1].num_windows(), 4);
+        assert_eq!(g.edges[0].num_windows(), 1);
+    }
+
+    #[test]
+    fn invariants_catch_undriven_input() {
+        let mut g = tiny();
+        g.edges.remove(1); // drop the x edge
+        assert!(g.check_invariants().is_err());
+    }
+
+    #[test]
+    fn invariants_catch_window_not_dividing() {
+        let mut g = tiny();
+        g.edges[1].window_elements = 7;
+        assert!(g.check_invariants().is_err());
+    }
+
+    #[test]
+    fn invariants_catch_duplicate_names() {
+        let mut g = tiny();
+        g.nodes[2].name = "src".into();
+        assert!(g.check_invariants().is_err());
+    }
+
+    #[test]
+    fn invariants_catch_cycle() {
+        let mut g = tiny();
+        // add a bogus back edge sink -> src
+        g.add_edge(2, "out", 0, "in", PortType::Vector, EdgeKind::Window, 64, 16);
+        assert!(g.topo_order().is_err());
+    }
+}

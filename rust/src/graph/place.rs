@@ -1,0 +1,382 @@
+//! Placement engine: map graph nodes onto the AIE array (Fig. 1 ③).
+//!
+//! The paper: "By default, AIEBLAS relies on the AIE compiler for the
+//! kernel placements. However, for larger designs, it may be necessary to
+//! provide placement hints … users can set an optional field in the JSON
+//! configuration specifying a placement constraint for each kernel."
+//!
+//! Our stand-in for the AIE compiler's floorplanner: user hints are
+//! honored verbatim (errors on conflicts); remaining AIE kernels are
+//! placed greedily next to their already-placed neighbours (minimising
+//! Manhattan wire length), then improved with a local-search pass. PL
+//! movers occupy *shim* columns — the PL↔AIE interface row below the
+//! array — balanced across columns to spread interface load.
+
+use std::collections::BTreeMap;
+
+use super::{Graph, NodeId, NodeKind};
+use crate::arch::ArchConfig;
+use crate::{Error, Result};
+
+/// Where a node physically sits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Location {
+    /// An AIE tile at (col, row).
+    Tile { col: usize, row: usize },
+    /// A PL kernel reaching the array through the shim at `col`.
+    Shim { col: usize },
+    /// Host/DDR side (not on the array) — unused today but kept so the
+    /// router can model host-mapped endpoints.
+    OffChip,
+}
+
+impl Location {
+    pub fn coords(&self) -> (isize, isize) {
+        match *self {
+            Location::Tile { col, row } => (col as isize, row as isize),
+            Location::Shim { col } => (col as isize, -1),
+            Location::OffChip => (-1, -2),
+        }
+    }
+}
+
+/// A complete placement of a graph.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    pub locations: Vec<Location>,
+}
+
+impl Placement {
+    pub fn of(&self, id: NodeId) -> Location {
+        self.locations[id]
+    }
+
+    /// Manhattan distance between two placed nodes (hop estimate).
+    pub fn distance(&self, a: NodeId, b: NodeId) -> usize {
+        let (ax, ay) = self.of(a).coords();
+        let (bx, by) = self.of(b).coords();
+        (ax.abs_diff(bx) + ay.abs_diff(by)) as usize
+    }
+
+    /// Total wire length over all edges (the placement objective).
+    pub fn wirelength(&self, g: &Graph) -> usize {
+        g.edges.iter().map(|e| self.distance(e.src, e.dst)).sum()
+    }
+}
+
+/// Place `graph` on `arch`. Deterministic for a given input.
+pub fn place(graph: &Graph, arch: &ArchConfig) -> Result<Placement> {
+    let n = graph.nodes.len();
+    let mut locations = vec![Location::OffChip; n];
+    let mut occupied: BTreeMap<(usize, usize), NodeId> = BTreeMap::new();
+
+    let aie_kernels: Vec<NodeId> = graph
+        .nodes
+        .iter()
+        .filter(|nd| matches!(nd.kind, NodeKind::AieKernel { .. }))
+        .map(|nd| nd.id)
+        .collect();
+    if aie_kernels.len() > arch.num_tiles() {
+        return Err(Error::Placement(format!(
+            "{} kernels exceed the {}-tile array",
+            aie_kernels.len(),
+            arch.num_tiles()
+        )));
+    }
+
+    // 1. pin hinted kernels.
+    for &id in &aie_kernels {
+        if let NodeKind::AieKernel { hint: Some((col, row)), .. } = graph.node(id).kind {
+            if col >= arch.cols || row >= arch.rows {
+                return Err(Error::Placement(format!(
+                    "{}: hint ({col},{row}) outside {}×{} grid",
+                    graph.node(id).name,
+                    arch.cols,
+                    arch.rows
+                )));
+            }
+            if let Some(prev) = occupied.insert((col, row), id) {
+                return Err(Error::Placement(format!(
+                    "hint collision at ({col},{row}) between {} and {}",
+                    graph.node(prev).name,
+                    graph.node(id).name
+                )));
+            }
+            locations[id] = Location::Tile { col, row };
+        }
+    }
+
+    // 2. greedy: process unhinted kernels in topological order; place each
+    //    at the free tile minimising distance to already-placed neighbours
+    //    (ties → lowest col,row: deterministic).
+    let topo = graph.topo_order()?;
+    for &id in &topo {
+        if !matches!(graph.node(id).kind, NodeKind::AieKernel { .. })
+            || !matches!(locations[id], Location::OffChip)
+        {
+            continue;
+        }
+        let neighbours: Vec<NodeId> = graph
+            .in_edges(id)
+            .map(|e| e.src)
+            .chain(graph.out_edges(id).map(|e| e.dst))
+            .filter(|&o| matches!(locations[o], Location::Tile { .. }))
+            .collect();
+        let mut best: Option<((usize, usize), usize)> = None;
+        for col in 0..arch.cols {
+            for row in 0..arch.rows {
+                if occupied.contains_key(&(col, row)) {
+                    continue;
+                }
+                let cost: usize = neighbours
+                    .iter()
+                    .map(|&o| {
+                        let (ox, oy) = locations[o].coords();
+                        (ox.abs_diff(col as isize) + oy.abs_diff(row as isize)) as usize
+                    })
+                    .sum::<usize>()
+                    // bias: prefer the bottom row (nearer the shim/PL).
+                    + row;
+                if best.is_none() || cost < best.unwrap().1 {
+                    best = Some(((col, row), cost));
+                }
+            }
+        }
+        let ((col, row), _) = best.expect("array not exhausted");
+        occupied.insert((col, row), id);
+        locations[id] = Location::Tile { col, row };
+    }
+
+    // 3. on-chip generators/sinks co-locate with their kernel's tile
+    //    neighbourhood (they run on the same or an adjacent tile).
+    for nd in &graph.nodes {
+        match nd.kind {
+            NodeKind::Combine { .. } => {
+                let producer = graph.in_edges(nd.id).next().map(|e| e.src);
+                locations[nd.id] = neighbour_tile(producer, &locations, &mut occupied, arch)
+                    .unwrap_or(Location::Tile { col: 0, row: 0 });
+            }
+            NodeKind::OnChipSource => {
+                let consumer = graph.out_edges(nd.id).next().map(|e| e.dst);
+                locations[nd.id] = neighbour_tile(consumer, &locations, &mut occupied, arch)
+                    .unwrap_or(Location::Tile { col: 0, row: 0 });
+            }
+            NodeKind::OnChipSink => {
+                let producer = graph.in_edges(nd.id).next().map(|e| e.src);
+                locations[nd.id] = neighbour_tile(producer, &locations, &mut occupied, arch)
+                    .unwrap_or(Location::Tile { col: 0, row: 0 });
+            }
+            _ => {}
+        }
+    }
+
+    // 4. PL movers: shim column nearest their AIE endpoint, load-balanced
+    //    (at most `ceil(movers/cols)` per column).
+    let mut shim_load = vec![0usize; arch.cols];
+    let movers: Vec<NodeId> = graph
+        .nodes
+        .iter()
+        .filter(|nd| nd.kind.is_pl())
+        .map(|nd| nd.id)
+        .collect();
+    let max_per_col = movers.len().div_ceil(arch.cols).max(1);
+    for &id in &movers {
+        let endpoint = graph
+            .out_edges(id)
+            .map(|e| e.dst)
+            .chain(graph.in_edges(id).map(|e| e.src))
+            .next();
+        let want_col = match endpoint.map(|e| locations[e]) {
+            Some(Location::Tile { col, .. }) => col,
+            _ => 0,
+        };
+        // nearest column with capacity
+        let col = (0..arch.cols)
+            .min_by_key(|&c| {
+                let over = shim_load[c] >= max_per_col;
+                (over as usize, c.abs_diff(want_col), c)
+            })
+            .unwrap();
+        shim_load[col] += 1;
+        locations[id] = Location::Shim { col };
+    }
+
+    // 5. local search: try swapping pairs of unhinted kernels to reduce
+    //    wirelength (first-improvement, bounded passes).
+    let mut placement = Placement { locations };
+    let unhinted: Vec<NodeId> = aie_kernels
+        .iter()
+        .copied()
+        .filter(|&id| !matches!(graph.node(id).kind, NodeKind::AieKernel { hint: Some(_), .. }))
+        .collect();
+    let mut improved = true;
+    let mut passes = 0;
+    while improved && passes < 4 {
+        improved = false;
+        passes += 1;
+        let before = placement.wirelength(graph);
+        for i in 0..unhinted.len() {
+            for j in i + 1..unhinted.len() {
+                let (a, b) = (unhinted[i], unhinted[j]);
+                placement.locations.swap(a, b);
+                if placement.wirelength(graph) < before {
+                    improved = true;
+                } else {
+                    placement.locations.swap(a, b);
+                }
+            }
+        }
+    }
+
+    Ok(placement)
+}
+
+fn neighbour_tile(
+    anchor: Option<NodeId>,
+    locations: &[Location],
+    occupied: &mut BTreeMap<(usize, usize), NodeId>,
+    arch: &ArchConfig,
+) -> Option<Location> {
+    let (ac, ar) = match anchor.map(|a| locations[a]) {
+        Some(Location::Tile { col, row }) => (col as isize, row as isize),
+        _ => return None,
+    };
+    // nearest free tile by Manhattan radius (including the anchor's own
+    // tile being busy, generators can share: fall back to the anchor tile).
+    for radius in 1..(arch.cols + arch.rows) as isize {
+        for dc in -radius..=radius {
+            let dr = radius - dc.abs();
+            for &(c, r) in &[(ac + dc, ar + dr), (ac + dc, ar - dr)] {
+                if c < 0 || r < 0 || c >= arch.cols as isize || r >= arch.rows as isize {
+                    continue;
+                }
+                let key = (c as usize, r as usize);
+                if !occupied.contains_key(&key) {
+                    // generators don't exclude kernels from the tile, but
+                    // mark it to spread multiple generators out.
+                    occupied.insert(key, usize::MAX);
+                    return Some(Location::Tile { col: key.0, row: key.1 });
+                }
+            }
+        }
+    }
+    Some(Location::Tile { col: ac as usize, row: ar as usize })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::RoutineKind;
+    use crate::graph::build::build_graph;
+    use crate::spec::{DataSource, Spec};
+
+    fn arch() -> ArchConfig {
+        ArchConfig::vck5000()
+    }
+
+    #[test]
+    fn places_single_routine() {
+        let g = build_graph(&Spec::single(RoutineKind::Axpy, "a", 4096, DataSource::Pl))
+            .unwrap()
+            .graph;
+        let p = place(&g, &arch()).unwrap();
+        let kernel = g.node_by_name("a").unwrap();
+        assert!(matches!(p.of(kernel.id), Location::Tile { .. }));
+        for nd in &g.nodes {
+            if nd.kind.is_pl() {
+                assert!(matches!(p.of(nd.id), Location::Shim { .. }), "{}", nd.name);
+            }
+        }
+    }
+
+    #[test]
+    fn honors_hints() {
+        let mut spec = Spec::single(RoutineKind::Axpy, "a", 4096, DataSource::Pl);
+        spec.routines[0].placement = Some(crate::spec::Placement { col: 7, row: 3 });
+        let g = build_graph(&spec).unwrap().graph;
+        let p = place(&g, &arch()).unwrap();
+        let kernel = g.node_by_name("a").unwrap();
+        assert_eq!(p.of(kernel.id), Location::Tile { col: 7, row: 3 });
+    }
+
+    #[test]
+    fn connected_kernels_placed_adjacent() {
+        let g = build_graph(&Spec::axpydot_dataflow(4096, 2.0)).unwrap().graph;
+        let p = place(&g, &arch()).unwrap();
+        let a = g.node_by_name("axpy_stage").unwrap().id;
+        let d = g.node_by_name("dot_stage").unwrap().id;
+        assert!(
+            p.distance(a, d) <= 2,
+            "dataflow stages should be near-adjacent, got {}",
+            p.distance(a, d)
+        );
+    }
+
+    #[test]
+    fn no_two_kernels_share_a_tile() {
+        // a chain of many kernels
+        let mut spec = Spec::default();
+        spec.platform = "vck5000".into();
+        for i in 0..20 {
+            spec.routines.push(crate::spec::RoutineSpec {
+                kind: RoutineKind::Scal,
+                name: format!("k{i}"),
+                size: 1024,
+                window: None,
+                vector_bits: 512,
+                placement: None,
+                burst: false,
+                alpha: Some(1.5),
+                beta: None,
+                split: 1,
+            });
+        }
+        let g = build_graph(&spec).unwrap().graph;
+        let p = place(&g, &arch()).unwrap();
+        let mut seen = std::collections::BTreeSet::new();
+        for nd in &g.nodes {
+            if matches!(nd.kind, NodeKind::AieKernel { .. }) {
+                let Location::Tile { col, row } = p.of(nd.id) else {
+                    panic!("kernel off-array")
+                };
+                assert!(seen.insert((col, row)), "tile ({col},{row}) reused");
+            }
+        }
+    }
+
+    #[test]
+    fn too_many_kernels_rejected() {
+        let mut g = Graph::default();
+        for i in 0..401 {
+            g.add_node(
+                format!("k{i}"),
+                NodeKind::AieKernel {
+                    kind: RoutineKind::Scal,
+                    size: 64,
+                    window: 64,
+                    vector_bits: 512,
+                    hint: None,
+                },
+            );
+        }
+        assert!(place(&g, &arch()).is_err());
+    }
+
+    #[test]
+    fn hint_collision_rejected_at_placement() {
+        let mut g = Graph::default();
+        for name in ["a", "b"] {
+            g.add_node(
+                name,
+                NodeKind::AieKernel {
+                    kind: RoutineKind::Scal,
+                    size: 64,
+                    window: 64,
+                    vector_bits: 512,
+                    hint: Some((1, 1)),
+                },
+            );
+        }
+        assert!(place(&g, &arch()).is_err());
+    }
+}

@@ -1,0 +1,184 @@
+//! Stream routing: assign every edge a physical path and check interface
+//! capacity (paper §II: AXI4-stream NoC; 312 PL→AIE and 234 AIE→PL
+//! channels).
+//!
+//! Adjacent tiles share local memory, so a window edge between neighbours
+//! costs zero NoC hops (the AIE "can share data with the adjacent AIEs by
+//! reading/writing directly from/to their local memory"); anything else
+//! rides the stream network with per-hop latency. Edges crossing the
+//! PL↔AIE boundary consume interface channels, which are a counted,
+//! capacity-checked resource.
+
+use super::place::{Location, Placement};
+use super::{EdgeId, Graph};
+use crate::arch::ArchConfig;
+use crate::{Error, Result};
+
+/// How one edge is physically realised.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoutedEdge {
+    pub edge: EdgeId,
+    /// NoC hops (0 = neighbour local-memory sharing).
+    pub hops: usize,
+    /// Crosses PL→AIE interface (consumes one of the 312 channels).
+    pub uses_pl_to_aie: bool,
+    /// Crosses AIE→PL interface (consumes one of the 234 channels).
+    pub uses_aie_to_pl: bool,
+    /// True when the transfer is tile-local-memory sharing.
+    pub neighbour: bool,
+}
+
+/// Routing result for a placed graph.
+#[derive(Debug, Clone)]
+pub struct Routing {
+    pub routed: Vec<RoutedEdge>,
+    pub pl_to_aie_used: usize,
+    pub aie_to_pl_used: usize,
+}
+
+impl Routing {
+    pub fn of(&self, edge: EdgeId) -> &RoutedEdge {
+        &self.routed[edge]
+    }
+
+    /// Total hop count (congestion proxy used by ablation A2).
+    pub fn total_hops(&self) -> usize {
+        self.routed.iter().map(|r| r.hops).sum()
+    }
+}
+
+/// Route every edge of a placed graph, enforcing interface capacity.
+pub fn route(graph: &Graph, placement: &Placement, arch: &ArchConfig) -> Result<Routing> {
+    let mut routed = Vec::with_capacity(graph.edges.len());
+    let mut pl_to_aie = 0usize;
+    let mut aie_to_pl = 0usize;
+
+    for e in &graph.edges {
+        let src_loc = placement.of(e.src);
+        let dst_loc = placement.of(e.dst);
+        let src_pl = graph.node(e.src).kind.is_pl();
+        let dst_pl = graph.node(e.dst).kind.is_pl();
+
+        let hops = manhattan(src_loc, dst_loc);
+        let neighbour = !src_pl && !dst_pl && hops <= 1;
+        let uses_pl_to_aie = src_pl && !dst_pl;
+        let uses_aie_to_pl = !src_pl && dst_pl;
+        if uses_pl_to_aie {
+            pl_to_aie += 1;
+        }
+        if uses_aie_to_pl {
+            aie_to_pl += 1;
+        }
+        routed.push(RoutedEdge {
+            edge: e.id,
+            hops: if neighbour { 0 } else { hops },
+            uses_pl_to_aie,
+            uses_aie_to_pl,
+            neighbour,
+        });
+    }
+
+    if pl_to_aie > arch.pl_to_aie_channels {
+        return Err(Error::Routing(format!(
+            "{pl_to_aie} PL→AIE channels needed, device has {}",
+            arch.pl_to_aie_channels
+        )));
+    }
+    if aie_to_pl > arch.aie_to_pl_channels {
+        return Err(Error::Routing(format!(
+            "{aie_to_pl} AIE→PL channels needed, device has {}",
+            arch.aie_to_pl_channels
+        )));
+    }
+
+    Ok(Routing { routed, pl_to_aie_used: pl_to_aie, aie_to_pl_used: aie_to_pl })
+}
+
+fn manhattan(a: Location, b: Location) -> usize {
+    let (ax, ay) = a.coords();
+    let (bx, by) = b.coords();
+    (ax.abs_diff(bx) + ay.abs_diff(by)) as usize
+}
+
+/// Check conservation: every edge routed exactly once, channel counts match
+/// the per-edge flags (property-tested invariant).
+pub fn check_routing(graph: &Graph, routing: &Routing) -> Result<()> {
+    if routing.routed.len() != graph.edges.len() {
+        return Err(Error::Routing(format!(
+            "{} edges but {} routes",
+            graph.edges.len(),
+            routing.routed.len()
+        )));
+    }
+    let p2a = routing.routed.iter().filter(|r| r.uses_pl_to_aie).count();
+    let a2p = routing.routed.iter().filter(|r| r.uses_aie_to_pl).count();
+    if p2a != routing.pl_to_aie_used || a2p != routing.aie_to_pl_used {
+        return Err(Error::Routing("channel accounting mismatch".into()));
+    }
+    for r in &routing.routed {
+        let e = &graph.edges[r.edge];
+        let src_pl = graph.node(e.src).kind.is_pl();
+        let dst_pl = graph.node(e.dst).kind.is_pl();
+        if r.uses_pl_to_aie != (src_pl && !dst_pl) || r.uses_aie_to_pl != (!src_pl && dst_pl) {
+            return Err(Error::Routing(format!("edge {} flags inconsistent", r.edge)));
+        }
+        if r.neighbour && r.hops != 0 {
+            return Err(Error::Routing(format!("edge {} neighbour but hops>0", r.edge)));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::RoutineKind;
+    use crate::graph::build::build_graph;
+    use crate::graph::place::place;
+    use crate::spec::{DataSource, Spec};
+
+    fn routed(spec: &Spec) -> (Graph, Routing) {
+        let g = build_graph(spec).unwrap().graph;
+        let arch = ArchConfig::vck5000();
+        let p = place(&g, &arch).unwrap();
+        let r = route(&g, &p, &arch).unwrap();
+        check_routing(&g, &r).unwrap();
+        (g, r)
+    }
+
+    #[test]
+    fn axpy_pl_consumes_interface_channels() {
+        let (_, r) = routed(&Spec::single(RoutineKind::Axpy, "a", 4096, DataSource::Pl));
+        // alpha, x, y in; z out
+        assert_eq!(r.pl_to_aie_used, 3);
+        assert_eq!(r.aie_to_pl_used, 1);
+    }
+
+    #[test]
+    fn onchip_uses_no_interface() {
+        let (_, r) = routed(&Spec::single(RoutineKind::Axpy, "a", 4096, DataSource::OnChip));
+        assert_eq!(r.pl_to_aie_used, 0);
+        assert_eq!(r.aie_to_pl_used, 0);
+    }
+
+    #[test]
+    fn dataflow_edge_is_neighbour_local_memory() {
+        let (g, r) = routed(&Spec::axpydot_dataflow(4096, 2.0));
+        let a = g.node_by_name("axpy_stage").unwrap().id;
+        let d = g.node_by_name("dot_stage").unwrap().id;
+        let e = g.edges.iter().find(|e| e.src == a && e.dst == d).unwrap();
+        assert!(r.of(e.id).neighbour, "DF edge should use neighbour memory sharing");
+        assert_eq!(r.of(e.id).hops, 0);
+    }
+
+    #[test]
+    fn capacity_overflow_rejected() {
+        let mut arch = ArchConfig::vck5000();
+        arch.pl_to_aie_channels = 2; // artificially tiny
+        let g = build_graph(&Spec::single(RoutineKind::Axpy, "a", 4096, DataSource::Pl))
+            .unwrap()
+            .graph;
+        let p = place(&g, &arch).unwrap();
+        assert!(route(&g, &p, &arch).is_err());
+    }
+}

@@ -1,0 +1,51 @@
+//! # AIEBLAS-RS
+//!
+//! Reproduction of *"Developing a BLAS library for the AMD AI Engine"*
+//! (Laan & De Matteis, 2024): an expandable BLAS library for the AMD AI
+//! Engine spatial architecture, built as a three-layer Rust + JAX + Pallas
+//! stack with the VCK5000 hardware replaced by a cycle-approximate
+//! simulator (see DESIGN.md §1 for the substitution argument).
+//!
+//! Layer map:
+//! * **L3 (this crate)** — the AIEBLAS system: JSON spec → code generation →
+//!   dataflow-graph construction → placement/routing → simulation, plus the
+//!   PJRT runtime executing AOT-compiled numerics and the experiment
+//!   harness reproducing the paper's Fig. 3.
+//! * **L2 (`python/compile/model.py`)** — JAX routine graphs.
+//! * **L1 (`python/compile/kernels/`)** — window-tiled Pallas kernels.
+//!
+//! ## Quickstart
+//! ```no_run
+//! use aieblas::spec::Spec;
+//! use aieblas::coordinator::AieBlas;
+//!
+//! let spec = Spec::from_json_str(r#"{
+//!   "platform": "vck5000",
+//!   "routines": [
+//!     {"routine": "axpy", "name": "my_axpy", "size": 65536}
+//!   ]
+//! }"#).unwrap();
+//! let system = AieBlas::new(Default::default()).unwrap();
+//! let report = system.run_spec(&spec).unwrap();
+//! println!("{}", report.summary());
+//! ```
+
+pub mod aie;
+pub mod arch;
+pub mod blas;
+pub mod codegen;
+pub mod coordinator;
+pub mod error;
+pub mod graph;
+pub mod pl;
+pub mod runtime;
+pub mod sim;
+pub mod spec;
+pub mod util;
+
+pub use error::{Error, Result};
+
+/// Initialize process-level facilities (logging). Idempotent.
+pub fn init() {
+    util::logging::init();
+}

@@ -1,0 +1,221 @@
+//! `aieblas` — command-line interface to the AIEBLAS system.
+//!
+//! Subcommands:
+//! * `validate <spec.json>` — parse + validate a routine specification;
+//! * `generate <spec.json> --out <dir>` — emit the Vitis design (Fig. 1);
+//! * `run <spec.json>` — build → place → route → simulate → numerics;
+//! * `fig3 [--panel …]` — reproduce the paper's Fig. 3 series;
+//! * `ablations` — the §V ablation sweeps;
+//! * `info` — architecture + artifact inventory.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use aieblas::blas::RoutineKind;
+use aieblas::coordinator::{experiments, AieBlas, Config};
+use aieblas::spec::Spec;
+use aieblas::util::cli::{App, Command, Matches, Parsed};
+
+fn app() -> App {
+    App::new("aieblas", "BLAS library + code generator + simulator for the AMD AI Engine")
+        .command(
+            Command::new("validate", "validate a JSON routine specification")
+                .positional("spec", "path to spec.json", true),
+        )
+        .command(
+            Command::new("generate", "generate the Vitis design from a spec")
+                .positional("spec", "path to spec.json", true)
+                .opt_default("out", "generated", "output directory"),
+        )
+        .command(
+            Command::new("run", "simulate a spec end-to-end and check numerics")
+                .positional("spec", "path to spec.json", true)
+                .opt_default("artifacts", "artifacts", "AOT artifact directory")
+                .flag("no-numerics", "skip PJRT numeric validation")
+                .flag("kernels", "print per-kernel utilization"),
+        )
+        .command(
+            Command::new("fig3", "reproduce the paper's Fig. 3")
+                .opt_default("panel", "all", "axpy | gemv | axpydot | all")
+                .opt_default("artifacts", "artifacts", "AOT artifact directory")
+                .flag("csv", "emit CSV instead of a table"),
+        )
+        .command(
+            Command::new("ablations", "run the §V ablation sweeps (A1–A3)")
+                .opt_default("artifacts", "artifacts", "AOT artifact directory"),
+        )
+        .command(Command::new("info", "print architecture and artifact inventory"))
+}
+
+fn main() -> ExitCode {
+    aieblas::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match app().parse(&args) {
+        Ok(Parsed::Help(h)) => {
+            println!("{h}");
+            ExitCode::SUCCESS
+        }
+        Ok(Parsed::Matches(m)) => match dispatch(&m) {
+            Ok(()) => ExitCode::SUCCESS,
+            Err(e) => {
+                eprintln!("error: {e}");
+                ExitCode::FAILURE
+            }
+        },
+        Err(e) => {
+            eprintln!("error: {e}\n");
+            eprintln!("{}", app().top_usage());
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn dispatch(m: &Matches) -> anyhow::Result<()> {
+    match m.command.as_str() {
+        "validate" => {
+            let spec = Spec::from_file(Path::new(&m.positionals[0]))?;
+            println!(
+                "OK: {} routine(s), {} connection(s), data_source = {}",
+                spec.routines.len(),
+                spec.connections.len(),
+                spec.data_source.name()
+            );
+            Ok(())
+        }
+        "generate" => {
+            let spec = Spec::from_file(Path::new(&m.positionals[0]))?;
+            let out = PathBuf::from(m.get("out").unwrap());
+            let proj = aieblas::codegen::generate(&spec)?;
+            proj.write_to(&out)?;
+            println!(
+                "generated {} files ({} lines) under {}",
+                proj.files.len(),
+                proj.total_lines(),
+                out.display()
+            );
+            for f in proj.files.keys() {
+                println!("  {f}");
+            }
+            Ok(())
+        }
+        "run" => {
+            let spec = Spec::from_file(Path::new(&m.positionals[0]))?;
+            let sys = AieBlas::new(Config {
+                artifacts_dir: PathBuf::from(m.get("artifacts").unwrap()),
+                check_numerics: !m.has_flag("no-numerics"),
+                ..Default::default()
+            })?;
+            let report = sys.run_spec(&spec)?;
+            println!("{}", report.summary());
+            if m.has_flag("kernels") {
+                for k in &report.sim.kernels {
+                    println!(
+                        "  kernel {:24} @ {:10} {:6} iters  busy {:8.3} ms  util {:5.1}%",
+                        k.name,
+                        k.location,
+                        k.iterations,
+                        k.busy_s * 1e3,
+                        k.utilization * 100.0
+                    );
+                }
+            }
+            Ok(())
+        }
+        "fig3" => {
+            let sys = AieBlas::new(Config {
+                artifacts_dir: PathBuf::from(m.get("artifacts").unwrap()),
+                check_numerics: false,
+                ..Default::default()
+            })?;
+            let panel = m.get("panel").unwrap();
+            let mut tables = Vec::new();
+            if panel == "axpy" || panel == "all" {
+                let rows = experiments::single_routine_panel(
+                    &sys,
+                    RoutineKind::Axpy,
+                    &experiments::VEC_SIZES,
+                )?;
+                tables.push(experiments::panel_table("axpy", &rows));
+            }
+            if panel == "gemv" || panel == "all" {
+                let rows = experiments::single_routine_panel(
+                    &sys,
+                    RoutineKind::Gemv,
+                    &experiments::MAT_SIZES,
+                )?;
+                tables.push(experiments::panel_table("gemv", &rows));
+            }
+            if panel == "axpydot" || panel == "all" {
+                let rows = experiments::axpydot_panel(&sys, &experiments::VEC_SIZES)?;
+                tables.push(experiments::panel_table("axpydot", &rows));
+            }
+            if tables.is_empty() {
+                anyhow::bail!("unknown panel {panel:?} (axpy | gemv | axpydot | all)");
+            }
+            for t in tables {
+                if m.has_flag("csv") {
+                    print!("{}", t.to_csv());
+                } else {
+                    println!("{}", t.render());
+                }
+            }
+            Ok(())
+        }
+        "ablations" => {
+            let sys = AieBlas::new(Config {
+                artifacts_dir: PathBuf::from(m.get("artifacts").unwrap()),
+                check_numerics: false,
+                ..Default::default()
+            })?;
+            println!("== A1: burst-optimized movers (axpy) ==");
+            println!(
+                "{}",
+                experiments::ablation_burst(&sys, RoutineKind::Axpy, &[1 << 16, 1 << 20])?.render()
+            );
+            println!("== A2: multi-AIE split (axpy, n = 2^20) ==");
+            println!(
+                "{}",
+                experiments::ablation_multi_port(&sys, 1 << 20, &[1, 2, 4, 8])?.render()
+            );
+            println!("== A3a: window-size sweep (axpy, n = 2^20) ==");
+            println!(
+                "{}",
+                experiments::ablation_window(&sys, RoutineKind::Axpy, 1 << 20, &[64, 256, 1024])?
+                    .render()
+            );
+            println!("== A3b: vector-width sweep (axpy, n = 2^20, on-chip) ==");
+            println!(
+                "{}",
+                experiments::ablation_vector_width(&sys, RoutineKind::Axpy, 1 << 20)?.render()
+            );
+            Ok(())
+        }
+        "info" => {
+            let arch = aieblas::arch::ArchConfig::vck5000();
+            println!("platform: vck5000");
+            println!("  AIE array: {}×{} = {} tiles", arch.rows, arch.cols, arch.num_tiles());
+            println!("  tile-local memory: {} KB", arch.local_mem_bytes / 1024);
+            println!(
+                "  AIE clock: {:.2} GHz | PL clock: {:.0} MHz",
+                arch.aie_clock_hz / 1e9,
+                arch.pl_clock_hz / 1e6
+            );
+            println!(
+                "  PL↔AIE: {}+{} channels @ {:.0} GB/s",
+                arch.pl_to_aie_channels,
+                arch.aie_to_pl_channels,
+                arch.pl_aie_channel_bw / 1e9
+            );
+            let manifest = aieblas::runtime::Manifest::load(Path::new("artifacts"))?;
+            println!("artifacts: {} precompiled", manifest.len());
+            for kind in RoutineKind::ALL {
+                let sizes = manifest.sizes_for(kind.name());
+                if !sizes.is_empty() {
+                    println!("  {:8} {:?}", kind.name(), sizes);
+                }
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unhandled command {other:?}"),
+    }
+}

@@ -1,0 +1,93 @@
+//! PL data-mover and off-chip memory model (Fig. 1 ②, paper §II).
+//!
+//! AIEBLAS generates HLS `mm2s` (memory-to-stream) and `s2mm` kernels that
+//! move data between device DRAM and the AIE array through the PL↔AIE AXI
+//! interfaces (4 GB/s per channel). Their effective rate is the minimum of
+//!
+//! * the AXI interface channel rate (4 GB/s),
+//! * the mover's share of DDR bandwidth (channels × per-channel bandwidth
+//!   × burst efficiency, split across concurrently active movers), and
+//! * the PL kernel's own loop rate (one 32-bit word per PL clock cycle
+//!   when not burst-optimized — the naive HLS mover the paper starts
+//!   from; 16 bytes/cycle with wide bursts).
+//!
+//! The naive/burst split is the paper's §IV observation: "this emphasizes
+//! the need to optimize off-chip memory reads (e.g., via burst transfers)".
+
+use crate::arch::ArchConfig;
+
+/// Effective sustained bandwidth (bytes/s) of one PL mover.
+pub fn mover_bandwidth(arch: &ArchConfig, burst: bool, active_movers: usize) -> f64 {
+    let ddr_total = arch.ddr_effective_bw(burst) * arch.ddr_channels as f64;
+    let ddr_share = ddr_total / active_movers.max(1) as f64;
+    let pl_word_bytes = if burst { 16.0 } else { 4.0 };
+    let pl_rate = pl_word_bytes * arch.pl_clock_hz;
+    arch.pl_aie_channel_bw.min(ddr_share).min(pl_rate)
+}
+
+/// Seconds to move one window of `bytes` through a mover.
+pub fn window_transfer_s(arch: &ArchConfig, bytes: usize, burst: bool, active_movers: usize) -> f64 {
+    bytes as f64 / mover_bandwidth(arch, burst, active_movers)
+}
+
+/// DDR round-trip cost of materialising `bytes` off-chip and reading them
+/// back — the penalty the non-dataflow axpydot pays for its intermediate z
+/// vector (Fig. 3 "w/o DF").
+pub fn roundtrip_s(arch: &ArchConfig, bytes: usize, burst: bool) -> f64 {
+    // write then read, each at single-mover rate
+    2.0 * bytes as f64 / mover_bandwidth(arch, burst, 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arch() -> ArchConfig {
+        ArchConfig::vck5000()
+    }
+
+    #[test]
+    fn burst_is_faster() {
+        let a = arch();
+        assert!(mover_bandwidth(&a, true, 1) > mover_bandwidth(&a, false, 1));
+    }
+
+    #[test]
+    fn naive_mover_is_pl_loop_bound() {
+        let a = arch();
+        // 4 B/cycle at 300 MHz = 1.2 GB/s < 4 GB/s channel < DDR share
+        let bw = mover_bandwidth(&a, false, 1);
+        assert!((bw - 1.2e9).abs() < 1e6, "naive mover ~1.2 GB/s, got {bw:e}");
+    }
+
+    #[test]
+    fn burst_mover_is_channel_bound() {
+        let a = arch();
+        // 16 B/cycle at 300 MHz = 4.8 GB/s, capped by the 4 GB/s channel
+        let bw = mover_bandwidth(&a, true, 1);
+        assert!((bw - 4.0e9).abs() < 1e6, "burst mover = 4 GB/s channel cap, got {bw:e}");
+    }
+
+    #[test]
+    fn contention_reduces_share() {
+        let a = arch();
+        // with enough movers the DDR share becomes the binding constraint
+        let many = mover_bandwidth(&a, true, 64);
+        assert!(many < mover_bandwidth(&a, true, 1));
+    }
+
+    #[test]
+    fn transfer_time_scales_linearly() {
+        let a = arch();
+        let t1 = window_transfer_s(&a, 4096, false, 1);
+        let t2 = window_transfer_s(&a, 8192, false, 1);
+        assert!((t2 / t1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn roundtrip_is_twice_one_way() {
+        let a = arch();
+        let one = 1_048_576f64 / mover_bandwidth(&a, false, 1);
+        assert!((roundtrip_s(&a, 1_048_576, false) - 2.0 * one).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,189 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (which
+//! writes it at build time) and the Rust runtime (which loads HLO text by
+//! key at run time). Python never runs on the request path.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// Input signature of one artifact parameter.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InputSig {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One precompiled (routine, size) artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Entry {
+    pub key: String,
+    pub routine: String,
+    pub size: usize,
+    pub file: PathBuf,
+    pub inputs: Vec<InputSig>,
+    pub num_outputs: usize,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    entries: BTreeMap<String, Entry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`. A missing manifest yields an *empty*
+    /// manifest (the runtime then falls back to the in-crate reference
+    /// implementations, keeping `cargo test` independent of `make
+    /// artifacts`).
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        if !path.exists() {
+            return Ok(Manifest { dir: dir.to_path_buf(), entries: BTreeMap::new() });
+        }
+        let text = std::fs::read_to_string(&path)?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest JSON text.
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let json = Json::parse(text)?;
+        let entries_json = json
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Runtime("manifest has no entries array".into()))?;
+        if json.get("interchange").and_then(Json::as_str) != Some("hlo-text") {
+            return Err(Error::Runtime(
+                "manifest interchange is not hlo-text (regenerate artifacts)".into(),
+            ));
+        }
+        let mut entries = BTreeMap::new();
+        for e in entries_json {
+            let key = e
+                .get("key")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::Runtime("entry missing key".into()))?
+                .to_string();
+            let routine = e
+                .get("routine")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::Runtime(format!("{key}: missing routine")))?
+                .to_string();
+            let size = e
+                .get("size")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| Error::Runtime(format!("{key}: missing size")))?;
+            let file = e
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::Runtime(format!("{key}: missing file")))?;
+            let mut inputs = Vec::new();
+            for i in e.get("inputs").and_then(Json::as_arr).unwrap_or(&[]) {
+                let shape = i
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                    .unwrap_or_default();
+                let dtype = i
+                    .get("dtype")
+                    .and_then(Json::as_str)
+                    .unwrap_or("float32")
+                    .to_string();
+                inputs.push(InputSig { shape, dtype });
+            }
+            let num_outputs = e.get("num_outputs").and_then(Json::as_usize).unwrap_or(1);
+            entries.insert(
+                key.clone(),
+                Entry { key, routine, size, file: dir.join(file), inputs, num_outputs },
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Exact (routine, size) lookup.
+    pub fn find(&self, routine: &str, size: usize) -> Option<&Entry> {
+        self.entries.get(&format!("{routine}_n{size}"))
+    }
+
+    /// All sizes precompiled for a routine (ascending).
+    pub fn sizes_for(&self, routine: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .entries
+            .values()
+            .filter(|e| e.routine == routine)
+            .map(|e| e.size)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn entries(&self) -> impl Iterator<Item = &Entry> {
+        self.entries.values()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "interchange": "hlo-text",
+      "entries": [
+        {"key": "axpy_n4096", "routine": "axpy", "size": 4096,
+         "file": "axpy_n4096.hlo.txt",
+         "inputs": [{"shape": [1], "dtype": "float32"},
+                     {"shape": [4096], "dtype": "float32"},
+                     {"shape": [4096], "dtype": "float32"}],
+         "num_outputs": 1},
+        {"key": "axpy_n65536", "routine": "axpy", "size": 65536,
+         "file": "axpy_n65536.hlo.txt", "inputs": [], "num_outputs": 1}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_and_indexes() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.len(), 2);
+        let e = m.find("axpy", 4096).unwrap();
+        assert_eq!(e.inputs.len(), 3);
+        assert_eq!(e.inputs[1].shape, vec![4096]);
+        assert_eq!(e.file, Path::new("/tmp/a/axpy_n4096.hlo.txt"));
+        assert_eq!(m.sizes_for("axpy"), vec![4096, 65536]);
+        assert!(m.find("axpy", 999).is_none());
+    }
+
+    #[test]
+    fn missing_manifest_is_empty() {
+        let m = Manifest::load(Path::new("/nonexistent_dir_xyz")).unwrap();
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn wrong_interchange_rejected() {
+        let bad = SAMPLE.replace("hlo-text", "proto");
+        assert!(Manifest::parse(Path::new("/tmp"), &bad).is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_when_built() {
+        // integration hook: when `make artifacts` has run, exercise the
+        // real manifest too.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let m = Manifest::load(&dir).unwrap();
+        if !m.is_empty() {
+            assert!(m.find("axpy", 65536).is_some());
+            assert!(m.find("axpydot", 65536).is_some());
+        }
+    }
+}

@@ -1,0 +1,402 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from
+//! Rust — the request path never touches Python.
+//!
+//! Follows the reference wiring in `/opt/xla-example/load_hlo`: HLO *text*
+//! (not serialized protos — jax ≥ 0.5 emits 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects) is parsed by `HloModuleProto::from_text_file`,
+//! compiled once per (routine, size) on the PJRT CPU client and cached.
+
+pub mod manifest;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+
+pub use manifest::Manifest;
+
+use crate::blas::RoutineKind;
+use crate::{Error, Result};
+
+/// Executes precompiled BLAS artifacts via PJRT, with a reference-Rust
+/// fallback for shapes that were not precompiled.
+pub struct NumericExecutor {
+    manifest: Manifest,
+    client: Option<xla::PjRtClient>,
+    /// key → compiled executable (compile once, execute many).
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    /// Executions served by PJRT vs the fallback (observability).
+    pub pjrt_calls: RefCell<u64>,
+    pub fallback_calls: RefCell<u64>,
+}
+
+/// Where a result came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    Pjrt,
+    ReferenceFallback,
+}
+
+impl NumericExecutor {
+    /// Create an executor over `artifacts_dir`. The PJRT client is created
+    /// lazily-but-once here; failure to initialise it (or an empty
+    /// manifest) degrades to the reference fallback rather than erroring,
+    /// so the system works before `make artifacts`.
+    pub fn new(artifacts_dir: &Path) -> Result<NumericExecutor> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = if manifest.is_empty() {
+            None
+        } else {
+            match xla::PjRtClient::cpu() {
+                Ok(c) => Some(c),
+                Err(e) => {
+                    log::warn!("PJRT CPU client unavailable ({e}); using reference fallback");
+                    None
+                }
+            }
+        };
+        Ok(NumericExecutor {
+            manifest,
+            client,
+            cache: RefCell::new(HashMap::new()),
+            pjrt_calls: RefCell::new(0),
+            fallback_calls: RefCell::new(0),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// True when a PJRT artifact will serve this (routine, size).
+    pub fn has_artifact(&self, routine: &str, size: usize) -> bool {
+        self.client.is_some() && self.manifest.find(routine, size).is_some()
+    }
+
+    /// Execute routine `name` at problem size `size` with flat f32 inputs
+    /// (in manifest parameter order). Returns (output, backend).
+    pub fn execute(
+        &self,
+        name: &str,
+        size: usize,
+        inputs: &[Vec<f32>],
+    ) -> Result<(Vec<f32>, Backend)> {
+        validate_inputs(name, size, inputs)?;
+        if self.has_artifact(name, size) {
+            match self.execute_pjrt(name, size, inputs) {
+                Ok(out) => {
+                    *self.pjrt_calls.borrow_mut() += 1;
+                    return Ok((out, Backend::Pjrt));
+                }
+                Err(e) => {
+                    log::warn!("PJRT execution of {name}_n{size} failed ({e}); falling back");
+                }
+            }
+        }
+        let out = reference_execute(name, size, inputs)?;
+        *self.fallback_calls.borrow_mut() += 1;
+        Ok((out, Backend::ReferenceFallback))
+    }
+
+    fn execute_pjrt(&self, name: &str, size: usize, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        let entry = self
+            .manifest
+            .find(name, size)
+            .ok_or_else(|| Error::Runtime(format!("no artifact for {name}_n{size}")))?;
+        let client = self
+            .client
+            .as_ref()
+            .ok_or_else(|| Error::Runtime("no PJRT client".into()))?;
+
+        if inputs.len() != entry.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "{}: got {} inputs, artifact wants {}",
+                entry.key,
+                inputs.len(),
+                entry.inputs.len()
+            )));
+        }
+
+        // compile (cached)
+        if !self.cache.borrow().contains_key(&entry.key) {
+            let path = entry.file.to_str().ok_or_else(|| {
+                Error::Runtime(format!("non-utf8 artifact path {:?}", entry.file))
+            })?;
+            let proto = xla::HloModuleProto::from_text_file(path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            self.cache.borrow_mut().insert(entry.key.clone(), exe);
+        }
+
+        // literals in parameter order
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, sig) in inputs.iter().zip(&entry.inputs) {
+            let expected: usize = sig.shape.iter().product::<usize>().max(1);
+            if data.len() != expected {
+                return Err(Error::Runtime(format!(
+                    "{}: input length {} != shape {:?}",
+                    entry.key,
+                    data.len(),
+                    sig.shape
+                )));
+            }
+            let lit = xla::Literal::vec1(data);
+            let lit = if sig.shape.len() > 1 {
+                let dims: Vec<i64> = sig.shape.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims)?
+            } else {
+                lit
+            };
+            literals.push(lit);
+        }
+
+        let cache = self.cache.borrow();
+        let exe = cache.get(&entry.key).expect("just inserted");
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // lowered with return_tuple=True → flatten ALL tuple leaves in
+        // order (single-output routines are 1-tuples; rot is a 2-tuple).
+        let leaves = result.to_tuple()?;
+        let mut flat = Vec::new();
+        for leaf in leaves {
+            // most routines emit f32; iamax emits an int32 index.
+            match leaf.to_vec::<f32>() {
+                Ok(v) => flat.extend(v),
+                Err(_) => flat.extend(leaf.to_vec::<i32>()?.into_iter().map(|v| v as f32)),
+            }
+        }
+        Ok(flat)
+    }
+}
+
+/// Validate input arity and lengths against the routine's port signature
+/// *before* dispatching to either backend — malformed requests must error,
+/// not fall back or panic.
+pub fn validate_inputs(name: &str, size: usize, inputs: &[Vec<f32>]) -> Result<()> {
+    let base = if name == "axpy_neg" { "axpy" } else { name };
+    let kind = RoutineKind::from_name(base)
+        .ok_or_else(|| Error::Runtime(format!("unknown routine {name:?}")))?;
+    let ports = kind.inputs();
+    if inputs.len() != ports.len() {
+        return Err(Error::Runtime(format!(
+            "{name}: expected {} inputs, got {}",
+            ports.len(),
+            inputs.len()
+        )));
+    }
+    for (i, (data, port)) in inputs.iter().zip(ports).enumerate() {
+        let want = port.ty.elements(size);
+        if data.len() != want {
+            return Err(Error::Runtime(format!(
+                "{name}: input {i} ({}) has {} elements, expected {want}",
+                port.name,
+                data.len()
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Reference-Rust execution of a routine given flat inputs in artifact
+/// parameter order (the same order `RoutineKind::inputs()` declares).
+pub fn reference_execute(name: &str, size: usize, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+    use crate::blas::reference as r;
+    let n = size;
+    let need = |k: usize| -> Result<()> {
+        if inputs.len() != k {
+            return Err(Error::Runtime(format!("{name}: expected {k} inputs, got {}", inputs.len())));
+        }
+        Ok(())
+    };
+    let kind = RoutineKind::from_name(name.strip_suffix("_neg").unwrap_or(name))
+        .or(match name {
+            "axpy_neg" => Some(RoutineKind::Axpy),
+            _ => None,
+        })
+        .ok_or_else(|| Error::Runtime(format!("unknown routine {name:?}")))?;
+    match (name, kind) {
+        ("axpy", _) => {
+            need(3)?;
+            let mut z = vec![0.0; n];
+            r::axpy(inputs[0][0], &inputs[1], &inputs[2], &mut z);
+            Ok(z)
+        }
+        ("axpy_neg", _) => {
+            // z = w - alpha*v with params (alpha, v, w)
+            need(3)?;
+            let mut z = vec![0.0; n];
+            r::axpy(-inputs[0][0], &inputs[1], &inputs[2], &mut z);
+            Ok(z)
+        }
+        (_, RoutineKind::Axpby) => {
+            need(4)?;
+            let mut z = vec![0.0; n];
+            r::axpby(inputs[0][0], &inputs[2], inputs[1][0], &inputs[3], &mut z);
+            Ok(z)
+        }
+        (_, RoutineKind::Rot) => {
+            // concatenated outputs (x_out ++ y_out), matching the PJRT
+            // tuple flattening.
+            need(4)?;
+            let mut xo = vec![0.0; n];
+            let mut yo = vec![0.0; n];
+            r::rot(inputs[0][0], inputs[1][0], &inputs[2], &inputs[3], &mut xo, &mut yo);
+            xo.extend(yo);
+            Ok(xo)
+        }
+        (_, RoutineKind::Ger) => {
+            need(4)?;
+            let mut out = vec![0.0; n * n];
+            r::ger(inputs[0][0], &inputs[1], &inputs[2], &inputs[3], n, n, &mut out);
+            Ok(out)
+        }
+        (_, RoutineKind::Scal) => {
+            need(2)?;
+            let mut z = vec![0.0; n];
+            r::scal(inputs[0][0], &inputs[1], &mut z);
+            Ok(z)
+        }
+        (_, RoutineKind::Copy) => {
+            need(1)?;
+            Ok(inputs[0].clone())
+        }
+        (_, RoutineKind::Dot) => {
+            need(2)?;
+            Ok(vec![r::dot(&inputs[0], &inputs[1])])
+        }
+        (_, RoutineKind::Nrm2) => {
+            need(1)?;
+            Ok(vec![r::nrm2(&inputs[0])])
+        }
+        (_, RoutineKind::Asum) => {
+            need(1)?;
+            Ok(vec![r::asum(&inputs[0])])
+        }
+        (_, RoutineKind::Iamax) => {
+            need(1)?;
+            Ok(vec![r::iamax(&inputs[0]) as f32])
+        }
+        (_, RoutineKind::Gemv) => {
+            need(5)?;
+            let mut out = vec![0.0; n];
+            r::gemv(inputs[0][0], &inputs[1], n, n, &inputs[2], inputs[3][0], &inputs[4], &mut out);
+            Ok(out)
+        }
+        (_, RoutineKind::Gemm) => {
+            need(5)?;
+            let mut out = vec![0.0; n * n];
+            r::gemm(inputs[0][0], &inputs[1], &inputs[2], n, n, n, inputs[3][0], &inputs[4], &mut out);
+            Ok(out)
+        }
+        (_, RoutineKind::Axpydot) => {
+            need(4)?;
+            Ok(vec![r::axpydot(inputs[0][0], &inputs[1], &inputs[2], &inputs[3])])
+        }
+        _ => Err(Error::Runtime(format!("unhandled routine {name:?}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn reference_execute_axpy() {
+        let out = reference_execute(
+            "axpy",
+            3,
+            &[vec![2.0], vec![1.0, 2.0, 3.0], vec![10.0, 10.0, 10.0]],
+        )
+        .unwrap();
+        assert_eq!(out, vec![12.0, 14.0, 16.0]);
+    }
+
+    #[test]
+    fn reference_execute_axpy_neg_matches_paper_definition() {
+        // z = w - alpha*v
+        let out =
+            reference_execute("axpy_neg", 2, &[vec![2.0], vec![1.0, 1.0], vec![5.0, 7.0]]).unwrap();
+        assert_eq!(out, vec![3.0, 5.0]);
+    }
+
+    #[test]
+    fn reference_execute_wrong_arity_fails() {
+        assert!(reference_execute("dot", 4, &[vec![0.0; 4]]).is_err());
+        assert!(reference_execute("bogus", 4, &[]).is_err());
+    }
+
+    #[test]
+    fn executor_without_artifacts_falls_back() {
+        let ex = NumericExecutor::new(Path::new("/nonexistent_dir_xyz")).unwrap();
+        let (out, backend) = ex
+            .execute("dot", 4, &[vec![1.0, 2.0, 3.0, 4.0], vec![1.0, 1.0, 1.0, 1.0]])
+            .unwrap();
+        assert_eq!(backend, Backend::ReferenceFallback);
+        assert_eq!(out, vec![10.0]);
+    }
+
+    /// The cross-language correctness loop: PJRT artifact (Pallas-lowered
+    /// HLO) vs the Rust reference, on every precompiled routine. Skips
+    /// silently when `make artifacts` has not run.
+    #[test]
+    fn pjrt_matches_reference_for_all_artifacts() {
+        let ex = NumericExecutor::new(&artifacts_dir()).unwrap();
+        if ex.manifest().is_empty() {
+            eprintln!("skipping: no artifacts built");
+            return;
+        }
+        let mut rng = Rng::new(42);
+        let mut checked = 0;
+        for entry in ex.manifest().entries() {
+            if entry.size > 1 << 16 {
+                continue; // keep the test fast
+            }
+            let inputs: Vec<Vec<f32>> = entry
+                .inputs
+                .iter()
+                .map(|sig| {
+                    let len: usize = sig.shape.iter().product::<usize>().max(1);
+                    rng.normal_vec_f32(len)
+                })
+                .collect();
+            let (pjrt_out, backend) = ex.execute(&entry.routine, entry.size, &inputs).unwrap();
+            assert_eq!(backend, Backend::Pjrt, "{}", entry.key);
+            let ref_out = reference_execute(&entry.routine, entry.size, &inputs).unwrap();
+            assert_eq!(pjrt_out.len(), ref_out.len(), "{}", entry.key);
+            if entry.routine == "iamax" {
+                // index equality
+                assert_eq!(pjrt_out[0] as usize, ref_out[0] as usize, "{}", entry.key);
+            } else {
+                for (i, (a, b)) in pjrt_out.iter().zip(&ref_out).enumerate() {
+                    let tol = 2e-3 * (1.0 + b.abs());
+                    assert!(
+                        (a - b).abs() <= tol,
+                        "{}[{i}]: pjrt {a} vs ref {b}",
+                        entry.key
+                    );
+                }
+            }
+            checked += 1;
+        }
+        assert!(checked > 10, "only {checked} artifacts checked");
+        assert_eq!(*ex.fallback_calls.borrow(), 0);
+    }
+
+    #[test]
+    fn pjrt_compile_cache_is_reused() {
+        let ex = NumericExecutor::new(&artifacts_dir()).unwrap();
+        if !ex.has_artifact("axpy", 4096) {
+            eprintln!("skipping: no artifacts built");
+            return;
+        }
+        let mut rng = Rng::new(1);
+        let inputs = vec![vec![1.5], rng.normal_vec_f32(4096), rng.normal_vec_f32(4096)];
+        ex.execute("axpy", 4096, &inputs).unwrap();
+        ex.execute("axpy", 4096, &inputs).unwrap();
+        assert_eq!(ex.cache.borrow().len(), 1);
+        assert_eq!(*ex.pjrt_calls.borrow(), 2);
+    }
+}

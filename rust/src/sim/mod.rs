@@ -1,0 +1,401 @@
+//! Discrete-event simulation of a placed + routed dataflow graph.
+//!
+//! Token-dataflow semantics at *window* granularity, matching the ADF
+//! execution model: each node repeatedly (1) waits for one window on each
+//! of its input edges, (2) waits for buffer space on each output edge
+//! (ping-pong double buffering → capacity 2), (3) occupies its resource
+//! for the window's service time, (4) emits output windows, which arrive
+//! at the consumer after the edge's transfer latency.
+//!
+//! Pipelining across composed routines — the paper's central performance
+//! mechanism (Fig. 3 "w/ DF") — emerges naturally: the dot kernel starts
+//! on window *i* while the axpy kernel computes window *i+1*.
+//!
+//! Edges with fewer windows than the node's iteration count (e.g. the
+//! scalar alpha stream, or gemv's x vector re-read per row block) are
+//! consumed/produced at evenly spread iterations (rate-matched dataflow).
+
+pub mod report;
+pub mod trace;
+
+use crate::aie::seconds_per_window;
+use crate::arch::ArchConfig;
+use crate::graph::place::Placement;
+use crate::graph::route::Routing;
+use crate::graph::{Graph, NodeKind};
+use crate::pl::window_transfer_s;
+use crate::{Error, Result};
+
+pub use report::SimReport;
+
+/// Double-buffer depth of window edges (ADF ping-pong).
+const EDGE_CAPACITY: usize = 2;
+
+/// Per-node simulation schedule derived from the graph.
+struct NodeSched {
+    /// Total iterations (windows to process).
+    iters: usize,
+    /// Service time per iteration, seconds.
+    service_s: f64,
+    /// One-time launch overhead, seconds.
+    launch_s: f64,
+}
+
+/// Simulate a placed+routed graph; returns the timing report.
+pub fn simulate(
+    graph: &Graph,
+    placement: &Placement,
+    routing: &Routing,
+    arch: &ArchConfig,
+) -> Result<SimReport> {
+    simulate_inner(graph, placement, routing, arch, None)
+}
+
+/// Simulate and additionally record a full execution trace (Chrome-trace /
+/// Gantt export via [`trace::Trace`]).
+pub fn simulate_traced(
+    graph: &Graph,
+    placement: &Placement,
+    routing: &Routing,
+    arch: &ArchConfig,
+) -> Result<(SimReport, trace::Trace)> {
+    let mut t = trace::Trace::default();
+    let rep = simulate_inner(graph, placement, routing, arch, Some(&mut t))?;
+    Ok((rep, t))
+}
+
+fn simulate_inner(
+    graph: &Graph,
+    placement: &Placement,
+    routing: &Routing,
+    arch: &ArchConfig,
+    mut tracer: Option<&mut trace::Trace>,
+) -> Result<SimReport> {
+    let n = graph.nodes.len();
+    let active_movers = graph.num_pl_movers().max(1);
+
+    // --- derive schedules ---------------------------------------------------
+    let mut sched = Vec::with_capacity(n);
+    for node in &graph.nodes {
+        let in_w: usize = graph.in_edges(node.id).map(|e| e.num_windows()).max().unwrap_or(0);
+        let out_w: usize = graph.out_edges(node.id).map(|e| e.num_windows()).max().unwrap_or(0);
+        let iters = in_w.max(out_w).max(1);
+        let (service_s, launch_s) = match &node.kind {
+            NodeKind::AieKernel { kind, window, vector_bits, size, .. } => {
+                // per-iteration window elements: the dominant in-edge's.
+                let we = graph
+                    .in_edges(node.id)
+                    .chain(graph.out_edges(node.id))
+                    .filter(|e| e.num_windows() == iters)
+                    .map(|e| e.window_elements)
+                    .max()
+                    .unwrap_or((*window).min(*size));
+                (
+                    seconds_per_window(*kind, we, *vector_bits, arch),
+                    arch.kernel_call_cycles as f64 * arch.aie_cycle_s(),
+                )
+            }
+            NodeKind::PlMm2s { burst } | NodeKind::PlS2mm { burst } => {
+                let bytes = graph
+                    .out_edges(node.id)
+                    .chain(graph.in_edges(node.id))
+                    .map(|e| e.window_bytes())
+                    .max()
+                    .unwrap_or(0);
+                (window_transfer_s(arch, bytes, *burst, active_movers), 0.0)
+            }
+            NodeKind::Combine { parts } => {
+                // k scalar adds + stream reads: trivially cheap next to
+                // window compute; modelled as one overhead slot.
+                (
+                    (*parts as u64 + arch.window_overhead_cycles) as f64 * arch.aie_cycle_s(),
+                    0.0,
+                )
+            }
+            NodeKind::OnChipSource | NodeKind::OnChipSink => {
+                // synthetic generation: one vector write per lane-group —
+                // effectively free next to real transfers, but not zero.
+                (arch.window_overhead_cycles as f64 * arch.aie_cycle_s(), 0.0)
+            }
+        };
+        sched.push(NodeSched { iters, service_s, launch_s });
+    }
+
+    // --- edge latency (beyond producer service) -----------------------------
+    let mut edge_latency = vec![0.0f64; graph.edges.len()];
+    for e in &graph.edges {
+        let r = routing.of(e.id);
+        let hop_s = r.hops as f64 * arch.noc_hop_cycles as f64 * arch.aie_cycle_s();
+        let src_pl = graph.node(e.src).kind.is_pl();
+        let dst_pl = graph.node(e.dst).kind.is_pl();
+        let stream_s = if !r.neighbour && !src_pl && !dst_pl {
+            // AIE→AIE over the stream network: 4 B/cycle serialization.
+            e.window_bytes() as f64 / arch.stream_bytes_per_cycle() * arch.aie_cycle_s()
+        } else {
+            0.0 // PL transfers are costed in the mover's service time
+        };
+        edge_latency[e.id] = hop_s + stream_s;
+    }
+
+    // --- adjacency (perf: the worklist loop below touches each node's
+    // edges O(iters) times; scanning graph.edges every time was the top
+    // profile entry — see EXPERIMENTS.md §Perf) ------------------------------
+    let mut in_adj: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut out_adj: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for e in &graph.edges {
+        in_adj[e.dst].push(e.id);
+        out_adj[e.src].push(e.id);
+    }
+    let edge_windows: Vec<usize> = graph.edges.iter().map(|e| e.num_windows()).collect();
+
+    // --- token-dataflow event loop -------------------------------------------
+    // produced[e][j] = time token j becomes available at the consumer;
+    // consumed[e][j] = time the consumer finished with token j (frees space).
+    // preallocated to final token counts: the push-only vectors never
+    // reallocate inside the hot loop (perf iteration 2, EXPERIMENTS.md §Perf).
+    let mut produced: Vec<Vec<f64>> =
+        edge_windows.iter().map(|&w| Vec::with_capacity(w)).collect();
+    let mut consumed: Vec<Vec<f64>> =
+        edge_windows.iter().map(|&w| Vec::with_capacity(w)).collect();
+    let mut done_iters = vec![0usize; n];
+    let mut busy_until = vec![0.0f64; n];
+    let mut busy_total = vec![0.0f64; n];
+
+    // iteration→token maps (rate matching).
+    let token_at = |windows: usize, iters: usize, k: usize| -> Option<usize> {
+        // consume/produce token t at iteration k iff t = floor((k+1)*W/I) - 1
+        // advanced past floor(k*W/I) - 1; evenly spreads W tokens over I.
+        let before = k * windows / iters;
+        let after = (k + 1) * windows / iters;
+        (after > before).then(|| after - 1)
+    };
+
+    let total_iters: usize = sched.iter().map(|s| s.iters).sum();
+    let mut completed = 0usize;
+    // Worklist rounds: each pass tries to advance every node by as many
+    // iterations as its dependencies allow. The (node, iteration)
+    // dependency graph is acyclic, so progress is guaranteed.
+    let mut progressed = true;
+    while completed < total_iters {
+        if !progressed {
+            return Err(Error::Sim(format!(
+                "deadlock: {completed}/{total_iters} iterations completed"
+            )));
+        }
+        progressed = false;
+        for id in 0..n {
+            loop {
+                let k = done_iters[id];
+                if k >= sched[id].iters {
+                    break;
+                }
+                // dependencies: input tokens present, output space known.
+                let mut start: f64 = if k == 0 {
+                    sched[id].launch_s
+                } else {
+                    busy_until[id]
+                };
+                let mut ready = true;
+                for &eid in &in_adj[id] {
+                    if let Some(t) = token_at(edge_windows[eid], sched[id].iters, k) {
+                        match produced[eid].get(t) {
+                            Some(&avail) => start = start.max(avail),
+                            None => {
+                                ready = false;
+                                break;
+                            }
+                        }
+                    }
+                }
+                if ready {
+                    for &eid in &out_adj[id] {
+                        if let Some(t) = token_at(edge_windows[eid], sched[id].iters, k) {
+                            if t >= EDGE_CAPACITY {
+                                // space frees when the consumer finishes
+                                // token t - capacity.
+                                match consumed[eid].get(t - EDGE_CAPACITY) {
+                                    Some(&freed) => start = start.max(freed),
+                                    None => {
+                                        ready = false;
+                                        break;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                if !ready {
+                    break;
+                }
+                let finish = start + sched[id].service_s;
+                busy_until[id] = finish;
+                busy_total[id] += sched[id].service_s;
+                if let Some(t) = tracer.as_deref_mut() {
+                    let lane = match placement.of(id) {
+                        crate::graph::place::Location::Tile { col, row } => {
+                            format!("aie({col},{row}) {}", graph.node(id).name)
+                        }
+                        crate::graph::place::Location::Shim { col } => {
+                            format!("shim({col}) {}", graph.node(id).name)
+                        }
+                        crate::graph::place::Location::OffChip => graph.node(id).name.clone(),
+                    };
+                    t.record(trace::Span {
+                        node: id,
+                        name: graph.node(id).name.clone(),
+                        lane,
+                        iteration: k,
+                        start_s: start,
+                        end_s: finish,
+                    });
+                }
+                for &eid in &in_adj[id] {
+                    if let Some(t) = token_at(edge_windows[eid], sched[id].iters, k) {
+                        debug_assert_eq!(consumed[eid].len(), t);
+                        consumed[eid].push(finish);
+                    }
+                }
+                for &eid in &out_adj[id] {
+                    if let Some(t) = token_at(edge_windows[eid], sched[id].iters, k) {
+                        debug_assert_eq!(produced[eid].len(), t);
+                        produced[eid].push(finish + edge_latency[eid]);
+                    }
+                }
+                done_iters[id] += 1;
+                completed += 1;
+                progressed = true;
+            }
+        }
+    }
+
+    // --- conservation checks --------------------------------------------------
+    for e in &graph.edges {
+        if produced[e.id].len() != e.num_windows() || consumed[e.id].len() != e.num_windows() {
+            return Err(Error::Sim(format!(
+                "edge {}: {} produced / {} consumed of {} windows",
+                e.id,
+                produced[e.id].len(),
+                consumed[e.id].len(),
+                e.num_windows()
+            )));
+        }
+    }
+
+    let makespan = busy_until.iter().cloned().fold(0.0, f64::max);
+    Ok(report::build(graph, placement, routing, arch, makespan, &busy_total, &sched.iter().map(|s| s.iters).collect::<Vec<_>>()))
+}
+
+/// Convenience: build → place → route → simulate a spec.
+pub fn simulate_spec(spec: &crate::spec::Spec) -> Result<SimReport> {
+    let arch = crate::spec::arch_for(&spec.platform)?;
+    crate::spec::validate(spec)?;
+    let built = crate::graph::build::build_graph(spec)?;
+    let placement = crate::graph::place::place(&built.graph, &arch)?;
+    let routing = crate::graph::route::route(&built.graph, &placement, &arch)?;
+    crate::graph::route::check_routing(&built.graph, &routing)?;
+    simulate(&built.graph, &placement, &routing, &arch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::RoutineKind;
+    use crate::spec::{DataSource, Spec};
+
+    fn sim(spec: &Spec) -> SimReport {
+        simulate_spec(spec).unwrap()
+    }
+
+    #[test]
+    fn axpy_pl_simulates() {
+        let r = sim(&Spec::single(RoutineKind::Axpy, "a", 1 << 16, DataSource::Pl));
+        assert!(r.makespan_s > 0.0);
+        assert!(r.device_bytes > 0);
+    }
+
+    #[test]
+    fn no_pl_is_faster_than_pl() {
+        // Fig. 3 claim C1: on-chip generation removes the off-chip
+        // bottleneck for memory-bound routines.
+        for n in [1usize << 14, 1 << 18, 1 << 20] {
+            let pl = sim(&Spec::single(RoutineKind::Axpy, "a", n, DataSource::Pl));
+            let onchip = sim(&Spec::single(RoutineKind::Axpy, "a", n, DataSource::OnChip));
+            assert!(
+                onchip.makespan_s < pl.makespan_s,
+                "n={n}: onchip {} !< pl {}",
+                onchip.makespan_s,
+                pl.makespan_s
+            );
+        }
+    }
+
+    #[test]
+    fn gemv_no_pl_faster() {
+        for n in [128usize, 512] {
+            let pl = sim(&Spec::single(RoutineKind::Gemv, "g", n, DataSource::Pl));
+            let onchip = sim(&Spec::single(RoutineKind::Gemv, "g", n, DataSource::OnChip));
+            assert!(onchip.makespan_s < pl.makespan_s, "n={n}");
+        }
+    }
+
+    #[test]
+    fn time_grows_with_size() {
+        let small = sim(&Spec::single(RoutineKind::Axpy, "a", 1 << 12, DataSource::Pl));
+        let large = sim(&Spec::single(RoutineKind::Axpy, "a", 1 << 20, DataSource::Pl));
+        assert!(large.makespan_s > 10.0 * small.makespan_s);
+    }
+
+    #[test]
+    fn dataflow_axpydot_beats_sum_of_stages() {
+        // DF pipeline must beat sequential axpy-then-dot (the no-DF lower
+        // bound is roughly the sum plus the DDR round trip).
+        let n = 1 << 20;
+        let df = sim(&Spec::axpydot_dataflow(n, 2.0));
+        let axpy = sim(&Spec::single(RoutineKind::Axpy, "a", n, DataSource::Pl));
+        let dot = sim(&Spec::single(RoutineKind::Dot, "d", n, DataSource::Pl));
+        let sequential = axpy.makespan_s + dot.makespan_s;
+        assert!(
+            df.makespan_s < sequential,
+            "DF {} !< sequential {}",
+            df.makespan_s,
+            sequential
+        );
+    }
+
+    #[test]
+    fn composite_expansion_simulates_like_explicit_composition() {
+        let n = 1 << 16;
+        let explicit = sim(&Spec::axpydot_dataflow(n, 2.0));
+        let composite = sim(&Spec::single(RoutineKind::Axpydot, "ad", n, DataSource::Pl));
+        let ratio = composite.makespan_s / explicit.makespan_s;
+        assert!((0.5..2.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let r = sim(&Spec::single(RoutineKind::Dot, "d", 1 << 18, DataSource::Pl));
+        for k in &r.kernels {
+            assert!(k.utilization >= 0.0 && k.utilization <= 1.0 + 1e-9, "{}", k.name);
+        }
+    }
+
+    #[test]
+    fn burst_improves_pl_bound_routine() {
+        let n = 1 << 20;
+        let mut naive = Spec::single(RoutineKind::Axpy, "a", n, DataSource::Pl);
+        let mut burst = naive.clone();
+        naive.routines[0].burst = false;
+        burst.routines[0].burst = true;
+        let t_naive = sim(&naive).makespan_s;
+        let t_burst = sim(&burst).makespan_s;
+        assert!(t_burst < t_naive, "burst {t_burst} !< naive {t_naive}");
+    }
+
+    #[test]
+    fn scalar_only_edges_do_not_deadlock() {
+        // dot produces a single scalar token; ensure rate-matching handles
+        // 1-token edges over many iterations.
+        let r = sim(&Spec::single(RoutineKind::Dot, "d", 1 << 14, DataSource::Pl));
+        assert!(r.makespan_s > 0.0);
+    }
+}

@@ -1,0 +1,149 @@
+//! Simulation reports: per-kernel utilization, interface bandwidth, and
+//! the headline metrics the Fig. 3 harness prints.
+
+use crate::arch::ArchConfig;
+use crate::graph::place::{Location, Placement};
+use crate::graph::route::Routing;
+use crate::graph::{Graph, NodeKind};
+
+/// Per-kernel activity summary.
+#[derive(Debug, Clone)]
+pub struct KernelStats {
+    pub name: String,
+    pub location: String,
+    pub iterations: usize,
+    pub busy_s: f64,
+    /// busy / makespan.
+    pub utilization: f64,
+}
+
+/// The simulator's output for one graph execution.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// End-to-end simulated device time, seconds.
+    pub makespan_s: f64,
+    /// Bytes moved across the PL↔AIE interfaces (both directions).
+    pub interface_bytes: u64,
+    /// Bytes transferred to/from device DRAM.
+    pub device_bytes: u64,
+    /// Total floating-point ops across AIE kernels.
+    pub flops: u64,
+    /// Per-kernel stats (AIE kernels only).
+    pub kernels: Vec<KernelStats>,
+    /// PL→AIE / AIE→PL channels in use.
+    pub pl_to_aie_channels: usize,
+    pub aie_to_pl_channels: usize,
+    /// NoC hops across all routed edges.
+    pub noc_hops: usize,
+}
+
+impl SimReport {
+    /// Achieved off-chip bandwidth (bytes/s).
+    pub fn achieved_ddr_bw(&self) -> f64 {
+        if self.makespan_s <= 0.0 {
+            return 0.0;
+        }
+        self.device_bytes as f64 / self.makespan_s
+    }
+
+    /// Achieved arithmetic rate (FLOP/s).
+    pub fn achieved_flops(&self) -> f64 {
+        if self.makespan_s <= 0.0 {
+            return 0.0;
+        }
+        self.flops as f64 / self.makespan_s
+    }
+
+    /// One-line summary for CLI output.
+    pub fn summary(&self) -> String {
+        format!(
+            "device time {:.3} ms | {:.2} GB/s off-chip | {:.2} GFLOP/s | {} AIE kernels | {}+{} PL channels",
+            self.makespan_s * 1e3,
+            self.achieved_ddr_bw() / 1e9,
+            self.achieved_flops() / 1e9,
+            self.kernels.len(),
+            self.pl_to_aie_channels,
+            self.aie_to_pl_channels,
+        )
+    }
+}
+
+/// Assemble the report (called by `sim::simulate`).
+pub(crate) fn build(
+    graph: &Graph,
+    placement: &Placement,
+    routing: &Routing,
+    _arch: &ArchConfig,
+    makespan: f64,
+    busy_total: &[f64],
+    iters: &[usize],
+) -> SimReport {
+    let mut kernels = Vec::new();
+    let mut flops = 0u64;
+    for node in &graph.nodes {
+        if let NodeKind::AieKernel { kind, size, .. } = &node.kind {
+            flops += kind.flops(*size);
+            let location = match placement.of(node.id) {
+                Location::Tile { col, row } => format!("aie({col},{row})"),
+                Location::Shim { col } => format!("shim({col})"),
+                Location::OffChip => "offchip".to_string(),
+            };
+            kernels.push(KernelStats {
+                name: node.name.clone(),
+                location,
+                iterations: iters[node.id],
+                busy_s: busy_total[node.id],
+                utilization: if makespan > 0.0 { busy_total[node.id] / makespan } else { 0.0 },
+            });
+        }
+    }
+
+    let mut interface_bytes = 0u64;
+    let mut device_bytes = 0u64;
+    for e in &graph.edges {
+        let r = routing.of(e.id);
+        if r.uses_pl_to_aie || r.uses_aie_to_pl {
+            interface_bytes += e.total_bytes() as u64;
+            device_bytes += e.total_bytes() as u64;
+        }
+    }
+
+    SimReport {
+        makespan_s: makespan,
+        interface_bytes,
+        device_bytes,
+        flops,
+        kernels,
+        pl_to_aie_channels: routing.pl_to_aie_used,
+        aie_to_pl_channels: routing.aie_to_pl_used,
+        noc_hops: routing.total_hops(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::RoutineKind;
+    use crate::sim::simulate_spec;
+    use crate::spec::{DataSource, Spec};
+
+    #[test]
+    fn report_accounting() {
+        let n = 1usize << 16;
+        let r = simulate_spec(&Spec::single(RoutineKind::Axpy, "a", n, DataSource::Pl)).unwrap();
+        // alpha + x + y in, z out = (3n + 1) * 4 bytes off-chip
+        assert_eq!(r.device_bytes, (3 * n + 1) as u64 * 4);
+        assert_eq!(r.flops, 2 * n as u64);
+        assert_eq!(r.kernels.len(), 1);
+        assert!(r.achieved_ddr_bw() > 0.0);
+        assert!(r.summary().contains("device time"));
+    }
+
+    #[test]
+    fn onchip_moves_no_device_bytes() {
+        let r = simulate_spec(&Spec::single(RoutineKind::Axpy, "a", 4096, DataSource::OnChip))
+            .unwrap();
+        assert_eq!(r.device_bytes, 0);
+        assert_eq!(r.interface_bytes, 0);
+    }
+}

@@ -1,0 +1,568 @@
+//! The AIEBLAS JSON specification (paper §III, Fig. 1 ①).
+//!
+//! The user describes *what* they need — routine kinds, unique kernel
+//! names, problem sizes — plus optional non-functional parameters (window
+//! size, vector width, placement hints, DDR burst mode) that default to
+//! predefined values, and optional routine→routine connections that the
+//! generator turns into on-chip dataflow edges.
+//!
+//! Example (the paper's axpydot composition, Fig. 1):
+//! ```json
+//! {
+//!   "platform": "vck5000",
+//!   "data_source": "pl",
+//!   "routines": [
+//!     {"routine": "axpy", "name": "vadd",  "size": 65536, "alpha": -2.0},
+//!     {"routine": "dot",  "name": "vdot",  "size": 65536,
+//!      "placement": {"col": 10, "row": 2}}
+//!   ],
+//!   "connections": [
+//!     {"from": "vadd.z", "to": "vdot.x"}
+//!   ]
+//! }
+//! ```
+
+pub mod validate;
+
+pub use validate::{arch_for, validate};
+
+use crate::blas::RoutineKind;
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// Where unconnected routine inputs come from (Fig. 3's two variants).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DataSource {
+    /// PL data movers read/write DRAM (the realistic configuration).
+    #[default]
+    Pl,
+    /// Data generated directly on-chip (the paper's "no PL" upper bound).
+    OnChip,
+}
+
+impl DataSource {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "pl" => Ok(DataSource::Pl),
+            "onchip" | "on_chip" | "no_pl" => Ok(DataSource::OnChip),
+            other => Err(Error::Spec(format!(
+                "unknown data_source {other:?} (expected \"pl\" or \"onchip\")"
+            ))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DataSource::Pl => "pl",
+            DataSource::OnChip => "onchip",
+        }
+    }
+}
+
+/// Optional placement hint for one kernel (paper §III: "users can set an
+/// optional field in the JSON configuration specifying a placement
+/// constraint for each kernel").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Placement {
+    pub col: usize,
+    pub row: usize,
+}
+
+/// One requested routine instance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoutineSpec {
+    /// Routine type (axpy, gemv, ...).
+    pub kind: RoutineKind,
+    /// Unique kernel name used for generation.
+    pub name: String,
+    /// Problem size `n` (vectors length n, matrices n×n).
+    pub size: usize,
+    /// Window size in *elements*; defaults to min(4096, size) shrunk to a
+    /// divisor of `size` (mirrors `python/compile/kernels/common.py`).
+    pub window: Option<usize>,
+    /// Vector datapath width in bits; defaults to the maximum supported
+    /// (512, paper §III).
+    pub vector_bits: usize,
+    /// Optional placement constraint.
+    pub placement: Option<Placement>,
+    /// Burst-optimized PL movers (ablation A1; paper future-work 1).
+    pub burst: bool,
+    /// Compile-time scalar constants (alpha/beta) when the user wants them
+    /// baked into the generated kernel rather than streamed.
+    pub alpha: Option<f32>,
+    pub beta: Option<f32>,
+    /// Multi-AIE split factor (paper §V future work 2): partition the
+    /// vector across `split` kernels, each with its own PL ports, plus an
+    /// on-chip combiner for reductions. 1 = no split.
+    pub split: usize,
+}
+
+impl RoutineSpec {
+    /// Number of non-scalar (windowed) ports this routine moves.
+    pub fn vector_ports(&self) -> usize {
+        self.kind
+            .inputs()
+            .iter()
+            .chain(self.kind.outputs())
+            .filter(|p| p.ty != crate::blas::PortType::Scalar)
+            .count()
+    }
+
+    /// Largest window (elements) whose ping-pong-buffered set of per-port
+    /// windows fits the 32 KB tile-local memory. Matrix-windowed routines
+    /// (level ≥ 2) stage 16-row blocks, so each window element costs 16×.
+    pub fn max_window_for_memory(&self, local_mem_bytes: usize) -> usize {
+        let per_elem = if self.kind.level() >= 2 { 16 } else { 1 };
+        let denom = 2 * self.vector_ports().max(1) * per_elem * crate::arch::F32_BYTES;
+        (local_mem_bytes / denom).max(1)
+    }
+
+    /// Effective window in elements: the requested `window_size`, or a
+    /// power-of-two default sized to the 32 KB tile budget; always shrunk
+    /// to a divisor of `size` (the AIEBLAS window-divisibility invariant).
+    pub fn effective_window(&self) -> usize {
+        let default = {
+            let max_w = self.max_window_for_memory(32 * 1024);
+            // largest power of two <= max_w
+            let mut w = 1usize;
+            while w * 2 <= max_w {
+                w *= 2;
+            }
+            w
+        };
+        let req = self.window.unwrap_or(default).min(self.size.max(1));
+        let mut w = req.max(1);
+        while self.size % w != 0 {
+            w -= 1;
+        }
+        w
+    }
+}
+
+/// A dataflow connection `from = "kernel.port"` → `to = "kernel.port"`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Connection {
+    pub from_kernel: String,
+    pub from_port: String,
+    pub to_kernel: String,
+    pub to_port: String,
+}
+
+impl Connection {
+    fn parse_endpoint(s: &str, which: &str) -> Result<(String, String)> {
+        match s.split_once('.') {
+            Some((k, p)) if !k.is_empty() && !p.is_empty() => {
+                Ok((k.to_string(), p.to_string()))
+            }
+            _ => Err(Error::Spec(format!(
+                "connection {which} endpoint {s:?} must be \"kernel.port\""
+            ))),
+        }
+    }
+}
+
+/// The full parsed specification.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Spec {
+    pub platform: String,
+    pub data_source: DataSource,
+    pub routines: Vec<RoutineSpec>,
+    pub connections: Vec<Connection>,
+}
+
+impl Spec {
+    /// Parse and validate a JSON spec document.
+    pub fn from_json_str(s: &str) -> Result<Spec> {
+        let json = Json::parse(s)?;
+        let spec = Self::from_json(&json)?;
+        validate(&spec)?;
+        Ok(spec)
+    }
+
+    /// Load from a file.
+    pub fn from_file(path: &std::path::Path) -> Result<Spec> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json_str(&text)
+    }
+
+    /// Structural decode (no cross-field validation — see [`validate`]).
+    pub fn from_json(json: &Json) -> Result<Spec> {
+        let obj = json
+            .as_obj()
+            .ok_or_else(|| Error::Spec("spec root must be an object".into()))?;
+
+        // reject unknown top-level keys early: typos in non-functional
+        // parameters silently reverting to defaults is exactly the failure
+        // mode a generator-facing spec format must not have.
+        for key in obj.keys() {
+            if !["platform", "data_source", "routines", "connections"].contains(&key.as_str()) {
+                return Err(Error::Spec(format!("unknown top-level key {key:?}")));
+            }
+        }
+
+        let platform = json
+            .get("platform")
+            .map(|v| {
+                v.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| Error::Spec("platform must be a string".into()))
+            })
+            .transpose()?
+            .unwrap_or_else(|| "vck5000".to_string());
+
+        let data_source = match json.get("data_source") {
+            None => DataSource::default(),
+            Some(v) => DataSource::parse(
+                v.as_str()
+                    .ok_or_else(|| Error::Spec("data_source must be a string".into()))?,
+            )?,
+        };
+
+        let routines_json = json
+            .get("routines")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Spec("spec needs a \"routines\" array".into()))?;
+        let mut routines = Vec::with_capacity(routines_json.len());
+        for (i, r) in routines_json.iter().enumerate() {
+            routines.push(Self::routine_from_json(r, i)?);
+        }
+
+        let mut connections = Vec::new();
+        if let Some(conns) = json.get("connections") {
+            let arr = conns
+                .as_arr()
+                .ok_or_else(|| Error::Spec("connections must be an array".into()))?;
+            for c in arr {
+                let from = c
+                    .get("from")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| Error::Spec("connection needs \"from\"".into()))?;
+                let to = c
+                    .get("to")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| Error::Spec("connection needs \"to\"".into()))?;
+                let (fk, fp) = Connection::parse_endpoint(from, "from")?;
+                let (tk, tp) = Connection::parse_endpoint(to, "to")?;
+                connections.push(Connection {
+                    from_kernel: fk,
+                    from_port: fp,
+                    to_kernel: tk,
+                    to_port: tp,
+                });
+            }
+        }
+
+        Ok(Spec { platform, data_source, routines, connections })
+    }
+
+    fn routine_from_json(r: &Json, index: usize) -> Result<RoutineSpec> {
+        let ctx = || format!("routines[{index}]");
+        let obj = r
+            .as_obj()
+            .ok_or_else(|| Error::Spec(format!("{} must be an object", ctx())))?;
+        for key in obj.keys() {
+            if ![
+                "routine", "name", "size", "window_size", "vector_width",
+                "placement", "burst", "alpha", "beta", "split",
+            ]
+            .contains(&key.as_str())
+            {
+                return Err(Error::Spec(format!("{}: unknown key {key:?}", ctx())));
+            }
+        }
+        let kind_name = r
+            .get("routine")
+            .and_then(Json::as_str)
+            .ok_or_else(|| Error::Spec(format!("{} needs \"routine\"", ctx())))?;
+        let kind = RoutineKind::from_name(kind_name).ok_or_else(|| {
+            Error::Spec(format!(
+                "{}: unknown routine {kind_name:?} (known: {})",
+                ctx(),
+                RoutineKind::ALL.map(|k| k.name()).join(", ")
+            ))
+        })?;
+        let name = r
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| Error::Spec(format!("{} needs a unique \"name\"", ctx())))?
+            .to_string();
+        let size = r
+            .get("size")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| Error::Spec(format!("{} needs integer \"size\"", ctx())))?;
+        let window = match r.get("window_size") {
+            None => None,
+            Some(v) => Some(v.as_usize().ok_or_else(|| {
+                Error::Spec(format!("{}: window_size must be a positive integer", ctx()))
+            })?),
+        };
+        let vector_bits = match r.get("vector_width") {
+            None => 512,
+            Some(v) => v.as_usize().ok_or_else(|| {
+                Error::Spec(format!("{}: vector_width must be an integer", ctx()))
+            })?,
+        };
+        let placement = match r.get("placement") {
+            None => None,
+            Some(p) => {
+                let col = p.get("col").and_then(Json::as_usize);
+                let row = p.get("row").and_then(Json::as_usize);
+                match (col, row) {
+                    (Some(col), Some(row)) => Some(Placement { col, row }),
+                    _ => {
+                        return Err(Error::Spec(format!(
+                            "{}: placement needs integer \"col\" and \"row\"",
+                            ctx()
+                        )))
+                    }
+                }
+            }
+        };
+        let burst = match r.get("burst") {
+            None => false,
+            Some(v) => v
+                .as_bool()
+                .ok_or_else(|| Error::Spec(format!("{}: burst must be a bool", ctx())))?,
+        };
+        let alpha = r.get("alpha").and_then(Json::as_f64).map(|v| v as f32);
+        let beta = r.get("beta").and_then(Json::as_f64).map(|v| v as f32);
+        let split = match r.get("split") {
+            None => 1,
+            Some(v) => v.as_usize().filter(|&k| k >= 1).ok_or_else(|| {
+                Error::Spec(format!("{}: split must be a positive integer", ctx()))
+            })?,
+        };
+        Ok(RoutineSpec {
+            kind,
+            name,
+            size,
+            window,
+            vector_bits,
+            placement,
+            burst,
+            alpha,
+            beta,
+            split,
+        })
+    }
+
+    /// Find a routine by kernel name.
+    pub fn routine(&self, name: &str) -> Option<&RoutineSpec> {
+        self.routines.iter().find(|r| r.name == name)
+    }
+
+    /// Render back to canonical JSON (round-trips through `from_json`).
+    pub fn to_json(&self) -> Json {
+        use crate::util::json::obj;
+        let routines: Vec<Json> = self
+            .routines
+            .iter()
+            .map(|r| {
+                let mut fields: Vec<(&str, Json)> = vec![
+                    ("routine", r.kind.name().into()),
+                    ("name", r.name.clone().into()),
+                    ("size", r.size.into()),
+                ];
+                if let Some(w) = r.window {
+                    fields.push(("window_size", w.into()));
+                }
+                if r.vector_bits != 512 {
+                    fields.push(("vector_width", r.vector_bits.into()));
+                }
+                if let Some(p) = r.placement {
+                    fields.push((
+                        "placement",
+                        obj(vec![("col", p.col.into()), ("row", p.row.into())]),
+                    ));
+                }
+                if r.burst {
+                    fields.push(("burst", true.into()));
+                }
+                if let Some(a) = r.alpha {
+                    fields.push(("alpha", (a as f64).into()));
+                }
+                if let Some(b) = r.beta {
+                    fields.push(("beta", (b as f64).into()));
+                }
+                if r.split > 1 {
+                    fields.push(("split", r.split.into()));
+                }
+                obj(fields)
+            })
+            .collect();
+        let connections: Vec<Json> = self
+            .connections
+            .iter()
+            .map(|c| {
+                obj(vec![
+                    ("from", format!("{}.{}", c.from_kernel, c.from_port).into()),
+                    ("to", format!("{}.{}", c.to_kernel, c.to_port).into()),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("platform", self.platform.clone().into()),
+            ("data_source", self.data_source.name().into()),
+            ("routines", Json::Arr(routines)),
+            ("connections", Json::Arr(connections)),
+        ])
+    }
+}
+
+/// Convenience constructors used throughout tests/benches/examples.
+impl Spec {
+    /// A single-routine spec with defaults (the Fig. 3 single-routine runs).
+    pub fn single(kind: RoutineKind, name: &str, size: usize, source: DataSource) -> Spec {
+        Spec {
+            platform: "vck5000".into(),
+            data_source: source,
+            routines: vec![RoutineSpec {
+                kind,
+                name: name.into(),
+                size,
+                window: None,
+                vector_bits: 512,
+                placement: None,
+                burst: false,
+                alpha: None,
+                beta: None,
+                split: 1,
+            }],
+            connections: Vec::new(),
+        }
+    }
+
+    /// The paper's Fig. 1 axpydot composition: axpy (z = w − αv) feeding a
+    /// dot product on-chip.
+    pub fn axpydot_dataflow(size: usize, alpha: f32) -> Spec {
+        Spec {
+            platform: "vck5000".into(),
+            data_source: DataSource::Pl,
+            routines: vec![
+                RoutineSpec {
+                    kind: RoutineKind::Axpy,
+                    name: "axpy_stage".into(),
+                    size,
+                    window: None,
+                    vector_bits: 512,
+                    placement: None,
+                    burst: false,
+                    alpha: Some(-alpha),
+                    beta: None,
+                    split: 1,
+                },
+                RoutineSpec {
+                    kind: RoutineKind::Dot,
+                    name: "dot_stage".into(),
+                    size,
+                    window: None,
+                    vector_bits: 512,
+                    placement: None,
+                    burst: false,
+                    alpha: None,
+                    beta: None,
+                    split: 1,
+                },
+            ],
+            connections: vec![Connection {
+                from_kernel: "axpy_stage".into(),
+                from_port: "z".into(),
+                to_kernel: "dot_stage".into(),
+                to_port: "x".into(),
+            }],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOOD: &str = r#"{
+        "platform": "vck5000",
+        "data_source": "pl",
+        "routines": [
+            {"routine": "axpy", "name": "vadd", "size": 65536, "alpha": -2.0},
+            {"routine": "dot", "name": "vdot", "size": 65536,
+             "window_size": 2048, "vector_width": 256,
+             "placement": {"col": 10, "row": 2}}
+        ],
+        "connections": [
+            {"from": "vadd.z", "to": "vdot.x"}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_full_spec() {
+        let s = Spec::from_json_str(GOOD).unwrap();
+        assert_eq!(s.platform, "vck5000");
+        assert_eq!(s.data_source, DataSource::Pl);
+        assert_eq!(s.routines.len(), 2);
+        assert_eq!(s.routines[0].kind, RoutineKind::Axpy);
+        assert_eq!(s.routines[0].alpha, Some(-2.0));
+        assert_eq!(s.routines[1].window, Some(2048));
+        assert_eq!(s.routines[1].vector_bits, 256);
+        assert_eq!(s.routines[1].placement, Some(Placement { col: 10, row: 2 }));
+        assert_eq!(s.connections.len(), 1);
+        assert_eq!(s.connections[0].from_kernel, "vadd");
+        assert_eq!(s.connections[0].to_port, "x");
+    }
+
+    #[test]
+    fn defaults_applied() {
+        let s = Spec::from_json_str(
+            r#"{"routines": [{"routine": "axpy", "name": "a", "size": 1024}]}"#,
+        )
+        .unwrap();
+        assert_eq!(s.platform, "vck5000");
+        assert_eq!(s.data_source, DataSource::Pl);
+        assert_eq!(s.routines[0].vector_bits, 512);
+        assert_eq!(s.routines[0].effective_window(), 1024); // min(4096, n)
+        assert!(!s.routines[0].burst);
+    }
+
+    #[test]
+    fn effective_window_divides_size() {
+        let mut r = Spec::single(RoutineKind::Axpy, "a", 1000, DataSource::Pl).routines[0].clone();
+        r.window = Some(300);
+        assert_eq!(1000 % r.effective_window(), 0);
+        assert!(r.effective_window() <= 300);
+    }
+
+    #[test]
+    fn rejects_unknown_keys() {
+        let bad = r#"{"routines": [], "typo_key": 1}"#;
+        assert!(matches!(Spec::from_json_str(bad), Err(Error::Spec(_))));
+        let bad2 = r#"{"routines": [{"routine": "axpy", "name": "a", "size": 8, "windw": 4}]}"#;
+        assert!(Spec::from_json_str(bad2).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_routine() {
+        let bad = r#"{"routines": [{"routine": "qr", "name": "a", "size": 8}]}"#;
+        let err = Spec::from_json_str(bad).unwrap_err().to_string();
+        assert!(err.contains("unknown routine"), "{err}");
+    }
+
+    #[test]
+    fn rejects_malformed_endpoint() {
+        let bad = r#"{"routines": [{"routine": "axpy", "name": "a", "size": 8}],
+                      "connections": [{"from": "a", "to": "b.x"}]}"#;
+        assert!(Spec::from_json_str(bad).is_err());
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let s = Spec::from_json_str(GOOD).unwrap();
+        let rendered = s.to_json().to_pretty();
+        let reparsed = Spec::from_json_str(&rendered).unwrap();
+        assert_eq!(s, reparsed);
+    }
+
+    #[test]
+    fn axpydot_helper_is_valid() {
+        let s = Spec::axpydot_dataflow(4096, 2.0);
+        validate(&s).unwrap();
+        assert_eq!(s.routines[0].alpha, Some(-2.0));
+    }
+}

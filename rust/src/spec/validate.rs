@@ -1,0 +1,443 @@
+//! Cross-field validation of a parsed [`Spec`].
+//!
+//! Catches, at spec time, every configuration the generator or device
+//! would reject later: duplicate kernel names, dangling or type-mismatched
+//! connections, doubly-driven inputs, cyclic dataflow, placements outside
+//! the 8×50 grid or colliding, windows that exceed tile-local memory, and
+//! unsupported vector widths.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::Spec;
+use crate::arch::{ArchConfig, F32_BYTES};
+
+use crate::{Error, Result};
+
+/// Vector widths the AIE1 datapath supports for 32-bit lanes.
+const SUPPORTED_VECTOR_BITS: [usize; 4] = [64, 128, 256, 512];
+
+pub fn validate(spec: &Spec) -> Result<()> {
+    let arch = arch_for(&spec.platform)?;
+    arch.validate()?;
+
+    if spec.routines.is_empty() {
+        return Err(Error::Spec("spec contains no routines".into()));
+    }
+
+    // --- per-routine checks -------------------------------------------------
+    let mut names = BTreeSet::new();
+    let mut placements: BTreeMap<(usize, usize), &str> = BTreeMap::new();
+    for r in &spec.routines {
+        if r.name.is_empty()
+            || !r.name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+            || r.name.chars().next().is_some_and(|c| c.is_ascii_digit())
+        {
+            return Err(Error::Spec(format!(
+                "kernel name {:?} must be a C identifier (codegen emits it verbatim)",
+                r.name
+            )));
+        }
+        if !names.insert(r.name.as_str()) {
+            return Err(Error::Spec(format!("duplicate kernel name {:?}", r.name)));
+        }
+        if r.size == 0 {
+            return Err(Error::Spec(format!("{}: size must be > 0", r.name)));
+        }
+        if let Some(w) = r.window {
+            if w == 0 {
+                return Err(Error::Spec(format!("{}: window_size must be > 0", r.name)));
+            }
+        }
+        if !SUPPORTED_VECTOR_BITS.contains(&r.vector_bits) {
+            return Err(Error::Spec(format!(
+                "{}: vector_width {} unsupported (one of {SUPPORTED_VECTOR_BITS:?})",
+                r.name, r.vector_bits
+            )));
+        }
+        // window memory budget: input windows + output window, double
+        // buffered, must fit the 32 KB tile-local memory.
+        let w = r.effective_window();
+        let per_elem = if r.kind.level() >= 2 { 16 } else { 1 };
+        let bytes = 2 * r.vector_ports() * w * per_elem * F32_BYTES; // ping-pong
+        if bytes > arch.local_mem_bytes {
+            return Err(Error::Spec(format!(
+                "{}: windows need {} B double-buffered, exceeding {} B tile memory — reduce window_size",
+                r.name, bytes, arch.local_mem_bytes
+            )));
+        }
+        if r.split > 1 {
+            if r.kind.level() != 1 || r.kind.is_composite() {
+                return Err(Error::Spec(format!(
+                    "{}: split is only supported for level-1 routines",
+                    r.name
+                )));
+            }
+            if matches!(r.kind, crate::blas::RoutineKind::Nrm2 | crate::blas::RoutineKind::Iamax | crate::blas::RoutineKind::Rot) {
+                return Err(Error::Spec(format!(
+                    "{}: split unsupported for {} (non-additive combine)",
+                    r.name,
+                    r.kind
+                )));
+            }
+            if r.size % r.split != 0 {
+                return Err(Error::Spec(format!(
+                    "{}: split {} does not divide size {}",
+                    r.name, r.split, r.size
+                )));
+            }
+            if r.split > 64 {
+                return Err(Error::Spec(format!("{}: split {} > 64", r.name, r.split)));
+            }
+            if spec.connections.iter().any(|c| c.from_kernel == r.name || c.to_kernel == r.name) {
+                return Err(Error::Spec(format!(
+                    "{}: split routines cannot participate in dataflow connections",
+                    r.name
+                )));
+            }
+        }
+        if let Some(p) = r.placement {
+            if p.col >= arch.cols || p.row >= arch.rows {
+                return Err(Error::Placement(format!(
+                    "{}: placement ({},{}) outside the {}×{} grid",
+                    r.name, p.col, p.row, arch.cols, arch.rows
+                )));
+            }
+            if let Some(prev) = placements.insert((p.col, p.row), &r.name) {
+                return Err(Error::Placement(format!(
+                    "kernels {:?} and {:?} both pinned to ({},{})",
+                    prev, r.name, p.col, p.row
+                )));
+            }
+        }
+    }
+
+    // --- connection checks --------------------------------------------------
+    let mut driven: BTreeSet<(String, String)> = BTreeSet::new();
+    let mut out_used: BTreeSet<(String, String)> = BTreeSet::new();
+    for c in &spec.connections {
+        let from = spec.routine(&c.from_kernel).ok_or_else(|| {
+            Error::Spec(format!("connection from unknown kernel {:?}", c.from_kernel))
+        })?;
+        let to = spec.routine(&c.to_kernel).ok_or_else(|| {
+            Error::Spec(format!("connection to unknown kernel {:?}", c.to_kernel))
+        })?;
+        if c.from_kernel == c.to_kernel {
+            return Err(Error::Spec(format!("{:?} connects to itself", c.from_kernel)));
+        }
+        let out_port = from
+            .kind
+            .outputs()
+            .iter()
+            .find(|p| p.name == c.from_port)
+            .ok_or_else(|| {
+                Error::Spec(format!(
+                    "{} has no output port {:?} (has: {})",
+                    c.from_kernel,
+                    c.from_port,
+                    port_names(from.kind.outputs())
+                ))
+            })?;
+        let in_port = to
+            .kind
+            .inputs()
+            .iter()
+            .find(|p| p.name == c.to_port)
+            .ok_or_else(|| {
+                Error::Spec(format!(
+                    "{} has no input port {:?} (has: {})",
+                    c.to_kernel,
+                    c.to_port,
+                    port_names(to.kind.inputs())
+                ))
+            })?;
+        if out_port.ty != in_port.ty {
+            return Err(Error::Spec(format!(
+                "type mismatch on {}.{} ({:?}) -> {}.{} ({:?})",
+                c.from_kernel, c.from_port, out_port.ty, c.to_kernel, c.to_port, in_port.ty
+            )));
+        }
+        if from.size != to.size {
+            return Err(Error::Spec(format!(
+                "size mismatch: {} is n={} but {} is n={}",
+                c.from_kernel, from.size, c.to_kernel, to.size
+            )));
+        }
+        if !driven.insert((c.to_kernel.clone(), c.to_port.clone())) {
+            return Err(Error::Spec(format!(
+                "input {}.{} driven by two connections",
+                c.to_kernel, c.to_port
+            )));
+        }
+        // An output window CAN legally fan out on the AIE via stream
+        // broadcast, but AIEBLAS restricts each output to one consumer
+        // (decoupled window semantics); enforce that too.
+        if !out_used.insert((c.from_kernel.clone(), c.from_port.clone())) {
+            return Err(Error::Spec(format!(
+                "output {}.{} consumed by two connections (unsupported; insert a copy kernel)",
+                c.from_kernel, c.from_port
+            )));
+        }
+    }
+
+    check_acyclic(spec)?;
+    Ok(())
+}
+
+/// Resolve the named platform to an architecture description.
+pub fn arch_for(platform: &str) -> Result<ArchConfig> {
+    match platform {
+        "vck5000" | "" => Ok(ArchConfig::vck5000()),
+        "ryzen_ai" => Ok(ArchConfig::ryzen_ai()),
+        other => Err(Error::Spec(format!(
+            "unknown platform {other:?} (supported: vck5000, ryzen_ai)"
+        ))),
+    }
+}
+
+fn port_names(ports: &[crate::blas::Port]) -> String {
+    ports.iter().map(|p| p.name).collect::<Vec<_>>().join(", ")
+}
+
+/// The dataflow graph must be a DAG: windows decouple producers and
+/// consumers, but a cycle would deadlock the ping-pong handshake.
+fn check_acyclic(spec: &Spec) -> Result<()> {
+    let index: BTreeMap<&str, usize> = spec
+        .routines
+        .iter()
+        .enumerate()
+        .map(|(i, r)| (r.name.as_str(), i))
+        .collect();
+    let n = spec.routines.len();
+    let mut adj: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for c in &spec.connections {
+        adj[index[c.from_kernel.as_str()]].push(index[c.to_kernel.as_str()]);
+    }
+    // Kahn's algorithm.
+    let mut indeg = vec![0usize; n];
+    for edges in &adj {
+        for &t in edges {
+            indeg[t] += 1;
+        }
+    }
+    let mut queue: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+    let mut seen = 0;
+    while let Some(u) = queue.pop() {
+        seen += 1;
+        for &t in &adj[u] {
+            indeg[t] -= 1;
+            if indeg[t] == 0 {
+                queue.push(t);
+            }
+        }
+    }
+    if seen != n {
+        let cyclic: Vec<&str> = (0..n)
+            .filter(|&i| indeg[i] > 0)
+            .map(|i| spec.routines[i].name.as_str())
+            .collect();
+        return Err(Error::Spec(format!(
+            "dataflow connections form a cycle through: {}",
+            cyclic.join(" -> ")
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::RoutineKind;
+    use crate::spec::{Connection, DataSource, Placement, RoutineSpec};
+
+    fn routine(name: &str, kind: RoutineKind, size: usize) -> RoutineSpec {
+        RoutineSpec {
+            kind,
+            name: name.into(),
+            size,
+            window: None,
+            vector_bits: 512,
+            placement: None,
+            burst: false,
+            alpha: None,
+            beta: None,
+            split: 1,
+        }
+    }
+
+    fn two_connected(size_a: usize, size_b: usize) -> Spec {
+        Spec {
+            platform: "vck5000".into(),
+            data_source: DataSource::Pl,
+            routines: vec![
+                routine("a", RoutineKind::Axpy, size_a),
+                routine("b", RoutineKind::Dot, size_b),
+            ],
+            connections: vec![Connection {
+                from_kernel: "a".into(),
+                from_port: "z".into(),
+                to_kernel: "b".into(),
+                to_port: "x".into(),
+            }],
+        }
+    }
+
+    #[test]
+    fn valid_composition_passes() {
+        validate(&two_connected(4096, 4096)).unwrap();
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let mut s = two_connected(64, 64);
+        s.routines[1].name = "a".into();
+        s.connections.clear();
+        assert!(validate(&s).is_err());
+    }
+
+    #[test]
+    fn non_identifier_name_rejected() {
+        let mut s = Spec::single(RoutineKind::Axpy, "ok", 64, DataSource::Pl);
+        s.routines[0].name = "has-dash".into();
+        assert!(validate(&s).is_err());
+        s.routines[0].name = "1starts_with_digit".into();
+        assert!(validate(&s).is_err());
+    }
+
+    #[test]
+    fn size_mismatch_on_connection_rejected() {
+        let err = validate(&two_connected(4096, 8192)).unwrap_err().to_string();
+        assert!(err.contains("size mismatch"), "{err}");
+    }
+
+    #[test]
+    fn type_mismatch_rejected() {
+        // axpy.z (vector) -> gemv.alpha (scalar)
+        let mut s = Spec {
+            platform: "vck5000".into(),
+            data_source: DataSource::Pl,
+            routines: vec![
+                routine("a", RoutineKind::Axpy, 64),
+                routine("g", RoutineKind::Gemv, 64),
+            ],
+            connections: vec![Connection {
+                from_kernel: "a".into(),
+                from_port: "z".into(),
+                to_kernel: "g".into(),
+                to_port: "alpha".into(),
+            }],
+        };
+        let err = validate(&s).unwrap_err().to_string();
+        assert!(err.contains("type mismatch"), "{err}");
+        // and unknown port
+        s.connections[0].to_port = "nonexistent".into();
+        assert!(validate(&s).unwrap_err().to_string().contains("no input port"));
+    }
+
+    #[test]
+    fn doubly_driven_input_rejected() {
+        let mut s = Spec {
+            platform: "vck5000".into(),
+            data_source: DataSource::Pl,
+            routines: vec![
+                routine("a", RoutineKind::Axpy, 64),
+                routine("b", RoutineKind::Scal, 64),
+                routine("c", RoutineKind::Dot, 64),
+            ],
+            connections: vec![
+                Connection {
+                    from_kernel: "a".into(),
+                    from_port: "z".into(),
+                    to_kernel: "c".into(),
+                    to_port: "x".into(),
+                },
+                Connection {
+                    from_kernel: "b".into(),
+                    from_port: "z".into(),
+                    to_kernel: "c".into(),
+                    to_port: "x".into(),
+                },
+            ],
+        };
+        let err = validate(&s).unwrap_err().to_string();
+        assert!(err.contains("driven by two"), "{err}");
+        // fan-out of one output also rejected
+        s.connections[1] = Connection {
+            from_kernel: "a".into(),
+            from_port: "z".into(),
+            to_kernel: "c".into(),
+            to_port: "y".into(),
+        };
+        let err = validate(&s).unwrap_err().to_string();
+        assert!(err.contains("consumed by two"), "{err}");
+    }
+
+    #[test]
+    fn cycle_rejected() {
+        // scal -> copy -> scal: a 2-cycle of vector kernels.
+        let s = Spec {
+            platform: "vck5000".into(),
+            data_source: DataSource::Pl,
+            routines: vec![
+                routine("s1", RoutineKind::Scal, 64),
+                routine("c1", RoutineKind::Copy, 64),
+            ],
+            connections: vec![
+                Connection {
+                    from_kernel: "s1".into(),
+                    from_port: "z".into(),
+                    to_kernel: "c1".into(),
+                    to_port: "x".into(),
+                },
+                Connection {
+                    from_kernel: "c1".into(),
+                    from_port: "z".into(),
+                    to_kernel: "s1".into(),
+                    to_port: "x".into(),
+                },
+            ],
+        };
+        let err = validate(&s).unwrap_err().to_string();
+        assert!(err.contains("cycle"), "{err}");
+    }
+
+    #[test]
+    fn placement_bounds_and_collisions() {
+        let mut s = Spec::single(RoutineKind::Axpy, "a", 64, DataSource::Pl);
+        s.routines[0].placement = Some(Placement { col: 50, row: 0 }); // cols are 0..50
+        assert!(validate(&s).is_err());
+
+        let mut s2 = two_connected(64, 64);
+        s2.routines[0].placement = Some(Placement { col: 3, row: 3 });
+        s2.routines[1].placement = Some(Placement { col: 3, row: 3 });
+        let err = validate(&s2).unwrap_err().to_string();
+        assert!(err.contains("both pinned"), "{err}");
+    }
+
+    #[test]
+    fn window_exceeding_local_memory_rejected() {
+        let mut s = Spec::single(RoutineKind::Axpy, "a", 1 << 20, DataSource::Pl);
+        s.routines[0].window = Some(1 << 16); // 3 vec ports * 2 (pingpong) * 64Ki * 4B >> 32KB
+        let err = validate(&s).unwrap_err().to_string();
+        assert!(err.contains("exceeding"), "{err}");
+    }
+
+    #[test]
+    fn unsupported_vector_width_rejected() {
+        let mut s = Spec::single(RoutineKind::Axpy, "a", 64, DataSource::Pl);
+        s.routines[0].vector_bits = 384;
+        assert!(validate(&s).is_err());
+    }
+
+    #[test]
+    fn unknown_platform_rejected() {
+        let mut s = Spec::single(RoutineKind::Axpy, "a", 64, DataSource::Pl);
+        s.platform = "cerebras".into();
+        assert!(validate(&s).is_err());
+    }
+
+    #[test]
+    fn empty_spec_rejected() {
+        let s = Spec { routines: vec![], ..Default::default() };
+        assert!(validate(&s).is_err());
+    }
+}

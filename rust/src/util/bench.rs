@@ -1,0 +1,157 @@
+//! Hand-rolled benchmark harness (no `criterion` in the offline registry).
+//!
+//! Every target under `rust/benches/` is a `harness = false` binary built
+//! on this module: warmup, N timed samples, median/mean/min/max/stddev, and
+//! table/CSV reporting. Deterministic sample counts keep `cargo bench`
+//! runtimes bounded; set `AIEBLAS_BENCH_SAMPLES` / `AIEBLAS_BENCH_WARMUP`
+//! to override.
+
+use std::time::Instant;
+
+use super::table::{fmt_time, Table};
+
+/// Summary statistics over the timed samples (seconds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Stats {
+    pub samples: usize,
+    pub median: f64,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub stddev: f64,
+}
+
+impl Stats {
+    pub fn from_samples(mut xs: Vec<f64>) -> Stats {
+        assert!(!xs.is_empty());
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        let median = if n % 2 == 1 {
+            xs[n / 2]
+        } else {
+            0.5 * (xs[n / 2 - 1] + xs[n / 2])
+        };
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Stats { samples: n, median, mean, min: xs[0], max: xs[n - 1], stddev: var.sqrt() }
+    }
+}
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+/// Time `f` (which returns an opaque value to defeat dead-code elimination).
+pub fn run<T>(warmup: usize, samples: usize, mut f: impl FnMut() -> T) -> Stats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut xs = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        xs.push(t0.elapsed().as_secs_f64());
+    }
+    Stats::from_samples(xs)
+}
+
+/// A named benchmark group that accumulates rows and prints a report.
+pub struct Bench {
+    name: &'static str,
+    warmup: usize,
+    samples: usize,
+    table: Table,
+    csv_extra: Vec<(String, Stats)>,
+}
+
+impl Bench {
+    pub fn new(name: &'static str) -> Self {
+        Bench {
+            name,
+            warmup: env_usize("AIEBLAS_BENCH_WARMUP", 3),
+            samples: env_usize("AIEBLAS_BENCH_SAMPLES", 10),
+            table: Table::new(vec!["benchmark", "median", "mean", "min", "max", "stddev"]),
+            csv_extra: Vec::new(),
+        }
+    }
+
+    /// Benchmark a closure under `label`; returns the stats for assertions.
+    pub fn bench<T>(&mut self, label: &str, f: impl FnMut() -> T) -> Stats {
+        let stats = run(self.warmup, self.samples, f);
+        self.record(label, stats);
+        stats
+    }
+
+    /// Record an externally measured stat (e.g. simulated device time).
+    pub fn record(&mut self, label: &str, stats: Stats) {
+        self.table.row(vec![
+            label.to_string(),
+            fmt_time(stats.median),
+            fmt_time(stats.mean),
+            fmt_time(stats.min),
+            fmt_time(stats.max),
+            fmt_time(stats.stddev),
+        ]);
+        self.csv_extra.push((label.to_string(), stats));
+    }
+
+    /// Print the report; optionally write CSV next to the binary when
+    /// `AIEBLAS_BENCH_CSV_DIR` is set.
+    pub fn finish(self) {
+        println!("\n== bench: {} ({} samples, {} warmup) ==", self.name, self.samples, self.warmup);
+        print!("{}", self.table.render());
+        if let Ok(dir) = std::env::var("AIEBLAS_BENCH_CSV_DIR") {
+            let mut csv = String::from("benchmark,median_s,mean_s,min_s,max_s,stddev_s\n");
+            for (label, s) in &self.csv_extra {
+                csv.push_str(&format!(
+                    "{label},{},{},{},{},{}\n",
+                    s.median, s.mean, s.min, s.max, s.stddev
+                ));
+            }
+            let path = format!("{dir}/{}.csv", self.name);
+            if let Err(e) = std::fs::create_dir_all(&dir).and_then(|_| std::fs::write(&path, csv)) {
+                eprintln!("warning: could not write {path}: {e}");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_median_odd_even() {
+        let s = Stats::from_samples(vec![3.0, 1.0, 2.0]);
+        assert_eq!(s.median, 2.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        let s = Stats::from_samples(vec![4.0, 1.0, 2.0, 3.0]);
+        assert_eq!(s.median, 2.5);
+    }
+
+    #[test]
+    fn stats_constant_series() {
+        let s = Stats::from_samples(vec![2.0; 8]);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.stddev, 0.0);
+    }
+
+    #[test]
+    fn run_executes_workload() {
+        let mut count = 0u64;
+        let stats = run(2, 5, || {
+            count += 1;
+            count
+        });
+        assert_eq!(count, 7); // 2 warmup + 5 samples
+        assert_eq!(stats.samples, 5);
+        assert!(stats.min >= 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn stats_empty_panics() {
+        Stats::from_samples(vec![]);
+    }
+}

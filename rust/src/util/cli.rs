@@ -1,0 +1,346 @@
+//! Declarative command-line parser (no `clap` in the offline registry).
+//!
+//! Supports subcommands, `--flag`, `--opt value` / `--opt=value`,
+//! positional arguments, defaults, required options, and generated
+//! `--help` text — the subset `aieblas`' CLI (rust/src/main.rs) needs.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Argument specification for one option.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub required: bool,
+    pub default: Option<&'static str>,
+}
+
+/// A (sub)command: options + positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    opts: Vec<OptSpec>,
+    positionals: Vec<(&'static str, &'static str, bool)>, // (name, help, required)
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, opts: Vec::new(), positionals: Vec::new() }
+    }
+
+    /// `--name <value>` option.
+    pub fn opt(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, takes_value: true, required: false, default: None });
+        self
+    }
+
+    /// `--name <value>` with a default.
+    pub fn opt_default(
+        mut self,
+        name: &'static str,
+        default: &'static str,
+        help: &'static str,
+    ) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            takes_value: true,
+            required: false,
+            default: Some(default),
+        });
+        self
+    }
+
+    /// Required `--name <value>`.
+    pub fn opt_required(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, takes_value: true, required: true, default: None });
+        self
+    }
+
+    /// Boolean `--name` flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, takes_value: false, required: false, default: None });
+        self
+    }
+
+    /// Positional argument.
+    pub fn positional(mut self, name: &'static str, help: &'static str, required: bool) -> Self {
+        self.positionals.push((name, help, required));
+        self
+    }
+
+    fn usage(&self, prog: &str) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {prog} {}", self.name, self.about, self.name);
+        for (p, _, req) in &self.positionals {
+            if *req {
+                s.push_str(&format!(" <{p}>"));
+            } else {
+                s.push_str(&format!(" [{p}]"));
+            }
+        }
+        if !self.opts.is_empty() {
+            s.push_str(" [OPTIONS]\n\nOPTIONS:\n");
+            for o in &self.opts {
+                let mut left = format!("  --{}", o.name);
+                if o.takes_value {
+                    left.push_str(" <v>");
+                }
+                let mut help = o.help.to_string();
+                if let Some(d) = o.default {
+                    help.push_str(&format!(" [default: {d}]"));
+                }
+                if o.required {
+                    help.push_str(" (required)");
+                }
+                s.push_str(&format!("{left:28}{help}\n"));
+            }
+        } else {
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// Parsed arguments for the matched subcommand.
+#[derive(Debug, Clone, Default)]
+pub struct Matches {
+    pub command: String,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positionals: Vec<String>,
+}
+
+impl Matches {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v.parse::<T>().map(Some).map_err(|_| {
+                CliError(format!("invalid value {v:?} for --{name}"))
+            }),
+        }
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, CliError> {
+        self.get_parsed::<usize>(name)?
+            .ok_or_else(|| CliError(format!("missing --{name}")))
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, CliError> {
+        self.get_parsed::<f64>(name)?
+            .ok_or_else(|| CliError(format!("missing --{name}")))
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// Top-level application: a set of subcommands.
+pub struct App {
+    pub name: &'static str,
+    pub about: &'static str,
+    commands: Vec<Command>,
+}
+
+/// Result of parsing: either matches, or help text to print (not an error).
+pub enum Parsed {
+    Matches(Matches),
+    Help(String),
+}
+
+impl App {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        App { name, about, commands: Vec::new() }
+    }
+
+    pub fn command(mut self, c: Command) -> Self {
+        self.commands.push(c);
+        self
+    }
+
+    pub fn top_usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} <COMMAND>\n\nCOMMANDS:\n", self.name, self.about, self.name);
+        for c in &self.commands {
+            s.push_str(&format!("  {:16}{}\n", c.name, c.about));
+        }
+        s.push_str("\nRun with <COMMAND> --help for command options.\n");
+        s
+    }
+
+    /// Parse argv (without the program name).
+    pub fn parse(&self, args: &[String]) -> Result<Parsed, CliError> {
+        let Some(first) = args.first() else {
+            return Ok(Parsed::Help(self.top_usage()));
+        };
+        if first == "--help" || first == "-h" || first == "help" {
+            return Ok(Parsed::Help(self.top_usage()));
+        }
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == first.as_str())
+            .ok_or_else(|| CliError(format!("unknown command {first:?}; try --help")))?;
+
+        let mut m = Matches { command: cmd.name.to_string(), ..Default::default() };
+        // seed defaults
+        for o in &cmd.opts {
+            if let Some(d) = o.default {
+                m.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 1;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Ok(Parsed::Help(cmd.usage(self.name)));
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = cmd
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| CliError(format!("unknown option --{name} for {}", cmd.name)))?;
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError(format!("--{name} needs a value")))?
+                        }
+                    };
+                    m.values.insert(name.to_string(), v);
+                } else {
+                    if inline.is_some() {
+                        return Err(CliError(format!("--{name} does not take a value")));
+                    }
+                    m.flags.push(name.to_string());
+                }
+            } else {
+                m.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        // validate
+        for o in &cmd.opts {
+            if o.required && !m.values.contains_key(o.name) {
+                return Err(CliError(format!("missing required option --{}", o.name)));
+            }
+        }
+        let required_pos = cmd.positionals.iter().filter(|(_, _, r)| *r).count();
+        if m.positionals.len() < required_pos {
+            return Err(CliError(format!(
+                "{} requires {} positional argument(s)",
+                cmd.name, required_pos
+            )));
+        }
+        Ok(Parsed::Matches(m))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn app() -> App {
+        App::new("aieblas", "test app")
+            .command(
+                Command::new("run", "run a spec")
+                    .positional("spec", "spec file", true)
+                    .opt_default("size", "4096", "problem size")
+                    .opt_required("routine", "routine name")
+                    .flag("verbose", "chatty"),
+            )
+            .command(Command::new("info", "print info"))
+    }
+
+    fn args(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_with_options() {
+        let p = app()
+            .parse(&args(&["run", "spec.json", "--routine", "axpy", "--verbose"]))
+            .unwrap();
+        let Parsed::Matches(m) = p else { panic!("expected matches") };
+        assert_eq!(m.command, "run");
+        assert_eq!(m.positionals, vec!["spec.json"]);
+        assert_eq!(m.get("routine"), Some("axpy"));
+        assert_eq!(m.usize("size").unwrap(), 4096); // default
+        assert!(m.has_flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let p = app()
+            .parse(&args(&["run", "s.json", "--routine=dot", "--size=99"]))
+            .unwrap();
+        let Parsed::Matches(m) = p else { panic!() };
+        assert_eq!(m.get("routine"), Some("dot"));
+        assert_eq!(m.usize("size").unwrap(), 99);
+    }
+
+    #[test]
+    fn missing_required_option_is_error() {
+        assert!(app().parse(&args(&["run", "s.json"])).is_err());
+    }
+
+    #[test]
+    fn missing_positional_is_error() {
+        assert!(app().parse(&args(&["run", "--routine", "axpy"])).is_err());
+    }
+
+    #[test]
+    fn unknown_command_and_option() {
+        assert!(app().parse(&args(&["nope"])).is_err());
+        assert!(app()
+            .parse(&args(&["run", "s.json", "--routine", "axpy", "--bogus"]))
+            .is_err());
+    }
+
+    #[test]
+    fn help_paths() {
+        assert!(matches!(app().parse(&args(&[])), Ok(Parsed::Help(_))));
+        assert!(matches!(app().parse(&args(&["--help"])), Ok(Parsed::Help(_))));
+        let Ok(Parsed::Help(h)) = app().parse(&args(&["run", "--help"])) else {
+            panic!()
+        };
+        assert!(h.contains("--routine"));
+        assert!(h.contains("[default: 4096]"));
+    }
+
+    #[test]
+    fn invalid_numeric_value() {
+        let Parsed::Matches(m) = app()
+            .parse(&args(&["run", "s.json", "--routine", "x", "--size", "abc"]))
+            .unwrap()
+        else {
+            panic!()
+        };
+        assert!(m.usize("size").is_err());
+    }
+}

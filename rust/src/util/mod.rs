@@ -1,0 +1,12 @@
+//! Support substrates implemented in-tree (the offline registry only has
+//! the `xla` crate closure — see DESIGN.md §1): JSON, PRNG, CLI parsing,
+//! thread pool, property testing, benchmarking, tables, logging.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod table;
+pub mod threadpool;

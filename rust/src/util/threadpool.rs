@@ -1,0 +1,185 @@
+//! Scoped thread pool for data-parallel loops (no `rayon` in the offline
+//! registry). Used by the CPU BLAS baseline (rust/src/blas/cpu.rs) — the
+//! OpenBLAS stand-in for the Fig. 3 comparison — where the parallel shape is
+//! always "split a range into contiguous chunks".
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Number of worker threads to use: respects `AIEBLAS_THREADS`, defaults to
+/// the available parallelism (the paper's CPU baseline uses all 20 cores).
+pub fn num_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        std::env::var("AIEBLAS_THREADS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            })
+    })
+}
+
+/// Run `f(chunk_index, start, end)` over `nchunks` contiguous chunks of
+/// `0..len` on up to [`num_threads`] scoped threads. Chunks are balanced to
+/// within one element. Falls back to inline execution for small inputs —
+/// thread spawn costs ~10 µs, pointless below ~64 KiB of work.
+pub fn parallel_chunks<F>(len: usize, min_chunk: usize, f: F)
+where
+    F: Fn(usize, usize, usize) + Sync,
+{
+    if len == 0 {
+        return;
+    }
+    let threads = num_threads().max(1);
+    let nchunks = (len / min_chunk.max(1)).clamp(1, threads);
+    if nchunks == 1 {
+        f(0, 0, len);
+        return;
+    }
+    let base = len / nchunks;
+    let rem = len % nchunks;
+    std::thread::scope(|scope| {
+        let mut start = 0;
+        for i in 0..nchunks {
+            let this = base + usize::from(i < rem);
+            let end = start + this;
+            let fref = &f;
+            scope.spawn(move || fref(i, start, end));
+            start = end;
+        }
+    });
+}
+
+/// Parallel map-reduce over contiguous chunks: each chunk computes a partial
+/// with `map(start, end)`, partials are combined left-to-right with
+/// `reduce`. Deterministic combination order (important for reproducible
+/// floating-point reductions in tests).
+pub fn parallel_reduce<T, M, R>(len: usize, min_chunk: usize, identity: T, map: M, reduce: R) -> T
+where
+    T: Send + Clone,
+    M: Fn(usize, usize) -> T + Sync,
+    R: Fn(T, T) -> T,
+{
+    if len == 0 {
+        return identity;
+    }
+    let threads = num_threads().max(1);
+    let nchunks = (len / min_chunk.max(1)).clamp(1, threads);
+    if nchunks == 1 {
+        return reduce(identity, map(0, len));
+    }
+    let mut partials: Vec<Option<T>> = vec![None; nchunks];
+    let base = len / nchunks;
+    let rem = len % nchunks;
+    std::thread::scope(|scope| {
+        let mut start = 0;
+        for (i, slot) in partials.iter_mut().enumerate() {
+            let this = base + usize::from(i < rem);
+            let end = start + this;
+            let mref = &map;
+            scope.spawn(move || {
+                *slot = Some(mref(start, end));
+            });
+            start = end;
+        }
+    });
+    partials
+        .into_iter()
+        .map(|p| p.expect("worker panicked"))
+        .fold(identity, |acc, p| reduce(acc, p))
+}
+
+/// Monotonic counter for unique ids (graph nodes, sim events).
+pub struct IdGen(AtomicUsize);
+
+impl IdGen {
+    pub const fn new() -> Self {
+        IdGen(AtomicUsize::new(0))
+    }
+
+    pub fn next(&self) -> usize {
+        self.0.fetch_add(1, Ordering::Relaxed)
+    }
+}
+
+impl Default for IdGen {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn chunks_cover_range_exactly_once() {
+        let len = 10_007; // prime, exercises remainder balancing
+        let hits: Vec<AtomicU64> = (0..len).map(|_| AtomicU64::new(0)).collect();
+        parallel_chunks(len, 1, |_, s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn zero_len_is_noop() {
+        parallel_chunks(0, 1, |_, _, _| panic!("should not run"));
+    }
+
+    #[test]
+    fn small_input_runs_inline() {
+        // min_chunk larger than len -> single chunk, chunk index 0.
+        let mut seen = Vec::new();
+        let seen_ptr = std::sync::Mutex::new(&mut seen);
+        parallel_chunks(8, 1024, |i, s, e| {
+            seen_ptr.lock().unwrap().push((i, s, e));
+        });
+        assert_eq!(seen, vec![(0, 0, 8)]);
+    }
+
+    #[test]
+    fn reduce_sums_correctly() {
+        let data: Vec<u64> = (0..100_000).collect();
+        let total = parallel_reduce(
+            data.len(),
+            1024,
+            0u64,
+            |s, e| data[s..e].iter().sum::<u64>(),
+            |a, b| a + b,
+        );
+        assert_eq!(total, 100_000u64 * 99_999 / 2);
+    }
+
+    #[test]
+    fn reduce_identity_on_empty() {
+        let v = parallel_reduce(0, 1, 42u64, |_, _| panic!("no chunks"), |a, b| a + b);
+        assert_eq!(v, 42);
+    }
+
+    #[test]
+    fn idgen_unique_across_threads() {
+        let gen = IdGen::new();
+        let ids = std::sync::Mutex::new(Vec::new());
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    let mut local = Vec::new();
+                    for _ in 0..100 {
+                        local.push(gen.next());
+                    }
+                    ids.lock().unwrap().extend(local);
+                });
+            }
+        });
+        let mut all = ids.into_inner().unwrap();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 800);
+    }
+}

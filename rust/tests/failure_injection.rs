@@ -1,0 +1,201 @@
+//! Failure-injection tests: every malformed input or broken environment
+//! must produce a structured error (or a documented fallback), never a
+//! panic or silent wrong answer.
+
+use std::path::Path;
+
+use aieblas::blas::RoutineKind;
+use aieblas::coordinator::{AieBlas, Config};
+use aieblas::runtime::{Manifest, NumericExecutor};
+use aieblas::spec::{DataSource, Spec};
+
+#[test]
+fn malformed_spec_documents_reject() {
+    for (name, bad) in [
+        ("not json", "hello"),
+        ("not an object", "[1,2,3]"),
+        ("missing routines", r#"{"platform": "vck5000"}"#),
+        ("routine not object", r#"{"routines": [42]}"#),
+        ("missing name", r#"{"routines": [{"routine": "axpy", "size": 8}]}"#),
+        ("zero size", r#"{"routines": [{"routine": "axpy", "name": "a", "size": 0}]}"#),
+        ("negative size", r#"{"routines": [{"routine": "axpy", "name": "a", "size": -4}]}"#),
+        ("fractional size", r#"{"routines": [{"routine": "axpy", "name": "a", "size": 4.5}]}"#),
+        (
+            "bad placement",
+            r#"{"routines": [{"routine": "axpy", "name": "a", "size": 8, "placement": {"col": 1}}]}"#,
+        ),
+        (
+            "dangling connection",
+            r#"{"routines": [{"routine": "axpy", "name": "a", "size": 8}],
+                "connections": [{"from": "a.z", "to": "ghost.x"}]}"#,
+        ),
+    ] {
+        let err = Spec::from_json_str(bad);
+        assert!(err.is_err(), "{name} should be rejected");
+    }
+}
+
+#[test]
+fn corrupt_manifest_rejected() {
+    let dir = std::env::temp_dir().join(format!("aieblas_badmanifest_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), "{ not json").unwrap();
+    assert!(Manifest::load(&dir).is_err());
+    std::fs::write(dir.join("manifest.json"), r#"{"interchange": "hlo-text"}"#).unwrap();
+    assert!(Manifest::load(&dir).is_err(), "missing entries array");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn missing_artifact_file_falls_back_not_panics() {
+    // manifest points at a file that does not exist → PJRT load fails →
+    // reference fallback serves the request.
+    let dir = std::env::temp_dir().join(format!("aieblas_ghostfile_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"version": 1, "interchange": "hlo-text", "entries": [
+            {"key": "axpy_n8", "routine": "axpy", "size": 8,
+             "file": "ghost.hlo.txt",
+             "inputs": [{"shape": [1], "dtype": "float32"},
+                         {"shape": [8], "dtype": "float32"},
+                         {"shape": [8], "dtype": "float32"}],
+             "num_outputs": 1}
+        ]}"#,
+    )
+    .unwrap();
+    let ex = NumericExecutor::new(&dir).unwrap();
+    let (out, backend) = ex
+        .execute("axpy", 8, &[vec![1.0], vec![1.0; 8], vec![2.0; 8]])
+        .unwrap();
+    assert_eq!(backend, aieblas::runtime::Backend::ReferenceFallback);
+    assert_eq!(out, vec![3.0; 8]);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn corrupt_hlo_text_falls_back() {
+    let dir = std::env::temp_dir().join(format!("aieblas_badhlo_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("bad.hlo.txt"), "this is not an HLO module").unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"version": 1, "interchange": "hlo-text", "entries": [
+            {"key": "dot_n4", "routine": "dot", "size": 4,
+             "file": "bad.hlo.txt",
+             "inputs": [{"shape": [4], "dtype": "float32"},
+                         {"shape": [4], "dtype": "float32"}],
+             "num_outputs": 1}
+        ]}"#,
+    )
+    .unwrap();
+    let ex = NumericExecutor::new(&dir).unwrap();
+    let (out, backend) = ex
+        .execute("dot", 4, &[vec![1.0, 2.0, 3.0, 4.0], vec![1.0; 4]])
+        .unwrap();
+    assert_eq!(backend, aieblas::runtime::Backend::ReferenceFallback);
+    assert_eq!(out, vec![10.0]);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn wrong_input_length_is_error_not_garbage() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let ex = NumericExecutor::new(&dir).unwrap();
+    // too-short x: validated up front, structured Runtime error.
+    let r = ex.execute("axpy", 4096, &[vec![1.0], vec![0.0; 16], vec![0.0; 4096]]);
+    assert!(matches!(r, Err(aieblas::Error::Runtime(_))), "{r:?}");
+    // wrong arity too
+    let r = ex.execute("axpy", 4096, &[vec![1.0]]);
+    assert!(matches!(r, Err(aieblas::Error::Runtime(_))), "{r:?}");
+}
+
+#[test]
+fn oversized_design_rejected_cleanly() {
+    // 500 kernels > 400 tiles
+    let mut spec = Spec { platform: "vck5000".into(), ..Default::default() };
+    for i in 0..500 {
+        spec.routines.push(aieblas::spec::RoutineSpec {
+            kind: RoutineKind::Scal,
+            name: format!("k{i}"),
+            size: 64,
+            window: None,
+            vector_bits: 512,
+            placement: None,
+            burst: false,
+            alpha: Some(1.0),
+            beta: None,
+            split: 1,
+        });
+    }
+    let sys = AieBlas::new(Config {
+        artifacts_dir: "/nonexistent".into(),
+        check_numerics: false,
+        ..Default::default()
+    })
+    .unwrap();
+    let err = sys.run_spec_sim_only(&spec).unwrap_err();
+    assert!(matches!(err, aieblas::Error::Placement(_)), "{err}");
+}
+
+#[test]
+fn channel_exhaustion_rejected_cleanly() {
+    // each axpy needs 4 channels; 80 unconnected axpys need 240 in + 80
+    // out < limits, but 100 need 300+100 → AIE→PL fits, PL→AIE fits 300 ≤
+    // 312... use 110: 330 > 312 → routing error.
+    let mut spec = Spec { platform: "vck5000".into(), ..Default::default() };
+    for i in 0..110 {
+        spec.routines.push(aieblas::spec::RoutineSpec {
+            kind: RoutineKind::Axpy,
+            name: format!("k{i}"),
+            size: 4096,
+            window: None,
+            vector_bits: 512,
+            placement: None,
+            burst: false,
+            alpha: None,
+            beta: None,
+            split: 1,
+        });
+    }
+    let sys = AieBlas::new(Config {
+        artifacts_dir: "/nonexistent".into(),
+        check_numerics: false,
+        ..Default::default()
+    })
+    .unwrap();
+    let err = sys.run_spec_sim_only(&spec).unwrap_err();
+    assert!(matches!(err, aieblas::Error::Routing(_)), "{err}");
+}
+
+#[test]
+fn onchip_design_with_many_kernels_still_runs() {
+    // the no-PL configuration must not be limited by interface channels.
+    let mut spec = Spec {
+        platform: "vck5000".into(),
+        data_source: DataSource::OnChip,
+        ..Default::default()
+    };
+    for i in 0..110 {
+        spec.routines.push(aieblas::spec::RoutineSpec {
+            kind: RoutineKind::Axpy,
+            name: format!("k{i}"),
+            size: 4096,
+            window: None,
+            vector_bits: 512,
+            placement: None,
+            burst: false,
+            alpha: None,
+            beta: None,
+            split: 1,
+        });
+    }
+    let sys = AieBlas::new(Config {
+        artifacts_dir: "/nonexistent".into(),
+        check_numerics: false,
+        ..Default::default()
+    })
+    .unwrap();
+    let rep = sys.run_spec_sim_only(&spec).unwrap();
+    assert_eq!(rep.pl_to_aie_channels, 0);
+}

@@ -1,0 +1,334 @@
+//! Integration tests: the full pipeline (spec JSON → graph → placement →
+//! routing → simulation → codegen → numerics) across realistic scenarios.
+
+use std::path::Path;
+
+use aieblas::blas::RoutineKind;
+use aieblas::coordinator::{experiments, AieBlas, Config};
+use aieblas::spec::{DataSource, Spec};
+
+fn system() -> AieBlas {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    AieBlas::new(Config {
+        artifacts_dir: dir,
+        cpu_samples: 1,
+        check_numerics: false,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+#[test]
+fn spec_json_to_report_full_path() {
+    let spec = Spec::from_json_str(
+        r#"{
+        "platform": "vck5000",
+        "data_source": "pl",
+        "routines": [
+            {"routine": "axpy", "name": "vadd", "size": 65536, "alpha": -2.0},
+            {"routine": "dot",  "name": "vdot", "size": 65536}
+        ],
+        "connections": [{"from": "vadd.z", "to": "vdot.x"}]
+    }"#,
+    )
+    .unwrap();
+    let report = system().run_spec(&spec).unwrap();
+    assert!(report.sim.makespan_s > 0.0);
+    assert_eq!(report.sim.kernels.len(), 2);
+    // z flows on-chip: only w, v, u enter + beta leaves
+    assert_eq!(report.sim.pl_to_aie_channels, 3);
+    assert_eq!(report.sim.aie_to_pl_channels, 1);
+}
+
+#[test]
+fn every_routine_kind_runs_end_to_end() {
+    let sys = system();
+    for kind in RoutineKind::ALL {
+        let n = if kind.level() >= 2 { 128 } else { 16384 };
+        for source in [DataSource::Pl, DataSource::OnChip] {
+            let spec = Spec::single(kind, "k", n, source);
+            let rep = sys.run_spec_sim_only(&spec).unwrap_or_else(|e| {
+                panic!("{kind} with {source:?} failed: {e}");
+            });
+            assert!(rep.makespan_s > 0.0, "{kind} {source:?}");
+        }
+    }
+}
+
+#[test]
+fn fig3_claim_c1_no_pl_faster_all_routines_all_sizes() {
+    let sys = system();
+    for kind in [RoutineKind::Axpy, RoutineKind::Gemv, RoutineKind::Dot] {
+        let sizes: &[usize] = if kind.level() >= 2 { &[64, 256, 512] } else { &[4096, 65536, 1048576] };
+        for &n in sizes {
+            let pl = sys
+                .run_spec_sim_only(&Spec::single(kind, "k", n, DataSource::Pl))
+                .unwrap();
+            let nopl = sys
+                .run_spec_sim_only(&Spec::single(kind, "k", n, DataSource::OnChip))
+                .unwrap();
+            assert!(
+                nopl.makespan_s < pl.makespan_s,
+                "{kind} n={n}: no-PL {} !< PL {}",
+                nopl.makespan_s,
+                pl.makespan_s
+            );
+        }
+    }
+}
+
+#[test]
+fn fig3_claim_c2_dataflow_doubles_axpydot() {
+    let sys = system();
+    for &n in &[16384usize, 262144, 1048576] {
+        let df = sys.run_axpydot(n, true).unwrap().makespan_s;
+        let nodf = sys.run_axpydot(n, false).unwrap().makespan_s;
+        let speedup = nodf / df;
+        assert!(
+            (1.7..2.6).contains(&speedup),
+            "n={n}: DF speedup {speedup:.2} outside the paper's ~2x"
+        );
+    }
+}
+
+#[test]
+fn fig3_claim_c3_cpu_advantage_grows_to_about_10x() {
+    let sys = system();
+    let mut last_ratio = 0.0;
+    for &n in &experiments::VEC_SIZES {
+        let pl = sys
+            .run_spec_sim_only(&Spec::single(RoutineKind::Axpy, "k", n, DataSource::Pl))
+            .unwrap()
+            .makespan_s;
+        let cpu = experiments::cpu_time_model(RoutineKind::Axpy, n);
+        let ratio = pl / cpu;
+        assert!(ratio > last_ratio * 0.8, "CPU advantage should broadly grow with n");
+        last_ratio = ratio;
+    }
+    // at the largest size the paper reports "up to 10x"
+    assert!(
+        (5.0..20.0).contains(&last_ratio),
+        "largest-size CPU advantage {last_ratio:.1}x should be near 10x"
+    );
+}
+
+#[test]
+fn generated_project_compiles_structurally() {
+    // "compiles" without Vitis = structural checks on every generated file
+    let spec = Spec::axpydot_dataflow(65536, 2.0);
+    let proj = aieblas::codegen::generate(&spec).unwrap();
+    for (path, contents) in &proj.files {
+        assert!(!contents.is_empty(), "{path} empty");
+        if path.ends_with(".cc") || path.ends_with(".cpp") || path.ends_with(".h") {
+            // balanced braces — catches template bugs cheaply
+            let open = contents.matches('{').count();
+            let close = contents.matches('}').count();
+            assert_eq!(open, close, "{path}: unbalanced braces");
+        }
+    }
+    assert!(proj.total_lines() > 100);
+}
+
+#[test]
+fn larger_designs_place_and_route() {
+    // 64 kernels with mixed hints — exercises placement + channel budget
+    let mut spec = Spec { platform: "vck5000".into(), ..Default::default() };
+    for i in 0..64 {
+        spec.routines.push(aieblas::spec::RoutineSpec {
+            kind: if i % 3 == 0 { RoutineKind::Dot } else { RoutineKind::Axpy },
+            name: format!("k{i}"),
+            size: 4096,
+            window: None,
+            vector_bits: 512,
+            placement: (i < 8).then_some(aieblas::spec::Placement { col: i, row: 0 }),
+            burst: i % 2 == 0,
+            alpha: None,
+            beta: None,
+            split: 1,
+        });
+    }
+    let rep = system().run_spec_sim_only(&spec).unwrap();
+    assert_eq!(rep.kernels.len(), 64);
+    assert!(rep.pl_to_aie_channels <= 312);
+    assert!(rep.aie_to_pl_channels <= 234);
+}
+
+#[test]
+fn chain_of_connected_kernels_pipelines() {
+    // scal -> copy -> dot chain: a 3-stage pipeline must beat the sum of
+    // its isolated stages.
+    let sys = system();
+    let n = 1 << 18;
+    let spec = Spec::from_json_str(&format!(
+        r#"{{
+        "routines": [
+            {{"routine": "scal", "name": "s1", "size": {n}, "alpha": 2.0}},
+            {{"routine": "copy", "name": "c1", "size": {n}}},
+            {{"routine": "dot",  "name": "d1", "size": {n}}}
+        ],
+        "connections": [
+            {{"from": "s1.z", "to": "c1.x"}},
+            {{"from": "c1.z", "to": "d1.x"}}
+        ]
+    }}"#
+    ))
+    .unwrap();
+    let chained = sys.run_spec_sim_only(&spec).unwrap().makespan_s;
+    let isolated: f64 = [
+        Spec::single(RoutineKind::Scal, "s1", n, DataSource::Pl),
+        Spec::single(RoutineKind::Copy, "c1", n, DataSource::Pl),
+        Spec::single(RoutineKind::Dot, "d1", n, DataSource::Pl),
+    ]
+    .iter()
+    .map(|s| sys.run_spec_sim_only(s).unwrap().makespan_s)
+    .sum();
+    assert!(
+        chained < isolated,
+        "3-stage pipeline {chained} should beat sequential {isolated}"
+    );
+}
+
+#[test]
+fn numerics_via_artifacts_when_present() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let sys = AieBlas::new(Config {
+        artifacts_dir: dir,
+        cpu_samples: 1,
+        check_numerics: true,
+        ..Default::default()
+    })
+    .unwrap();
+    if sys.executor().manifest().is_empty() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let rep = sys
+        .run_spec(&Spec::single(RoutineKind::Axpydot, "ad", 65536, DataSource::Pl))
+        .unwrap();
+    let (_, num) = &rep.numerics[0];
+    assert!(num.max_rel_err < 1e-3, "axpydot err {}", num.max_rel_err);
+}
+
+#[test]
+fn split_axpy_uses_more_channels_and_is_faster() {
+    // §V future work 2: multi-AIE routines exploit the several AIE-PL
+    // interfaces. 4-way split axpy: 12 in + 4 out channels, ~DDR-bound
+    // speedup over the single-kernel design.
+    let sys = system();
+    let n = 1 << 20;
+    let single = Spec::single(RoutineKind::Axpy, "k", n, DataSource::Pl);
+    let mut split = single.clone();
+    split.routines[0].split = 4;
+    let r1 = sys.run_spec_sim_only(&single).unwrap();
+    let r4 = sys.run_spec_sim_only(&split).unwrap();
+    assert_eq!(r4.kernels.len(), 4);
+    assert!(r4.pl_to_aie_channels > r1.pl_to_aie_channels);
+    assert!(
+        r4.makespan_s < r1.makespan_s / 1.5,
+        "4-way split {} should beat single {} by >1.5x",
+        r4.makespan_s,
+        r1.makespan_s
+    );
+    // vector data is striped, not duplicated; only the broadcast alpha
+    // scalar is replicated per part (3 extra f32 = 12 bytes).
+    assert_eq!(r4.device_bytes, r1.device_bytes + 3 * 4);
+}
+
+#[test]
+fn split_dot_combines_partials_on_chip() {
+    let sys = system();
+    let n = 1 << 18;
+    let mut spec = Spec::single(RoutineKind::Dot, "d", n, DataSource::Pl);
+    spec.routines[0].split = 8;
+    let rep = sys.run_spec_sim_only(&spec).unwrap();
+    assert_eq!(rep.kernels.len(), 8);
+    // one scalar result leaves the array, not eight
+    assert_eq!(rep.aie_to_pl_channels, 1);
+}
+
+#[test]
+fn split_validation_rules() {
+    // split on gemv (level 2) rejected
+    let mut spec = Spec::single(RoutineKind::Gemv, "g", 256, DataSource::Pl);
+    spec.routines[0].split = 2;
+    assert!(aieblas::spec::validate(&spec).is_err());
+    // split not dividing size rejected
+    let mut spec = Spec::single(RoutineKind::Axpy, "a", 1000, DataSource::Pl);
+    spec.routines[0].split = 3;
+    assert!(aieblas::spec::validate(&spec).is_err());
+    // split nrm2 (non-additive combine) rejected
+    let mut spec = Spec::single(RoutineKind::Nrm2, "m", 1024, DataSource::Pl);
+    spec.routines[0].split = 2;
+    assert!(aieblas::spec::validate(&spec).is_err());
+}
+
+#[test]
+fn new_routines_full_pipeline() {
+    // axpby, rot, ger: §V BLAS-coverage expansion, end to end.
+    let sys = system();
+    for (kind, n) in [
+        (RoutineKind::Axpby, 16384usize),
+        (RoutineKind::Rot, 16384),
+        (RoutineKind::Ger, 128),
+    ] {
+        let rep = sys
+            .run_spec_sim_only(&Spec::single(kind, "k", n, DataSource::Pl))
+            .unwrap();
+        assert!(rep.makespan_s > 0.0, "{kind}");
+        let num = sys.run_numeric(kind, if kind.level() >= 2 { 64 } else { 4096 }).unwrap();
+        assert!(num.max_rel_err < 1e-3, "{kind} err {}", num.max_rel_err);
+    }
+}
+
+#[test]
+fn ryzen_ai_platform_runs_and_is_channel_constrained() {
+    // paper §I ref [11]: the AIE family in commodity CPUs. Smaller array,
+    // fewer interface channels — the same spec must still run, and a
+    // design that fits the VCK5000's 312 channels must be rejected here.
+    let sys = system();
+    let mut spec = Spec::single(RoutineKind::Axpy, "a", 1 << 18, DataSource::Pl);
+    spec.platform = "ryzen_ai".into();
+    let rep = sys.run_spec_sim_only(&spec).unwrap();
+    assert!(rep.makespan_s > 0.0);
+
+    // 8 axpys = 24 in-channels > the NPU's 20 → routing reject
+    let mut big = Spec { platform: "ryzen_ai".into(), ..Default::default() };
+    for i in 0..8 {
+        big.routines.push(aieblas::spec::RoutineSpec {
+            kind: RoutineKind::Axpy,
+            name: format!("k{i}"),
+            size: 4096,
+            window: None,
+            vector_bits: 512,
+            placement: None,
+            burst: false,
+            alpha: None,
+            beta: None,
+            split: 1,
+        });
+    }
+    assert!(matches!(
+        sys.run_spec_sim_only(&big).unwrap_err(),
+        aieblas::Error::Routing(_)
+    ));
+}
+
+#[test]
+fn traced_simulation_matches_untraced_and_exports() {
+    let sys = system();
+    let spec = Spec::axpydot_dataflow(65536, 2.0);
+    let plain = sys.run_spec_sim_only(&spec).unwrap();
+    let (rep, trace) = sys.run_spec_traced(&spec).unwrap();
+    assert!((rep.makespan_s - plain.makespan_s).abs() < 1e-12);
+    assert!(!trace.is_empty());
+    // every kernel iteration recorded
+    let spans_for_axpy = trace
+        .spans
+        .iter()
+        .filter(|s| s.name == "axpy_stage")
+        .count();
+    assert_eq!(spans_for_axpy, rep.kernels[0].iterations);
+    // exports are well-formed
+    assert!(aieblas::util::json::Json::parse(&trace.to_chrome_json()).is_ok());
+    assert!(trace.to_gantt(60).contains('#'));
+}

@@ -1,0 +1,282 @@
+//! Property-based tests over the system's invariants (DESIGN.md §6),
+//! using the in-tree `util::proptest` framework: random specs must always
+//! produce graphs, placements, routings and simulations that uphold the
+//! conservation laws — or be rejected with a structured error, never
+//! panic.
+
+use aieblas::arch::ArchConfig;
+use aieblas::blas::RoutineKind;
+use aieblas::graph::build::build_graph;
+use aieblas::graph::place::{place, Location};
+use aieblas::graph::route::{check_routing, route};
+use aieblas::graph::NodeKind;
+use aieblas::sim::simulate;
+use aieblas::spec::{DataSource, RoutineSpec, Spec};
+use aieblas::util::proptest::{forall, usize_in, Config as PropConfig, Gen, Prop};
+use aieblas::util::rng::Rng;
+
+/// Generator: a random valid single/multi-routine spec.
+fn spec_gen() -> Gen<Spec> {
+    Gen::new(|rng: &mut Rng| {
+        let kinds = [
+            RoutineKind::Axpy,
+            RoutineKind::Scal,
+            RoutineKind::Copy,
+            RoutineKind::Dot,
+            RoutineKind::Nrm2,
+            RoutineKind::Asum,
+            RoutineKind::Gemv,
+            RoutineKind::Axpydot,
+        ];
+        let n_routines = rng.range(1, 6);
+        let source = if rng.bool() { DataSource::Pl } else { DataSource::OnChip };
+        let mut spec = Spec {
+            platform: "vck5000".into(),
+            data_source: source,
+            ..Default::default()
+        };
+        for i in 0..n_routines {
+            let kind = *rng.choose(&kinds);
+            let size = if kind.level() >= 2 {
+                1 << rng.range(5, 9) // 32..512
+            } else {
+                1 << rng.range(6, 18)
+            };
+            spec.routines.push(RoutineSpec {
+                kind,
+                name: format!("k{i}"),
+                size,
+                window: rng.bool().then(|| 1 << rng.range(4, 9)),
+                vector_bits: *rng.choose(&[128usize, 256, 512]),
+                placement: None,
+                burst: rng.bool(),
+                alpha: rng.bool().then(|| rng.f32_in(-4.0, 4.0)),
+                beta: None,
+                split: 1,
+            });
+        }
+        // maybe chain compatible vector outputs into vector inputs
+        let candidates: Vec<usize> = (0..spec.routines.len().saturating_sub(1)).collect();
+        for &i in &candidates {
+            let (a, b) = (spec.routines[i].clone(), spec.routines[i + 1].clone());
+            if a.kind.is_composite() || b.kind.is_composite() {
+                continue;
+            }
+            let out_vec = a.kind.outputs().iter().find(|p| p.ty == aieblas::blas::PortType::Vector);
+            let in_vec = b.kind.inputs().iter().find(|p| p.ty == aieblas::blas::PortType::Vector);
+            if let (Some(o), Some(inp)) = (out_vec, in_vec) {
+                if a.size == b.size && rng.bool() {
+                    spec.connections.push(aieblas::spec::Connection {
+                        from_kernel: a.name.clone(),
+                        from_port: o.name.to_string(),
+                        to_kernel: b.name.clone(),
+                        to_port: inp.name.to_string(),
+                    });
+                }
+            }
+        }
+        spec
+    })
+}
+
+fn cfg(cases: usize) -> PropConfig {
+    PropConfig { cases, ..Default::default() }
+}
+
+#[test]
+fn random_specs_validate_or_error_cleanly() {
+    forall(&spec_gen(), cfg(150), |spec| match aieblas::spec::validate(spec) {
+        Ok(()) | Err(aieblas::Error::Spec(_)) | Err(aieblas::Error::Placement(_)) => Prop::Pass,
+        Err(e) => Prop::Fail(format!("unexpected error class: {e}")),
+    });
+}
+
+#[test]
+fn valid_specs_build_graphs_upholding_invariants() {
+    forall(&spec_gen(), cfg(100), |spec| {
+        if aieblas::spec::validate(spec).is_err() {
+            return Prop::Discard;
+        }
+        match build_graph(spec) {
+            Ok(out) => match out.graph.check_invariants() {
+                Ok(()) => Prop::Pass,
+                Err(e) => Prop::Fail(format!("invariants: {e}")),
+            },
+            Err(e) => Prop::Fail(format!("build: {e}")),
+        }
+    });
+}
+
+#[test]
+fn placement_never_collides_and_stays_on_grid() {
+    let arch = ArchConfig::vck5000();
+    forall(&spec_gen(), cfg(80), |spec| {
+        if aieblas::spec::validate(spec).is_err() {
+            return Prop::Discard;
+        }
+        let g = build_graph(spec).unwrap().graph;
+        let p = match place(&g, &arch) {
+            Ok(p) => p,
+            Err(e) => return Prop::Fail(format!("place: {e}")),
+        };
+        let mut tiles = std::collections::BTreeSet::new();
+        for node in &g.nodes {
+            match (&node.kind, p.of(node.id)) {
+                (NodeKind::AieKernel { .. }, Location::Tile { col, row }) => {
+                    if col >= arch.cols || row >= arch.rows {
+                        return Prop::Fail(format!("{} off grid ({col},{row})", node.name));
+                    }
+                    if !tiles.insert((col, row)) {
+                        return Prop::Fail(format!("tile ({col},{row}) reused"));
+                    }
+                }
+                (NodeKind::AieKernel { .. }, other) => {
+                    return Prop::Fail(format!("{} not on a tile: {other:?}", node.name))
+                }
+                _ => {}
+            }
+        }
+        Prop::Pass
+    });
+}
+
+#[test]
+fn routing_conservation_holds() {
+    let arch = ArchConfig::vck5000();
+    forall(&spec_gen(), cfg(80), |spec| {
+        if aieblas::spec::validate(spec).is_err() {
+            return Prop::Discard;
+        }
+        let g = build_graph(spec).unwrap().graph;
+        let p = place(&g, &arch).unwrap();
+        match route(&g, &p, &arch) {
+            Ok(r) => match check_routing(&g, &r) {
+                Ok(()) => Prop::Pass,
+                Err(e) => Prop::Fail(e.to_string()),
+            },
+            Err(aieblas::Error::Routing(_)) => Prop::Pass, // capacity exceeded is a clean reject
+            Err(e) => Prop::Fail(format!("unexpected: {e}")),
+        }
+    });
+}
+
+#[test]
+fn simulation_time_positive_and_bytes_conserved() {
+    let arch = ArchConfig::vck5000();
+    forall(&spec_gen(), cfg(60), |spec| {
+        if aieblas::spec::validate(spec).is_err() {
+            return Prop::Discard;
+        }
+        let g = build_graph(spec).unwrap().graph;
+        let p = place(&g, &arch).unwrap();
+        let Ok(r) = route(&g, &p, &arch) else { return Prop::Discard };
+        let rep = match simulate(&g, &p, &r, &arch) {
+            Ok(rep) => rep,
+            Err(e) => return Prop::Fail(format!("sim: {e}")),
+        };
+        if rep.makespan_s <= 0.0 || !rep.makespan_s.is_finite() {
+            return Prop::Fail(format!("nonpositive makespan {}", rep.makespan_s));
+        }
+        // bytes conservation: device bytes = Σ mover-edge totals
+        let expected: u64 = g
+            .edges
+            .iter()
+            .filter(|e| g.node(e.src).kind.is_pl() || g.node(e.dst).kind.is_pl())
+            .map(|e| e.total_bytes() as u64)
+            .sum();
+        if rep.device_bytes != expected {
+            return Prop::Fail(format!("device bytes {} != {expected}", rep.device_bytes));
+        }
+        // utilization bounded
+        for k in &rep.kernels {
+            if !(0.0..=1.0 + 1e-9).contains(&k.utilization) {
+                return Prop::Fail(format!("{} utilization {}", k.name, k.utilization));
+            }
+        }
+        Prop::Pass
+    });
+}
+
+#[test]
+fn sim_time_monotone_in_problem_size() {
+    let sizes = usize_in(6, 18);
+    forall(&sizes, cfg(25), |&exp| {
+        let arch = ArchConfig::vck5000();
+        let t = |n: usize| {
+            let spec = Spec::single(RoutineKind::Axpy, "a", n, DataSource::Pl);
+            let g = build_graph(&spec).unwrap().graph;
+            let p = place(&g, &arch).unwrap();
+            let r = route(&g, &p, &arch).unwrap();
+            simulate(&g, &p, &r, &arch).unwrap().makespan_s
+        };
+        let n = 1usize << exp;
+        Prop::from(t(2 * n) > t(n))
+    });
+}
+
+#[test]
+fn dataflow_never_slower_than_non_dataflow() {
+    let sizes = usize_in(10, 20);
+    let sys = aieblas::coordinator::AieBlas::new(aieblas::coordinator::Config {
+        artifacts_dir: "/nonexistent".into(),
+        check_numerics: false,
+        cpu_samples: 1,
+        ..Default::default()
+    })
+    .unwrap();
+    forall(&sizes, cfg(15), |&exp| {
+        let n = 1usize << exp;
+        let df = sys.run_axpydot(n, true).unwrap().makespan_s;
+        let nodf = sys.run_axpydot(n, false).unwrap().makespan_s;
+        Prop::from(df <= nodf)
+    });
+}
+
+#[test]
+fn generated_specs_codegen_deterministically() {
+    forall(&spec_gen(), cfg(25), |spec| {
+        if aieblas::spec::validate(spec).is_err() {
+            return Prop::Discard;
+        }
+        let a = aieblas::codegen::generate(spec).unwrap();
+        let b = aieblas::codegen::generate(spec).unwrap();
+        Prop::from(a.files == b.files)
+    });
+}
+
+#[test]
+fn spec_json_round_trips() {
+    forall(&spec_gen(), cfg(80), |spec| {
+        if aieblas::spec::validate(spec).is_err() {
+            return Prop::Discard;
+        }
+        let text = spec.to_json().to_pretty();
+        match Spec::from_json_str(&text) {
+            Ok(reparsed) if reparsed == *spec => Prop::Pass,
+            Ok(_) => Prop::Fail("round-trip changed the spec".into()),
+            Err(e) => Prop::Fail(format!("reparse: {e}")),
+        }
+    });
+}
+
+#[test]
+fn cpu_baseline_matches_reference_on_random_inputs() {
+    let gen = usize_in(1, 1 << 17);
+    forall(&gen, cfg(30), |&n| {
+        let mut rng = Rng::new(n as u64);
+        let x = rng.normal_vec_f32(n);
+        let y = rng.normal_vec_f32(n);
+        let mut z1 = vec![0.0; n];
+        let mut z2 = vec![0.0; n];
+        aieblas::blas::cpu::axpy(1.5, &x, &y, &mut z1);
+        aieblas::blas::reference::axpy(1.5, &x, &y, &mut z2);
+        for i in 0..n {
+            if (z1[i] - z2[i]).abs() > 1e-5 * (1.0 + z2[i].abs()) {
+                return Prop::Fail(format!("axpy mismatch at {i}"));
+            }
+        }
+        let d1 = aieblas::blas::cpu::dot(&x, &y);
+        let d2 = aieblas::blas::reference::dot(&x, &y);
+        Prop::from((d1 - d2).abs() <= 5e-3 * (1.0 + d2.abs()))
+    });
+}
