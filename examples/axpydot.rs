@@ -7,7 +7,7 @@
 use aieblas::coordinator::{AieBlas, Config};
 use aieblas::spec::Spec;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     aieblas::init();
     let system = AieBlas::new(Config::default())?;
 

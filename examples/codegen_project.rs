@@ -7,7 +7,7 @@
 use aieblas::codegen;
 use aieblas::spec::Spec;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     aieblas::init();
     let spec = Spec::from_json_str(
         r#"{

@@ -14,9 +14,9 @@
 
 use aieblas::blas::RoutineKind;
 use aieblas::coordinator::{experiments, AieBlas, Config};
-use aieblas::runtime::Backend;
+use aieblas::runtime::Provenance;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     aieblas::init();
     let system = AieBlas::new(Config::default())?;
 
@@ -87,7 +87,7 @@ fn main() -> anyhow::Result<()> {
             continue;
         };
         let num = system.run_numeric(kind, n)?;
-        if num.backend == Backend::Pjrt {
+        if num.backend == Provenance::Pjrt {
             pjrt_count += 1;
         }
         println!(

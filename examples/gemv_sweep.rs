@@ -7,7 +7,7 @@ use aieblas::blas::RoutineKind;
 use aieblas::coordinator::{experiments, AieBlas, Config};
 use aieblas::spec::{DataSource, Placement, Spec};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     aieblas::init();
     let system = AieBlas::new(Config::default())?;
 

@@ -9,7 +9,7 @@
 use aieblas::coordinator::{AieBlas, Config};
 use aieblas::spec::Spec;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     aieblas::init();
 
     // 1. the user-facing artifact: a JSON routine specification.

@@ -1,0 +1,97 @@
+//! Plan-cache bench: cold vs warm `run_spec` (and raw pipeline lowering),
+//! quantifying what the cache saves on the serving path — re-validation,
+//! re-codegen, re-placement and re-routing all skipped on a hit.
+//!
+//! Emits `BENCH_plan_cache.json` (in the working directory, or under
+//! `AIEBLAS_BENCH_JSON_DIR` when set) to start the perf trajectory.
+//!
+//! Run: `cargo bench --bench plan_cache`
+
+use aieblas::arch::ArchConfig;
+use aieblas::blas::RoutineKind;
+use aieblas::coordinator::{AieBlas, Config};
+use aieblas::pipeline::Pipeline;
+use aieblas::spec::{DataSource, Spec};
+use aieblas::util::bench::Bench;
+use aieblas::util::json::{obj, Json};
+
+fn fresh_system() -> AieBlas {
+    AieBlas::new(Config {
+        artifacts_dir: "/nonexistent".into(),
+        check_numerics: false,
+        cpu_samples: 1,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+fn main() {
+    aieblas::init();
+    let mut b = Bench::new("plan_cache");
+    let mut json_rows: Vec<Json> = Vec::new();
+
+    let cases = [
+        ("axpy/n=2^16", Spec::single(RoutineKind::Axpy, "a", 1 << 16, DataSource::Pl)),
+        ("axpy/n=2^20", Spec::single(RoutineKind::Axpy, "a", 1 << 20, DataSource::Pl)),
+        ("gemv/n=256", Spec::single(RoutineKind::Gemv, "g", 256, DataSource::Pl)),
+        ("axpydot_df/n=2^16", Spec::axpydot_dataflow(1 << 16, 2.0)),
+    ];
+
+    for (label, spec) in &cases {
+        // raw lowering: a fresh pipeline every call (cold) vs one pipeline
+        // reused (warm, cache hit).
+        let cold_lower = b.bench(&format!("lower/cold/{label}"), || {
+            Pipeline::new(ArchConfig::vck5000()).lower(spec).unwrap().graph().nodes.len()
+        });
+        let warm_pipeline = Pipeline::new(ArchConfig::vck5000());
+        warm_pipeline.lower(spec).unwrap();
+        let warm_lower = b.bench(&format!("lower/warm/{label}"), || {
+            warm_pipeline.lower(spec).unwrap().graph().nodes.len()
+        });
+
+        // full run_spec_sim_only: cold system each call vs warm system.
+        let cold_run = b.bench(&format!("run_sim/cold/{label}"), || {
+            fresh_system().run_spec_sim_only(spec).unwrap().makespan_s
+        });
+        let warm_sys = fresh_system();
+        warm_sys.run_spec_sim_only(spec).unwrap();
+        let warm_run = b.bench(&format!("run_sim/warm/{label}"), || {
+            warm_sys.run_spec_sim_only(spec).unwrap().makespan_s
+        });
+
+        let stats = warm_sys.plan_cache().stats();
+        eprintln!(
+            "  {label}: lower {:.1}x faster warm, run_spec_sim_only {:.1}x faster warm \
+             (cache: {} hits / {} misses)",
+            cold_lower.median / warm_lower.median.max(1e-12),
+            cold_run.median / warm_run.median.max(1e-12),
+            stats.hits,
+            stats.misses,
+        );
+        json_rows.push(obj(vec![
+            ("case", (*label).into()),
+            ("lower_cold_median_s", cold_lower.median.into()),
+            ("lower_warm_median_s", warm_lower.median.into()),
+            ("lower_speedup", (cold_lower.median / warm_lower.median.max(1e-12)).into()),
+            ("run_cold_median_s", cold_run.median.into()),
+            ("run_warm_median_s", warm_run.median.into()),
+            ("run_speedup", (cold_run.median / warm_run.median.max(1e-12)).into()),
+            ("cache_hits", (stats.hits as f64).into()),
+            ("cache_misses", (stats.misses as f64).into()),
+        ]));
+    }
+
+    b.finish();
+
+    let doc = obj(vec![
+        ("bench", "plan_cache".into()),
+        ("unit", "seconds".into()),
+        ("cases", Json::Arr(json_rows)),
+    ]);
+    let dir = std::env::var("AIEBLAS_BENCH_JSON_DIR").unwrap_or_else(|_| ".".into());
+    let path = format!("{dir}/BENCH_plan_cache.json");
+    match std::fs::write(&path, doc.to_pretty() + "\n") {
+        Ok(()) => eprintln!("wrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+}

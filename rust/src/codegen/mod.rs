@@ -63,10 +63,21 @@ impl GeneratedProject {
     }
 }
 
-/// Generate the complete project for a validated spec.
+/// Generate the complete project for a validated spec (one-shot: validates
+/// and builds the graph itself; the staged pipeline calls
+/// [`generate_from_built`] with the graph it already has).
 pub fn generate(spec: &Spec) -> Result<GeneratedProject> {
     crate::spec::validate(spec)?;
     let built = crate::graph::build::build_graph(spec)?;
+    generate_from_built(spec, &built)
+}
+
+/// Generate the project from an already-built dataflow graph (pipeline
+/// stage 1; avoids re-validating and re-building).
+pub fn generate_from_built(
+    spec: &Spec,
+    built: &crate::graph::build::BuildOutput,
+) -> Result<GeneratedProject> {
     let mut proj = GeneratedProject::default();
 
     // 1. AIE kernels
@@ -97,13 +108,13 @@ pub fn generate(spec: &Spec) -> Result<GeneratedProject> {
     }
 
     // 3. dataflow graph
-    proj.insert("aie/graph.h".to_string(), adf_graph::graph_header(spec, &built)?);
+    proj.insert("aie/graph.h".to_string(), adf_graph::graph_header(spec, built)?);
     proj.insert("aie/graph.cpp".to_string(), adf_graph::graph_source(spec));
 
     // 4. build project
-    proj.insert("CMakeLists.txt".to_string(), project::cmake(spec, &built));
-    proj.insert("system.cfg".to_string(), project::connectivity(spec, &built));
-    proj.insert("host/host.cpp".to_string(), project::host(spec, &built));
+    proj.insert("CMakeLists.txt".to_string(), project::cmake(spec, built));
+    proj.insert("system.cfg".to_string(), project::connectivity(spec, built));
+    proj.insert("host/host.cpp".to_string(), project::host(spec, built));
     proj.insert("README.md".to_string(), project::readme(spec));
 
     Ok(proj)

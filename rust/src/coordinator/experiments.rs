@@ -5,8 +5,9 @@
 //! Shared by `cargo bench` targets, the `examples/e2e_fig3.rs` driver and
 //! the `aieblas fig3` CLI subcommand.
 
-use super::{cpu_run, AieBlas};
+use super::AieBlas;
 use crate::blas::RoutineKind;
+use crate::runtime::CpuBackend;
 use crate::spec::{DataSource, Spec};
 use crate::util::rng::Rng;
 use crate::util::table::{fmt_time, Table};
@@ -38,7 +39,7 @@ pub fn cpu_time(kind: RoutineKind, size: usize, samples: usize) -> f64 {
     let mut ts: Vec<f64> = (0..samples.max(1))
         .map(|_| {
             let t0 = std::time::Instant::now();
-            std::hint::black_box(cpu_run(kind, size, &inputs));
+            std::hint::black_box(CpuBackend::run_kind(kind, size, &inputs));
             t0.elapsed().as_secs_f64()
         })
         .collect();

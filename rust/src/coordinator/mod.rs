@@ -1,25 +1,27 @@
 //! L3 coordinator: the end-to-end AIEBLAS driver.
 //!
-//! Ties the full pipeline together: spec → validation → graph build →
-//! placement → routing → (a) cycle-approximate simulation for *timing*
-//! and (b) PJRT execution of the AOT artifacts for *numerics*, plus the
-//! measured CPU baseline — the three series of the paper's Fig. 3.
+//! A thin front-end over the staged pipeline and the backend layer: specs
+//! are lowered once through [`Pipeline`] (memoized in the plan cache) and
+//! executed through [`Backend`] implementations — [`SimBackend`] for the
+//! paper's simulated-device timing + artifact numerics, [`CpuBackend`] for
+//! the measured CPU baseline, [`ReferenceBackend`] as ground truth. The
+//! coordinator itself no longer orchestrates codegen, placement or
+//! simulation inline (DESIGN.md §2–§3).
 
 pub mod experiments;
 
 use std::path::PathBuf;
-use std::time::Instant;
+use std::sync::Arc;
 
 use crate::arch::ArchConfig;
-use crate::blas::RoutineKind;
-use crate::graph::build::build_graph;
-use crate::graph::place::place;
-use crate::graph::route::{check_routing, route};
-use crate::runtime::{Backend, NumericExecutor};
-use crate::sim::{simulate, SimReport};
+use crate::pipeline::{CacheStats, ExecutablePlan, Pipeline, PlanCache};
+use crate::runtime::{
+    Backend, CpuBackend, ExecInputs, NumericExecutor, Provenance, ReferenceBackend, SimBackend,
+};
+use crate::sim::SimReport;
 use crate::spec::{DataSource, Spec};
 use crate::util::rng::Rng;
-use crate::Result;
+use crate::{Error, Result};
 
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
@@ -32,6 +34,8 @@ pub struct Config {
     pub cpu_samples: usize,
     /// Validate numerics against the reference implementation.
     pub check_numerics: bool,
+    /// Resident capacity of the plan cache.
+    pub plan_cache_capacity: usize,
 }
 
 impl Default for Config {
@@ -41,15 +45,17 @@ impl Default for Config {
             arch: ArchConfig::vck5000(),
             cpu_samples: 5,
             check_numerics: true,
+            plan_cache_capacity: Pipeline::DEFAULT_CACHE_CAPACITY,
         }
     }
 }
 
-/// Numeric-execution outcome.
+/// Numeric-execution outcome for one routine.
 #[derive(Debug, Clone)]
 pub struct NumericResult {
-    pub backend: Backend,
-    /// max |pjrt - reference| / (1 + |reference|) over all outputs.
+    /// Which implementation produced the numbers.
+    pub backend: Provenance,
+    /// max |out - reference| / (1 + |reference|) over all outputs.
     pub max_rel_err: f64,
     pub outputs: usize,
 }
@@ -63,6 +69,8 @@ pub struct RunReport {
     pub numerics: Vec<(String, NumericResult)>,
     /// Measured wallclock of the CPU baseline for the same math, seconds.
     pub cpu_time_s: Option<f64>,
+    /// Plan-cache counters at report time (serving observability).
+    pub plan_cache: CacheStats,
 }
 
 impl RunReport {
@@ -81,6 +89,10 @@ impl RunReport {
                 n.backend, n.max_rel_err, n.outputs
             ));
         }
+        s.push_str(&format!(
+            "\nplan cache: {} hit(s) / {} miss(es), {} plan(s) resident",
+            self.plan_cache.hits, self.plan_cache.misses, self.plan_cache.entries
+        ));
         s
     }
 }
@@ -89,51 +101,74 @@ impl RunReport {
 pub struct AieBlas {
     pub config: Config,
     executor: NumericExecutor,
+    pipeline: Pipeline,
 }
 
 impl AieBlas {
     pub fn new(config: Config) -> Result<AieBlas> {
         let executor = NumericExecutor::new(&config.artifacts_dir)?;
-        Ok(AieBlas { config, executor })
+        let pipeline =
+            Pipeline::with_cache_capacity(config.arch.clone(), config.plan_cache_capacity);
+        Ok(AieBlas { config, executor, pipeline })
     }
 
     pub fn executor(&self) -> &NumericExecutor {
         &self.executor
     }
 
-    /// Architecture for a spec: the spec's platform wins; the config arch
-    /// backs the convenience constructors (platform "vck5000" = default).
-    fn arch_for_spec(&self, spec: &Spec) -> Result<ArchConfig> {
-        if spec.platform.is_empty() || spec.platform == "vck5000" {
-            Ok(self.config.arch.clone())
-        } else {
-            crate::spec::arch_for(&spec.platform)
-        }
+    /// The plan cache memoizing spec lowering (hits/misses/entries).
+    pub fn plan_cache(&self) -> &PlanCache {
+        self.pipeline.cache()
+    }
+
+    /// Lower a spec through the staged pipeline (cached).
+    pub fn lower(&self, spec: &Spec) -> Result<Arc<ExecutablePlan>> {
+        self.pipeline.lower(spec)
     }
 
     /// Run a full spec: simulate timing + execute numerics + CPU baseline.
     pub fn run_spec(&self, spec: &Spec) -> Result<RunReport> {
-        crate::spec::validate(spec)?;
-        let arch = self.arch_for_spec(spec)?;
-        let built = build_graph(spec)?;
-        let placement = place(&built.graph, &arch)?;
-        let routing = route(&built.graph, &placement, &arch)?;
-        check_routing(&built.graph, &routing)?;
-        let sim = simulate(&built.graph, &placement, &routing, &arch)?;
+        let plan = self.pipeline.lower(spec)?;
+        let backend = SimBackend::with_executor(&self.executor);
+        let prepared = backend.prepare(plan)?;
+        let inputs = if self.config.check_numerics {
+            ExecInputs::random_for(spec, numeric_seed(spec))
+        } else {
+            ExecInputs::default()
+        };
+        let outcome = backend.execute(&prepared, &inputs)?;
+        let sim = outcome
+            .sim
+            .clone()
+            .ok_or_else(|| Error::Runtime("sim backend produced no timing".into()))?;
 
         let mut numerics = Vec::new();
         if self.config.check_numerics {
-            for r in &spec.routines {
-                numerics.push((r.name.clone(), self.run_numeric(r.kind, r.size)?));
+            let reference = ReferenceBackend
+                .execute(&ReferenceBackend.prepare(prepared.plan_arc().clone())?, &inputs)?;
+            for (got, want) in outcome.results.iter().zip(&reference.results) {
+                numerics.push((
+                    got.routine.clone(),
+                    NumericResult {
+                        backend: got.provenance,
+                        max_rel_err: max_rel_err(&got.output, &want.output),
+                        outputs: got.output.len(),
+                    },
+                ));
             }
         }
         let cpu_time_s = self.cpu_baseline(spec);
-        Ok(RunReport { sim, numerics, cpu_time_s })
+        Ok(RunReport { sim, numerics, cpu_time_s, plan_cache: self.pipeline.cache().stats() })
     }
 
-    /// Execute one routine numerically on random inputs; compare PJRT
-    /// output against the Rust reference.
-    pub fn run_numeric(&self, kind: RoutineKind, size: usize) -> Result<NumericResult> {
+    /// Execute one routine numerically on random inputs; compare the
+    /// executor's output (PJRT when artifacts exist) against the reference
+    /// backend.
+    pub fn run_numeric(
+        &self,
+        kind: crate::blas::RoutineKind,
+        size: usize,
+    ) -> Result<NumericResult> {
         let mut rng = Rng::new(0xA1EB1A5 ^ size as u64);
         let inputs: Vec<Vec<f32>> = kind
             .inputs()
@@ -141,38 +176,26 @@ impl AieBlas {
             .map(|p| rng.normal_vec_f32(p.ty.elements(size)))
             .collect();
         let (out, backend) = self.executor.execute(kind.name(), size, &inputs)?;
-        let reference = crate::runtime::reference_execute(kind.name(), size, &inputs)?;
-        let mut max_rel = 0.0f64;
-        for (a, b) in out.iter().zip(&reference) {
-            let rel = ((a - b).abs() / (1.0 + b.abs())) as f64;
-            max_rel = max_rel.max(rel);
-        }
-        Ok(NumericResult { backend, max_rel_err: max_rel, outputs: out.len() })
+        let reference = ReferenceBackend::run_kind(kind, size, &inputs)?;
+        Ok(NumericResult {
+            backend,
+            max_rel_err: max_rel_err(&out, &reference),
+            outputs: out.len(),
+        })
     }
 
     /// Measure the multithreaded CPU baseline for the spec's routines
-    /// (executed sequentially, like a host would call BLAS). `None` when
-    /// the spec contains routines without a CPU kernel.
+    /// through [`CpuBackend`] (executed sequentially, like a host would
+    /// call BLAS). `None` when the spec cannot be lowered or executed.
     pub fn cpu_baseline(&self, spec: &Spec) -> Option<f64> {
-        let mut rng = Rng::new(7);
+        let plan = self.pipeline.lower(spec).ok()?;
+        let backend = CpuBackend;
+        let prepared = backend.prepare(plan).ok()?;
         // pre-generate inputs outside the timed region
-        let mut problems = Vec::new();
-        for r in &spec.routines {
-            let inputs: Vec<Vec<f32>> = r
-                .kind
-                .inputs()
-                .iter()
-                .map(|p| rng.normal_vec_f32(p.ty.elements(r.size)))
-                .collect();
-            problems.push((r.kind, r.size, inputs));
-        }
-        let mut samples = Vec::with_capacity(self.config.cpu_samples);
+        let inputs = ExecInputs::random_for(spec, 7);
+        let mut samples = Vec::with_capacity(self.config.cpu_samples.max(1));
         for _ in 0..self.config.cpu_samples.max(1) {
-            let t0 = Instant::now();
-            for (kind, size, inputs) in &problems {
-                std::hint::black_box(cpu_run(*kind, *size, inputs));
-            }
-            samples.push(t0.elapsed().as_secs_f64());
+            samples.push(backend.execute(&prepared, &inputs).ok()?.wall_s);
         }
         samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
         Some(samples[samples.len() / 2])
@@ -181,9 +204,10 @@ impl AieBlas {
     /// The paper's axpydot experiment: dataflow (single fused design) vs
     /// non-dataflow (axpy design, z through DDR, then dot design).
     pub fn run_axpydot(&self, n: usize, dataflow: bool) -> Result<SimReport> {
+        use crate::blas::RoutineKind;
         if dataflow {
             let spec = Spec::axpydot_dataflow(n, 2.0);
-            Ok(self.run_spec_sim_only(&spec)?)
+            self.run_spec_sim_only(&spec)
         } else {
             // two independent designs executed back to back; z makes a
             // full DDR round trip between them.
@@ -210,81 +234,49 @@ impl AieBlas {
     }
 
     /// Simulation only (no numerics / CPU timing) — the benches' hot path.
+    /// Warm plans skip codegen + placement + routing via the plan cache.
     pub fn run_spec_sim_only(&self, spec: &Spec) -> Result<SimReport> {
-        crate::spec::validate(spec)?;
-        let arch = self.arch_for_spec(spec)?;
-        let built = build_graph(spec)?;
-        let placement = place(&built.graph, &arch)?;
-        let routing = route(&built.graph, &placement, &arch)?;
-        simulate(&built.graph, &placement, &routing, &arch)
+        let plan = self.pipeline.lower(spec)?;
+        let backend = SimBackend::timing_only();
+        let prepared = backend.prepare(plan)?;
+        let outcome = backend.execute(&prepared, &ExecInputs::default())?;
+        outcome
+            .sim
+            .ok_or_else(|| Error::Runtime("sim backend produced no timing".into()))
     }
 
     /// Simulate a spec and return the execution trace alongside the report
     /// (Chrome-trace / Gantt export).
     pub fn run_spec_traced(&self, spec: &Spec) -> Result<(SimReport, crate::sim::trace::Trace)> {
-        crate::spec::validate(spec)?;
-        let arch = self.arch_for_spec(spec)?;
-        let built = build_graph(spec)?;
-        let placement = place(&built.graph, &arch)?;
-        let routing = route(&built.graph, &placement, &arch)?;
-        crate::sim::simulate_traced(&built.graph, &placement, &routing, &arch)
+        let plan = self.pipeline.lower(spec)?;
+        let backend = SimBackend::timing_only();
+        let prepared = backend.prepare(plan)?;
+        backend.execute_traced(&prepared)
     }
 }
 
-/// Run a routine on the CPU baseline (used for Fig. 3's CPU series).
-pub fn cpu_run(kind: RoutineKind, size: usize, inputs: &[Vec<f32>]) -> Vec<f32> {
-    use crate::blas::cpu;
-    let n = size;
-    match kind {
-        RoutineKind::Axpy => {
-            let mut z = vec![0.0; n];
-            cpu::axpy(inputs[0][0], &inputs[1], &inputs[2], &mut z);
-            z
-        }
-        RoutineKind::Scal => {
-            let mut z = vec![0.0; n];
-            cpu::scal(inputs[0][0], &inputs[1], &mut z);
-            z
-        }
-        RoutineKind::Axpby => {
-            let mut z = vec![0.0; n];
-            cpu::axpby(inputs[0][0], &inputs[2], inputs[1][0], &inputs[3], &mut z);
-            z
-        }
-        RoutineKind::Rot => {
-            let mut xo = vec![0.0; n];
-            let mut yo = vec![0.0; n];
-            cpu::rot(inputs[0][0], inputs[1][0], &inputs[2], &inputs[3], &mut xo, &mut yo);
-            xo.extend(yo);
-            xo
-        }
-        RoutineKind::Ger => {
-            let mut out = vec![0.0; n * n];
-            cpu::ger(inputs[0][0], &inputs[1], &inputs[2], &inputs[3], n, n, &mut out);
-            out
-        }
-        RoutineKind::Copy => inputs[0].clone(),
-        RoutineKind::Dot => vec![cpu::dot(&inputs[0], &inputs[1])],
-        RoutineKind::Nrm2 => vec![cpu::nrm2(&inputs[0])],
-        RoutineKind::Asum => vec![cpu::asum(&inputs[0])],
-        RoutineKind::Iamax => vec![cpu::iamax(&inputs[0]) as f32],
-        RoutineKind::Gemv => {
-            let mut out = vec![0.0; n];
-            cpu::gemv(inputs[0][0], &inputs[1], n, n, &inputs[2], inputs[3][0], &inputs[4], &mut out);
-            out
-        }
-        RoutineKind::Gemm => {
-            let mut out = vec![0.0; n * n];
-            cpu::gemm(inputs[0][0], &inputs[1], &inputs[2], n, n, n, inputs[3][0], &inputs[4], &mut out);
-            out
-        }
-        RoutineKind::Axpydot => vec![cpu::axpydot(inputs[0][0], &inputs[1], &inputs[2], &inputs[3])],
-    }
+/// Deterministic per-spec numeric seed (stable across runs of the same
+/// spec so cached plans see identical inputs).
+fn numeric_seed(spec: &Spec) -> u64 {
+    let size_mix = spec
+        .routines
+        .iter()
+        .fold(0u64, |acc, r| acc.rotate_left(7) ^ r.size as u64);
+    0xA1EB1A5 ^ size_mix
+}
+
+/// max |a - b| / (1 + |b|) over paired outputs.
+fn max_rel_err(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| ((x - y).abs() / (1.0 + y.abs())) as f64)
+        .fold(0.0, f64::max)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::blas::RoutineKind;
 
     fn system() -> AieBlas {
         let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -302,6 +294,18 @@ mod tests {
         assert!(num.max_rel_err < 1e-2, "err {}", num.max_rel_err);
         assert!(rep.cpu_time_s.unwrap() > 0.0);
         assert!(rep.summary().contains("AIE (simulated)"));
+        assert!(rep.summary().contains("plan cache"));
+    }
+
+    #[test]
+    fn repeated_run_spec_hits_plan_cache() {
+        let sys = system();
+        let spec = Spec::single(RoutineKind::Dot, "d", 8192, DataSource::Pl);
+        let first = sys.run_spec(&spec).unwrap();
+        assert_eq!(first.plan_cache.misses, 1);
+        let second = sys.run_spec(&spec).unwrap();
+        assert!(second.plan_cache.hits > 0, "warm run must hit the plan cache");
+        assert_eq!(second.plan_cache.misses, 1, "warm run must not re-lower");
     }
 
     #[test]
@@ -345,7 +349,7 @@ mod tests {
     }
 
     #[test]
-    fn cpu_run_covers_all_kinds() {
+    fn cpu_backend_covers_all_kinds() {
         let mut rng = Rng::new(3);
         for kind in RoutineKind::ALL {
             let n = 64;
@@ -354,7 +358,7 @@ mod tests {
                 .iter()
                 .map(|p| rng.normal_vec_f32(p.ty.elements(n)))
                 .collect();
-            let out = cpu_run(kind, n, &inputs);
+            let out = CpuBackend::run_kind(kind, n, &inputs);
             assert!(!out.is_empty(), "{kind}");
             assert!(out.iter().all(|v| v.is_finite()), "{kind}");
         }

@@ -1,49 +1,83 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls: the offline registry has no
+//! `thiserror` (DESIGN.md §1).
 
-use thiserror::Error;
+use std::fmt;
 
 /// All the ways an AIEBLAS operation can fail.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
     /// User specification problems (paper §III JSON spec).
-    #[error("spec error: {0}")]
     Spec(String),
 
     /// JSON syntax errors in spec/manifest files.
-    #[error(transparent)]
-    Json(#[from] crate::util::json::JsonError),
+    Json(crate::util::json::JsonError),
 
     /// Dataflow-graph construction/validation problems.
-    #[error("graph error: {0}")]
     Graph(String),
 
     /// Placement/floorplanning failures (grid exhausted, conflicting hints).
-    #[error("placement error: {0}")]
     Placement(String),
 
     /// Stream routing failures (no path, port over-subscription).
-    #[error("routing error: {0}")]
     Routing(String),
 
     /// Simulation-time failures (deadlock, conservation violation).
-    #[error("simulation error: {0}")]
     Sim(String),
 
-    /// PJRT runtime failures (artifact missing, compile/execute errors).
-    #[error("runtime error: {0}")]
+    /// Runtime failures (artifact missing, backend prepare/execute errors).
     Runtime(String),
 
     /// Code-generation failures.
-    #[error("codegen error: {0}")]
     Codegen(String),
 
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
-    #[error("xla error: {0}")]
+    /// XLA/PJRT failures (only produced with the `pjrt` feature).
     Xla(String),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Spec(m) => write!(f, "spec error: {m}"),
+            Error::Json(e) => write!(f, "{e}"),
+            Error::Graph(m) => write!(f, "graph error: {m}"),
+            Error::Placement(m) => write!(f, "placement error: {m}"),
+            Error::Routing(m) => write!(f, "routing error: {m}"),
+            Error::Sim(m) => write!(f, "simulation error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Codegen(m) => write!(f, "codegen error: {m}"),
+            Error::Io(e) => write!(f, "{e}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Json(e) => Some(e),
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<crate::util::json::JsonError> for Error {
+    fn from(e: crate::util::json::JsonError) -> Self {
+        Error::Json(e)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())

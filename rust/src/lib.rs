@@ -7,17 +7,19 @@
 //! simulator (see DESIGN.md §1 for the substitution argument).
 //!
 //! Layer map:
-//! * **L3 (this crate)** — the AIEBLAS system: JSON spec → code generation →
-//!   dataflow-graph construction → placement/routing → simulation, plus the
-//!   PJRT runtime executing AOT-compiled numerics and the experiment
-//!   harness reproducing the paper's Fig. 3.
+//! * **L3 (this crate)** — the AIEBLAS system: JSON spec → staged pipeline
+//!   (`pipeline`: validation + code generation → placement + routing →
+//!   [`pipeline::ExecutablePlan`], memoized in a plan cache) → execution
+//!   behind the [`runtime::Backend`] trait (`SimBackend` / `CpuBackend` /
+//!   `ReferenceBackend`), plus the experiment harness reproducing the
+//!   paper's Fig. 3.
 //! * **L2 (`python/compile/model.py`)** — JAX routine graphs.
 //! * **L1 (`python/compile/kernels/`)** — window-tiled Pallas kernels.
 //!
 //! ## Quickstart
 //! ```no_run
-//! use aieblas::spec::Spec;
 //! use aieblas::coordinator::AieBlas;
+//! use aieblas::spec::Spec;
 //!
 //! let spec = Spec::from_json_str(r#"{
 //!   "platform": "vck5000",
@@ -26,9 +28,33 @@
 //!   ]
 //! }"#).unwrap();
 //! let system = AieBlas::new(Default::default()).unwrap();
+//!
+//! // Cold: spec → RoutinePlan (validated + codegen'd) → PlacedGraph
+//! // (placed + routed) → ExecutablePlan, then simulated + checked.
 //! let report = system.run_spec(&spec).unwrap();
 //! println!("{}", report.summary());
+//!
+//! // Warm: the same spec skips codegen/placement/routing entirely — the
+//! // plan cache serves the lowered design (hit counters in the report).
+//! let warm = system.run_spec(&spec).unwrap();
+//! assert!(warm.plan_cache.hits >= 1);
 //! ```
+//!
+//! ## Executing on a specific backend
+//! ```no_run
+//! use aieblas::runtime::{Backend, CpuBackend, ExecInputs};
+//! use aieblas::spec::{DataSource, Spec};
+//! use aieblas::blas::RoutineKind;
+//!
+//! let spec = Spec::single(RoutineKind::Dot, "d", 4096, DataSource::Pl);
+//! let plan = std::sync::Arc::new(aieblas::pipeline::lower_spec(&spec).unwrap());
+//! let prepared = CpuBackend.prepare(plan).unwrap();
+//! let outcome = CpuBackend.execute(&prepared, &ExecInputs::random_for(&spec, 1)).unwrap();
+//! println!("dot = {}", outcome.results[0].output[0]);
+//! ```
+//!
+//! Adding a fourth backend is an ≤30-line `impl runtime::Backend` — see
+//! DESIGN.md §3.
 
 pub mod aie;
 pub mod arch;
@@ -37,6 +63,7 @@ pub mod codegen;
 pub mod coordinator;
 pub mod error;
 pub mod graph;
+pub mod pipeline;
 pub mod pl;
 pub mod runtime;
 pub mod sim;

@@ -3,7 +3,9 @@
 //! Subcommands:
 //! * `validate <spec.json>` — parse + validate a routine specification;
 //! * `generate <spec.json> --out <dir>` — emit the Vitis design (Fig. 1);
-//! * `run <spec.json>` — build → place → route → simulate → numerics;
+//! * `run <spec.json>` — lower through the staged pipeline (plan-cached)
+//!   → simulate → numerics; `--repeat N` re-runs the spec to demonstrate
+//!   warm plan-cache hits;
 //! * `fig3 [--panel …]` — reproduce the paper's Fig. 3 series;
 //! * `ablations` — the §V ablation sweeps;
 //! * `info` — architecture + artifact inventory.
@@ -15,6 +17,8 @@ use aieblas::blas::RoutineKind;
 use aieblas::coordinator::{experiments, AieBlas, Config};
 use aieblas::spec::Spec;
 use aieblas::util::cli::{App, Command, Matches, Parsed};
+
+type CliResult = Result<(), Box<dyn std::error::Error>>;
 
 fn app() -> App {
     App::new("aieblas", "BLAS library + code generator + simulator for the AMD AI Engine")
@@ -31,7 +35,8 @@ fn app() -> App {
             Command::new("run", "simulate a spec end-to-end and check numerics")
                 .positional("spec", "path to spec.json", true)
                 .opt_default("artifacts", "artifacts", "AOT artifact directory")
-                .flag("no-numerics", "skip PJRT numeric validation")
+                .opt_default("repeat", "1", "run the spec N times (warm runs hit the plan cache)")
+                .flag("no-numerics", "skip numeric validation")
                 .flag("kernels", "print per-kernel utilization"),
         )
         .command(
@@ -70,7 +75,7 @@ fn main() -> ExitCode {
     }
 }
 
-fn dispatch(m: &Matches) -> anyhow::Result<()> {
+fn dispatch(m: &Matches) -> CliResult {
     match m.command.as_str() {
         "validate" => {
             let spec = Spec::from_file(Path::new(&m.positionals[0]))?;
@@ -105,7 +110,11 @@ fn dispatch(m: &Matches) -> anyhow::Result<()> {
                 check_numerics: !m.has_flag("no-numerics"),
                 ..Default::default()
             })?;
-            let report = sys.run_spec(&spec)?;
+            let repeat = m.usize("repeat")?.max(1);
+            let mut report = sys.run_spec(&spec)?;
+            for _ in 1..repeat {
+                report = sys.run_spec(&spec)?;
+            }
             println!("{}", report.summary());
             if m.has_flag("kernels") {
                 for k in &report.sim.kernels {
@@ -150,7 +159,7 @@ fn dispatch(m: &Matches) -> anyhow::Result<()> {
                 tables.push(experiments::panel_table("axpydot", &rows));
             }
             if tables.is_empty() {
-                anyhow::bail!("unknown panel {panel:?} (axpy | gemv | axpydot | all)");
+                return Err(format!("unknown panel {panel:?} (axpy | gemv | axpydot | all)").into());
             }
             for t in tables {
                 if m.has_flag("csv") {
@@ -216,6 +225,6 @@ fn dispatch(m: &Matches) -> anyhow::Result<()> {
             }
             Ok(())
         }
-        other => anyhow::bail!("unhandled command {other:?}"),
+        other => Err(format!("unhandled command {other:?}").into()),
     }
 }

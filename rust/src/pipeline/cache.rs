@@ -1,0 +1,181 @@
+//! The plan cache: memoized `Spec → ExecutablePlan` lowering.
+//!
+//! Keyed on the spec's canonical JSON (routine set, sizes, non-functional
+//! parameters, connections, platform — see [`crate::spec::Spec::cache_key`]),
+//! so a repeated spec skips re-validation, re-codegen, re-placement and
+//! re-routing. LRU-evicting with a bounded capacity; hit/miss counters are
+//! surfaced in `RunReport::summary()` for serving observability.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::ExecutablePlan;
+
+/// Snapshot of the cache's counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lowerings served from the cache.
+    pub hits: u64,
+    /// Lowerings that ran the full pipeline.
+    pub misses: u64,
+    /// Plans currently resident.
+    pub entries: usize,
+}
+
+impl CacheStats {
+    /// Fraction of lookups served from the cache (0 when none yet).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+struct Inner {
+    map: HashMap<String, Arc<ExecutablePlan>>,
+    /// LRU order: front = least recently used.
+    order: VecDeque<String>,
+}
+
+/// Bounded, thread-safe LRU cache of lowered plans.
+pub struct PlanCache {
+    inner: Mutex<Inner>,
+    capacity: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl PlanCache {
+    pub fn new(capacity: usize) -> PlanCache {
+        PlanCache {
+            inner: Mutex::new(Inner { map: HashMap::new(), order: VecDeque::new() }),
+            capacity: capacity.max(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Look up a plan, counting a hit or miss and refreshing LRU order.
+    pub fn get(&self, key: &str) -> Option<Arc<ExecutablePlan>> {
+        let mut inner = self.inner.lock().expect("plan cache poisoned");
+        match inner.map.get(key).cloned() {
+            Some(plan) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                if let Some(pos) = inner.order.iter().position(|k| k == key) {
+                    inner.order.remove(pos);
+                }
+                inner.order.push_back(key.to_string());
+                Some(plan)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert a freshly lowered plan, evicting the least recently used
+    /// entry when at capacity.
+    pub fn insert(&self, key: String, plan: Arc<ExecutablePlan>) {
+        let mut inner = self.inner.lock().expect("plan cache poisoned");
+        if inner.map.contains_key(&key) {
+            // a concurrent lowering won the race; keep the resident plan.
+            return;
+        }
+        while inner.map.len() >= self.capacity {
+            match inner.order.pop_front() {
+                Some(old) => {
+                    inner.map.remove(&old);
+                }
+                None => break,
+            }
+        }
+        inner.order.push_back(key.clone());
+        inner.map.insert(key, plan);
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("plan cache poisoned").map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop all resident plans (counters are preserved).
+    pub fn clear(&self) {
+        let mut inner = self.inner.lock().expect("plan cache poisoned");
+        inner.map.clear();
+        inner.order.clear();
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::RoutineKind;
+    use crate::spec::{DataSource, Spec};
+
+    fn plan_for(n: usize) -> Arc<ExecutablePlan> {
+        let spec = Spec::single(RoutineKind::Scal, "k", n, DataSource::OnChip);
+        Arc::new(crate::pipeline::lower_spec(&spec).unwrap())
+    }
+
+    #[test]
+    fn hit_and_miss_counting() {
+        let cache = PlanCache::new(4);
+        assert!(cache.get("a").is_none());
+        cache.insert("a".into(), plan_for(64));
+        assert!(cache.get("a").is_some());
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lru_eviction_at_capacity() {
+        let cache = PlanCache::new(2);
+        cache.insert("a".into(), plan_for(64));
+        cache.insert("b".into(), plan_for(128));
+        // touch "a" so "b" is now the LRU entry
+        assert!(cache.get("a").is_some());
+        cache.insert("c".into(), plan_for(256));
+        assert_eq!(cache.len(), 2);
+        assert!(cache.get("b").is_none(), "LRU entry should be evicted");
+        assert!(cache.get("a").is_some());
+        assert!(cache.get("c").is_some());
+    }
+
+    #[test]
+    fn clear_preserves_counters() {
+        let cache = PlanCache::new(2);
+        cache.insert("a".into(), plan_for(64));
+        cache.get("a");
+        cache.clear();
+        let s = cache.stats();
+        assert_eq!(s.entries, 0);
+        assert_eq!(s.hits, 1);
+    }
+
+    #[test]
+    fn duplicate_insert_keeps_resident_plan() {
+        let cache = PlanCache::new(2);
+        let first = plan_for(64);
+        cache.insert("a".into(), first.clone());
+        cache.insert("a".into(), plan_for(64));
+        assert!(Arc::ptr_eq(&cache.get("a").unwrap(), &first));
+        assert_eq!(cache.len(), 1);
+    }
+}

@@ -1,0 +1,223 @@
+//! The staged lowering pipeline (DESIGN.md §2).
+//!
+//! Spec execution used to be orchestrated inline by the coordinator; it is
+//! now an explicit three-stage lowering with a cacheable artifact at the
+//! end:
+//!
+//! ```text
+//!   Spec ──(validate + build graph + codegen)──▶ RoutinePlan
+//!        ──(place + route + capacity check)───▶ PlacedGraph
+//!        ──(bundle)───────────────────────────▶ ExecutablePlan
+//! ```
+//!
+//! An [`ExecutablePlan`] is pure data (graph, placement, routing, generated
+//! sources, architecture) and is what every [`Backend`]
+//! (`crate::runtime::Backend`) consumes. [`Pipeline`] memoizes lowering in
+//! a [`PlanCache`] keyed on the spec's canonical JSON, so a repeated spec —
+//! the serving-heavy-traffic case — skips validation, codegen, placement
+//! and routing entirely and goes straight to execution.
+
+pub mod cache;
+
+pub use cache::{CacheStats, PlanCache};
+
+use std::sync::Arc;
+
+use crate::arch::ArchConfig;
+use crate::codegen::GeneratedProject;
+use crate::graph::build::{build_graph, BuildOutput};
+use crate::graph::place::{place, Placement};
+use crate::graph::route::{check_routing, route, Routing};
+use crate::graph::Graph;
+use crate::spec::Spec;
+use crate::Result;
+
+/// Stage-1 output: a validated spec with its dataflow graph and the
+/// generated Vitis sources (paper Fig. 1 ①–④ up to placement).
+#[derive(Debug, Clone)]
+pub struct RoutinePlan {
+    pub spec: Spec,
+    pub arch: ArchConfig,
+    pub built: BuildOutput,
+    pub project: GeneratedProject,
+}
+
+/// Stage-2 output: the graph mapped onto the array and its edges routed,
+/// with interface-capacity and conservation checks already passed.
+#[derive(Debug, Clone)]
+pub struct PlacedGraph {
+    pub placement: Placement,
+    pub routing: Routing,
+}
+
+/// Stage-3 output: everything a backend needs to execute the design.
+#[derive(Debug, Clone)]
+pub struct ExecutablePlan {
+    pub plan: RoutinePlan,
+    pub placed: PlacedGraph,
+}
+
+impl ExecutablePlan {
+    pub fn spec(&self) -> &Spec {
+        &self.plan.spec
+    }
+
+    pub fn arch(&self) -> &ArchConfig {
+        &self.plan.arch
+    }
+
+    pub fn graph(&self) -> &Graph {
+        &self.plan.built.graph
+    }
+
+    pub fn project(&self) -> &GeneratedProject {
+        &self.plan.project
+    }
+
+    pub fn placement(&self) -> &Placement {
+        &self.placed.placement
+    }
+
+    pub fn routing(&self) -> &Routing {
+        &self.placed.routing
+    }
+}
+
+/// Stage 1: validate the spec, resolve its architecture, build the
+/// dataflow graph and generate the Vitis sources.
+///
+/// `default_arch` backs the default platform ("vck5000"/empty); named
+/// platforms resolve through [`crate::spec::arch_for`].
+pub fn plan_routines(spec: &Spec, default_arch: &ArchConfig) -> Result<RoutinePlan> {
+    crate::spec::validate(spec)?;
+    let arch = if spec.platform.is_empty() || spec.platform == "vck5000" {
+        default_arch.clone()
+    } else {
+        crate::spec::arch_for(&spec.platform)?
+    };
+    let built = build_graph(spec)?;
+    let project = crate::codegen::generate_from_built(spec, &built)?;
+    Ok(RoutinePlan { spec: spec.clone(), arch, built, project })
+}
+
+/// Stage 2: place the plan's graph on the array and route every edge,
+/// verifying routing conservation.
+pub fn place_and_route(plan: &RoutinePlan) -> Result<PlacedGraph> {
+    let placement = place(&plan.built.graph, &plan.arch)?;
+    let routing = route(&plan.built.graph, &placement, &plan.arch)?;
+    check_routing(&plan.built.graph, &routing)?;
+    Ok(PlacedGraph { placement, routing })
+}
+
+/// One-shot uncached lowering with an explicit default architecture.
+pub fn lower_spec_with(spec: &Spec, default_arch: &ArchConfig) -> Result<ExecutablePlan> {
+    let plan = plan_routines(spec, default_arch)?;
+    let placed = place_and_route(&plan)?;
+    Ok(ExecutablePlan { plan, placed })
+}
+
+/// One-shot uncached lowering against the stock VCK5000.
+pub fn lower_spec(spec: &Spec) -> Result<ExecutablePlan> {
+    lower_spec_with(spec, &ArchConfig::vck5000())
+}
+
+/// The memoizing pipeline front-end: `lower` returns a shared
+/// [`ExecutablePlan`], reusing a cached one when the same spec (by
+/// canonical JSON) was lowered before.
+pub struct Pipeline {
+    default_arch: ArchConfig,
+    cache: PlanCache,
+}
+
+impl Pipeline {
+    /// Default plan-cache capacity (resident lowered designs).
+    pub const DEFAULT_CACHE_CAPACITY: usize = 128;
+
+    pub fn new(default_arch: ArchConfig) -> Pipeline {
+        Pipeline { default_arch, cache: PlanCache::new(Self::DEFAULT_CACHE_CAPACITY) }
+    }
+
+    pub fn with_cache_capacity(default_arch: ArchConfig, capacity: usize) -> Pipeline {
+        Pipeline { default_arch, cache: PlanCache::new(capacity) }
+    }
+
+    /// Lower a spec to an executable plan, consulting the plan cache.
+    pub fn lower(&self, spec: &Spec) -> Result<Arc<ExecutablePlan>> {
+        let key = spec.cache_key();
+        if let Some(hit) = self.cache.get(&key) {
+            return Ok(hit);
+        }
+        let plan = Arc::new(lower_spec_with(spec, &self.default_arch)?);
+        self.cache.insert(key, plan.clone());
+        Ok(plan)
+    }
+
+    pub fn cache(&self) -> &PlanCache {
+        &self.cache
+    }
+}
+
+impl Default for Pipeline {
+    fn default() -> Self {
+        Pipeline::new(ArchConfig::vck5000())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::RoutineKind;
+    use crate::spec::DataSource;
+
+    #[test]
+    fn stages_compose_for_single_routine() {
+        let spec = Spec::single(RoutineKind::Axpy, "a", 4096, DataSource::Pl);
+        let plan = plan_routines(&spec, &ArchConfig::vck5000()).unwrap();
+        assert_eq!(plan.built.graph.num_aie_kernels(), 1);
+        assert!(plan.project.get("aie/kernels/a.cc").is_some());
+        let placed = place_and_route(&plan).unwrap();
+        assert_eq!(placed.routing.pl_to_aie_used, 3);
+        let exec = ExecutablePlan { plan, placed };
+        assert_eq!(exec.graph().nodes.len(), exec.placement().locations.len());
+    }
+
+    #[test]
+    fn invalid_spec_fails_at_stage_one() {
+        let spec = Spec { routines: vec![], ..Default::default() };
+        assert!(plan_routines(&spec, &ArchConfig::vck5000()).is_err());
+    }
+
+    #[test]
+    fn pipeline_caches_repeated_specs() {
+        let pipeline = Pipeline::default();
+        let spec = Spec::axpydot_dataflow(4096, 2.0);
+        let a = pipeline.lower(&spec).unwrap();
+        let stats = pipeline.cache().stats();
+        assert_eq!((stats.hits, stats.misses), (0, 1));
+        let b = pipeline.lower(&spec).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second lowering must be the cached plan");
+        let stats = pipeline.cache().stats();
+        assert_eq!((stats.hits, stats.misses), (1, 1));
+    }
+
+    #[test]
+    fn different_specs_do_not_collide() {
+        let pipeline = Pipeline::default();
+        let a = pipeline
+            .lower(&Spec::single(RoutineKind::Axpy, "a", 4096, DataSource::Pl))
+            .unwrap();
+        let b = pipeline
+            .lower(&Spec::single(RoutineKind::Axpy, "a", 8192, DataSource::Pl))
+            .unwrap();
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert_eq!(pipeline.cache().stats().misses, 2);
+    }
+
+    #[test]
+    fn named_platform_overrides_default_arch() {
+        let mut spec = Spec::single(RoutineKind::Axpy, "a", 4096, DataSource::Pl);
+        spec.platform = "ryzen_ai".into();
+        let plan = plan_routines(&spec, &ArchConfig::vck5000()).unwrap();
+        assert_eq!(plan.arch, ArchConfig::ryzen_ai());
+    }
+}

@@ -1,0 +1,633 @@
+//! The execution-backend abstraction (DESIGN.md §3).
+//!
+//! A [`Backend`] consumes an [`ExecutablePlan`] produced by the staged
+//! pipeline and executes it: `prepare` binds the plan to the backend
+//! (validating that the backend can serve it), `execute` runs the design's
+//! routines on concrete inputs. Three implementations ship:
+//!
+//! * [`SimBackend`] — cycle-approximate VCK5000 timing via `crate::sim`,
+//!   with numerics served by the PJRT executor (falling back to the
+//!   reference implementations) — the paper's simulated-device series;
+//! * [`CpuBackend`] — the threaded CPU BLAS (`crate::blas::cpu`), the
+//!   measured OpenBLAS stand-in of Fig. 3;
+//! * [`ReferenceBackend`] — the scalar ground-truth kernels
+//!   (`crate::blas::reference`) every other backend is validated against.
+//!
+//! Adding a fourth backend is implementing the three trait methods — see
+//! DESIGN.md §3 for a worked ≤30-line example.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::blas::RoutineKind;
+use crate::pipeline::ExecutablePlan;
+use crate::runtime::{validate_inputs, NumericExecutor, Provenance};
+use crate::sim::SimReport;
+use crate::{Error, Result};
+
+/// Per-routine input vectors for one execution, indexed like
+/// `plan.spec().routines`. An empty set means "timing only" for backends
+/// that can produce timing without data (the simulator).
+#[derive(Debug, Clone, Default)]
+pub struct ExecInputs {
+    pub per_routine: Vec<Vec<Vec<f32>>>,
+}
+
+impl ExecInputs {
+    /// Deterministic standard-normal inputs for every routine of a spec.
+    pub fn random_for(spec: &crate::spec::Spec, seed: u64) -> ExecInputs {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let per_routine = spec
+            .routines
+            .iter()
+            .map(|r| {
+                r.kind
+                    .inputs()
+                    .iter()
+                    .map(|p| rng.normal_vec_f32(p.ty.elements(r.size)))
+                    .collect()
+            })
+            .collect();
+        ExecInputs { per_routine }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.per_routine.is_empty()
+    }
+
+    /// Inputs for routine `index`, erroring on arity mismatch.
+    fn for_routine(&self, index: usize, name: &str) -> Result<&[Vec<f32>]> {
+        self.per_routine
+            .get(index)
+            .map(Vec::as_slice)
+            .ok_or_else(|| Error::Runtime(format!("no inputs provided for routine {name:?}")))
+    }
+}
+
+/// One routine's execution result.
+#[derive(Debug, Clone)]
+pub struct RoutineResult {
+    pub routine: String,
+    pub kind: RoutineKind,
+    pub output: Vec<f32>,
+    /// Which concrete implementation produced the numbers.
+    pub provenance: Provenance,
+}
+
+/// The outcome of executing a prepared plan on one backend.
+#[derive(Debug, Clone)]
+pub struct ExecOutcome {
+    pub backend: &'static str,
+    /// Per-routine outputs (empty for timing-only executions).
+    pub results: Vec<RoutineResult>,
+    /// Simulated device timing, when the backend models the device.
+    pub sim: Option<SimReport>,
+    /// Host wallclock spent executing, seconds.
+    pub wall_s: f64,
+}
+
+/// A plan bound to a backend by [`Backend::prepare`].
+#[derive(Debug, Clone)]
+pub struct Prepared {
+    plan: Arc<ExecutablePlan>,
+    backend: &'static str,
+}
+
+impl Prepared {
+    pub fn new(plan: Arc<ExecutablePlan>, backend: &'static str) -> Prepared {
+        Prepared { plan, backend }
+    }
+
+    pub fn plan(&self) -> &ExecutablePlan {
+        &self.plan
+    }
+
+    pub fn plan_arc(&self) -> &Arc<ExecutablePlan> {
+        &self.plan
+    }
+
+    pub fn backend(&self) -> &'static str {
+        self.backend
+    }
+}
+
+/// An execution target for lowered plans.
+pub trait Backend {
+    /// Stable backend name (used in reports and outcome labels).
+    fn name(&self) -> &'static str;
+
+    /// Validate that this backend can serve `plan` and bind it.
+    fn prepare(&self, plan: Arc<ExecutablePlan>) -> Result<Prepared>;
+
+    /// Execute the prepared plan on `inputs`.
+    fn execute(&self, prepared: &Prepared, inputs: &ExecInputs) -> Result<ExecOutcome>;
+}
+
+fn check_prepared(prepared: &Prepared, backend: &'static str) -> Result<()> {
+    if prepared.backend() != backend {
+        return Err(Error::Runtime(format!(
+            "plan was prepared for backend {:?}, not {backend:?}",
+            prepared.backend()
+        )));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// SimBackend
+// ---------------------------------------------------------------------------
+
+/// The simulated VCK5000: DES timing from `crate::sim`, numerics from the
+/// PJRT executor (reference fallback) when one is attached.
+pub struct SimBackend<'e> {
+    executor: Option<&'e NumericExecutor>,
+}
+
+impl<'e> SimBackend<'e> {
+    /// Timing only: `execute` simulates the device; numeric requests are
+    /// served by the reference implementations.
+    pub fn timing_only() -> SimBackend<'static> {
+        SimBackend { executor: None }
+    }
+
+    /// Numerics flow through `executor` (PJRT artifacts when present).
+    pub fn with_executor(executor: &'e NumericExecutor) -> SimBackend<'e> {
+        SimBackend { executor: Some(executor) }
+    }
+
+    /// Execute with trace capture (Chrome-trace / Gantt export).
+    pub fn execute_traced(
+        &self,
+        prepared: &Prepared,
+    ) -> Result<(SimReport, crate::sim::trace::Trace)> {
+        check_prepared(prepared, self.name())?;
+        let plan = prepared.plan();
+        crate::sim::simulate_traced(plan.graph(), plan.placement(), plan.routing(), plan.arch())
+    }
+
+    fn run_numeric(
+        &self,
+        name: &str,
+        size: usize,
+        inputs: &[Vec<f32>],
+    ) -> Result<(Vec<f32>, Provenance)> {
+        match self.executor {
+            Some(ex) => ex.execute(name, size, inputs),
+            None => {
+                validate_inputs(name, size, inputs)?;
+                Ok((ReferenceBackend::execute_named(name, size, inputs)?, Provenance::Reference))
+            }
+        }
+    }
+}
+
+impl Backend for SimBackend<'_> {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn prepare(&self, plan: Arc<ExecutablePlan>) -> Result<Prepared> {
+        // the pipeline guarantees placement + routing; re-assert the cheap
+        // conservation invariant so a hand-built plan cannot slip through.
+        crate::graph::route::check_routing(plan.graph(), plan.routing())?;
+        Ok(Prepared::new(plan, self.name()))
+    }
+
+    fn execute(&self, prepared: &Prepared, inputs: &ExecInputs) -> Result<ExecOutcome> {
+        check_prepared(prepared, self.name())?;
+        let plan = prepared.plan();
+        let t0 = Instant::now();
+        let sim =
+            crate::sim::simulate(plan.graph(), plan.placement(), plan.routing(), plan.arch())?;
+        let mut results = Vec::new();
+        if !inputs.is_empty() {
+            for (i, r) in plan.spec().routines.iter().enumerate() {
+                let rin = inputs.for_routine(i, &r.name)?;
+                let (output, provenance) = self.run_numeric(r.kind.name(), r.size, rin)?;
+                results.push(RoutineResult {
+                    routine: r.name.clone(),
+                    kind: r.kind,
+                    output,
+                    provenance,
+                });
+            }
+        }
+        Ok(ExecOutcome {
+            backend: self.name(),
+            results,
+            sim: Some(sim),
+            wall_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CpuBackend
+// ---------------------------------------------------------------------------
+
+/// The threaded CPU BLAS baseline (OpenBLAS stand-in, Fig. 3 "cpu").
+pub struct CpuBackend;
+
+impl CpuBackend {
+    /// Run one routine on the optimized CPU kernels (inputs in
+    /// `RoutineKind::inputs()` order; outputs concatenated like the PJRT
+    /// tuple flattening).
+    pub fn run_kind(kind: RoutineKind, size: usize, inputs: &[Vec<f32>]) -> Vec<f32> {
+        use crate::blas::cpu;
+        let n = size;
+        match kind {
+            RoutineKind::Axpy => {
+                let mut z = vec![0.0; n];
+                cpu::axpy(inputs[0][0], &inputs[1], &inputs[2], &mut z);
+                z
+            }
+            RoutineKind::Scal => {
+                let mut z = vec![0.0; n];
+                cpu::scal(inputs[0][0], &inputs[1], &mut z);
+                z
+            }
+            RoutineKind::Axpby => {
+                let mut z = vec![0.0; n];
+                cpu::axpby(inputs[0][0], &inputs[2], inputs[1][0], &inputs[3], &mut z);
+                z
+            }
+            RoutineKind::Rot => {
+                let mut xo = vec![0.0; n];
+                let mut yo = vec![0.0; n];
+                cpu::rot(inputs[0][0], inputs[1][0], &inputs[2], &inputs[3], &mut xo, &mut yo);
+                xo.extend(yo);
+                xo
+            }
+            RoutineKind::Ger => {
+                let mut out = vec![0.0; n * n];
+                cpu::ger(inputs[0][0], &inputs[1], &inputs[2], &inputs[3], n, n, &mut out);
+                out
+            }
+            RoutineKind::Copy => inputs[0].clone(),
+            RoutineKind::Dot => vec![cpu::dot(&inputs[0], &inputs[1])],
+            RoutineKind::Nrm2 => vec![cpu::nrm2(&inputs[0])],
+            RoutineKind::Asum => vec![cpu::asum(&inputs[0])],
+            RoutineKind::Iamax => vec![cpu::iamax(&inputs[0]) as f32],
+            RoutineKind::Gemv => {
+                let mut out = vec![0.0; n];
+                cpu::gemv(
+                    inputs[0][0],
+                    &inputs[1],
+                    n,
+                    n,
+                    &inputs[2],
+                    inputs[3][0],
+                    &inputs[4],
+                    &mut out,
+                );
+                out
+            }
+            RoutineKind::Gemm => {
+                let mut out = vec![0.0; n * n];
+                cpu::gemm(
+                    inputs[0][0],
+                    &inputs[1],
+                    &inputs[2],
+                    n,
+                    n,
+                    n,
+                    inputs[3][0],
+                    &inputs[4],
+                    &mut out,
+                );
+                out
+            }
+            RoutineKind::Axpydot => {
+                vec![cpu::axpydot(inputs[0][0], &inputs[1], &inputs[2], &inputs[3])]
+            }
+        }
+    }
+}
+
+impl Backend for CpuBackend {
+    fn name(&self) -> &'static str {
+        "cpu"
+    }
+
+    fn prepare(&self, plan: Arc<ExecutablePlan>) -> Result<Prepared> {
+        Ok(Prepared::new(plan, self.name()))
+    }
+
+    fn execute(&self, prepared: &Prepared, inputs: &ExecInputs) -> Result<ExecOutcome> {
+        check_prepared(prepared, self.name())?;
+        let plan = prepared.plan();
+        let t0 = Instant::now();
+        let mut results = Vec::new();
+        for (i, r) in plan.spec().routines.iter().enumerate() {
+            let rin = inputs.for_routine(i, &r.name)?;
+            validate_inputs(r.kind.name(), r.size, rin)?;
+            let output = std::hint::black_box(Self::run_kind(r.kind, r.size, rin));
+            results.push(RoutineResult {
+                routine: r.name.clone(),
+                kind: r.kind,
+                output,
+                provenance: Provenance::Cpu,
+            });
+        }
+        Ok(ExecOutcome {
+            backend: self.name(),
+            results,
+            sim: None,
+            wall_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ReferenceBackend
+// ---------------------------------------------------------------------------
+
+/// The scalar reference implementations — ground truth for every other
+/// backend (and the PJRT fallback path).
+pub struct ReferenceBackend;
+
+impl ReferenceBackend {
+    /// Execute a routine by registry name with flat inputs in artifact
+    /// parameter order. Supports the `axpy_neg` artifact alias
+    /// (z = w − αv with params (α, v, w)).
+    pub fn execute_named(name: &str, size: usize, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        use crate::blas::reference as r;
+        let n = size;
+        let need = |k: usize| -> Result<()> {
+            if inputs.len() != k {
+                return Err(Error::Runtime(format!(
+                    "{name}: expected {k} inputs, got {}",
+                    inputs.len()
+                )));
+            }
+            Ok(())
+        };
+        let kind = RoutineKind::from_name(name.strip_suffix("_neg").unwrap_or(name))
+            .or(match name {
+                "axpy_neg" => Some(RoutineKind::Axpy),
+                _ => None,
+            })
+            .ok_or_else(|| Error::Runtime(format!("unknown routine {name:?}")))?;
+        match (name, kind) {
+            ("axpy", _) => {
+                need(3)?;
+                let mut z = vec![0.0; n];
+                r::axpy(inputs[0][0], &inputs[1], &inputs[2], &mut z);
+                Ok(z)
+            }
+            ("axpy_neg", _) => {
+                need(3)?;
+                let mut z = vec![0.0; n];
+                r::axpy(-inputs[0][0], &inputs[1], &inputs[2], &mut z);
+                Ok(z)
+            }
+            (_, RoutineKind::Axpby) => {
+                need(4)?;
+                let mut z = vec![0.0; n];
+                r::axpby(inputs[0][0], &inputs[2], inputs[1][0], &inputs[3], &mut z);
+                Ok(z)
+            }
+            (_, RoutineKind::Rot) => {
+                // concatenated outputs (x_out ++ y_out), matching the PJRT
+                // tuple flattening.
+                need(4)?;
+                let mut xo = vec![0.0; n];
+                let mut yo = vec![0.0; n];
+                r::rot(inputs[0][0], inputs[1][0], &inputs[2], &inputs[3], &mut xo, &mut yo);
+                xo.extend(yo);
+                Ok(xo)
+            }
+            (_, RoutineKind::Ger) => {
+                need(4)?;
+                let mut out = vec![0.0; n * n];
+                r::ger(inputs[0][0], &inputs[1], &inputs[2], &inputs[3], n, n, &mut out);
+                Ok(out)
+            }
+            (_, RoutineKind::Scal) => {
+                need(2)?;
+                let mut z = vec![0.0; n];
+                r::scal(inputs[0][0], &inputs[1], &mut z);
+                Ok(z)
+            }
+            (_, RoutineKind::Copy) => {
+                need(1)?;
+                Ok(inputs[0].clone())
+            }
+            (_, RoutineKind::Dot) => {
+                need(2)?;
+                Ok(vec![r::dot(&inputs[0], &inputs[1])])
+            }
+            (_, RoutineKind::Nrm2) => {
+                need(1)?;
+                Ok(vec![r::nrm2(&inputs[0])])
+            }
+            (_, RoutineKind::Asum) => {
+                need(1)?;
+                Ok(vec![r::asum(&inputs[0])])
+            }
+            (_, RoutineKind::Iamax) => {
+                need(1)?;
+                Ok(vec![r::iamax(&inputs[0]) as f32])
+            }
+            (_, RoutineKind::Gemv) => {
+                need(5)?;
+                let mut out = vec![0.0; n];
+                r::gemv(
+                    inputs[0][0],
+                    &inputs[1],
+                    n,
+                    n,
+                    &inputs[2],
+                    inputs[3][0],
+                    &inputs[4],
+                    &mut out,
+                );
+                Ok(out)
+            }
+            (_, RoutineKind::Gemm) => {
+                need(5)?;
+                let mut out = vec![0.0; n * n];
+                r::gemm(
+                    inputs[0][0],
+                    &inputs[1],
+                    &inputs[2],
+                    n,
+                    n,
+                    n,
+                    inputs[3][0],
+                    &inputs[4],
+                    &mut out,
+                );
+                Ok(out)
+            }
+            (_, RoutineKind::Axpydot) => {
+                need(4)?;
+                Ok(vec![r::axpydot(inputs[0][0], &inputs[1], &inputs[2], &inputs[3])])
+            }
+            _ => Err(Error::Runtime(format!("unhandled routine {name:?}"))),
+        }
+    }
+
+    /// Execute by routine kind.
+    pub fn run_kind(kind: RoutineKind, size: usize, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        Self::execute_named(kind.name(), size, inputs)
+    }
+}
+
+impl Backend for ReferenceBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn prepare(&self, plan: Arc<ExecutablePlan>) -> Result<Prepared> {
+        Ok(Prepared::new(plan, self.name()))
+    }
+
+    fn execute(&self, prepared: &Prepared, inputs: &ExecInputs) -> Result<ExecOutcome> {
+        check_prepared(prepared, self.name())?;
+        let plan = prepared.plan();
+        let t0 = Instant::now();
+        let mut results = Vec::new();
+        for (i, r) in plan.spec().routines.iter().enumerate() {
+            let rin = inputs.for_routine(i, &r.name)?;
+            validate_inputs(r.kind.name(), r.size, rin)?;
+            let output = Self::run_kind(r.kind, r.size, rin)?;
+            results.push(RoutineResult {
+                routine: r.name.clone(),
+                kind: r.kind,
+                output,
+                provenance: Provenance::Reference,
+            });
+        }
+        Ok(ExecOutcome {
+            backend: self.name(),
+            results,
+            sim: None,
+            wall_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::PortType;
+    use crate::spec::{DataSource, Spec};
+    use crate::util::rng::Rng;
+
+    fn plan(spec: &Spec) -> Arc<ExecutablePlan> {
+        Arc::new(crate::pipeline::lower_spec(spec).unwrap())
+    }
+
+    #[test]
+    fn reference_execute_axpy() {
+        let out = ReferenceBackend::execute_named(
+            "axpy",
+            3,
+            &[vec![2.0], vec![1.0, 2.0, 3.0], vec![10.0, 10.0, 10.0]],
+        )
+        .unwrap();
+        assert_eq!(out, vec![12.0, 14.0, 16.0]);
+    }
+
+    #[test]
+    fn reference_execute_axpy_neg_matches_paper_definition() {
+        // z = w - alpha*v
+        let out = ReferenceBackend::execute_named(
+            "axpy_neg",
+            2,
+            &[vec![2.0], vec![1.0, 1.0], vec![5.0, 7.0]],
+        )
+        .unwrap();
+        assert_eq!(out, vec![3.0, 5.0]);
+    }
+
+    #[test]
+    fn reference_execute_wrong_arity_fails() {
+        assert!(ReferenceBackend::execute_named("dot", 4, &[vec![0.0; 4]]).is_err());
+        assert!(ReferenceBackend::execute_named("bogus", 4, &[]).is_err());
+    }
+
+    #[test]
+    fn cpu_run_covers_all_kinds() {
+        let mut rng = Rng::new(3);
+        for kind in RoutineKind::ALL {
+            let n = 64;
+            let inputs: Vec<Vec<f32>> = kind
+                .inputs()
+                .iter()
+                .map(|p| rng.normal_vec_f32(p.ty.elements(n)))
+                .collect();
+            let out = CpuBackend::run_kind(kind, n, &inputs);
+            assert!(!out.is_empty(), "{kind}");
+            assert!(out.iter().all(|v| v.is_finite()), "{kind}");
+        }
+    }
+
+    #[test]
+    fn backend_names_are_distinct() {
+        let names = [
+            SimBackend::timing_only().name(),
+            CpuBackend.name(),
+            ReferenceBackend.name(),
+        ];
+        assert_eq!(names, ["sim", "cpu", "reference"]);
+    }
+
+    #[test]
+    fn sim_backend_times_without_inputs() {
+        let spec = Spec::single(RoutineKind::Axpy, "a", 4096, DataSource::Pl);
+        let backend = SimBackend::timing_only();
+        let prepared = backend.prepare(plan(&spec)).unwrap();
+        let outcome = backend.execute(&prepared, &ExecInputs::default()).unwrap();
+        assert!(outcome.sim.expect("sim timing").makespan_s > 0.0);
+        assert!(outcome.results.is_empty());
+    }
+
+    #[test]
+    fn cpu_and_reference_agree_via_trait() {
+        let spec = Spec::single(RoutineKind::Axpy, "a", 1024, DataSource::Pl);
+        let p = plan(&spec);
+        let inputs = ExecInputs::random_for(&spec, 11);
+        let cpu = CpuBackend.execute(&CpuBackend.prepare(p.clone()).unwrap(), &inputs).unwrap();
+        let reference = ReferenceBackend
+            .execute(&ReferenceBackend.prepare(p).unwrap(), &inputs)
+            .unwrap();
+        assert_eq!(cpu.results[0].provenance, Provenance::Cpu);
+        assert_eq!(reference.results[0].provenance, Provenance::Reference);
+        for (a, b) in cpu.results[0].output.iter().zip(&reference.results[0].output) {
+            assert!((a - b).abs() <= 1e-5 * (1.0 + b.abs()));
+        }
+    }
+
+    #[test]
+    fn prepared_plan_is_backend_checked() {
+        let spec = Spec::single(RoutineKind::Dot, "d", 256, DataSource::Pl);
+        let prepared = CpuBackend.prepare(plan(&spec)).unwrap();
+        let err = ReferenceBackend.execute(&prepared, &ExecInputs::random_for(&spec, 1));
+        assert!(matches!(err, Err(Error::Runtime(_))));
+    }
+
+    #[test]
+    fn missing_inputs_error_cleanly() {
+        let spec = Spec::single(RoutineKind::Dot, "d", 256, DataSource::Pl);
+        let prepared = CpuBackend.prepare(plan(&spec)).unwrap();
+        assert!(CpuBackend.execute(&prepared, &ExecInputs::default()).is_err());
+    }
+
+    #[test]
+    fn exec_inputs_match_port_shapes() {
+        let spec = Spec::axpydot_dataflow(512, 2.0);
+        let inputs = ExecInputs::random_for(&spec, 5);
+        assert_eq!(inputs.per_routine.len(), 2);
+        for (r, rin) in spec.routines.iter().zip(&inputs.per_routine) {
+            assert_eq!(rin.len(), r.kind.inputs().len());
+            for (p, v) in r.kind.inputs().iter().zip(rin) {
+                assert_eq!(v.len(), p.ty.elements(r.size));
+                if p.ty == PortType::Scalar {
+                    assert_eq!(v.len(), 1);
+                }
+            }
+        }
+    }
+}

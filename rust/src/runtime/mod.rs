@@ -1,62 +1,89 @@
-//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from
-//! Rust — the request path never touches Python.
+//! Execution runtime: the [`Backend`] trait with its three in-crate
+//! implementations, plus the PJRT artifact executor.
 //!
-//! Follows the reference wiring in `/opt/xla-example/load_hlo`: HLO *text*
-//! (not serialized protos — jax ≥ 0.5 emits 64-bit instruction ids that
-//! xla_extension 0.5.1 rejects) is parsed by `HloModuleProto::from_text_file`,
-//! compiled once per (routine, size) on the PJRT CPU client and cached.
+//! The PJRT path (feature `pjrt`) follows the reference wiring in
+//! `/opt/xla-example/load_hlo`: HLO *text* (not serialized protos — jax ≥
+//! 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects) is
+//! parsed by `HloModuleProto::from_text_file`, compiled once per (routine,
+//! size) on the PJRT CPU client and cached. The default build has no
+//! external dependencies: `NumericExecutor` then always serves requests
+//! from [`ReferenceBackend`], so the whole system works without `make
+//! artifacts` or the vendored `xla` crate closure (DESIGN.md §1).
 
+pub mod backend;
 pub mod manifest;
 
 use std::cell::RefCell;
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::path::Path;
 
+pub use backend::{
+    Backend, CpuBackend, ExecInputs, ExecOutcome, Prepared, ReferenceBackend, RoutineResult,
+    SimBackend,
+};
 pub use manifest::Manifest;
 
 use crate::blas::RoutineKind;
 use crate::{Error, Result};
 
-/// Executes precompiled BLAS artifacts via PJRT, with a reference-Rust
-/// fallback for shapes that were not precompiled.
+/// Where a numeric result came from (per-routine observability; the
+/// coarse-grained execution target is the [`Backend`] trait).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Provenance {
+    /// A precompiled PJRT artifact (feature `pjrt`).
+    Pjrt,
+    /// The scalar reference implementation ([`ReferenceBackend`]).
+    Reference,
+    /// The threaded CPU BLAS ([`CpuBackend`]).
+    Cpu,
+}
+
+/// Executes precompiled BLAS artifacts via PJRT, with the reference
+/// backend serving shapes that were not precompiled (or every request
+/// when the `pjrt` feature is disabled).
 pub struct NumericExecutor {
     manifest: Manifest,
+    #[cfg(feature = "pjrt")]
     client: Option<xla::PjRtClient>,
     /// key → compiled executable (compile once, execute many).
+    #[cfg(feature = "pjrt")]
     cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
     /// Executions served by PJRT vs the fallback (observability).
     pub pjrt_calls: RefCell<u64>,
     pub fallback_calls: RefCell<u64>,
 }
 
-/// Where a result came from.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Backend {
-    Pjrt,
-    ReferenceFallback,
-}
-
 impl NumericExecutor {
-    /// Create an executor over `artifacts_dir`. The PJRT client is created
-    /// lazily-but-once here; failure to initialise it (or an empty
-    /// manifest) degrades to the reference fallback rather than erroring,
-    /// so the system works before `make artifacts`.
+    /// Create an executor over `artifacts_dir`. With the `pjrt` feature the
+    /// client is created lazily-but-once here; failure to initialise it (or
+    /// an empty manifest) degrades to the reference backend rather than
+    /// erroring, so the system works before `make artifacts`.
     pub fn new(artifacts_dir: &Path) -> Result<NumericExecutor> {
         let manifest = Manifest::load(artifacts_dir)?;
+        #[cfg(feature = "pjrt")]
         let client = if manifest.is_empty() {
             None
         } else {
             match xla::PjRtClient::cpu() {
                 Ok(c) => Some(c),
                 Err(e) => {
-                    log::warn!("PJRT CPU client unavailable ({e}); using reference fallback");
+                    crate::log_warn!("PJRT CPU client unavailable ({e}); using reference backend");
                     None
                 }
             }
         };
+        #[cfg(not(feature = "pjrt"))]
+        if !manifest.is_empty() {
+            crate::log_warn!(
+                "artifacts present but the `pjrt` feature is disabled; numerics use the reference backend"
+            );
+        }
         Ok(NumericExecutor {
             manifest,
+            #[cfg(feature = "pjrt")]
             client,
+            #[cfg(feature = "pjrt")]
             cache: RefCell::new(HashMap::new()),
             pjrt_calls: RefCell::new(0),
             fallback_calls: RefCell::new(0),
@@ -68,35 +95,44 @@ impl NumericExecutor {
     }
 
     /// True when a PJRT artifact will serve this (routine, size).
+    #[cfg(feature = "pjrt")]
     pub fn has_artifact(&self, routine: &str, size: usize) -> bool {
         self.client.is_some() && self.manifest.find(routine, size).is_some()
     }
 
+    /// Without the `pjrt` feature no artifact is ever served.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn has_artifact(&self, _routine: &str, _size: usize) -> bool {
+        false
+    }
+
     /// Execute routine `name` at problem size `size` with flat f32 inputs
-    /// (in manifest parameter order). Returns (output, backend).
+    /// (in manifest parameter order). Returns (output, provenance).
     pub fn execute(
         &self,
         name: &str,
         size: usize,
         inputs: &[Vec<f32>],
-    ) -> Result<(Vec<f32>, Backend)> {
+    ) -> Result<(Vec<f32>, Provenance)> {
         validate_inputs(name, size, inputs)?;
+        #[cfg(feature = "pjrt")]
         if self.has_artifact(name, size) {
             match self.execute_pjrt(name, size, inputs) {
                 Ok(out) => {
                     *self.pjrt_calls.borrow_mut() += 1;
-                    return Ok((out, Backend::Pjrt));
+                    return Ok((out, Provenance::Pjrt));
                 }
                 Err(e) => {
-                    log::warn!("PJRT execution of {name}_n{size} failed ({e}); falling back");
+                    crate::log_warn!("PJRT execution of {name}_n{size} failed ({e}); falling back");
                 }
             }
         }
-        let out = reference_execute(name, size, inputs)?;
+        let out = ReferenceBackend::execute_named(name, size, inputs)?;
         *self.fallback_calls.borrow_mut() += 1;
-        Ok((out, Backend::ReferenceFallback))
+        Ok((out, Provenance::Reference))
     }
 
+    #[cfg(feature = "pjrt")]
     fn execute_pjrt(&self, name: &str, size: usize, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
         let entry = self
             .manifest
@@ -168,7 +204,7 @@ impl NumericExecutor {
 }
 
 /// Validate input arity and lengths against the routine's port signature
-/// *before* dispatching to either backend — malformed requests must error,
+/// *before* dispatching to any backend — malformed requests must error,
 /// not fall back or panic.
 pub fn validate_inputs(name: &str, size: usize, inputs: &[Vec<f32>]) -> Result<()> {
     let base = if name == "axpy_neg" { "axpy" } else { name };
@@ -195,105 +231,6 @@ pub fn validate_inputs(name: &str, size: usize, inputs: &[Vec<f32>]) -> Result<(
     Ok(())
 }
 
-/// Reference-Rust execution of a routine given flat inputs in artifact
-/// parameter order (the same order `RoutineKind::inputs()` declares).
-pub fn reference_execute(name: &str, size: usize, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
-    use crate::blas::reference as r;
-    let n = size;
-    let need = |k: usize| -> Result<()> {
-        if inputs.len() != k {
-            return Err(Error::Runtime(format!("{name}: expected {k} inputs, got {}", inputs.len())));
-        }
-        Ok(())
-    };
-    let kind = RoutineKind::from_name(name.strip_suffix("_neg").unwrap_or(name))
-        .or(match name {
-            "axpy_neg" => Some(RoutineKind::Axpy),
-            _ => None,
-        })
-        .ok_or_else(|| Error::Runtime(format!("unknown routine {name:?}")))?;
-    match (name, kind) {
-        ("axpy", _) => {
-            need(3)?;
-            let mut z = vec![0.0; n];
-            r::axpy(inputs[0][0], &inputs[1], &inputs[2], &mut z);
-            Ok(z)
-        }
-        ("axpy_neg", _) => {
-            // z = w - alpha*v with params (alpha, v, w)
-            need(3)?;
-            let mut z = vec![0.0; n];
-            r::axpy(-inputs[0][0], &inputs[1], &inputs[2], &mut z);
-            Ok(z)
-        }
-        (_, RoutineKind::Axpby) => {
-            need(4)?;
-            let mut z = vec![0.0; n];
-            r::axpby(inputs[0][0], &inputs[2], inputs[1][0], &inputs[3], &mut z);
-            Ok(z)
-        }
-        (_, RoutineKind::Rot) => {
-            // concatenated outputs (x_out ++ y_out), matching the PJRT
-            // tuple flattening.
-            need(4)?;
-            let mut xo = vec![0.0; n];
-            let mut yo = vec![0.0; n];
-            r::rot(inputs[0][0], inputs[1][0], &inputs[2], &inputs[3], &mut xo, &mut yo);
-            xo.extend(yo);
-            Ok(xo)
-        }
-        (_, RoutineKind::Ger) => {
-            need(4)?;
-            let mut out = vec![0.0; n * n];
-            r::ger(inputs[0][0], &inputs[1], &inputs[2], &inputs[3], n, n, &mut out);
-            Ok(out)
-        }
-        (_, RoutineKind::Scal) => {
-            need(2)?;
-            let mut z = vec![0.0; n];
-            r::scal(inputs[0][0], &inputs[1], &mut z);
-            Ok(z)
-        }
-        (_, RoutineKind::Copy) => {
-            need(1)?;
-            Ok(inputs[0].clone())
-        }
-        (_, RoutineKind::Dot) => {
-            need(2)?;
-            Ok(vec![r::dot(&inputs[0], &inputs[1])])
-        }
-        (_, RoutineKind::Nrm2) => {
-            need(1)?;
-            Ok(vec![r::nrm2(&inputs[0])])
-        }
-        (_, RoutineKind::Asum) => {
-            need(1)?;
-            Ok(vec![r::asum(&inputs[0])])
-        }
-        (_, RoutineKind::Iamax) => {
-            need(1)?;
-            Ok(vec![r::iamax(&inputs[0]) as f32])
-        }
-        (_, RoutineKind::Gemv) => {
-            need(5)?;
-            let mut out = vec![0.0; n];
-            r::gemv(inputs[0][0], &inputs[1], n, n, &inputs[2], inputs[3][0], &inputs[4], &mut out);
-            Ok(out)
-        }
-        (_, RoutineKind::Gemm) => {
-            need(5)?;
-            let mut out = vec![0.0; n * n];
-            r::gemm(inputs[0][0], &inputs[1], &inputs[2], n, n, n, inputs[3][0], &inputs[4], &mut out);
-            Ok(out)
-        }
-        (_, RoutineKind::Axpydot) => {
-            need(4)?;
-            Ok(vec![r::axpydot(inputs[0][0], &inputs[1], &inputs[2], &inputs[3])])
-        }
-        _ => Err(Error::Runtime(format!("unhandled routine {name:?}"))),
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -304,45 +241,33 @@ mod tests {
     }
 
     #[test]
-    fn reference_execute_axpy() {
-        let out = reference_execute(
-            "axpy",
-            3,
-            &[vec![2.0], vec![1.0, 2.0, 3.0], vec![10.0, 10.0, 10.0]],
-        )
-        .unwrap();
-        assert_eq!(out, vec![12.0, 14.0, 16.0]);
-    }
-
-    #[test]
-    fn reference_execute_axpy_neg_matches_paper_definition() {
-        // z = w - alpha*v
-        let out =
-            reference_execute("axpy_neg", 2, &[vec![2.0], vec![1.0, 1.0], vec![5.0, 7.0]]).unwrap();
-        assert_eq!(out, vec![3.0, 5.0]);
-    }
-
-    #[test]
-    fn reference_execute_wrong_arity_fails() {
-        assert!(reference_execute("dot", 4, &[vec![0.0; 4]]).is_err());
-        assert!(reference_execute("bogus", 4, &[]).is_err());
-    }
-
-    #[test]
     fn executor_without_artifacts_falls_back() {
         let ex = NumericExecutor::new(Path::new("/nonexistent_dir_xyz")).unwrap();
-        let (out, backend) = ex
+        let (out, provenance) = ex
             .execute("dot", 4, &[vec![1.0, 2.0, 3.0, 4.0], vec![1.0, 1.0, 1.0, 1.0]])
             .unwrap();
-        assert_eq!(backend, Backend::ReferenceFallback);
+        assert_eq!(provenance, Provenance::Reference);
         assert_eq!(out, vec![10.0]);
+        assert_eq!(*ex.fallback_calls.borrow(), 1);
+    }
+
+    #[test]
+    fn malformed_request_is_error_not_fallback() {
+        let ex = NumericExecutor::new(Path::new("/nonexistent_dir_xyz")).unwrap();
+        assert!(ex.execute("dot", 4, &[vec![0.0; 4]]).is_err());
+        assert!(ex.execute("bogus", 4, &[]).is_err());
+        assert_eq!(*ex.fallback_calls.borrow(), 0);
     }
 
     /// The cross-language correctness loop: PJRT artifact (Pallas-lowered
     /// HLO) vs the Rust reference, on every precompiled routine. Skips
-    /// silently when `make artifacts` has not run.
+    /// silently when `make artifacts` has not run or `pjrt` is disabled.
     #[test]
     fn pjrt_matches_reference_for_all_artifacts() {
+        if cfg!(not(feature = "pjrt")) {
+            eprintln!("skipping: pjrt feature disabled");
+            return;
+        }
         let ex = NumericExecutor::new(&artifacts_dir()).unwrap();
         if ex.manifest().is_empty() {
             eprintln!("skipping: no artifacts built");
@@ -362,9 +287,10 @@ mod tests {
                     rng.normal_vec_f32(len)
                 })
                 .collect();
-            let (pjrt_out, backend) = ex.execute(&entry.routine, entry.size, &inputs).unwrap();
-            assert_eq!(backend, Backend::Pjrt, "{}", entry.key);
-            let ref_out = reference_execute(&entry.routine, entry.size, &inputs).unwrap();
+            let (pjrt_out, provenance) = ex.execute(&entry.routine, entry.size, &inputs).unwrap();
+            assert_eq!(provenance, Provenance::Pjrt, "{}", entry.key);
+            let ref_out =
+                ReferenceBackend::execute_named(&entry.routine, entry.size, &inputs).unwrap();
             assert_eq!(pjrt_out.len(), ref_out.len(), "{}", entry.key);
             if entry.routine == "iamax" {
                 // index equality
@@ -372,11 +298,7 @@ mod tests {
             } else {
                 for (i, (a, b)) in pjrt_out.iter().zip(&ref_out).enumerate() {
                     let tol = 2e-3 * (1.0 + b.abs());
-                    assert!(
-                        (a - b).abs() <= tol,
-                        "{}[{i}]: pjrt {a} vs ref {b}",
-                        entry.key
-                    );
+                    assert!((a - b).abs() <= tol, "{}[{i}]: pjrt {a} vs ref {b}", entry.key);
                 }
             }
             checked += 1;
@@ -385,6 +307,7 @@ mod tests {
         assert_eq!(*ex.fallback_calls.borrow(), 0);
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn pjrt_compile_cache_is_reused() {
         let ex = NumericExecutor::new(&artifacts_dir()).unwrap();

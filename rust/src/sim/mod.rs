@@ -285,15 +285,16 @@ fn simulate_inner(
     Ok(report::build(graph, placement, routing, arch, makespan, &busy_total, &sched.iter().map(|s| s.iters).collect::<Vec<_>>()))
 }
 
-/// Convenience: build → place → route → simulate a spec.
+/// Simulate an already-lowered plan (the [`crate::runtime::SimBackend`]
+/// execution primitive).
+pub fn simulate_plan(plan: &crate::pipeline::ExecutablePlan) -> Result<SimReport> {
+    simulate(plan.graph(), plan.placement(), plan.routing(), plan.arch())
+}
+
+/// Convenience: lower a spec through the staged pipeline (uncached) and
+/// simulate it.
 pub fn simulate_spec(spec: &crate::spec::Spec) -> Result<SimReport> {
-    let arch = crate::spec::arch_for(&spec.platform)?;
-    crate::spec::validate(spec)?;
-    let built = crate::graph::build::build_graph(spec)?;
-    let placement = crate::graph::place::place(&built.graph, &arch)?;
-    let routing = crate::graph::route::route(&built.graph, &placement, &arch)?;
-    crate::graph::route::check_routing(&built.graph, &routing)?;
-    simulate(&built.graph, &placement, &routing, &arch)
+    simulate_plan(&crate::pipeline::lower_spec(spec)?)
 }
 
 #[cfg(test)]

@@ -351,6 +351,14 @@ impl Spec {
         self.routines.iter().find(|r| r.name == name)
     }
 
+    /// Canonical plan-cache key: the compact canonical JSON rendering,
+    /// which covers the routine set, sizes, every non-functional parameter
+    /// and the platform (specs equal under [`PartialEq`] produce equal
+    /// keys; see `pipeline::cache`).
+    pub fn cache_key(&self) -> String {
+        self.to_json().to_compact()
+    }
+
     /// Render back to canonical JSON (round-trips through `from_json`).
     pub fn to_json(&self) -> Json {
         use crate::util::json::obj;
@@ -564,5 +572,16 @@ mod tests {
         let s = Spec::axpydot_dataflow(4096, 2.0);
         validate(&s).unwrap();
         assert_eq!(s.routines[0].alpha, Some(-2.0));
+    }
+
+    #[test]
+    fn cache_key_distinguishes_specs() {
+        let a = Spec::single(RoutineKind::Axpy, "a", 4096, DataSource::Pl);
+        let b = Spec::single(RoutineKind::Axpy, "a", 8192, DataSource::Pl);
+        assert_ne!(a.cache_key(), b.cache_key());
+        assert_eq!(a.cache_key(), a.clone().cache_key());
+        let mut c = a.clone();
+        c.routines[0].window = Some(1024);
+        assert_ne!(a.cache_key(), c.cache_key(), "non-functional params must key separately");
     }
 }

@@ -2,7 +2,9 @@
 //!
 //! Supports subcommands, `--flag`, `--opt value` / `--opt=value`,
 //! positional arguments, defaults, required options, and generated
-//! `--help` text — the subset `aieblas`' CLI (rust/src/main.rs) needs.
+//! `--help` text — the subset `aieblas`' CLI (rust/src/main.rs) needs,
+//! including the plan-cache demo surface (`run --repeat N` re-runs a
+//! spec so warm lowerings hit the cache).
 
 use std::collections::BTreeMap;
 use std::fmt;

@@ -1,56 +1,123 @@
-//! Tiny `log`-facade backend writing to stderr.
+//! Tiny in-tree logging facade writing to stderr (no `log` crate in the
+//! offline registry — DESIGN.md §1).
 //!
 //! Level comes from `AIEBLAS_LOG` (error|warn|info|debug|trace), default
-//! `info`. Installed once by `aieblas::init()`.
+//! `info`. Installed once by `aieblas::init()`; call sites use the
+//! crate-root macros `log_error!` / `log_warn!` / `log_info!` /
+//! `log_debug!`.
 
-use log::{Level, LevelFilter, Metadata, Record};
+use std::fmt;
+use std::sync::atomic::{AtomicU8, Ordering};
 
-struct StderrLogger;
+/// Log severity, most severe first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
 
-impl log::Log for StderrLogger {
-    fn enabled(&self, metadata: &Metadata) -> bool {
-        metadata.level() <= log::max_level()
-    }
-
-    fn log(&self, record: &Record) {
-        if !self.enabled(record.metadata()) {
-            return;
-        }
-        let tag = match record.level() {
+impl Level {
+    fn tag(self) -> &'static str {
+        match self {
             Level::Error => "ERROR",
             Level::Warn => "WARN ",
             Level::Info => "INFO ",
             Level::Debug => "DEBUG",
             Level::Trace => "TRACE",
-        };
-        eprintln!("[{tag}] {}: {}", record.target(), record.args());
+        }
     }
-
-    fn flush(&self) {}
 }
 
-static LOGGER: StderrLogger = StderrLogger;
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
 
-/// Install the logger (idempotent).
+/// Install the logger level from the environment (idempotent).
 pub fn init() {
     let level = match std::env::var("AIEBLAS_LOG").as_deref() {
-        Ok("error") => LevelFilter::Error,
-        Ok("warn") => LevelFilter::Warn,
-        Ok("debug") => LevelFilter::Debug,
-        Ok("trace") => LevelFilter::Trace,
-        _ => LevelFilter::Info,
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        _ => Level::Info,
     };
-    // set_logger fails if already installed — fine, keep the first one.
-    let _ = log::set_logger(&LOGGER);
-    log::set_max_level(level);
+    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Is `level` currently emitted?
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit one record. Prefer the `log_*!` macros, which fill in the target.
+pub fn log(level: Level, target: &str, args: fmt::Arguments<'_>) {
+    if enabled(level) {
+        eprintln!("[{}] {target}: {args}", level.tag());
+    }
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Error,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Warn,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Info,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Debug,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn init_is_idempotent() {
-        super::init();
-        super::init();
-        log::info!("logging smoke test");
+        init();
+        init();
+        crate::log_info!("logging smoke test");
+    }
+
+    #[test]
+    fn levels_order() {
+        assert!(Level::Error < Level::Trace);
+        assert!(enabled(Level::Error));
+        if std::env::var("AIEBLAS_LOG").is_err() {
+            assert!(!enabled(Level::Trace));
+        }
     }
 }

@@ -1,6 +1,8 @@
-//! Support substrates implemented in-tree (the offline registry only has
-//! the `xla` crate closure — see DESIGN.md §1): JSON, PRNG, CLI parsing,
-//! thread pool, property testing, benchmarking, tables, logging.
+//! Support substrates implemented in-tree — the default build has zero
+//! external dependencies; the offline registry carries only the optional
+//! `xla` crate closure behind the `pjrt` feature (DESIGN.md §1): JSON,
+//! PRNG, CLI parsing, thread pool, property testing, benchmarking,
+//! tables, logging.
 
 pub mod bench;
 pub mod cli;

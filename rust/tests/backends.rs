@@ -1,0 +1,143 @@
+//! Backend-parity and plan-cache integration tests (ISSUE 1 acceptance):
+//! every non-composite routine kind, at two sizes, must produce numerically
+//! agreeing outputs through `CpuBackend`, `ReferenceBackend` and
+//! `SimBackend` via the full trait interface; and a repeated `run_spec`
+//! must be served from the plan cache (hit counter > 0, no re-lowering).
+
+use std::sync::Arc;
+
+use aieblas::blas::RoutineKind;
+use aieblas::coordinator::{AieBlas, Config};
+use aieblas::pipeline::{lower_spec, Pipeline};
+use aieblas::runtime::{
+    Backend, CpuBackend, ExecInputs, NumericExecutor, ReferenceBackend, SimBackend,
+};
+use aieblas::spec::{DataSource, Spec};
+
+fn close(a: f32, b: f32, tol: f32) -> bool {
+    (a - b).abs() <= tol * (1.0 + b.abs())
+}
+
+fn sizes_for(kind: RoutineKind) -> [usize; 2] {
+    if kind.level() >= 2 {
+        [16, 64]
+    } else {
+        [256, 4096]
+    }
+}
+
+#[test]
+fn all_backends_agree_on_every_noncomposite_routine() {
+    let executor = NumericExecutor::new(std::path::Path::new("/nonexistent_dir_xyz")).unwrap();
+    for kind in RoutineKind::ALL.into_iter().filter(|k| !k.is_composite()) {
+        for n in sizes_for(kind) {
+            let spec = Spec::single(kind, "k", n, DataSource::Pl);
+            let plan = Arc::new(lower_spec(&spec).unwrap());
+            let inputs = ExecInputs::random_for(&spec, 0xBAC0 ^ n as u64);
+
+            let sim = SimBackend::with_executor(&executor);
+            let backends: [&dyn Backend; 3] = [&CpuBackend, &ReferenceBackend, &sim];
+            let mut outputs = Vec::new();
+            for backend in backends {
+                let prepared = backend.prepare(plan.clone()).unwrap();
+                let outcome = backend.execute(&prepared, &inputs).unwrap();
+                assert_eq!(outcome.backend, backend.name());
+                assert_eq!(outcome.results.len(), 1, "{kind} n={n} via {}", backend.name());
+                outputs.push((backend.name(), outcome.results[0].output.clone()));
+            }
+
+            let (_, reference) = outputs[1].clone();
+            for (name, out) in &outputs {
+                assert_eq!(out.len(), reference.len(), "{kind} n={n} via {name}");
+                if kind == RoutineKind::Iamax {
+                    assert_eq!(out[0] as usize, reference[0] as usize, "{kind} n={n} via {name}");
+                    continue;
+                }
+                for (i, (a, b)) in out.iter().zip(&reference).enumerate() {
+                    assert!(
+                        close(*a, *b, 5e-3),
+                        "{kind} n={n} via {name} at {i}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sim_backend_reports_timing_alongside_numerics() {
+    let executor = NumericExecutor::new(std::path::Path::new("/nonexistent_dir_xyz")).unwrap();
+    let spec = Spec::single(RoutineKind::Axpy, "a", 4096, DataSource::Pl);
+    let plan = Arc::new(lower_spec(&spec).unwrap());
+    let backend = SimBackend::with_executor(&executor);
+    let prepared = backend.prepare(plan).unwrap();
+    let outcome = backend.execute(&prepared, &ExecInputs::random_for(&spec, 1)).unwrap();
+    let sim = outcome.sim.expect("sim backend models device timing");
+    assert!(sim.makespan_s > 0.0);
+    assert_eq!(outcome.results.len(), 1);
+    // cpu/reference model no device
+    let cpu = CpuBackend
+        .execute(
+            &CpuBackend.prepare(Arc::new(lower_spec(&spec).unwrap())).unwrap(),
+            &ExecInputs::random_for(&spec, 1),
+        )
+        .unwrap();
+    assert!(cpu.sim.is_none());
+}
+
+#[test]
+fn second_run_spec_hits_the_plan_cache() {
+    let sys = AieBlas::new(Config {
+        artifacts_dir: "/nonexistent".into(),
+        cpu_samples: 1,
+        check_numerics: true,
+        ..Default::default()
+    })
+    .unwrap();
+    let spec = Spec::axpydot_dataflow(16384, 2.0);
+
+    let cold = sys.run_spec(&spec).unwrap();
+    // cold run: exactly one lowering (run_spec + cpu_baseline share it)
+    assert_eq!(cold.plan_cache.misses, 1, "cold run must lower exactly once");
+    assert_eq!(cold.plan_cache.entries, 1);
+
+    let warm = sys.run_spec(&spec).unwrap();
+    assert!(warm.plan_cache.hits > 0, "warm run must hit the plan cache");
+    assert_eq!(warm.plan_cache.misses, 1, "warm run must not re-lower");
+    assert!(warm.summary().contains("plan cache"), "{}", warm.summary());
+
+    // identical timing from the cached plan
+    assert_eq!(cold.sim.makespan_s, warm.sim.makespan_s);
+}
+
+#[test]
+fn pipeline_reuses_plans_across_backends() {
+    let pipeline = Pipeline::default();
+    let spec = Spec::single(RoutineKind::Gemv, "g", 64, DataSource::Pl);
+    let plan_a = pipeline.lower(&spec).unwrap();
+    let plan_b = pipeline.lower(&spec).unwrap();
+    assert!(Arc::ptr_eq(&plan_a, &plan_b));
+
+    // one lowered plan drives all three backends
+    let inputs = ExecInputs::random_for(&spec, 3);
+    let sim = SimBackend::timing_only();
+    for backend in [&CpuBackend as &dyn Backend, &ReferenceBackend, &sim] {
+        let prepared = backend.prepare(plan_a.clone()).unwrap();
+        backend.execute(&prepared, &inputs).unwrap();
+    }
+    let stats = pipeline.cache().stats();
+    assert_eq!((stats.hits, stats.misses), (1, 1));
+}
+
+#[test]
+fn cached_plan_retains_generated_project() {
+    // the RoutinePlan stage is codegen'd: a cache hit must hand back the
+    // generated Vitis sources without re-running the generator.
+    let pipeline = Pipeline::default();
+    let spec = Spec::single(RoutineKind::Axpy, "vadd", 4096, DataSource::Pl);
+    let plan = pipeline.lower(&spec).unwrap();
+    assert!(plan.project().get("aie/kernels/vadd.cc").is_some());
+    assert!(plan.project().get("CMakeLists.txt").is_some());
+    let again = pipeline.lower(&spec).unwrap();
+    assert!(Arc::ptr_eq(&plan, &again));
+}

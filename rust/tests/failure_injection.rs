@@ -68,7 +68,7 @@ fn missing_artifact_file_falls_back_not_panics() {
     let (out, backend) = ex
         .execute("axpy", 8, &[vec![1.0], vec![1.0; 8], vec![2.0; 8]])
         .unwrap();
-    assert_eq!(backend, aieblas::runtime::Backend::ReferenceFallback);
+    assert_eq!(backend, aieblas::runtime::Provenance::Reference);
     assert_eq!(out, vec![3.0; 8]);
     std::fs::remove_dir_all(&dir).unwrap();
 }
@@ -93,7 +93,7 @@ fn corrupt_hlo_text_falls_back() {
     let (out, backend) = ex
         .execute("dot", 4, &[vec![1.0, 2.0, 3.0, 4.0], vec![1.0; 4]])
         .unwrap();
-    assert_eq!(backend, aieblas::runtime::Backend::ReferenceFallback);
+    assert_eq!(backend, aieblas::runtime::Provenance::Reference);
     assert_eq!(out, vec![10.0]);
     std::fs::remove_dir_all(&dir).unwrap();
 }
