@@ -1,51 +1,95 @@
 //! Simulator-engine microbenchmarks: host wallclock of the DES itself
-//! (the L3 hot path the §Perf pass optimizes) across graph shapes.
+//! (the L3 hot path the §Perf pass optimizes) across graph shapes:
+//! token-loop throughput, composed pipelines, a deep 8-stage chain that
+//! stresses the ready queue, and wide fan-out.
 //!
-//! Run: `cargo bench --bench sim_engine`
+//! Emits `BENCH_sim_engine.json` (working directory, or under
+//! `AIEBLAS_BENCH_JSON_DIR`) in the same shape as `BENCH_plan_cache.json`
+//! to extend the perf trajectory. With `--features sim-naive` each case
+//! also times the pre-PR-2 worklist engine and records the speedup.
+//!
+//! Run: `cargo bench --bench sim_engine [--features sim-naive]`
+//! Smoke mode (CI): `AIEBLAS_BENCH_SMOKE=1` shrinks problem sizes so a
+//! hanging or panicking engine is caught without timing noise.
+
+use std::cell::Cell;
 
 use aieblas::blas::RoutineKind;
 use aieblas::coordinator::{AieBlas, Config};
-use aieblas::spec::{DataSource, Spec};
+use aieblas::spec::{DataSource, RoutineSpec, Spec};
 use aieblas::util::bench::Bench;
+use aieblas::util::json::{obj, Json};
+
+/// Time one spec on the event engine (and, with `sim-naive`, the old
+/// worklist engine); append a JSON row comparing the two.
+fn bench_case(sys: &AieBlas, b: &mut Bench, rows: &mut Vec<Json>, label: &str, spec: &Spec) {
+    let makespan = Cell::new(0.0f64);
+    let engine = b.bench(&format!("engine/{label}"), || {
+        makespan.set(sys.run_spec_sim_only(spec).unwrap().makespan_s);
+        makespan.get()
+    });
+    #[cfg_attr(not(feature = "sim-naive"), allow(unused_mut))]
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("case", label.into()),
+        ("engine_median_s", engine.median.into()),
+        ("makespan_s", makespan.get().into()),
+    ];
+    #[cfg(feature = "sim-naive")]
+    {
+        let plan = aieblas::pipeline::lower_spec(spec).unwrap();
+        let naive = b.bench(&format!("naive/{label}"), || {
+            aieblas::sim::naive::simulate(
+                plan.graph(),
+                plan.placement(),
+                plan.routing(),
+                plan.arch(),
+            )
+            .unwrap()
+            .makespan_s
+        });
+        eprintln!(
+            "  {label}: engine {:.1}x faster than naive worklist",
+            naive.median / engine.median.max(1e-12)
+        );
+        fields.push(("naive_median_s", naive.median.into()));
+        fields.push(("speedup", (naive.median / engine.median.max(1e-12)).into()));
+    }
+    rows.push(obj(fields));
+}
 
 fn main() {
     aieblas::init();
+    // CI smoke mode: bounded problem sizes — catches hangs/panics/regressed
+    // scaling without asserting on wallclock.
+    let smoke = std::env::var("AIEBLAS_BENCH_SMOKE").is_ok();
     let sys = AieBlas::new(Config { check_numerics: false, ..Default::default() }).unwrap();
     let mut b = Bench::new("sim_engine");
+    let mut rows: Vec<Json> = Vec::new();
 
-    // single kernel, many windows (token-loop throughput)
-    for exp in [16usize, 20, 22] {
+    // single kernel, many windows (token-loop throughput + fast-forward)
+    let exps: &[usize] = if smoke { &[12, 14] } else { &[16, 20, 22] };
+    for &exp in exps {
         let spec = Spec::single(RoutineKind::Axpy, "a", 1 << exp, DataSource::Pl);
-        b.bench(&format!("sim/axpy_pl/n=2^{exp}"), || {
-            sys.run_spec_sim_only(&spec).unwrap().makespan_s
-        });
+        bench_case(&sys, &mut b, &mut rows, &format!("sim/axpy_pl/n=2^{exp}"), &spec);
     }
 
     // composed pipeline
-    let spec = Spec::axpydot_dataflow(1 << 20, 2.0);
-    b.bench("sim/axpydot_df/n=2^20", || {
-        sys.run_spec_sim_only(&spec).unwrap().makespan_s
-    });
+    let n = if smoke { 1 << 14 } else { 1 << 20 };
+    let spec = Spec::axpydot_dataflow(n, 2.0);
+    bench_case(&sys, &mut b, &mut rows, "sim/axpydot_df", &spec);
 
-    // wide graph: 16 independent kernels (placement + routing pressure)
+    // deep pipeline: 8 chained stages (ready-queue stress — every token
+    // wakes exactly one consumer; the old engine rescanned all 8 stages)
+    let n = if smoke { 1 << 14 } else { 1 << 20 };
+    bench_case(&sys, &mut b, &mut rows, "sim/deep8", &Spec::chain(RoutineKind::Copy, 8, n));
+
+    // wide graph: 16 independent kernels (independent fast-forward regions)
+    let n = if smoke { 1 << 12 } else { 1 << 16 };
     let mut wide = Spec { platform: "vck5000".into(), ..Default::default() };
     for i in 0..16 {
-        wide.routines.push(aieblas::spec::RoutineSpec {
-            kind: RoutineKind::Axpy,
-            name: format!("k{i}"),
-            size: 1 << 16,
-            window: None,
-            vector_bits: 512,
-            placement: None,
-            burst: false,
-            alpha: None,
-            beta: None,
-            split: 1,
-        });
+        wide.routines.push(RoutineSpec::new(RoutineKind::Axpy, format!("k{i}"), n));
     }
-    b.bench("sim/wide16/n=2^16", || {
-        sys.run_spec_sim_only(&wide).unwrap().makespan_s
-    });
+    bench_case(&sys, &mut b, &mut rows, "sim/wide16", &wide);
 
     // pipeline stages separately: build+place+route without simulate
     let arch = aieblas::arch::ArchConfig::vck5000();
@@ -56,4 +100,17 @@ fn main() {
         aieblas::graph::route::route(&built.graph, &p, &arch).unwrap().total_hops()
     });
     b.finish();
+
+    let doc = obj(vec![
+        ("bench", "sim_engine".into()),
+        ("unit", "seconds".into()),
+        ("smoke", smoke.into()),
+        ("cases", Json::Arr(rows)),
+    ]);
+    let dir = std::env::var("AIEBLAS_BENCH_JSON_DIR").unwrap_or_else(|_| ".".into());
+    let path = format!("{dir}/BENCH_sim_engine.json");
+    match std::fs::write(&path, doc.to_pretty() + "\n") {
+        Ok(()) => eprintln!("wrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
 }

@@ -61,7 +61,7 @@ pub fn seconds_per_window(
 }
 
 /// Peak-achievable fraction of the tile's MAC throughput for a routine at
-/// a given window size — the roofline-style efficiency figure DESIGN.md §7
+/// a given window size — the roofline-style efficiency figure DESIGN.md §8
 /// reports (window overhead amortization).
 pub fn window_efficiency(kind: RoutineKind, window_elements: usize, arch: &ArchConfig) -> f64 {
     let ideal = window_elements as f64 / arch.fp32_macs_per_cycle as f64;

@@ -1,0 +1,517 @@
+//! Event-driven simulation engine (DESIGN.md §7).
+//!
+//! Replaces the worklist-of-rounds reference engine ([`super::naive`])
+//! with three structural changes, none of which alter the token-dataflow
+//! semantics:
+//!
+//! 1. **Ready-queue scheduling** — a node is (re)enqueued only when one of
+//!    its neighbours completes an iteration (new token, or freed buffer
+//!    space); popping a node drains every iteration its dependencies
+//!    allow. No full-graph rescans: scheduling work is O(degree) per
+//!    completed iteration, amortized O(1) for the bounded-degree graphs
+//!    the builder emits.
+//! 2. **Ring-buffer edge state** — the producer can run at most
+//!    [`EDGE_CAPACITY`] tokens ahead of the consumer (ping-pong
+//!    back-pressure), so only the last `EDGE_CAPACITY` produced/consumed
+//!    timestamps are ever read. [`EdgeState`] keeps exactly those, in
+//!    fixed-size arrays: O(1) memory per edge instead of O(windows).
+//! 3. **Incremental stride counters** — rate matching (`W` tokens spread
+//!    evenly over `I` iterations) fires token `t` at iteration `k` iff
+//!    `⌊(k+1)W/I⌋ > ⌊kW/I⌋`. Since `W ≤ I` for every adjacent edge, the
+//!    quotient advances by at most one per step, so an accumulator with
+//!    `acc += W; if acc >= I { acc -= I; fire }` replaces both divisions
+//!    of the old `token_at`.
+//!
+//! On top of the event loop sits a **steady-state fast-forward**: once
+//! every still-active node of a weakly-connected component has shown a
+//! constant inter-finish delta for `2·EDGE_CAPACITY + 2` consecutive
+//! iterations (and the deltas agree across the component), the pipeline
+//! is in its periodic regime and iteration `k+m` is iteration `k`
+//! translated by `m·Δ`. The engine then advances all those nodes `m`
+//! iterations in closed form — counts bumped, ring timestamps shifted by
+//! `m·Δ` — instead of simulating `m` rounds of token events. `m` is
+//! bounded so that no rate-mismatched edge (e.g. the scalar alpha stream,
+//! consumed on the kernel's final iteration) fires inside the skipped
+//! window, and the final iterations are always simulated normally.
+//! Fast-forward is disabled while tracing (every span must be recorded)
+//! and never engages on non-uniform-rate regions (e.g. gemv's re-read x
+//! edge), which simply run through the event loop.
+
+use std::collections::VecDeque;
+
+use super::{trace, Prep, EDGE_CAPACITY};
+use crate::graph::place::{Location, Placement};
+use crate::graph::Graph;
+use crate::{Error, Result};
+
+/// Consecutive constant inter-finish deltas required before a node counts
+/// as periodic: a full `EDGE_CAPACITY` ping-pong cycle on both sides of
+/// the node, plus margin against warm-up coincidences.
+const STABLE_WINDOW: u32 = 2 * EDGE_CAPACITY as u32 + 2;
+
+/// Relative tolerance when comparing inter-finish deltas (they differ by
+/// a few ulps between iterations because the absolute times grow).
+const DELTA_RTOL: f64 = 1e-9;
+
+/// Smallest jump worth the O(nodes + edges) bookkeeping of a shift.
+const MIN_FF_ITERS: usize = 4;
+
+/// Fixed-size per-edge state: token counts, stride accumulators, and the
+/// last `EDGE_CAPACITY` timestamps on each side. This is the entire
+/// memory the engine keeps per edge, independent of the window count.
+struct EdgeState {
+    /// Tokens produced so far (also: the next token index the producer
+    /// will emit).
+    produced: usize,
+    /// Tokens consumed so far (also: the next token index the consumer
+    /// will read).
+    consumed: usize,
+    /// Arrival times (at the consumer) of tokens
+    /// `produced - EDGE_CAPACITY .. produced`, indexed `t % EDGE_CAPACITY`.
+    produced_t: [f64; EDGE_CAPACITY],
+    /// Finish times of the consumer for tokens
+    /// `consumed - EDGE_CAPACITY .. consumed`, indexed `t % EDGE_CAPACITY`.
+    consumed_t: [f64; EDGE_CAPACITY],
+    /// Producer-side stride accumulator (invariant: `0 ≤ acc < iters`).
+    src_acc: usize,
+    /// Consumer-side stride accumulator.
+    dst_acc: usize,
+}
+
+struct EngineState {
+    done: Vec<usize>,
+    busy_until: Vec<f64>,
+    busy_total: Vec<f64>,
+    /// Finish time of the node's most recent iteration.
+    last_finish: Vec<f64>,
+    /// Most recent inter-finish delta (-1.0 until two iterations exist).
+    last_delta: Vec<f64>,
+    /// Consecutive iterations with an (approximately) unchanged delta.
+    stable: Vec<u32>,
+    edges: Vec<EdgeState>,
+    completed: usize,
+}
+
+/// Counters describing how much work the fast-forward saved (exposed to
+/// in-crate tests so a silently-disengaged fast-forward fails loudly).
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct EngineStats {
+    /// Closed-form jumps taken.
+    pub(crate) ff_jumps: usize,
+    /// Node-iterations advanced in closed form (not event-simulated).
+    pub(crate) ff_iters: usize,
+}
+
+impl EngineState {
+    fn new(nodes: usize, edges: usize) -> Self {
+        EngineState {
+            done: vec![0; nodes],
+            busy_until: vec![0.0; nodes],
+            busy_total: vec![0.0; nodes],
+            last_finish: vec![0.0; nodes],
+            last_delta: vec![-1.0; nodes],
+            stable: vec![0; nodes],
+            edges: (0..edges)
+                .map(|_| EdgeState {
+                    produced: 0,
+                    consumed: 0,
+                    produced_t: [0.0; EDGE_CAPACITY],
+                    consumed_t: [0.0; EDGE_CAPACITY],
+                    src_acc: 0,
+                    dst_acc: 0,
+                })
+                .collect(),
+            completed: 0,
+        }
+    }
+}
+
+/// Earliest start time of node `id`'s next iteration, or `None` while a
+/// dependency (input token or output buffer space) is missing. Pure: the
+/// commit happens in the main loop.
+fn can_start(st: &EngineState, prep: &Prep, id: usize) -> Option<f64> {
+    let sched = &prep.sched[id];
+    let k = st.done[id];
+    let iters = sched.iters;
+    let mut start = if k == 0 { sched.launch_s } else { st.busy_until[id] };
+    for &eid in &prep.in_adj[id] {
+        let w = prep.edge_windows[eid];
+        let es = &st.edges[eid];
+        if es.dst_acc + w >= iters {
+            // this iteration consumes token `es.consumed`.
+            if es.produced <= es.consumed {
+                return None;
+            }
+            start = start.max(es.produced_t[es.consumed % EDGE_CAPACITY]);
+        }
+    }
+    for &eid in &prep.out_adj[id] {
+        let w = prep.edge_windows[eid];
+        let es = &st.edges[eid];
+        if es.src_acc + w >= iters {
+            // this iteration produces token `es.produced`; space frees
+            // when the consumer finishes token `produced - EDGE_CAPACITY`.
+            let t = es.produced;
+            if t >= EDGE_CAPACITY {
+                if es.consumed + EDGE_CAPACITY <= t {
+                    return None;
+                }
+                start = start.max(es.consumed_t[(t - EDGE_CAPACITY) % EDGE_CAPACITY]);
+            }
+        }
+    }
+    Some(start)
+}
+
+/// Weakly-connected components over the dataflow edges (fast-forward
+/// regions). Returns per-node component ids and the component count.
+fn components(graph: &Graph) -> (Vec<usize>, usize) {
+    fn find(parent: &mut [usize], mut x: usize) -> usize {
+        while parent[x] != x {
+            parent[x] = parent[parent[x]];
+            x = parent[x];
+        }
+        x
+    }
+    let n = graph.nodes.len();
+    let mut parent: Vec<usize> = (0..n).collect();
+    for e in &graph.edges {
+        let (a, b) = (find(&mut parent, e.src), find(&mut parent, e.dst));
+        if a != b {
+            parent[a] = b;
+        }
+    }
+    let mut label = vec![usize::MAX; n];
+    let mut count = 0;
+    let mut comp = vec![0usize; n];
+    for id in 0..n {
+        let root = find(&mut parent, id);
+        if label[root] == usize::MAX {
+            label[root] = count;
+            count += 1;
+        }
+        comp[id] = label[root];
+    }
+    (comp, count)
+}
+
+/// Try to advance every strongly-periodic component in closed form.
+/// Returns true when at least one component jumped.
+fn fast_forward(
+    st: &mut EngineState,
+    prep: &Prep,
+    graph: &Graph,
+    comp: &[usize],
+    n_comps: usize,
+    stats: &mut EngineStats,
+) -> bool {
+    let n = prep.sched.len();
+    let mut adv = vec![false; n];
+    let mut is_shift = vec![false; graph.edges.len()];
+    let mut any = false;
+
+    'comps: for c in 0..n_comps {
+        let mut advancing: Vec<usize> = Vec::new();
+        let mut delta0 = -1.0f64;
+        for id in 0..n {
+            if comp[id] != c || st.done[id] >= prep.sched[id].iters {
+                continue;
+            }
+            if st.stable[id] >= STABLE_WINDOW {
+                // periodic: delta must match the rest of the component.
+                let d = st.last_delta[id];
+                if delta0 < 0.0 {
+                    delta0 = d;
+                } else if (d - delta0).abs() > DELTA_RTOL * delta0.abs().max(d.abs()) {
+                    continue 'comps;
+                }
+                advancing.push(id);
+            } else if can_start(st, prep, id).is_some() {
+                // an aperiodic node that could still run would be skipped
+                // over by a jump — the region is not in steady state.
+                continue 'comps;
+            }
+            // else: genuinely blocked; its dependencies are frozen for the
+            // whole window (the m-bounds below keep every edge it touches
+            // silent), so it stays blocked and is left untouched.
+        }
+        if advancing.is_empty() {
+            continue;
+        }
+        for &id in &advancing {
+            adv[id] = true;
+        }
+
+        // --- bound the jump length m ------------------------------------
+        // (a) every advancing node keeps ≥ 1 iteration to simulate (final
+        //     iterations fire the sporadic edges, e.g. scalar streams);
+        let mut m = usize::MAX;
+        for &id in &advancing {
+            m = m.min(prep.sched[id].iters - st.done[id] - 1);
+        }
+        // (b) classify edges: uniform-rate edges between two advancing
+        //     nodes translate with the jump; any other edge side touching
+        //     an advancing node must stay silent (no fire) inside the
+        //     window, which bounds m by its next-fire distance.
+        let mut shiftable: Vec<usize> = Vec::new();
+        for e in &graph.edges {
+            if comp[e.src] != c || (!adv[e.src] && !adv[e.dst]) {
+                continue;
+            }
+            let w = prep.edge_windows[e.id];
+            if adv[e.src]
+                && adv[e.dst]
+                && w == prep.sched[e.src].iters
+                && w == prep.sched[e.dst].iters
+            {
+                shiftable.push(e.id);
+                continue;
+            }
+            if w == 0 {
+                continue; // degenerate zero-token edge: never fires
+            }
+            let es = &st.edges[e.id];
+            if adv[e.src] {
+                m = m.min((prep.sched[e.src].iters - es.src_acc).div_ceil(w) - 1);
+            }
+            if adv[e.dst] {
+                m = m.min((prep.sched[e.dst].iters - es.dst_acc).div_ceil(w) - 1);
+            }
+        }
+        // ring indices are token % EDGE_CAPACITY: jump in whole cycles so
+        // the index mapping is preserved.
+        let m = m.saturating_sub(m % EDGE_CAPACITY);
+        if m < MIN_FF_ITERS {
+            for &id in &advancing {
+                adv[id] = false;
+            }
+            continue;
+        }
+
+        // --- engage: translate the component by m iterations -------------
+        for &id in &advancing {
+            let shift = m as f64 * st.last_delta[id];
+            st.done[id] += m;
+            st.busy_until[id] += shift;
+            st.busy_total[id] += m as f64 * prep.sched[id].service_s;
+            st.last_finish[id] += shift;
+            st.completed += m;
+        }
+        for &eid in &shiftable {
+            is_shift[eid] = true;
+            let e = &graph.edges[eid];
+            let ds = m as f64 * st.last_delta[e.src];
+            let dd = m as f64 * st.last_delta[e.dst];
+            let es = &mut st.edges[eid];
+            es.produced += m;
+            es.consumed += m;
+            for t in es.produced_t.iter_mut() {
+                *t += ds;
+            }
+            for t in es.consumed_t.iter_mut() {
+                *t += dd;
+            }
+        }
+        for e in &graph.edges {
+            if comp[e.src] != c || is_shift[e.id] {
+                continue;
+            }
+            let w = prep.edge_windows[e.id];
+            if adv[e.src] {
+                st.edges[e.id].src_acc += m * w; // silent: stays < iters
+            }
+            if adv[e.dst] {
+                st.edges[e.id].dst_acc += m * w;
+            }
+        }
+        for &id in &advancing {
+            adv[id] = false;
+        }
+        stats.ff_jumps += 1;
+        stats.ff_iters += m * advancing.len();
+        any = true;
+    }
+    any
+}
+
+/// Run the event-driven simulation. Returns (makespan, per-node busy
+/// seconds, fast-forward stats).
+pub(crate) fn run(
+    graph: &Graph,
+    placement: &Placement,
+    prep: &Prep,
+    mut tracer: Option<&mut trace::Trace>,
+) -> Result<(f64, Vec<f64>, EngineStats)> {
+    let n = graph.nodes.len();
+    let total: usize = prep.sched.iter().map(|s| s.iters).sum();
+    let mut st = EngineState::new(n, graph.edges.len());
+    let mut stats = EngineStats::default();
+    let (comp, n_comps) = components(graph);
+
+    // Trace labels precomputed once — the old engine rebuilt the lane
+    // string with format! on every traced iteration.
+    let labels: Option<Vec<(String, String)>> = tracer.as_ref().map(|_| {
+        graph
+            .nodes
+            .iter()
+            .map(|node| {
+                let lane = match placement.of(node.id) {
+                    Location::Tile { col, row } => format!("aie({col},{row}) {}", node.name),
+                    Location::Shim { col } => format!("shim({col}) {}", node.name),
+                    Location::OffChip => node.name.clone(),
+                };
+                (node.name.clone(), lane)
+            })
+            .collect()
+    });
+
+    let mut queue: VecDeque<usize> = (0..n).collect();
+    let mut in_queue = vec![true; n];
+    // Fast-forward attempts are O(nodes + edges): amortize to ≤ O(1) per
+    // simulated iteration by spacing them at least that far apart.
+    let check_interval = (n + graph.edges.len()).max(64);
+    let mut since_check = 0usize;
+
+    while st.completed < total {
+        if since_check >= check_interval && tracer.is_none() {
+            since_check = 0;
+            if fast_forward(&mut st, prep, graph, &comp, n_comps, &mut stats) {
+                for (id, s) in prep.sched.iter().enumerate() {
+                    if st.done[id] < s.iters && !in_queue[id] {
+                        in_queue[id] = true;
+                        queue.push_back(id);
+                    }
+                }
+            }
+        }
+        let Some(id) = queue.pop_front() else {
+            return Err(Error::Sim(format!(
+                "deadlock: {}/{total} iterations completed",
+                st.completed
+            )));
+        };
+        in_queue[id] = false;
+
+        let sched = &prep.sched[id];
+        let iters = sched.iters;
+        let mut advanced = false;
+        while st.done[id] < iters {
+            let Some(start) = can_start(&st, prep, id) else { break };
+            let k = st.done[id];
+            let finish = start + sched.service_s;
+            st.busy_until[id] = finish;
+            st.busy_total[id] += sched.service_s;
+            for &eid in &prep.in_adj[id] {
+                let w = prep.edge_windows[eid];
+                let es = &mut st.edges[eid];
+                es.dst_acc += w;
+                if es.dst_acc >= iters {
+                    es.dst_acc -= iters;
+                    es.consumed_t[es.consumed % EDGE_CAPACITY] = finish;
+                    es.consumed += 1;
+                }
+            }
+            for &eid in &prep.out_adj[id] {
+                let w = prep.edge_windows[eid];
+                let es = &mut st.edges[eid];
+                es.src_acc += w;
+                if es.src_acc >= iters {
+                    es.src_acc -= iters;
+                    es.produced_t[es.produced % EDGE_CAPACITY] = finish + prep.edge_latency[eid];
+                    es.produced += 1;
+                }
+            }
+            st.done[id] += 1;
+            st.completed += 1;
+            since_check += 1;
+            advanced = true;
+
+            // periodicity detection (drives the fast-forward).
+            let delta = finish - st.last_finish[id];
+            let prev = st.last_delta[id];
+            if prev >= 0.0 && (delta - prev).abs() <= DELTA_RTOL * delta.abs().max(prev.abs()) {
+                st.stable[id] = st.stable[id].saturating_add(1);
+            } else {
+                st.stable[id] = 0;
+            }
+            st.last_delta[id] = delta;
+            st.last_finish[id] = finish;
+
+            if let Some(t) = tracer.as_deref_mut() {
+                let (name, lane) = &labels.as_ref().unwrap()[id];
+                t.record(trace::Span {
+                    node: id,
+                    name: name.clone(),
+                    lane: lane.clone(),
+                    iteration: k,
+                    start_s: start,
+                    end_s: finish,
+                });
+            }
+        }
+        if advanced {
+            // completions may have unblocked consumers (new tokens) and
+            // producers (freed buffer space).
+            for &eid in &prep.out_adj[id] {
+                let d = graph.edges[eid].dst;
+                if !in_queue[d] && st.done[d] < prep.sched[d].iters {
+                    in_queue[d] = true;
+                    queue.push_back(d);
+                }
+            }
+            for &eid in &prep.in_adj[id] {
+                let s = graph.edges[eid].src;
+                if !in_queue[s] && st.done[s] < prep.sched[s].iters {
+                    in_queue[s] = true;
+                    queue.push_back(s);
+                }
+            }
+        }
+    }
+
+    // --- conservation checks ------------------------------------------------
+    for e in &graph.edges {
+        let es = &st.edges[e.id];
+        if es.produced != e.num_windows() || es.consumed != e.num_windows() {
+            return Err(Error::Sim(format!(
+                "edge {}: {} produced / {} consumed of {} windows",
+                e.id,
+                es.produced,
+                es.consumed,
+                e.num_windows()
+            )));
+        }
+    }
+
+    let makespan = st.busy_until.iter().cloned().fold(0.0, f64::max);
+    Ok((makespan, st.busy_total, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edge_state_is_fixed_size() {
+        // the O(1)-memory claim: edge state must not scale with windows.
+        assert!(std::mem::size_of::<EdgeState>() <= 8 * (2 + 2 * EDGE_CAPACITY + 2));
+    }
+
+    #[test]
+    fn components_label_disconnected_pipelines() {
+        use crate::blas::PortType;
+        use crate::graph::{EdgeKind, NodeKind};
+        let mut g = Graph::default();
+        let a = g.add_node("a", NodeKind::OnChipSource);
+        let b = g.add_node("b", NodeKind::OnChipSink);
+        let c = g.add_node("c", NodeKind::OnChipSource);
+        let d = g.add_node("d", NodeKind::OnChipSink);
+        g.add_edge(a, "out", b, "in", PortType::Vector, EdgeKind::Window, 64, 16);
+        g.add_edge(c, "out", d, "in", PortType::Vector, EdgeKind::Window, 64, 16);
+        let (comp, n) = components(&g);
+        assert_eq!(n, 2);
+        assert_eq!(comp[a], comp[b]);
+        assert_eq!(comp[c], comp[d]);
+        assert_ne!(comp[a], comp[c]);
+    }
+}

@@ -14,9 +14,24 @@
 //! Edges with fewer windows than the node's iteration count (e.g. the
 //! scalar alpha stream, or gemv's x vector re-read per row block) are
 //! consumed/produced at evenly spread iterations (rate-matched dataflow).
+//!
+//! Two engines implement these semantics (DESIGN.md §7):
+//! * [`engine`] (default) — event-driven: ready-queue scheduling, O(1)
+//!   ring-buffer edge state, incremental stride counters, and a
+//!   steady-state fast-forward that advances periodic regions in closed
+//!   form.
+//! * [`naive`] — the original worklist-of-rounds reference, kept under
+//!   `#[cfg(test)]` / the `sim-naive` feature so parity can be asserted.
 
 pub mod report;
 pub mod trace;
+
+mod engine;
+#[cfg(any(test, feature = "sim-naive"))]
+pub mod naive;
+
+#[cfg(test)]
+mod parity_tests;
 
 use crate::aie::seconds_per_window;
 use crate::arch::ArchConfig;
@@ -24,53 +39,36 @@ use crate::graph::place::Placement;
 use crate::graph::route::Routing;
 use crate::graph::{Graph, NodeKind};
 use crate::pl::window_transfer_s;
-use crate::{Error, Result};
+use crate::Result;
 
 pub use report::SimReport;
 
 /// Double-buffer depth of window edges (ADF ping-pong).
-const EDGE_CAPACITY: usize = 2;
+pub(crate) const EDGE_CAPACITY: usize = 2;
 
 /// Per-node simulation schedule derived from the graph.
-struct NodeSched {
+pub(crate) struct NodeSched {
     /// Total iterations (windows to process).
-    iters: usize,
+    pub(crate) iters: usize,
     /// Service time per iteration, seconds.
-    service_s: f64,
+    pub(crate) service_s: f64,
     /// One-time launch overhead, seconds.
-    launch_s: f64,
+    pub(crate) launch_s: f64,
 }
 
-/// Simulate a placed+routed graph; returns the timing report.
-pub fn simulate(
-    graph: &Graph,
-    placement: &Placement,
-    routing: &Routing,
-    arch: &ArchConfig,
-) -> Result<SimReport> {
-    simulate_inner(graph, placement, routing, arch, None)
+/// Everything both engines derive from the graph before the event loop:
+/// per-node schedules, per-edge latencies and window counts, and the
+/// adjacency lists (the worklist loop touching `graph.edges` per iteration
+/// was the top profile entry — see EXPERIMENTS.md §Perf).
+pub(crate) struct Prep {
+    pub(crate) sched: Vec<NodeSched>,
+    pub(crate) edge_latency: Vec<f64>,
+    pub(crate) in_adj: Vec<Vec<usize>>,
+    pub(crate) out_adj: Vec<Vec<usize>>,
+    pub(crate) edge_windows: Vec<usize>,
 }
 
-/// Simulate and additionally record a full execution trace (Chrome-trace /
-/// Gantt export via [`trace::Trace`]).
-pub fn simulate_traced(
-    graph: &Graph,
-    placement: &Placement,
-    routing: &Routing,
-    arch: &ArchConfig,
-) -> Result<(SimReport, trace::Trace)> {
-    let mut t = trace::Trace::default();
-    let rep = simulate_inner(graph, placement, routing, arch, Some(&mut t))?;
-    Ok((rep, t))
-}
-
-fn simulate_inner(
-    graph: &Graph,
-    placement: &Placement,
-    routing: &Routing,
-    arch: &ArchConfig,
-    mut tracer: Option<&mut trace::Trace>,
-) -> Result<SimReport> {
+pub(crate) fn prepare(graph: &Graph, routing: &Routing, arch: &ArchConfig) -> Prep {
     let n = graph.nodes.len();
     let active_movers = graph.num_pl_movers().max(1);
 
@@ -137,9 +135,7 @@ fn simulate_inner(
         edge_latency[e.id] = hop_s + stream_s;
     }
 
-    // --- adjacency (perf: the worklist loop below touches each node's
-    // edges O(iters) times; scanning graph.edges every time was the top
-    // profile entry — see EXPERIMENTS.md §Perf) ------------------------------
+    // --- adjacency ----------------------------------------------------------
     let mut in_adj: Vec<Vec<usize>> = vec![Vec::new(); n];
     let mut out_adj: Vec<Vec<usize>> = vec![Vec::new(); n];
     for e in &graph.edges {
@@ -148,141 +144,42 @@ fn simulate_inner(
     }
     let edge_windows: Vec<usize> = graph.edges.iter().map(|e| e.num_windows()).collect();
 
-    // --- token-dataflow event loop -------------------------------------------
-    // produced[e][j] = time token j becomes available at the consumer;
-    // consumed[e][j] = time the consumer finished with token j (frees space).
-    // preallocated to final token counts: the push-only vectors never
-    // reallocate inside the hot loop (perf iteration 2, EXPERIMENTS.md §Perf).
-    let mut produced: Vec<Vec<f64>> =
-        edge_windows.iter().map(|&w| Vec::with_capacity(w)).collect();
-    let mut consumed: Vec<Vec<f64>> =
-        edge_windows.iter().map(|&w| Vec::with_capacity(w)).collect();
-    let mut done_iters = vec![0usize; n];
-    let mut busy_until = vec![0.0f64; n];
-    let mut busy_total = vec![0.0f64; n];
+    Prep { sched, edge_latency, in_adj, out_adj, edge_windows }
+}
 
-    // iteration→token maps (rate matching).
-    let token_at = |windows: usize, iters: usize, k: usize| -> Option<usize> {
-        // consume/produce token t at iteration k iff t = floor((k+1)*W/I) - 1
-        // advanced past floor(k*W/I) - 1; evenly spreads W tokens over I.
-        let before = k * windows / iters;
-        let after = (k + 1) * windows / iters;
-        (after > before).then(|| after - 1)
-    };
+/// Simulate a placed+routed graph; returns the timing report.
+pub fn simulate(
+    graph: &Graph,
+    placement: &Placement,
+    routing: &Routing,
+    arch: &ArchConfig,
+) -> Result<SimReport> {
+    simulate_inner(graph, placement, routing, arch, None)
+}
 
-    let total_iters: usize = sched.iter().map(|s| s.iters).sum();
-    let mut completed = 0usize;
-    // Worklist rounds: each pass tries to advance every node by as many
-    // iterations as its dependencies allow. The (node, iteration)
-    // dependency graph is acyclic, so progress is guaranteed.
-    let mut progressed = true;
-    while completed < total_iters {
-        if !progressed {
-            return Err(Error::Sim(format!(
-                "deadlock: {completed}/{total_iters} iterations completed"
-            )));
-        }
-        progressed = false;
-        for id in 0..n {
-            loop {
-                let k = done_iters[id];
-                if k >= sched[id].iters {
-                    break;
-                }
-                // dependencies: input tokens present, output space known.
-                let mut start: f64 = if k == 0 {
-                    sched[id].launch_s
-                } else {
-                    busy_until[id]
-                };
-                let mut ready = true;
-                for &eid in &in_adj[id] {
-                    if let Some(t) = token_at(edge_windows[eid], sched[id].iters, k) {
-                        match produced[eid].get(t) {
-                            Some(&avail) => start = start.max(avail),
-                            None => {
-                                ready = false;
-                                break;
-                            }
-                        }
-                    }
-                }
-                if ready {
-                    for &eid in &out_adj[id] {
-                        if let Some(t) = token_at(edge_windows[eid], sched[id].iters, k) {
-                            if t >= EDGE_CAPACITY {
-                                // space frees when the consumer finishes
-                                // token t - capacity.
-                                match consumed[eid].get(t - EDGE_CAPACITY) {
-                                    Some(&freed) => start = start.max(freed),
-                                    None => {
-                                        ready = false;
-                                        break;
-                                    }
-                                }
-                            }
-                        }
-                    }
-                }
-                if !ready {
-                    break;
-                }
-                let finish = start + sched[id].service_s;
-                busy_until[id] = finish;
-                busy_total[id] += sched[id].service_s;
-                if let Some(t) = tracer.as_deref_mut() {
-                    let lane = match placement.of(id) {
-                        crate::graph::place::Location::Tile { col, row } => {
-                            format!("aie({col},{row}) {}", graph.node(id).name)
-                        }
-                        crate::graph::place::Location::Shim { col } => {
-                            format!("shim({col}) {}", graph.node(id).name)
-                        }
-                        crate::graph::place::Location::OffChip => graph.node(id).name.clone(),
-                    };
-                    t.record(trace::Span {
-                        node: id,
-                        name: graph.node(id).name.clone(),
-                        lane,
-                        iteration: k,
-                        start_s: start,
-                        end_s: finish,
-                    });
-                }
-                for &eid in &in_adj[id] {
-                    if let Some(t) = token_at(edge_windows[eid], sched[id].iters, k) {
-                        debug_assert_eq!(consumed[eid].len(), t);
-                        consumed[eid].push(finish);
-                    }
-                }
-                for &eid in &out_adj[id] {
-                    if let Some(t) = token_at(edge_windows[eid], sched[id].iters, k) {
-                        debug_assert_eq!(produced[eid].len(), t);
-                        produced[eid].push(finish + edge_latency[eid]);
-                    }
-                }
-                done_iters[id] += 1;
-                completed += 1;
-                progressed = true;
-            }
-        }
-    }
+/// Simulate and additionally record a full execution trace (Chrome-trace /
+/// Gantt export via [`trace::Trace`]).
+pub fn simulate_traced(
+    graph: &Graph,
+    placement: &Placement,
+    routing: &Routing,
+    arch: &ArchConfig,
+) -> Result<(SimReport, trace::Trace)> {
+    let mut t = trace::Trace::default();
+    let rep = simulate_inner(graph, placement, routing, arch, Some(&mut t))?;
+    Ok((rep, t))
+}
 
-    // --- conservation checks --------------------------------------------------
-    for e in &graph.edges {
-        if produced[e.id].len() != e.num_windows() || consumed[e.id].len() != e.num_windows() {
-            return Err(Error::Sim(format!(
-                "edge {}: {} produced / {} consumed of {} windows",
-                e.id,
-                produced[e.id].len(),
-                consumed[e.id].len(),
-                e.num_windows()
-            )));
-        }
-    }
-
-    let makespan = busy_until.iter().cloned().fold(0.0, f64::max);
-    Ok(report::build(graph, placement, routing, arch, makespan, &busy_total, &sched.iter().map(|s| s.iters).collect::<Vec<_>>()))
+fn simulate_inner(
+    graph: &Graph,
+    placement: &Placement,
+    routing: &Routing,
+    arch: &ArchConfig,
+    tracer: Option<&mut trace::Trace>,
+) -> Result<SimReport> {
+    let prep = prepare(graph, routing, arch);
+    let (makespan, busy_total, _stats) = engine::run(graph, placement, &prep, tracer)?;
+    Ok(report::build(graph, placement, routing, arch, makespan, &busy_total, &prep.sched))
 }
 
 /// Simulate an already-lowered plan (the [`crate::runtime::SimBackend`]

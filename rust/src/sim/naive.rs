@@ -1,0 +1,156 @@
+//! The original worklist-of-rounds simulation engine, kept verbatim as
+//! the semantic reference for [`super::engine`] (DESIGN.md §7).
+//!
+//! Compiled only for tests and under the `sim-naive` feature: the parity
+//! property test (`sim::parity_tests`) asserts that the event-driven
+//! engine reproduces this engine's makespan and per-kernel utilization on
+//! randomized specs, and `benches/sim_engine.rs --features sim-naive`
+//! measures the host-wallclock gap between the two.
+//!
+//! Characteristics being replaced: every round rescans all nodes,
+//! `token_at` costs two integer divisions per edge per iteration, and
+//! `produced`/`consumed` record every token timestamp (O(windows) memory
+//! per edge).
+
+use super::{report, Prep};
+use crate::arch::ArchConfig;
+use crate::graph::place::Placement;
+use crate::graph::route::Routing;
+use crate::graph::Graph;
+use crate::sim::{SimReport, EDGE_CAPACITY};
+use crate::{Error, Result};
+
+/// Simulate a placed+routed graph with the reference engine.
+pub fn simulate(
+    graph: &Graph,
+    placement: &Placement,
+    routing: &Routing,
+    arch: &ArchConfig,
+) -> Result<SimReport> {
+    let prep = super::prepare(graph, routing, arch);
+    let (makespan, busy_total) = run(graph, &prep)?;
+    Ok(report::build(graph, placement, routing, arch, makespan, &busy_total, &prep.sched))
+}
+
+/// The original token-dataflow event loop: worklist rounds over all nodes.
+pub(crate) fn run(graph: &Graph, prep: &Prep) -> Result<(f64, Vec<f64>)> {
+    let n = graph.nodes.len();
+    let sched = &prep.sched;
+    let in_adj = &prep.in_adj;
+    let out_adj = &prep.out_adj;
+    let edge_windows = &prep.edge_windows;
+
+    // produced[e][j] = time token j becomes available at the consumer;
+    // consumed[e][j] = time the consumer finished with token j (frees space).
+    let mut produced: Vec<Vec<f64>> =
+        edge_windows.iter().map(|&w| Vec::with_capacity(w)).collect();
+    let mut consumed: Vec<Vec<f64>> =
+        edge_windows.iter().map(|&w| Vec::with_capacity(w)).collect();
+    let mut done_iters = vec![0usize; n];
+    let mut busy_until = vec![0.0f64; n];
+    let mut busy_total = vec![0.0f64; n];
+
+    // iteration→token maps (rate matching).
+    let token_at = |windows: usize, iters: usize, k: usize| -> Option<usize> {
+        // consume/produce token t at iteration k iff t = floor((k+1)*W/I) - 1
+        // advanced past floor(k*W/I) - 1; evenly spreads W tokens over I.
+        let before = k * windows / iters;
+        let after = (k + 1) * windows / iters;
+        (after > before).then(|| after - 1)
+    };
+
+    let total_iters: usize = sched.iter().map(|s| s.iters).sum();
+    let mut completed = 0usize;
+    // Worklist rounds: each pass tries to advance every node by as many
+    // iterations as its dependencies allow. The (node, iteration)
+    // dependency graph is acyclic, so progress is guaranteed.
+    let mut progressed = true;
+    while completed < total_iters {
+        if !progressed {
+            return Err(Error::Sim(format!(
+                "deadlock: {completed}/{total_iters} iterations completed"
+            )));
+        }
+        progressed = false;
+        for id in 0..n {
+            loop {
+                let k = done_iters[id];
+                if k >= sched[id].iters {
+                    break;
+                }
+                // dependencies: input tokens present, output space known.
+                let mut start: f64 = if k == 0 {
+                    sched[id].launch_s
+                } else {
+                    busy_until[id]
+                };
+                let mut ready = true;
+                for &eid in &in_adj[id] {
+                    if let Some(t) = token_at(edge_windows[eid], sched[id].iters, k) {
+                        match produced[eid].get(t) {
+                            Some(&avail) => start = start.max(avail),
+                            None => {
+                                ready = false;
+                                break;
+                            }
+                        }
+                    }
+                }
+                if ready {
+                    for &eid in &out_adj[id] {
+                        if let Some(t) = token_at(edge_windows[eid], sched[id].iters, k) {
+                            if t >= EDGE_CAPACITY {
+                                // space frees when the consumer finishes
+                                // token t - capacity.
+                                match consumed[eid].get(t - EDGE_CAPACITY) {
+                                    Some(&freed) => start = start.max(freed),
+                                    None => {
+                                        ready = false;
+                                        break;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                if !ready {
+                    break;
+                }
+                let finish = start + sched[id].service_s;
+                busy_until[id] = finish;
+                busy_total[id] += sched[id].service_s;
+                for &eid in &in_adj[id] {
+                    if let Some(t) = token_at(edge_windows[eid], sched[id].iters, k) {
+                        debug_assert_eq!(consumed[eid].len(), t);
+                        consumed[eid].push(finish);
+                    }
+                }
+                for &eid in &out_adj[id] {
+                    if let Some(t) = token_at(edge_windows[eid], sched[id].iters, k) {
+                        debug_assert_eq!(produced[eid].len(), t);
+                        produced[eid].push(finish + prep.edge_latency[eid]);
+                    }
+                }
+                done_iters[id] += 1;
+                completed += 1;
+                progressed = true;
+            }
+        }
+    }
+
+    // --- conservation checks --------------------------------------------------
+    for e in &graph.edges {
+        if produced[e.id].len() != e.num_windows() || consumed[e.id].len() != e.num_windows() {
+            return Err(Error::Sim(format!(
+                "edge {}: {} produced / {} consumed of {} windows",
+                e.id,
+                produced[e.id].len(),
+                consumed[e.id].len(),
+                e.num_windows()
+            )));
+        }
+    }
+
+    let makespan = busy_until.iter().cloned().fold(0.0, f64::max);
+    Ok((makespan, busy_total))
+}

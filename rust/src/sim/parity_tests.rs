@@ -1,0 +1,232 @@
+//! Engine-parity suite (DESIGN.md §7): the event-driven [`super::engine`]
+//! must reproduce the reference [`super::naive`] engine — makespan within
+//! 1e-9 relative, identical per-kernel iteration counts, utilization
+//! within 1e-9 relative — across randomized specs spanning Pl/OnChip
+//! sources, splits, bursts and composed pipelines, plus deterministic
+//! cases chosen so the steady-state fast-forward provably engages.
+
+use super::{engine, naive, prepare};
+use crate::blas::RoutineKind;
+use crate::graph::place::{Location, Placement};
+use crate::graph::route::route;
+use crate::graph::{EdgeKind, Graph, NodeKind};
+use crate::pipeline::lower_spec;
+use crate::spec::{Connection, DataSource, RoutineSpec, Spec};
+use crate::util::proptest::{forall, Config as PropConfig, Gen, Prop};
+use crate::util::rng::Rng;
+use crate::Error;
+
+fn rel_close(a: f64, b: f64, rtol: f64) -> bool {
+    (a - b).abs() <= rtol * a.abs().max(b.abs()) + 1e-300
+}
+
+/// Random spec generator: 1–4 routines over both data sources, optional
+/// split/burst/window/alpha, with compatible neighbours sometimes chained
+/// into an on-chip pipeline. Deliberately narrower sizes than
+/// `tests/properties.rs`'s generator (every case here runs *two* engines)
+/// but wider non-functional coverage (splits).
+fn spec_gen() -> Gen<Spec> {
+    Gen::new(|rng: &mut Rng| {
+        let kinds = [
+            RoutineKind::Axpy,
+            RoutineKind::Scal,
+            RoutineKind::Copy,
+            RoutineKind::Dot,
+            RoutineKind::Asum,
+            RoutineKind::Gemv,
+            RoutineKind::Axpydot,
+        ];
+        let splittable = [
+            RoutineKind::Axpy,
+            RoutineKind::Scal,
+            RoutineKind::Copy,
+            RoutineKind::Dot,
+            RoutineKind::Asum,
+        ];
+        let n_routines = rng.range(1, 4);
+        let source = if rng.bool() { DataSource::Pl } else { DataSource::OnChip };
+        let mut spec =
+            Spec { platform: "vck5000".into(), data_source: source, ..Default::default() };
+        for i in 0..n_routines {
+            let kind = *rng.choose(&kinds);
+            let size = if kind.level() >= 2 {
+                1 << rng.range(5, 8) // 32..256
+            } else {
+                1 << rng.range(8, 13) // 256..8192: enough iterations to
+                                      // reach steady state at small windows
+            };
+            let mut r = RoutineSpec::new(kind, format!("k{i}"), size);
+            if kind.level() == 1 && rng.bool() {
+                r.window = Some(1 << rng.range(4, 8)); // 16..256
+            }
+            if splittable.contains(&kind) && rng.range(0, 3) == 0 {
+                r.split = 1 << rng.range(1, 2); // 2 or 4 (divides the pow-2 size)
+            }
+            r.burst = rng.bool();
+            if rng.bool() {
+                r.alpha = Some(rng.f32_in(-4.0, 4.0));
+            }
+            spec.routines.push(r);
+        }
+        // maybe chain compatible vector outputs into vector inputs
+        for i in 0..spec.routines.len().saturating_sub(1) {
+            let (a, b) = (spec.routines[i].clone(), spec.routines[i + 1].clone());
+            if a.kind.is_composite() || b.kind.is_composite() || a.split > 1 || b.split > 1 {
+                continue;
+            }
+            let out_vec = a.kind.outputs().iter().find(|p| p.ty == crate::blas::PortType::Vector);
+            let in_vec = b.kind.inputs().iter().find(|p| p.ty == crate::blas::PortType::Vector);
+            if let (Some(o), Some(inp)) = (out_vec, in_vec) {
+                if a.size == b.size && rng.bool() {
+                    spec.connections.push(Connection {
+                        from_kernel: a.name.clone(),
+                        from_port: o.name.to_string(),
+                        to_kernel: b.name.clone(),
+                        to_port: inp.name.to_string(),
+                    });
+                }
+            }
+        }
+        spec
+    })
+}
+
+/// Compare the two engines on one spec; `Err` describes the divergence.
+fn check_parity(spec: &Spec) -> Result<(), String> {
+    let plan = lower_spec(spec).map_err(|e| format!("lower: {e}"))?;
+    let fast = super::simulate(plan.graph(), plan.placement(), plan.routing(), plan.arch())
+        .map_err(|e| format!("engine: {e}"))?;
+    let slow = naive::simulate(plan.graph(), plan.placement(), plan.routing(), plan.arch())
+        .map_err(|e| format!("naive: {e}"))?;
+    if !rel_close(fast.makespan_s, slow.makespan_s, 1e-9) {
+        return Err(format!(
+            "makespan diverged: engine {} vs naive {}",
+            fast.makespan_s, slow.makespan_s
+        ));
+    }
+    if fast.kernels.len() != slow.kernels.len() {
+        return Err("kernel count diverged".into());
+    }
+    for (f, s) in fast.kernels.iter().zip(&slow.kernels) {
+        if f.iterations != s.iterations {
+            return Err(format!("{}: iterations {} vs {}", f.name, f.iterations, s.iterations));
+        }
+        if !rel_close(f.utilization, s.utilization, 1e-9) {
+            return Err(format!(
+                "{}: utilization {} vs {}",
+                f.name, f.utilization, s.utilization
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn randomized_specs_agree_across_engines() {
+    forall(&spec_gen(), PropConfig { cases: 60, ..Default::default() }, |spec| {
+        if crate::spec::validate(spec).is_err() {
+            return Prop::Discard;
+        }
+        match check_parity(spec) {
+            Ok(()) => Prop::Pass,
+            Err(e) => Prop::Fail(e),
+        }
+    });
+}
+
+/// Run the event engine directly and return its fast-forward stats.
+fn run_with_stats(spec: &Spec) -> (f64, engine::EngineStats) {
+    let plan = lower_spec(spec).unwrap();
+    let prep = prepare(plan.graph(), plan.routing(), plan.arch());
+    let (makespan, _busy, stats) =
+        engine::run(plan.graph(), plan.placement(), &prep, None).unwrap();
+    (makespan, stats)
+}
+
+#[test]
+fn fast_forward_engages_and_matches_on_large_axpy() {
+    let spec = Spec::single(RoutineKind::Axpy, "a", 1 << 20, DataSource::Pl);
+    let (_, stats) = run_with_stats(&spec);
+    assert!(stats.ff_jumps > 0, "fast-forward never engaged on the flagship case");
+    assert!(stats.ff_iters > 0);
+    check_parity(&spec).unwrap();
+}
+
+#[test]
+fn fast_forward_matches_on_onchip_axpy() {
+    let spec = Spec::single(RoutineKind::Axpy, "a", 1 << 20, DataSource::OnChip);
+    let (_, stats) = run_with_stats(&spec);
+    assert!(stats.ff_iters > 0);
+    check_parity(&spec).unwrap();
+}
+
+#[test]
+fn fast_forward_matches_on_deep_chain() {
+    let spec = Spec::chain(RoutineKind::Copy, 8, 1 << 18);
+    crate::spec::validate(&spec).unwrap();
+    let (_, stats) = run_with_stats(&spec);
+    assert!(stats.ff_iters > 0, "fast-forward never engaged on the 8-stage chain");
+    check_parity(&spec).unwrap();
+}
+
+#[test]
+fn fast_forward_matches_on_composed_axpydot() {
+    check_parity(&Spec::axpydot_dataflow(1 << 18, 2.0)).unwrap();
+}
+
+#[test]
+fn wide_independent_components_agree() {
+    let mut spec = Spec { platform: "vck5000".into(), ..Default::default() };
+    for i in 0..8 {
+        spec.routines.push(RoutineSpec::new(RoutineKind::Axpy, format!("k{i}"), 1 << 16));
+    }
+    check_parity(&spec).unwrap();
+}
+
+/// A graph with a dependency cycle can never progress: both engines must
+/// return `Error::Sim("deadlock: …")` instead of looping forever. (Specs
+/// cannot express this — `validate` rejects cycles — so the graph is
+/// built by hand, as a corrupted-input regression.)
+fn cyclic_fixture() -> (Graph, Placement, crate::graph::route::Routing, crate::arch::ArchConfig) {
+    let kernel = |g: &mut Graph, name: &str| {
+        g.add_node(
+            name,
+            NodeKind::AieKernel {
+                kind: RoutineKind::Copy,
+                size: 64,
+                window: 16,
+                vector_bits: 512,
+                hint: None,
+            },
+        )
+    };
+    let mut g = Graph::default();
+    let a = kernel(&mut g, "a");
+    let b = kernel(&mut g, "b");
+    g.add_edge(a, "z", b, "x", crate::blas::PortType::Vector, EdgeKind::Window, 64, 16);
+    g.add_edge(b, "z", a, "x", crate::blas::PortType::Vector, EdgeKind::Window, 64, 16);
+    let placement = Placement {
+        locations: vec![Location::Tile { col: 0, row: 0 }, Location::Tile { col: 1, row: 0 }],
+    };
+    let arch = crate::arch::ArchConfig::vck5000();
+    let routing = route(&g, &placement, &arch).unwrap();
+    (g, placement, routing, arch)
+}
+
+#[test]
+fn deadlocked_graph_errors_in_event_engine() {
+    let (g, p, r, arch) = cyclic_fixture();
+    match super::simulate(&g, &p, &r, &arch) {
+        Err(Error::Sim(msg)) => assert!(msg.contains("deadlock"), "{msg}"),
+        other => panic!("expected Sim(deadlock), got {other:?}"),
+    }
+}
+
+#[test]
+fn deadlocked_graph_errors_in_naive_engine() {
+    let (g, p, r, arch) = cyclic_fixture();
+    match naive::simulate(&g, &p, &r, &arch) {
+        Err(Error::Sim(msg)) => assert!(msg.contains("deadlock"), "{msg}"),
+        other => panic!("expected Sim(deadlock), got {other:?}"),
+    }
+}

@@ -5,6 +5,7 @@ use crate::arch::ArchConfig;
 use crate::graph::place::{Location, Placement};
 use crate::graph::route::Routing;
 use crate::graph::{Graph, NodeKind};
+use crate::sim::NodeSched;
 
 /// Per-kernel activity summary.
 #[derive(Debug, Clone)]
@@ -68,7 +69,9 @@ impl SimReport {
     }
 }
 
-/// Assemble the report (called by `sim::simulate`).
+/// Assemble the report (called by both simulation engines). Takes the
+/// engine's [`NodeSched`] slice directly — no per-call iteration-count
+/// vector is allocated.
 pub(crate) fn build(
     graph: &Graph,
     placement: &Placement,
@@ -76,7 +79,7 @@ pub(crate) fn build(
     _arch: &ArchConfig,
     makespan: f64,
     busy_total: &[f64],
-    iters: &[usize],
+    sched: &[NodeSched],
 ) -> SimReport {
     let mut kernels = Vec::new();
     let mut flops = 0u64;
@@ -91,7 +94,7 @@ pub(crate) fn build(
             kernels.push(KernelStats {
                 name: node.name.clone(),
                 location,
-                iterations: iters[node.id],
+                iterations: sched[node.id].iters,
                 busy_s: busy_total[node.id],
                 utilization: if makespan > 0.0 { busy_total[node.id] / makespan } else { 0.0 },
             });

@@ -98,6 +98,23 @@ pub struct RoutineSpec {
 }
 
 impl RoutineSpec {
+    /// A routine instance with every non-functional parameter at its
+    /// default (the same defaults the JSON decoder applies).
+    pub fn new(kind: RoutineKind, name: impl Into<String>, size: usize) -> RoutineSpec {
+        RoutineSpec {
+            kind,
+            name: name.into(),
+            size,
+            window: None,
+            vector_bits: 512,
+            placement: None,
+            burst: false,
+            alpha: None,
+            beta: None,
+            split: 1,
+        }
+    }
+
     /// Number of non-scalar (windowed) ports this routine moves.
     pub fn vector_ports(&self) -> usize {
         self.kind
@@ -424,20 +441,40 @@ impl Spec {
         Spec {
             platform: "vck5000".into(),
             data_source: source,
-            routines: vec![RoutineSpec {
-                kind,
-                name: name.into(),
-                size,
-                window: None,
-                vector_bits: 512,
-                placement: None,
-                burst: false,
-                alpha: None,
-                beta: None,
-                split: 1,
-            }],
+            routines: vec![RoutineSpec::new(kind, name, size)],
             connections: Vec::new(),
         }
+    }
+
+    /// A `stages`-deep on-chip pipeline of one routine kind: each stage's
+    /// first vector output feeds the next stage's first vector input (the
+    /// deep-pipeline shape `benches/sim_engine.rs` and the simulator
+    /// parity tests stress). Panics if `kind` lacks vector I/O.
+    pub fn chain(kind: RoutineKind, stages: usize, size: usize) -> Spec {
+        use crate::blas::PortType;
+        let out = kind
+            .outputs()
+            .iter()
+            .find(|p| p.ty == PortType::Vector)
+            .expect("chain: routine kind has no vector output");
+        let inp = kind
+            .inputs()
+            .iter()
+            .find(|p| p.ty == PortType::Vector)
+            .expect("chain: routine kind has no vector input");
+        let mut spec = Spec { platform: "vck5000".into(), ..Default::default() };
+        for i in 0..stages {
+            spec.routines.push(RoutineSpec::new(kind, format!("s{i}"), size));
+        }
+        for i in 0..stages.saturating_sub(1) {
+            spec.connections.push(Connection {
+                from_kernel: format!("s{i}"),
+                from_port: out.name.to_string(),
+                to_kernel: format!("s{}", i + 1),
+                to_port: inp.name.to_string(),
+            });
+        }
+        spec
     }
 
     /// The paper's Fig. 1 axpydot composition: axpy (z = w − αv) feeding a
@@ -448,29 +485,10 @@ impl Spec {
             data_source: DataSource::Pl,
             routines: vec![
                 RoutineSpec {
-                    kind: RoutineKind::Axpy,
-                    name: "axpy_stage".into(),
-                    size,
-                    window: None,
-                    vector_bits: 512,
-                    placement: None,
-                    burst: false,
                     alpha: Some(-alpha),
-                    beta: None,
-                    split: 1,
+                    ..RoutineSpec::new(RoutineKind::Axpy, "axpy_stage", size)
                 },
-                RoutineSpec {
-                    kind: RoutineKind::Dot,
-                    name: "dot_stage".into(),
-                    size,
-                    window: None,
-                    vector_bits: 512,
-                    placement: None,
-                    burst: false,
-                    alpha: None,
-                    beta: None,
-                    split: 1,
-                },
+                RoutineSpec::new(RoutineKind::Dot, "dot_stage", size),
             ],
             connections: vec![Connection {
                 from_kernel: "axpy_stage".into(),
@@ -572,6 +590,16 @@ mod tests {
         let s = Spec::axpydot_dataflow(4096, 2.0);
         validate(&s).unwrap();
         assert_eq!(s.routines[0].alpha, Some(-2.0));
+    }
+
+    #[test]
+    fn chain_helper_is_valid() {
+        let s = Spec::chain(RoutineKind::Copy, 8, 4096);
+        validate(&s).unwrap();
+        assert_eq!(s.routines.len(), 8);
+        assert_eq!(s.connections.len(), 7);
+        assert_eq!(s.connections[0].from_port, "z");
+        assert_eq!(s.connections[0].to_port, "x");
     }
 
     #[test]
