@@ -1,0 +1,134 @@
+//! Serving-layer benchmark: throughput and latency of `RoutineServer`
+//! under a synthetic multi-client workload, batched vs unbatched and at
+//! 1/2/4 sharded-backend workers — the ROADMAP's async/batched-serving and
+//! sharded-execution items made measurable.
+//!
+//! Emits `BENCH_serve.json` (working directory, or under
+//! `AIEBLAS_BENCH_JSON_DIR`) in the same shape as the other BENCH files:
+//! per-case throughput (req/s), p50/p99 latency, mean batch size, and the
+//! batched-vs-unbatched throughput ratio on the CPU backend.
+//!
+//! Run: `cargo bench --bench serve`
+//! Smoke mode (CI): `AIEBLAS_BENCH_SMOKE=1` shrinks the workload so a
+//! deadlocked queue, lost wakeup or panicking worker fails fast; no
+//! timing assertions.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use aieblas::arch::ArchConfig;
+use aieblas::blas::RoutineKind;
+use aieblas::pipeline::Pipeline;
+use aieblas::runtime::{Backend, CpuBackend, ExecInputs, ShardedBackend};
+use aieblas::serve::{RoutineServer, ServeConfig, ServeReport};
+use aieblas::spec::{DataSource, Spec};
+use aieblas::util::json::{obj, Json};
+
+struct Workload {
+    specs: Vec<Spec>,
+    requests: usize,
+    clients: usize,
+}
+
+/// Push the whole workload through a fresh server and return its report.
+fn drive(workload: &Workload, backend: Arc<dyn Backend>, cfg: ServeConfig) -> ServeReport {
+    let server = RoutineServer::new(Arc::new(Pipeline::new(ArchConfig::vck5000())), backend, cfg);
+    std::thread::scope(|s| {
+        for c in 0..workload.clients {
+            let server = &server;
+            s.spawn(move || {
+                let mut tickets = Vec::new();
+                for r in (c..workload.requests).step_by(workload.clients) {
+                    let spec = &workload.specs[r % workload.specs.len()];
+                    tickets.push(server.submit(spec, ExecInputs::random_for(spec, r as u64)));
+                }
+                for t in tickets {
+                    t.wait().expect("serve request failed");
+                }
+            });
+        }
+    });
+    server.join()
+}
+
+fn row(label: &str, r: &ServeReport) -> Json {
+    eprintln!(
+        "  {label}: {:.0} req/s, p50 {:.3} ms, p99 {:.3} ms, mean batch {:.2}",
+        r.throughput_rps,
+        r.p50_latency_s * 1e3,
+        r.p99_latency_s * 1e3,
+        r.mean_batch
+    );
+    obj(vec![
+        ("case", label.into()),
+        ("requests", (r.requests as f64).into()),
+        ("batches", (r.batches as f64).into()),
+        ("mean_batch", r.mean_batch.into()),
+        ("throughput_rps", r.throughput_rps.into()),
+        ("p50_latency_s", r.p50_latency_s.into()),
+        ("p99_latency_s", r.p99_latency_s.into()),
+        ("p50_queue_wait_s", r.p50_queue_wait_s.into()),
+        ("cache_misses", (r.cache.misses as f64).into()),
+        ("cache_hits", (r.cache.hits as f64).into()),
+    ])
+}
+
+fn main() {
+    aieblas::init();
+    let smoke = std::env::var("AIEBLAS_BENCH_SMOKE").is_ok();
+    let n = if smoke { 256 } else { 1 << 14 };
+    let workload = Workload {
+        specs: (0..4)
+            .map(|i| Spec::single(RoutineKind::Axpy, &format!("r{i}"), n, DataSource::Pl))
+            .collect(),
+        requests: if smoke { 64 } else { 512 },
+        clients: 4,
+    };
+    let linger = Duration::from_micros(if smoke { 50 } else { 200 });
+    eprintln!(
+        "== bench: serve ({} requests, {} clients, axpy n={n}, smoke={smoke}) ==",
+        workload.requests, workload.clients
+    );
+
+    let mut rows: Vec<Json> = Vec::new();
+
+    // batched vs unbatched, CPU backend (the acceptance comparison)
+    let unbatched = drive(
+        &workload,
+        Arc::new(CpuBackend),
+        ServeConfig { max_batch: 1, linger: Duration::ZERO, queue_capacity: 256, workers: 2 },
+    );
+    rows.push(row("cpu/unbatched", &unbatched));
+    let batched = drive(
+        &workload,
+        Arc::new(CpuBackend),
+        ServeConfig { max_batch: 8, linger, queue_capacity: 256, workers: 2 },
+    );
+    rows.push(row("cpu/batched", &batched));
+    let ratio = batched.throughput_rps / unbatched.throughput_rps.max(1e-9);
+    eprintln!("  batched vs unbatched throughput: {ratio:.2}x");
+
+    // sharded fan-out sweep: 1 / 2 / 4 workers per batch
+    for shards in [1usize, 2, 4] {
+        let report = drive(
+            &workload,
+            Arc::new(ShardedBackend::new(CpuBackend, shards)),
+            ServeConfig { max_batch: 8, linger, queue_capacity: 256, workers: 2 },
+        );
+        rows.push(row(&format!("cpu/sharded_w{shards}"), &report));
+    }
+
+    let doc = obj(vec![
+        ("bench", "serve".into()),
+        ("unit", "seconds".into()),
+        ("smoke", smoke.into()),
+        ("batched_vs_unbatched_throughput", ratio.into()),
+        ("cases", Json::Arr(rows)),
+    ]);
+    let dir = std::env::var("AIEBLAS_BENCH_JSON_DIR").unwrap_or_else(|_| ".".into());
+    let path = format!("{dir}/BENCH_serve.json");
+    match std::fs::write(&path, doc.to_pretty() + "\n") {
+        Ok(()) => eprintln!("wrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+}

@@ -18,6 +18,7 @@ use crate::pipeline::{CacheStats, ExecutablePlan, Pipeline, PlanCache};
 use crate::runtime::{
     Backend, CpuBackend, ExecInputs, NumericExecutor, Provenance, ReferenceBackend, SimBackend,
 };
+use crate::serve::{RoutineServer, ServeConfig};
 use crate::sim::SimReport;
 use crate::spec::{DataSource, Spec};
 use crate::util::rng::Rng;
@@ -90,8 +91,11 @@ impl RunReport {
             ));
         }
         s.push_str(&format!(
-            "\nplan cache: {} hit(s) / {} miss(es), {} plan(s) resident",
-            self.plan_cache.hits, self.plan_cache.misses, self.plan_cache.entries
+            "\nplan cache: {} hit(s) / {} miss(es), {} plan(s) resident, {} eviction(s)",
+            self.plan_cache.hits,
+            self.plan_cache.misses,
+            self.plan_cache.entries,
+            self.plan_cache.evictions
         ));
         s
     }
@@ -101,14 +105,16 @@ impl RunReport {
 pub struct AieBlas {
     pub config: Config,
     executor: NumericExecutor,
-    pipeline: Pipeline,
+    pipeline: Arc<Pipeline>,
 }
 
 impl AieBlas {
     pub fn new(config: Config) -> Result<AieBlas> {
         let executor = NumericExecutor::new(&config.artifacts_dir)?;
-        let pipeline =
-            Pipeline::with_cache_capacity(config.arch.clone(), config.plan_cache_capacity);
+        let pipeline = Arc::new(Pipeline::with_cache_capacity(
+            config.arch.clone(),
+            config.plan_cache_capacity,
+        ));
         Ok(AieBlas { config, executor, pipeline })
     }
 
@@ -119,6 +125,18 @@ impl AieBlas {
     /// The plan cache memoizing spec lowering (hits/misses/entries).
     pub fn plan_cache(&self) -> &PlanCache {
         self.pipeline.cache()
+    }
+
+    /// The shared lowering pipeline (thread-safe, single-flight); hand a
+    /// clone to a [`RoutineServer`] or any worker thread.
+    pub fn pipeline(&self) -> Arc<Pipeline> {
+        self.pipeline.clone()
+    }
+
+    /// Spin up a serving front-end over this system's pipeline: bounded
+    /// request queue, same-plan batching, `backend`-pool dispatch.
+    pub fn serve(&self, backend: Arc<dyn Backend>, cfg: ServeConfig) -> RoutineServer {
+        RoutineServer::new(self.pipeline.clone(), backend, cfg)
     }
 
     /// Lower a spec through the staged pipeline (cached).
@@ -295,6 +313,26 @@ mod tests {
         assert!(rep.cpu_time_s.unwrap() > 0.0);
         assert!(rep.summary().contains("AIE (simulated)"));
         assert!(rep.summary().contains("plan cache"));
+        assert!(rep.summary().contains("eviction(s)"), "{}", rep.summary());
+    }
+
+    #[test]
+    fn serve_front_end_shares_the_plan_cache() {
+        let sys = system();
+        let spec = Spec::single(RoutineKind::Axpy, "a", 2048, DataSource::Pl);
+        let inputs = ExecInputs::random_for(&spec, 9);
+        let srv = sys.serve(Arc::new(ReferenceBackend), Default::default());
+        let served = srv.submit(&spec, inputs.clone()).wait().unwrap();
+        drop(srv);
+        // the server lowered through the system's pipeline...
+        assert_eq!(sys.plan_cache().stats().misses, 1);
+        let plan = sys.lower(&spec).unwrap();
+        assert_eq!(sys.plan_cache().stats().hits, 1, "same plan, now warm");
+        // ...and produced the same numerics as a direct execution.
+        let direct = ReferenceBackend
+            .execute(&ReferenceBackend.prepare(plan).unwrap(), &inputs)
+            .unwrap();
+        assert_eq!(served.results[0].output, direct.results[0].output);
     }
 
     #[test]

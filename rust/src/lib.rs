@@ -9,10 +9,13 @@
 //! Layer map:
 //! * **L3 (this crate)** — the AIEBLAS system: JSON spec → staged pipeline
 //!   (`pipeline`: validation + code generation → placement + routing →
-//!   [`pipeline::ExecutablePlan`], memoized in a plan cache) → execution
-//!   behind the [`runtime::Backend`] trait (`SimBackend` / `CpuBackend` /
-//!   `ReferenceBackend`), plus the experiment harness reproducing the
-//!   paper's Fig. 3.
+//!   [`pipeline::ExecutablePlan`], memoized in a thread-safe, single-flight
+//!   plan cache) → execution behind the [`runtime::Backend`] trait
+//!   (`SimBackend` / `CpuBackend` / `ReferenceBackend`, batched via
+//!   `execute_batch`, fanned out by `ShardedBackend`) → concurrent serving
+//!   via [`serve::RoutineServer`] (bounded queue + same-plan batching +
+//!   backend pool), plus the experiment harness reproducing the paper's
+//!   Fig. 3.
 //! * **L2 (`python/compile/model.py`)** — JAX routine graphs.
 //! * **L1 (`python/compile/kernels/`)** — window-tiled Pallas kernels.
 //!
@@ -66,6 +69,7 @@ pub mod graph;
 pub mod pipeline;
 pub mod pl;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod spec;
 pub mod util;

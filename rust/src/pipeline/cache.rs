@@ -15,12 +15,18 @@ use super::ExecutablePlan;
 /// Snapshot of the cache's counters.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
-    /// Lowerings served from the cache.
+    /// Lowerings served from the cache (including requests coalesced onto
+    /// an in-flight lowering by the pipeline's single-flight path).
     pub hits: u64,
     /// Lowerings that ran the full pipeline.
     pub misses: u64,
     /// Plans currently resident.
     pub entries: usize,
+    /// Resident plans dropped to make room (serving-pressure thrash).
+    pub evictions: u64,
+    /// Requests that waited on another thread's in-flight lowering
+    /// instead of lowering redundantly (subset of `hits`).
+    pub coalesced: u64,
 }
 
 impl CacheStats {
@@ -47,6 +53,8 @@ pub struct PlanCache {
     capacity: usize,
     hits: AtomicU64,
     misses: AtomicU64,
+    evictions: AtomicU64,
+    coalesced: AtomicU64,
 }
 
 impl PlanCache {
@@ -56,26 +64,38 @@ impl PlanCache {
             capacity: capacity.max(1),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
         }
     }
 
-    /// Look up a plan, counting a hit or miss and refreshing LRU order.
+    /// Look up a plan, counting a hit and refreshing LRU order when
+    /// present. Absence counts **nothing**: `misses` means "a full
+    /// lowering ran", recorded by the single-flight leader via
+    /// [`PlanCache::record_miss`] — so `misses == distinct cold specs`
+    /// holds no matter how many threads probe concurrently.
     pub fn get(&self, key: &str) -> Option<Arc<ExecutablePlan>> {
         let mut inner = self.inner.lock().expect("plan cache poisoned");
-        match inner.map.get(key).cloned() {
-            Some(plan) => {
-                self.hits.fetch_add(1, Ordering::Relaxed);
-                if let Some(pos) = inner.order.iter().position(|k| k == key) {
-                    inner.order.remove(pos);
-                }
-                inner.order.push_back(key.to_string());
-                Some(plan)
-            }
-            None => {
-                self.misses.fetch_add(1, Ordering::Relaxed);
-                None
-            }
+        let plan = inner.map.get(key).cloned()?;
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        if let Some(pos) = inner.order.iter().position(|k| k == key) {
+            inner.order.remove(pos);
         }
+        inner.order.push_back(key.to_string());
+        Some(plan)
+    }
+
+    /// Record one full-pipeline lowering (the single-flight leader).
+    pub(crate) fn record_miss(&self) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a request served by waiting on another thread's in-flight
+    /// lowering: a hit (the plan was shared, not re-lowered) plus the
+    /// `coalesced` sub-counter.
+    pub(crate) fn record_coalesced(&self) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        self.coalesced.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Insert a freshly lowered plan, evicting the least recently used
@@ -90,6 +110,7 @@ impl PlanCache {
             match inner.order.pop_front() {
                 Some(old) => {
                     inner.map.remove(&old);
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
                 }
                 None => break,
             }
@@ -118,6 +139,8 @@ impl PlanCache {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             entries: self.len(),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            coalesced: self.coalesced.load(Ordering::Relaxed),
         }
     }
 }
@@ -137,6 +160,8 @@ mod tests {
     fn hit_and_miss_counting() {
         let cache = PlanCache::new(4);
         assert!(cache.get("a").is_none());
+        assert_eq!(cache.stats().misses, 0, "absence alone is not a miss");
+        cache.record_miss(); // the lowering leader ran the pipeline
         cache.insert("a".into(), plan_for(64));
         assert!(cache.get("a").is_some());
         let s = cache.stats();
@@ -167,6 +192,19 @@ mod tests {
         let s = cache.stats();
         assert_eq!(s.entries, 0);
         assert_eq!(s.hits, 1);
+    }
+
+    #[test]
+    fn evictions_are_counted() {
+        let cache = PlanCache::new(2);
+        cache.insert("a".into(), plan_for(64));
+        cache.insert("b".into(), plan_for(128));
+        assert_eq!(cache.stats().evictions, 0);
+        cache.insert("c".into(), plan_for(256));
+        cache.insert("d".into(), plan_for(512));
+        let s = cache.stats();
+        assert_eq!(s.evictions, 2, "two inserts past capacity evict twice");
+        assert_eq!(s.entries, 2);
     }
 
     #[test]

@@ -21,7 +21,8 @@ pub mod cache;
 
 pub use cache::{CacheStats, PlanCache};
 
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
 
 use crate::arch::ArchConfig;
 use crate::codegen::GeneratedProject;
@@ -30,7 +31,7 @@ use crate::graph::place::{place, Placement};
 use crate::graph::route::{check_routing, route, Routing};
 use crate::graph::Graph;
 use crate::spec::Spec;
-use crate::Result;
+use crate::{Error, Result};
 
 /// Stage-1 output: a validated spec with its dataflow graph and the
 /// generated Vitis sources (paper Fig. 1 ①–④ up to placement).
@@ -121,12 +122,76 @@ pub fn lower_spec(spec: &Spec) -> Result<ExecutablePlan> {
     lower_spec_with(spec, &ArchConfig::vck5000())
 }
 
+/// Outcome of one lowering as seen by single-flight followers; errors
+/// travel as rendered strings (`Error` is not `Clone`).
+type LoweredResult = std::result::Result<Arc<ExecutablePlan>, String>;
+
+/// One in-flight lowering: the leader fills `done` and notifies; followers
+/// block on the condvar and share the result.
+struct LoweringSlot {
+    done: Mutex<Option<LoweredResult>>,
+    cv: Condvar,
+}
+
+impl LoweringSlot {
+    fn new() -> Arc<LoweringSlot> {
+        Arc::new(LoweringSlot { done: Mutex::new(None), cv: Condvar::new() })
+    }
+
+    fn fill(&self, result: LoweredResult) {
+        let mut done = self.done.lock().expect("lowering slot poisoned");
+        if done.is_none() {
+            *done = Some(result);
+        }
+        self.cv.notify_all();
+    }
+
+    fn wait(&self) -> LoweredResult {
+        let mut done = self.done.lock().expect("lowering slot poisoned");
+        loop {
+            if let Some(result) = done.as_ref() {
+                return result.clone();
+            }
+            done = self.cv.wait(done).expect("lowering slot poisoned");
+        }
+    }
+}
+
+/// Removes the leader's slot from the in-flight map and fails any waiting
+/// followers even if lowering panics (so they never block forever).
+struct LeaderGuard<'p> {
+    pipeline: &'p Pipeline,
+    key: String,
+    slot: Arc<LoweringSlot>,
+}
+
+impl Drop for LeaderGuard<'_> {
+    fn drop(&mut self) {
+        self.pipeline
+            .in_flight
+            .lock()
+            .expect("in-flight map poisoned")
+            .remove(&self.key);
+        // no-op when the leader already filled the slot with its result
+        self.slot.fill(Err(format!("lowering of {:?} panicked", self.key)));
+    }
+}
+
 /// The memoizing pipeline front-end: `lower` returns a shared
 /// [`ExecutablePlan`], reusing a cached one when the same spec (by
 /// canonical JSON) was lowered before.
+///
+/// `Pipeline` is `Send + Sync` and designed to sit behind an `Arc` shared
+/// by every serving thread: the cache is a mutex'd LRU with atomic
+/// counters, and cold lowerings are **single-flight** — N concurrent
+/// requests for the same uncached spec run codegen/placement/routing once
+/// (one miss) while the other N−1 block and share the resulting
+/// `Arc<ExecutablePlan>` (counted as coalesced hits).
 pub struct Pipeline {
     default_arch: ArchConfig,
     cache: PlanCache,
+    /// Cold lowerings currently running, keyed like the cache.
+    in_flight: Mutex<HashMap<String, Arc<LoweringSlot>>>,
 }
 
 impl Pipeline {
@@ -134,28 +199,80 @@ impl Pipeline {
     pub const DEFAULT_CACHE_CAPACITY: usize = 128;
 
     pub fn new(default_arch: ArchConfig) -> Pipeline {
-        Pipeline { default_arch, cache: PlanCache::new(Self::DEFAULT_CACHE_CAPACITY) }
+        Self::with_cache_capacity(default_arch, Self::DEFAULT_CACHE_CAPACITY)
     }
 
     pub fn with_cache_capacity(default_arch: ArchConfig, capacity: usize) -> Pipeline {
-        Pipeline { default_arch, cache: PlanCache::new(capacity) }
+        Pipeline {
+            default_arch,
+            cache: PlanCache::new(capacity),
+            in_flight: Mutex::new(HashMap::new()),
+        }
     }
 
     /// Lower a spec to an executable plan, consulting the plan cache.
+    ///
+    /// Thread-safe and single-flight: concurrent calls with the same cache
+    /// key either hit the cache, become the one lowering leader, or wait
+    /// for the leader and share its plan.
     pub fn lower(&self, spec: &Spec) -> Result<Arc<ExecutablePlan>> {
         let key = spec.cache_key();
         if let Some(hit) = self.cache.get(&key) {
             return Ok(hit);
         }
-        let plan = Arc::new(lower_spec_with(spec, &self.default_arch)?);
-        self.cache.insert(key, plan.clone());
-        Ok(plan)
+        let (slot, leader) = {
+            let mut in_flight = self.in_flight.lock().expect("in-flight map poisoned");
+            // re-check under the map lock: a leader may have completed
+            // (inserted into the cache and left the map) since the peek.
+            if let Some(hit) = self.cache.get(&key) {
+                return Ok(hit);
+            }
+            match in_flight.get(&key) {
+                Some(slot) => (slot.clone(), false),
+                None => {
+                    let slot = LoweringSlot::new();
+                    in_flight.insert(key.clone(), slot.clone());
+                    (slot, true)
+                }
+            }
+        };
+        if !leader {
+            return match slot.wait() {
+                Ok(plan) => {
+                    self.cache.record_coalesced();
+                    Ok(plan)
+                }
+                Err(msg) => Err(Error::Runtime(msg)),
+            };
+        }
+        let guard = LeaderGuard { pipeline: self, key: key.clone(), slot };
+        self.cache.record_miss();
+        match lower_spec_with(spec, &self.default_arch) {
+            Ok(plan) => {
+                let plan = Arc::new(plan);
+                self.cache.insert(key, plan.clone());
+                guard.slot.fill(Ok(plan.clone()));
+                Ok(plan)
+            }
+            Err(e) => {
+                guard.slot.fill(Err(e.to_string()));
+                Err(e)
+            }
+        }
     }
 
     pub fn cache(&self) -> &PlanCache {
         &self.cache
     }
 }
+
+// the serving layer shares one Pipeline across threads; keep it that way.
+const _: fn() = || {
+    fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<Pipeline>();
+    assert_send_sync::<PlanCache>();
+    assert_send_sync::<ExecutablePlan>();
+};
 
 impl Default for Pipeline {
     fn default() -> Self {
@@ -211,6 +328,54 @@ mod tests {
             .unwrap();
         assert!(!Arc::ptr_eq(&a, &b));
         assert_eq!(pipeline.cache().stats().misses, 2);
+    }
+
+    #[test]
+    fn concurrent_same_key_lowering_is_single_flight() {
+        let pipeline = Arc::new(Pipeline::default());
+        let spec = Spec::axpydot_dataflow(8192, 2.0);
+        let threads = 8;
+        let barrier = Arc::new(std::sync::Barrier::new(threads));
+        let plans: Vec<Arc<ExecutablePlan>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..threads)
+                .map(|_| {
+                    let pipeline = pipeline.clone();
+                    let spec = spec.clone();
+                    let barrier = barrier.clone();
+                    s.spawn(move || {
+                        barrier.wait();
+                        pipeline.lower(&spec).unwrap()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for p in &plans[1..] {
+            assert!(Arc::ptr_eq(&plans[0], p), "all threads must share one plan");
+        }
+        let stats = pipeline.cache().stats();
+        assert_eq!(stats.misses, 1, "one cold spec lowers exactly once");
+        assert_eq!(stats.hits + stats.misses, threads as u64);
+    }
+
+    #[test]
+    fn failed_lowering_propagates_to_followers() {
+        let pipeline = Arc::new(Pipeline::default());
+        let bad = Spec { routines: vec![], ..Default::default() };
+        let threads = 4;
+        let barrier = Arc::new(std::sync::Barrier::new(threads));
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                let pipeline = pipeline.clone();
+                let bad = bad.clone();
+                let barrier = barrier.clone();
+                s.spawn(move || {
+                    barrier.wait();
+                    assert!(pipeline.lower(&bad).is_err());
+                });
+            }
+        });
+        assert_eq!(pipeline.cache().len(), 0, "failed lowerings are not cached");
     }
 
     #[test]

@@ -13,10 +13,17 @@
 //! * [`ReferenceBackend`] — the scalar ground-truth kernels
 //!   (`crate::blas::reference`) every other backend is validated against.
 //!
-//! Adding a fourth backend is implementing the three trait methods — see
-//! DESIGN.md §3 for a worked ≤30-line example.
+//! Backends are `Send + Sync` so the serving layer (`crate::serve`) can
+//! share one instance across a pool of dispatcher threads. Batched
+//! execution ([`Backend::execute_batch`]) amortizes per-plan setup over
+//! many requests for the same prepared plan — the simulator runs its DES
+//! once per batch, not once per request — and [`ShardedBackend`] fans a
+//! batch across `util::threadpool` workers.
+//!
+//! Adding a fourth backend is implementing the three required trait
+//! methods — see DESIGN.md §3 for a worked ≤30-line example.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::blas::RoutineKind;
@@ -112,7 +119,10 @@ impl Prepared {
 }
 
 /// An execution target for lowered plans.
-pub trait Backend {
+///
+/// `Send + Sync` is part of the contract: the serving layer dispatches
+/// batches to one shared backend from many threads.
+pub trait Backend: Send + Sync {
     /// Stable backend name (used in reports and outcome labels).
     fn name(&self) -> &'static str;
 
@@ -121,6 +131,15 @@ pub trait Backend {
 
     /// Execute the prepared plan on `inputs`.
     fn execute(&self, prepared: &Prepared, inputs: &ExecInputs) -> Result<ExecOutcome>;
+
+    /// Execute one prepared plan on many requests' inputs, returning one
+    /// outcome per request (in order). The default runs requests
+    /// sequentially; backends override it to amortize per-plan setup over
+    /// the whole batch. Outputs must be bit-identical to per-request
+    /// [`Backend::execute`] calls (enforced by `rust/tests/serving.rs`).
+    fn execute_batch(&self, prepared: &Prepared, batch: &[ExecInputs]) -> Vec<Result<ExecOutcome>> {
+        batch.iter().map(|inputs| self.execute(prepared, inputs)).collect()
+    }
 }
 
 fn check_prepared(prepared: &Prepared, backend: &'static str) -> Result<()> {
@@ -179,6 +198,29 @@ impl<'e> SimBackend<'e> {
             }
         }
     }
+
+    /// Numeric execution of every routine in the plan (empty inputs mean
+    /// timing-only). Shared by `execute` and `execute_batch`.
+    fn numeric_results(
+        &self,
+        plan: &ExecutablePlan,
+        inputs: &ExecInputs,
+    ) -> Result<Vec<RoutineResult>> {
+        let mut results = Vec::new();
+        if !inputs.is_empty() {
+            for (i, r) in plan.spec().routines.iter().enumerate() {
+                let rin = inputs.for_routine(i, &r.name)?;
+                let (output, provenance) = self.run_numeric(r.kind.name(), r.size, rin)?;
+                results.push(RoutineResult {
+                    routine: r.name.clone(),
+                    kind: r.kind,
+                    output,
+                    provenance,
+                });
+            }
+        }
+        Ok(results)
+    }
 }
 
 impl Backend for SimBackend<'_> {
@@ -199,25 +241,52 @@ impl Backend for SimBackend<'_> {
         let t0 = Instant::now();
         let sim =
             crate::sim::simulate(plan.graph(), plan.placement(), plan.routing(), plan.arch())?;
-        let mut results = Vec::new();
-        if !inputs.is_empty() {
-            for (i, r) in plan.spec().routines.iter().enumerate() {
-                let rin = inputs.for_routine(i, &r.name)?;
-                let (output, provenance) = self.run_numeric(r.kind.name(), r.size, rin)?;
-                results.push(RoutineResult {
-                    routine: r.name.clone(),
-                    kind: r.kind,
-                    output,
-                    provenance,
-                });
-            }
-        }
+        let results = self.numeric_results(plan, inputs)?;
         Ok(ExecOutcome {
             backend: self.name(),
             results,
             sim: Some(sim),
             wall_s: t0.elapsed().as_secs_f64(),
         })
+    }
+
+    /// Batched execution amortizes the expensive part: device timing
+    /// depends only on the plan, so the DES runs **once** per batch and
+    /// every request shares the report. Each outcome's `wall_s` is that
+    /// request's numerics time plus a 1/batch share of the DES run, so
+    /// summed `wall_s` still accounts for the host work actually done.
+    fn execute_batch(&self, prepared: &Prepared, batch: &[ExecInputs]) -> Vec<Result<ExecOutcome>> {
+        if batch.is_empty() {
+            return Vec::new();
+        }
+        let plan = prepared.plan();
+        let t_sim = Instant::now();
+        let sim = match check_prepared(prepared, self.name()).and_then(|()| {
+            crate::sim::simulate(plan.graph(), plan.placement(), plan.routing(), plan.arch())
+        }) {
+            Ok(sim) => sim,
+            // errors are per-request values but `Error` is not `Clone`:
+            // render once and hand every request the same message rather
+            // than re-running the failing DES per request.
+            Err(e) => {
+                let msg = e.to_string();
+                return batch.iter().map(|_| Err(Error::Runtime(msg.clone()))).collect();
+            }
+        };
+        let sim_share_s = t_sim.elapsed().as_secs_f64() / batch.len() as f64;
+        batch
+            .iter()
+            .map(|inputs| {
+                let t0 = Instant::now();
+                let results = self.numeric_results(plan, inputs)?;
+                Ok(ExecOutcome {
+                    backend: self.name(),
+                    results,
+                    sim: Some(sim.clone()),
+                    wall_s: sim_share_s + t0.elapsed().as_secs_f64(),
+                })
+            })
+            .collect()
     }
 }
 
@@ -302,6 +371,27 @@ impl CpuBackend {
             }
         }
     }
+
+    /// Execute every routine of `routines` on `inputs` — shared by
+    /// `execute` and `execute_batch` so the two paths cannot diverge.
+    fn routine_results(
+        routines: &[crate::spec::RoutineSpec],
+        inputs: &ExecInputs,
+    ) -> Result<Vec<RoutineResult>> {
+        let mut results = Vec::with_capacity(routines.len());
+        for (i, r) in routines.iter().enumerate() {
+            let rin = inputs.for_routine(i, &r.name)?;
+            validate_inputs(r.kind.name(), r.size, rin)?;
+            let output = std::hint::black_box(Self::run_kind(r.kind, r.size, rin));
+            results.push(RoutineResult {
+                routine: r.name.clone(),
+                kind: r.kind,
+                output,
+                provenance: Provenance::Cpu,
+            });
+        }
+        Ok(results)
+    }
 }
 
 impl Backend for CpuBackend {
@@ -315,26 +405,36 @@ impl Backend for CpuBackend {
 
     fn execute(&self, prepared: &Prepared, inputs: &ExecInputs) -> Result<ExecOutcome> {
         check_prepared(prepared, self.name())?;
-        let plan = prepared.plan();
         let t0 = Instant::now();
-        let mut results = Vec::new();
-        for (i, r) in plan.spec().routines.iter().enumerate() {
-            let rin = inputs.for_routine(i, &r.name)?;
-            validate_inputs(r.kind.name(), r.size, rin)?;
-            let output = std::hint::black_box(Self::run_kind(r.kind, r.size, rin));
-            results.push(RoutineResult {
-                routine: r.name.clone(),
-                kind: r.kind,
-                output,
-                provenance: Provenance::Cpu,
-            });
-        }
+        let results = Self::routine_results(&prepared.plan().spec().routines, inputs)?;
         Ok(ExecOutcome {
             backend: self.name(),
             results,
             sim: None,
             wall_s: t0.elapsed().as_secs_f64(),
         })
+    }
+
+    /// Batched execution checks the prepared binding once and resolves the
+    /// plan's routine list once for the whole batch.
+    fn execute_batch(&self, prepared: &Prepared, batch: &[ExecInputs]) -> Vec<Result<ExecOutcome>> {
+        if check_prepared(prepared, self.name()).is_err() {
+            return batch.iter().map(|inputs| self.execute(prepared, inputs)).collect();
+        }
+        let routines = &prepared.plan().spec().routines;
+        batch
+            .iter()
+            .map(|inputs| {
+                let t0 = Instant::now();
+                let results = Self::routine_results(routines, inputs)?;
+                Ok(ExecOutcome {
+                    backend: self.name(),
+                    results,
+                    sim: None,
+                    wall_s: t0.elapsed().as_secs_f64(),
+                })
+            })
+            .collect()
     }
 }
 
@@ -472,6 +572,27 @@ impl ReferenceBackend {
     pub fn run_kind(kind: RoutineKind, size: usize, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
         Self::execute_named(kind.name(), size, inputs)
     }
+
+    /// Execute every routine of `routines` on `inputs` — shared by
+    /// `execute` and `execute_batch` so the two paths cannot diverge.
+    fn routine_results(
+        routines: &[crate::spec::RoutineSpec],
+        inputs: &ExecInputs,
+    ) -> Result<Vec<RoutineResult>> {
+        let mut results = Vec::with_capacity(routines.len());
+        for (i, r) in routines.iter().enumerate() {
+            let rin = inputs.for_routine(i, &r.name)?;
+            validate_inputs(r.kind.name(), r.size, rin)?;
+            let output = Self::run_kind(r.kind, r.size, rin)?;
+            results.push(RoutineResult {
+                routine: r.name.clone(),
+                kind: r.kind,
+                output,
+                provenance: Provenance::Reference,
+            });
+        }
+        Ok(results)
+    }
 }
 
 impl Backend for ReferenceBackend {
@@ -485,20 +606,8 @@ impl Backend for ReferenceBackend {
 
     fn execute(&self, prepared: &Prepared, inputs: &ExecInputs) -> Result<ExecOutcome> {
         check_prepared(prepared, self.name())?;
-        let plan = prepared.plan();
         let t0 = Instant::now();
-        let mut results = Vec::new();
-        for (i, r) in plan.spec().routines.iter().enumerate() {
-            let rin = inputs.for_routine(i, &r.name)?;
-            validate_inputs(r.kind.name(), r.size, rin)?;
-            let output = Self::run_kind(r.kind, r.size, rin)?;
-            results.push(RoutineResult {
-                routine: r.name.clone(),
-                kind: r.kind,
-                output,
-                provenance: Provenance::Reference,
-            });
-        }
+        let results = Self::routine_results(&prepared.plan().spec().routines, inputs)?;
         Ok(ExecOutcome {
             backend: self.name(),
             results,
@@ -506,7 +615,124 @@ impl Backend for ReferenceBackend {
             wall_s: t0.elapsed().as_secs_f64(),
         })
     }
+
+    /// Same amortization as [`CpuBackend::execute_batch`].
+    fn execute_batch(&self, prepared: &Prepared, batch: &[ExecInputs]) -> Vec<Result<ExecOutcome>> {
+        if check_prepared(prepared, self.name()).is_err() {
+            return batch.iter().map(|inputs| self.execute(prepared, inputs)).collect();
+        }
+        let routines = &prepared.plan().spec().routines;
+        batch
+            .iter()
+            .map(|inputs| {
+                let t0 = Instant::now();
+                let results = Self::routine_results(routines, inputs)?;
+                Ok(ExecOutcome {
+                    backend: self.name(),
+                    results,
+                    sim: None,
+                    wall_s: t0.elapsed().as_secs_f64(),
+                })
+            })
+            .collect()
+    }
 }
+
+// ---------------------------------------------------------------------------
+// ShardedBackend
+// ---------------------------------------------------------------------------
+
+/// Adapter that fans one prepared plan's batch across
+/// [`crate::util::threadpool`] workers, keeping per-request semantics (and
+/// outputs) identical to the wrapped backend.
+///
+/// Transparent to `prepare`/`execute`: `name()` forwards to the inner
+/// backend, so plans prepared through the adapter pass the inner backend's
+/// binding check and vice versa. Only `execute_batch` changes — the batch
+/// is split into `workers` contiguous shards executed concurrently, and
+/// degrades gracefully to the inner batch path for 1-element batches.
+///
+/// Sharding pays off when per-request execution is *serial*: the scalar
+/// reference kernels, or CPU kernels below `blas::cpu`'s internal
+/// parallelization threshold. Wrapping it around work that already fans
+/// out per request (large-`n` `CpuBackend` routines) oversubscribes the
+/// cores, and wrapping `SimBackend` re-runs its once-per-batch DES once
+/// per shard — prefer the inner backend directly in both cases.
+pub struct ShardedBackend<B> {
+    inner: B,
+    workers: usize,
+}
+
+impl<B: Backend> ShardedBackend<B> {
+    /// `workers` is clamped to at least 1.
+    pub fn new(inner: B, workers: usize) -> ShardedBackend<B> {
+        ShardedBackend { inner, workers: workers.max(1) }
+    }
+
+    pub fn inner(&self) -> &B {
+        &self.inner
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+}
+
+impl<B: Backend> Backend for ShardedBackend<B> {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn prepare(&self, plan: Arc<ExecutablePlan>) -> Result<Prepared> {
+        self.inner.prepare(plan)
+    }
+
+    fn execute(&self, prepared: &Prepared, inputs: &ExecInputs) -> Result<ExecOutcome> {
+        self.inner.execute(prepared, inputs)
+    }
+
+    fn execute_batch(&self, prepared: &Prepared, batch: &[ExecInputs]) -> Vec<Result<ExecOutcome>> {
+        let n = batch.len();
+        if n <= 1 || self.workers == 1 {
+            return self.inner.execute_batch(prepared, batch);
+        }
+        // one slot per contiguous chunk (each worker writes exactly one),
+        // not one per request — shards.min(n) locks for the whole batch.
+        let shards = self.workers.min(n);
+        let slots: Vec<_> = (0..shards).map(|_| Mutex::new(None)).collect();
+        crate::util::threadpool::parallel_chunks_with(n, shards, |i, start, end| {
+            let outs = self.inner.execute_batch(prepared, &batch[start..end]);
+            *slots[i].lock().expect("shard slot poisoned") = Some(outs);
+        });
+        let mut outcomes = Vec::with_capacity(n);
+        for slot in slots {
+            let outs =
+                slot.into_inner().expect("shard slot poisoned").expect("shard worker panicked");
+            outcomes.extend(outs);
+        }
+        if outcomes.len() != n {
+            // a misbehaving inner backend dropped or invented outcomes;
+            // surface the count mismatch rather than misassigning results.
+            let msg = format!(
+                "sharded inner backend {:?} returned {} outcome(s) for {} request(s)",
+                self.inner.name(),
+                outcomes.len(),
+                n
+            );
+            return (0..n).map(|_| Err(Error::Runtime(msg.clone()))).collect();
+        }
+        outcomes
+    }
+}
+
+// the serving layer holds backends behind Arc<dyn Backend> across threads.
+const _: fn() = || {
+    fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<SimBackend<'static>>();
+    assert_send_sync::<CpuBackend>();
+    assert_send_sync::<ReferenceBackend>();
+    assert_send_sync::<ShardedBackend<CpuBackend>>();
+};
 
 #[cfg(test)]
 mod tests {

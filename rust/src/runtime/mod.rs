@@ -13,14 +13,16 @@
 pub mod backend;
 pub mod manifest;
 
-use std::cell::RefCell;
 #[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+#[cfg(feature = "pjrt")]
+use std::sync::Mutex;
 
 pub use backend::{
     Backend, CpuBackend, ExecInputs, ExecOutcome, Prepared, ReferenceBackend, RoutineResult,
-    SimBackend,
+    ShardedBackend, SimBackend,
 };
 pub use manifest::Manifest;
 
@@ -42,16 +44,22 @@ pub enum Provenance {
 /// Executes precompiled BLAS artifacts via PJRT, with the reference
 /// backend serving shapes that were not precompiled (or every request
 /// when the `pjrt` feature is disabled).
+///
+/// `Sync` by construction (atomic counters, mutex'd compile cache) so the
+/// serving layer can share one executor across backend-pool threads. With
+/// the `pjrt` feature the `Sync` bound additionally rides on the vendored
+/// `xla` types being shareable; the compile cache's mutex already
+/// serializes access to them.
 pub struct NumericExecutor {
     manifest: Manifest,
     #[cfg(feature = "pjrt")]
     client: Option<xla::PjRtClient>,
     /// key → compiled executable (compile once, execute many).
     #[cfg(feature = "pjrt")]
-    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    cache: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
     /// Executions served by PJRT vs the fallback (observability).
-    pub pjrt_calls: RefCell<u64>,
-    pub fallback_calls: RefCell<u64>,
+    pjrt_calls: AtomicU64,
+    fallback_calls: AtomicU64,
 }
 
 impl NumericExecutor {
@@ -84,14 +92,24 @@ impl NumericExecutor {
             #[cfg(feature = "pjrt")]
             client,
             #[cfg(feature = "pjrt")]
-            cache: RefCell::new(HashMap::new()),
-            pjrt_calls: RefCell::new(0),
-            fallback_calls: RefCell::new(0),
+            cache: Mutex::new(HashMap::new()),
+            pjrt_calls: AtomicU64::new(0),
+            fallback_calls: AtomicU64::new(0),
         })
     }
 
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
+    }
+
+    /// Executions served by a PJRT artifact.
+    pub fn pjrt_calls(&self) -> u64 {
+        self.pjrt_calls.load(Ordering::Relaxed)
+    }
+
+    /// Executions served by the reference fallback.
+    pub fn fallback_calls(&self) -> u64 {
+        self.fallback_calls.load(Ordering::Relaxed)
     }
 
     /// True when a PJRT artifact will serve this (routine, size).
@@ -119,7 +137,7 @@ impl NumericExecutor {
         if self.has_artifact(name, size) {
             match self.execute_pjrt(name, size, inputs) {
                 Ok(out) => {
-                    *self.pjrt_calls.borrow_mut() += 1;
+                    self.pjrt_calls.fetch_add(1, Ordering::Relaxed);
                     return Ok((out, Provenance::Pjrt));
                 }
                 Err(e) => {
@@ -128,7 +146,7 @@ impl NumericExecutor {
             }
         }
         let out = ReferenceBackend::execute_named(name, size, inputs)?;
-        *self.fallback_calls.borrow_mut() += 1;
+        self.fallback_calls.fetch_add(1, Ordering::Relaxed);
         Ok((out, Provenance::Reference))
     }
 
@@ -152,15 +170,16 @@ impl NumericExecutor {
             )));
         }
 
-        // compile (cached)
-        if !self.cache.borrow().contains_key(&entry.key) {
+        // compile (cached); the lock also serializes PJRT execution below
+        let mut cache = self.cache.lock().expect("pjrt compile cache poisoned");
+        if !cache.contains_key(&entry.key) {
             let path = entry.file.to_str().ok_or_else(|| {
                 Error::Runtime(format!("non-utf8 artifact path {:?}", entry.file))
             })?;
             let proto = xla::HloModuleProto::from_text_file(path)?;
             let comp = xla::XlaComputation::from_proto(&proto);
             let exe = client.compile(&comp)?;
-            self.cache.borrow_mut().insert(entry.key.clone(), exe);
+            cache.insert(entry.key.clone(), exe);
         }
 
         // literals in parameter order
@@ -185,7 +204,6 @@ impl NumericExecutor {
             literals.push(lit);
         }
 
-        let cache = self.cache.borrow();
         let exe = cache.get(&entry.key).expect("just inserted");
         let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
         // lowered with return_tuple=True → flatten ALL tuple leaves in
@@ -248,7 +266,7 @@ mod tests {
             .unwrap();
         assert_eq!(provenance, Provenance::Reference);
         assert_eq!(out, vec![10.0]);
-        assert_eq!(*ex.fallback_calls.borrow(), 1);
+        assert_eq!(ex.fallback_calls(), 1);
     }
 
     #[test]
@@ -256,7 +274,7 @@ mod tests {
         let ex = NumericExecutor::new(Path::new("/nonexistent_dir_xyz")).unwrap();
         assert!(ex.execute("dot", 4, &[vec![0.0; 4]]).is_err());
         assert!(ex.execute("bogus", 4, &[]).is_err());
-        assert_eq!(*ex.fallback_calls.borrow(), 0);
+        assert_eq!(ex.fallback_calls(), 0);
     }
 
     /// The cross-language correctness loop: PJRT artifact (Pallas-lowered
@@ -304,7 +322,7 @@ mod tests {
             checked += 1;
         }
         assert!(checked > 10, "only {checked} artifacts checked");
-        assert_eq!(*ex.fallback_calls.borrow(), 0);
+        assert_eq!(ex.fallback_calls(), 0);
     }
 
     #[cfg(feature = "pjrt")]
@@ -319,7 +337,7 @@ mod tests {
         let inputs = vec![vec![1.5], rng.normal_vec_f32(4096), rng.normal_vec_f32(4096)];
         ex.execute("axpy", 4096, &inputs).unwrap();
         ex.execute("axpy", 4096, &inputs).unwrap();
-        assert_eq!(ex.cache.borrow().len(), 1);
-        assert_eq!(*ex.pjrt_calls.borrow(), 2);
+        assert_eq!(ex.cache.lock().unwrap().len(), 1);
+        assert_eq!(ex.pjrt_calls(), 2);
     }
 }

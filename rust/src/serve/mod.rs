@@ -1,0 +1,539 @@
+//! The serving layer (DESIGN.md §9): queue → batcher → backend pool.
+//!
+//! [`RoutineServer`] is the host-side front door the ROADMAP's
+//! "heavy traffic" north-star asks for: callers submit `(Spec, ExecInputs)`
+//! requests and get per-request [`ExecOutcome`]s back, while the server
+//!
+//! 1. **queues** requests in a bounded queue (back-pressure: `submit`
+//!    blocks when `queue_capacity` is reached),
+//! 2. **batches** them — a dispatcher that dequeues a request coalesces
+//!    every queued request with the same plan-cache key into one batch (up
+//!    to `max_batch`, lingering up to `linger` for stragglers), and
+//! 3. **dispatches** each batch to a shared [`Backend`] via
+//!    `execute_batch`, so per-plan setup — and for the simulator the whole
+//!    DES run — is paid once per batch instead of once per request.
+//!
+//! Lowering goes through a shared [`Pipeline`], so cold specs are
+//! single-flight across every dispatcher thread and warm specs are plan
+//! cache hits. Queueing, batching and latency statistics are surfaced in a
+//! [`ServeReport`].
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::pipeline::{CacheStats, Pipeline};
+use crate::runtime::{Backend, ExecInputs, ExecOutcome};
+use crate::spec::Spec;
+use crate::{Error, Result};
+
+/// Serving-layer knobs.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Largest batch one dispatch may coalesce (1 disables batching).
+    pub max_batch: usize,
+    /// How long a dispatcher waits for same-key stragglers before
+    /// dispatching a non-full batch. Zero still coalesces whatever is
+    /// already queued.
+    pub linger: Duration,
+    /// Bounded queue depth; `submit` blocks (back-pressure) when full.
+    pub queue_capacity: usize,
+    /// Dispatcher threads draining the queue (the backend pool width).
+    pub workers: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_batch: 8,
+            linger: Duration::from_micros(500),
+            queue_capacity: 256,
+            workers: 2,
+        }
+    }
+}
+
+/// One queued request.
+struct Request {
+    spec: Spec,
+    key: String,
+    inputs: ExecInputs,
+    enqueued: Instant,
+    tx: mpsc::Sender<Result<ExecOutcome>>,
+}
+
+/// A handle to one submitted request.
+pub struct Ticket {
+    rx: mpsc::Receiver<Result<ExecOutcome>>,
+}
+
+impl Ticket {
+    /// Block until the server has executed (or failed) the request.
+    pub fn wait(self) -> Result<ExecOutcome> {
+        match self.rx.recv() {
+            Ok(outcome) => outcome,
+            Err(_) => Err(Error::Runtime("request dropped by server".into())),
+        }
+    }
+}
+
+/// Latency/queue-wait samples kept for percentile reporting. A ring of
+/// the most recent samples bounds server memory (and `report()`'s sort)
+/// regardless of how many requests a long-lived server answers.
+const STAT_SAMPLE_CAP: usize = 65_536;
+
+#[derive(Default)]
+struct StatsInner {
+    completed: u64,
+    failed: u64,
+    batches: u64,
+    batch_size_sum: u64,
+    max_batch: usize,
+    /// Per-request submit→response seconds (most recent `STAT_SAMPLE_CAP`).
+    latencies: Vec<f64>,
+    /// Per-request submit→dequeue seconds (most recent `STAT_SAMPLE_CAP`).
+    queue_waits: Vec<f64>,
+    last_done: Option<Instant>,
+}
+
+/// Record into a bounded ring: grow until the cap, then overwrite the
+/// slot of the `count`-th request (oldest-first).
+fn record_sample(samples: &mut Vec<f64>, count: u64, value: f64) {
+    if samples.len() < STAT_SAMPLE_CAP {
+        samples.push(value);
+    } else {
+        samples[(count % STAT_SAMPLE_CAP as u64) as usize] = value;
+    }
+}
+
+/// Queueing/batching/latency statistics for one server's lifetime.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    /// Requests answered (including failures).
+    pub requests: u64,
+    /// Requests answered with an error.
+    pub failed: u64,
+    /// Batches dispatched to the backend.
+    pub batches: u64,
+    /// Mean coalesced batch size (requests / batches).
+    pub mean_batch: f64,
+    /// Largest batch dispatched.
+    pub max_batch: usize,
+    /// Median submit→response latency, seconds (over a bounded window of
+    /// the most recent `STAT_SAMPLE_CAP` requests).
+    pub p50_latency_s: f64,
+    /// 99th-percentile submit→response latency, seconds (same window).
+    pub p99_latency_s: f64,
+    /// Median submit→dequeue wait, seconds (queueing delay, same window).
+    pub p50_queue_wait_s: f64,
+    /// First submit → last response span, seconds.
+    pub wall_s: f64,
+    /// Requests per second over `wall_s`.
+    pub throughput_rps: f64,
+    /// Shared plan-cache counters (hits/misses/evictions/coalesced).
+    pub cache: CacheStats,
+}
+
+impl ServeReport {
+    pub fn summary(&self) -> String {
+        format!(
+            "served {} request(s) ({} failed) in {} batch(es), mean batch {:.2} (max {})\n\
+             latency p50 {:.3} ms / p99 {:.3} ms, queue wait p50 {:.3} ms\n\
+             throughput {:.0} req/s over {:.3} s\n\
+             plan cache: {} hit(s) ({} coalesced) / {} miss(es), {} eviction(s), {} resident",
+            self.requests,
+            self.failed,
+            self.batches,
+            self.mean_batch,
+            self.max_batch,
+            self.p50_latency_s * 1e3,
+            self.p99_latency_s * 1e3,
+            self.p50_queue_wait_s * 1e3,
+            self.throughput_rps,
+            self.wall_s,
+            self.cache.hits,
+            self.cache.coalesced,
+            self.cache.misses,
+            self.cache.evictions,
+            self.cache.entries,
+        )
+    }
+}
+
+struct ServerShared {
+    pipeline: Arc<Pipeline>,
+    backend: Arc<dyn Backend>,
+    cfg: ServeConfig,
+    queue: Mutex<VecDeque<Request>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    shutdown: AtomicBool,
+    stats: Mutex<StatsInner>,
+    /// Set once by the first `submit` (lock-free afterwards); anchors the
+    /// report's throughput span.
+    first_submit: OnceLock<Instant>,
+}
+
+/// A thread-pooled, batching routine server over one shared [`Pipeline`]
+/// and one shared [`Backend`]. Dropping the server drains the queue,
+/// answers every outstanding request, and joins the worker threads.
+pub struct RoutineServer {
+    shared: Arc<ServerShared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl RoutineServer {
+    pub fn new(
+        pipeline: Arc<Pipeline>,
+        backend: Arc<dyn Backend>,
+        cfg: ServeConfig,
+    ) -> RoutineServer {
+        let cfg = ServeConfig {
+            max_batch: cfg.max_batch.max(1),
+            queue_capacity: cfg.queue_capacity.max(1),
+            workers: cfg.workers.max(1),
+            ..cfg
+        };
+        let shared = Arc::new(ServerShared {
+            pipeline,
+            backend,
+            cfg,
+            queue: Mutex::new(VecDeque::new()),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            stats: Mutex::new(StatsInner::default()),
+            first_submit: OnceLock::new(),
+        });
+        let workers = (0..shared.cfg.workers)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("aieblas-serve-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn serve worker")
+            })
+            .collect();
+        RoutineServer { shared, workers }
+    }
+
+    /// Enqueue one request; blocks while the queue is at capacity.
+    pub fn submit(&self, spec: &Spec, inputs: ExecInputs) -> Ticket {
+        let (tx, rx) = mpsc::channel();
+        let now = Instant::now();
+        self.shared.first_submit.get_or_init(|| now);
+        let req =
+            Request { spec: spec.clone(), key: spec.cache_key(), inputs, enqueued: now, tx };
+        {
+            let mut q = self.shared.queue.lock().expect("serve queue poisoned");
+            while q.len() >= self.shared.cfg.queue_capacity {
+                q = self.shared.not_full.wait(q).expect("serve queue poisoned");
+            }
+            q.push_back(req);
+        }
+        self.shared.not_empty.notify_all();
+        Ticket { rx }
+    }
+
+    /// Submit every request, then wait for all responses (in order).
+    pub fn serve_all(&self, requests: Vec<(Spec, ExecInputs)>) -> Vec<Result<ExecOutcome>> {
+        let tickets: Vec<Ticket> =
+            requests.into_iter().map(|(spec, inputs)| self.submit(&spec, inputs)).collect();
+        tickets.into_iter().map(Ticket::wait).collect()
+    }
+
+    /// Snapshot the server's queueing/batching/latency statistics.
+    pub fn report(&self) -> ServeReport {
+        let stats = self.shared.stats.lock().expect("serve stats poisoned");
+        let mut latencies = stats.latencies.clone();
+        latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut waits = stats.queue_waits.clone();
+        waits.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let wall_s = match (self.shared.first_submit.get(), stats.last_done) {
+            (Some(t0), Some(t1)) => t1.duration_since(*t0).as_secs_f64(),
+            _ => 0.0,
+        };
+        ServeReport {
+            requests: stats.completed,
+            failed: stats.failed,
+            batches: stats.batches,
+            mean_batch: if stats.batches == 0 {
+                0.0
+            } else {
+                stats.batch_size_sum as f64 / stats.batches as f64
+            },
+            max_batch: stats.max_batch,
+            p50_latency_s: percentile(&latencies, 50.0),
+            p99_latency_s: percentile(&latencies, 99.0),
+            p50_queue_wait_s: percentile(&waits, 50.0),
+            wall_s,
+            throughput_rps: if wall_s > 0.0 { stats.completed as f64 / wall_s } else { 0.0 },
+            cache: self.shared.pipeline.cache().stats(),
+        }
+    }
+
+    /// The shared pipeline (and its plan cache) behind this server.
+    pub fn pipeline(&self) -> &Arc<Pipeline> {
+        &self.shared.pipeline
+    }
+
+    /// Shut down: drain the queue, answer everything, join the workers,
+    /// and return the final report.
+    pub fn join(mut self) -> ServeReport {
+        self.shutdown_and_join();
+        self.report()
+    }
+
+    fn shutdown_and_join(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        // take-and-release the queue lock so no worker misses the flag
+        // between its empty-check and its wait.
+        drop(self.shared.queue.lock().expect("serve queue poisoned"));
+        self.shared.not_empty.notify_all();
+        self.shared.not_full.notify_all();
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for RoutineServer {
+    fn drop(&mut self) {
+        self.shutdown_and_join();
+    }
+}
+
+/// `p`th percentile of an ascending-sorted series (nearest-rank).
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn worker_loop(shared: &ServerShared) {
+    loop {
+        let mut batch: Vec<Request> = Vec::new();
+        {
+            let mut q = shared.queue.lock().expect("serve queue poisoned");
+            loop {
+                if let Some(first) = q.pop_front() {
+                    batch.push(first);
+                    break;
+                }
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = shared.not_empty.wait(q).expect("serve queue poisoned");
+            }
+            shared.not_full.notify_all();
+
+            // coalesce: pull every queued same-key request (other keys stay
+            // for the other dispatchers), lingering for stragglers until
+            // the batch fills or the deadline passes.
+            let deadline = Instant::now() + shared.cfg.linger;
+            // the prefix [0, i) has been scanned and is other-key; new
+            // arrivals only append at the back, so each linger wakeup
+            // resumes the scan instead of rescanning the whole queue under
+            // the lock. Another dispatcher removing ahead of `i` while we
+            // wait can shift an unscanned entry into the prefix — that
+            // entry is merely coalesced into a later batch, never lost.
+            let mut i = 0;
+            loop {
+                while batch.len() < shared.cfg.max_batch && i < q.len() {
+                    if q[i].key == batch[0].key {
+                        batch.push(q.remove(i).expect("index checked"));
+                        shared.not_full.notify_all();
+                    } else {
+                        i += 1;
+                    }
+                }
+                if batch.len() >= shared.cfg.max_batch || shared.shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, _) = shared
+                    .not_empty
+                    .wait_timeout(q, deadline - now)
+                    .expect("serve queue poisoned");
+                q = guard;
+            }
+        }
+        dispatch_batch(shared, batch);
+    }
+}
+
+fn dispatch_batch(shared: &ServerShared, mut batch: Vec<Request>) {
+    let dequeued = Instant::now();
+    let per_request_err = |msg: &str, n: usize| -> Vec<Result<ExecOutcome>> {
+        (0..n).map(|_| Err(Error::Runtime(msg.to_string()))).collect()
+    };
+    // lower once per batch (single-flight dedups concurrent cold lowerings
+    // from other dispatchers), then execute. A panicking backend must not
+    // kill this dispatcher — queued requests would never be answered — so
+    // the whole attempt is unwind-isolated and turned into per-request
+    // errors.
+    let attempt = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        shared
+            .pipeline
+            .lower(&batch[0].spec)
+            .and_then(|plan| shared.backend.prepare(plan))
+            .map(|prepared| {
+                let inputs: Vec<ExecInputs> =
+                    batch.iter_mut().map(|r| std::mem::take(&mut r.inputs)).collect();
+                shared.backend.execute_batch(&prepared, &inputs)
+            })
+    }));
+    let outcomes: Vec<Result<ExecOutcome>> = match attempt {
+        Ok(Ok(outcomes)) if outcomes.len() == batch.len() => outcomes,
+        // a backend returning the wrong outcome count would leave zipped-
+        // away requests hanging in Ticket::wait; fail the whole batch.
+        Ok(Ok(outcomes)) => per_request_err(
+            &format!(
+                "backend returned {} outcome(s) for {} request(s)",
+                outcomes.len(),
+                batch.len()
+            ),
+            batch.len(),
+        ),
+        Ok(Err(e)) => per_request_err(&e.to_string(), batch.len()),
+        Err(_) => per_request_err("backend panicked while executing batch", batch.len()),
+    };
+    let done = Instant::now();
+    let mut stats = shared.stats.lock().expect("serve stats poisoned");
+    stats.batches += 1;
+    stats.batch_size_sum += batch.len() as u64;
+    stats.max_batch = stats.max_batch.max(batch.len());
+    // monotonic: a late-locking worker with an earlier completion must not
+    // move the span's end backwards (it would inflate throughput_rps).
+    stats.last_done = Some(stats.last_done.map_or(done, |prev| prev.max(done)));
+    for (req, outcome) in batch.into_iter().zip(outcomes) {
+        let idx = stats.completed;
+        stats.completed += 1;
+        if outcome.is_err() {
+            stats.failed += 1;
+        }
+        record_sample(&mut stats.latencies, idx, done.duration_since(req.enqueued).as_secs_f64());
+        record_sample(
+            &mut stats.queue_waits,
+            idx,
+            dequeued.duration_since(req.enqueued).as_secs_f64(),
+        );
+        // a dropped Ticket just means the caller stopped caring.
+        let _ = req.tx.send(outcome);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ArchConfig;
+    use crate::blas::RoutineKind;
+    use crate::runtime::CpuBackend;
+    use crate::spec::DataSource;
+
+    fn server(cfg: ServeConfig) -> RoutineServer {
+        RoutineServer::new(
+            Arc::new(Pipeline::new(ArchConfig::vck5000())),
+            Arc::new(CpuBackend),
+            cfg,
+        )
+    }
+
+    #[test]
+    fn single_request_round_trips() {
+        let srv = server(ServeConfig::default());
+        let spec = Spec::single(RoutineKind::Axpy, "a", 1024, DataSource::Pl);
+        let inputs = ExecInputs::random_for(&spec, 1);
+        let outcome = srv.submit(&spec, inputs).wait().unwrap();
+        assert_eq!(outcome.backend, "cpu");
+        assert_eq!(outcome.results.len(), 1);
+        let report = srv.join();
+        assert_eq!(report.requests, 1);
+        assert_eq!(report.failed, 0);
+        assert_eq!(report.batches, 1);
+        assert_eq!(report.cache.misses, 1);
+    }
+
+    #[test]
+    fn invalid_spec_fails_per_request_not_server() {
+        let srv = server(ServeConfig::default());
+        let bad = Spec { routines: vec![], ..Default::default() };
+        let good = Spec::single(RoutineKind::Dot, "d", 256, DataSource::Pl);
+        let bad_ticket = srv.submit(&bad, ExecInputs::default());
+        let good_ticket = srv.submit(&good, ExecInputs::random_for(&good, 2));
+        assert!(bad_ticket.wait().is_err());
+        assert!(good_ticket.wait().is_ok(), "server must survive failed requests");
+        let report = srv.join();
+        assert_eq!((report.requests, report.failed), (2, 1));
+    }
+
+    #[test]
+    fn drop_drains_outstanding_requests() {
+        let spec = Spec::single(RoutineKind::Scal, "s", 512, DataSource::Pl);
+        let tickets: Vec<Ticket> = {
+            let srv = server(ServeConfig { workers: 1, ..Default::default() });
+            (0..16).map(|i| srv.submit(&spec, ExecInputs::random_for(&spec, i))).collect()
+            // server dropped here with requests possibly still queued
+        };
+        for t in tickets {
+            assert!(t.wait().is_ok(), "drop must answer queued requests, not abandon them");
+        }
+    }
+
+    #[test]
+    fn panicking_backend_fails_requests_without_killing_workers() {
+        struct PanicBackend;
+        impl Backend for PanicBackend {
+            fn name(&self) -> &'static str {
+                "panic"
+            }
+            fn prepare(
+                &self,
+                plan: Arc<crate::pipeline::ExecutablePlan>,
+            ) -> crate::Result<crate::runtime::Prepared> {
+                Ok(crate::runtime::Prepared::new(plan, self.name()))
+            }
+            fn execute(
+                &self,
+                _prepared: &crate::runtime::Prepared,
+                _inputs: &ExecInputs,
+            ) -> crate::Result<ExecOutcome> {
+                panic!("injected backend panic")
+            }
+        }
+
+        let srv = RoutineServer::new(
+            Arc::new(Pipeline::new(ArchConfig::vck5000())),
+            Arc::new(PanicBackend),
+            ServeConfig { workers: 1, ..Default::default() },
+        );
+        let spec = Spec::single(RoutineKind::Dot, "d", 128, DataSource::Pl);
+        // two sequential requests: if the first panic killed the only
+        // worker, the second would hang forever instead of erroring.
+        for i in 0..2 {
+            let err = srv.submit(&spec, ExecInputs::random_for(&spec, i)).wait();
+            match err {
+                Err(Error::Runtime(msg)) => assert!(msg.contains("panicked"), "{msg}"),
+                other => panic!("expected runtime error, got {other:?}"),
+            }
+        }
+        let report = srv.join();
+        assert_eq!((report.requests, report.failed), (2, 2));
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 99.0), 4.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+}

@@ -8,6 +8,10 @@ use std::sync::OnceLock;
 
 /// Number of worker threads to use: respects `AIEBLAS_THREADS`, defaults to
 /// the available parallelism (the paper's CPU baseline uses all 20 cores).
+///
+/// Memoized behind a once-initialized static: the env var is read and
+/// parsed exactly once per process, so hot callers (sharded batch
+/// execution asks per batch) pay one atomic load, not a getenv + parse.
 pub fn num_threads() -> usize {
     static N: OnceLock<usize> = OnceLock::new();
     *N.get_or_init(|| {
@@ -33,7 +37,21 @@ where
         return;
     }
     let threads = num_threads().max(1);
-    let nchunks = (len / min_chunk.max(1)).clamp(1, threads);
+    parallel_chunks_with(len, (len / min_chunk.max(1)).clamp(1, threads), f);
+}
+
+/// [`parallel_chunks`] with an explicit chunk/worker count instead of the
+/// global [`num_threads`] heuristic — the sharded backend uses this to make
+/// its fan-out width configurable (and benchmarkable at 1/2/4 workers).
+/// `nchunks` is clamped to `1..=len`; one chunk runs inline.
+pub fn parallel_chunks_with<F>(len: usize, nchunks: usize, f: F)
+where
+    F: Fn(usize, usize, usize) + Sync,
+{
+    if len == 0 {
+        return;
+    }
+    let nchunks = nchunks.clamp(1, len);
     if nchunks == 1 {
         f(0, 0, len);
         return;
@@ -130,6 +148,39 @@ mod tests {
     #[test]
     fn zero_len_is_noop() {
         parallel_chunks(0, 1, |_, _, _| panic!("should not run"));
+        parallel_chunks_with(0, 4, |_, _, _| panic!("should not run"));
+    }
+
+    #[test]
+    fn num_threads_is_stable_across_calls() {
+        // memoized behind a OnceLock: every call must return the value the
+        // first call resolved. (Deliberately no env mutation here — setenv
+        // concurrent with other tests' getenv is UB on glibc.)
+        let first = num_threads();
+        assert!(first >= 1);
+        for _ in 0..4 {
+            assert_eq!(num_threads(), first);
+        }
+    }
+
+    #[test]
+    fn explicit_chunk_count_covers_range() {
+        let len = 1001;
+        let hits: Vec<AtomicU64> = (0..len).map(|_| AtomicU64::new(0)).collect();
+        let max_idx = AtomicUsize::new(0);
+        parallel_chunks_with(len, 4, |i, s, e| {
+            max_idx.fetch_max(i, Ordering::Relaxed);
+            for h in &hits[s..e] {
+                h.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        assert_eq!(max_idx.load(Ordering::Relaxed), 3, "four chunks requested");
+        // over-subscription clamps to len (one index per element)
+        parallel_chunks_with(3, 100, |i, s, e| {
+            assert!(i < 3);
+            assert_eq!(e - s, 1);
+        });
     }
 
     #[test]

@@ -1,0 +1,256 @@
+//! Concurrency acceptance tests (ISSUE 3): a shared `Pipeline` must be
+//! usable from many threads with single-flight cold lowering (miss count ==
+//! distinct specs, one shared `Arc` per key), and every batched execution
+//! path — `Backend::execute_batch`, `ShardedBackend`, `RoutineServer` —
+//! must produce outputs bit-identical to per-request sequential
+//! `Backend::execute` on all three backends.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+use aieblas::blas::RoutineKind;
+use aieblas::pipeline::{ExecutablePlan, Pipeline};
+use aieblas::runtime::{
+    Backend, CpuBackend, ExecInputs, ReferenceBackend, ShardedBackend, SimBackend,
+};
+use aieblas::serve::{RoutineServer, ServeConfig};
+use aieblas::spec::{DataSource, Spec};
+
+fn workload_specs() -> Vec<Spec> {
+    vec![
+        Spec::single(RoutineKind::Axpy, "a", 1024, DataSource::Pl),
+        Spec::single(RoutineKind::Dot, "d", 2048, DataSource::Pl),
+        Spec::single(RoutineKind::Scal, "s", 512, DataSource::OnChip),
+        Spec::axpydot_dataflow(4096, 2.0),
+    ]
+}
+
+/// N threads × M specs × R rounds through one shared pipeline: every
+/// thread must observe the same `Arc` per spec, and the cache must record
+/// exactly one miss per distinct spec (single-flight), everything else
+/// hits.
+#[test]
+fn multithreaded_hammer_on_shared_pipeline() {
+    let pipeline = Arc::new(Pipeline::default());
+    let specs = workload_specs();
+    let threads = 8;
+    let rounds = 5;
+    let barrier = Arc::new(Barrier::new(threads));
+
+    let per_thread: Vec<Vec<Arc<ExecutablePlan>>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let pipeline = pipeline.clone();
+                let specs = specs.clone();
+                let barrier = barrier.clone();
+                s.spawn(move || {
+                    barrier.wait();
+                    let mut plans = Vec::new();
+                    for round in 0..rounds {
+                        // stagger the order so threads race on different keys
+                        for i in 0..specs.len() {
+                            let spec = &specs[(i + t + round) % specs.len()];
+                            plans.push(pipeline.lower(spec).unwrap());
+                        }
+                    }
+                    plans
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    // plan identity: group every returned Arc by cache key — one allocation
+    // per key across all threads and rounds.
+    let mut by_key: HashMap<String, Arc<ExecutablePlan>> = HashMap::new();
+    for plans in &per_thread {
+        for plan in plans {
+            let key = plan.spec().cache_key();
+            match by_key.get(&key) {
+                Some(first) => {
+                    assert!(Arc::ptr_eq(first, plan), "same key must share one plan: {key}")
+                }
+                None => {
+                    by_key.insert(key, plan.clone());
+                }
+            }
+        }
+    }
+    assert_eq!(by_key.len(), specs.len());
+
+    let stats = pipeline.cache().stats();
+    assert_eq!(
+        stats.misses,
+        specs.len() as u64,
+        "single-flight: each distinct spec lowers exactly once"
+    );
+    let total = (threads * rounds * specs.len()) as u64;
+    assert_eq!(stats.hits + stats.misses, total, "every lookup is a hit or the one miss");
+    assert_eq!(stats.entries, specs.len());
+    assert_eq!(stats.evictions, 0);
+}
+
+fn assert_outcomes_bit_identical(
+    label: &str,
+    batched: &[aieblas::Result<aieblas::runtime::ExecOutcome>],
+    sequential: &[aieblas::runtime::ExecOutcome],
+) {
+    assert_eq!(batched.len(), sequential.len(), "{label}");
+    for (i, (b, s)) in batched.iter().zip(sequential).enumerate() {
+        let b = b.as_ref().unwrap_or_else(|e| panic!("{label}[{i}] failed: {e}"));
+        assert_eq!(b.backend, s.backend, "{label}[{i}]");
+        assert_eq!(b.results.len(), s.results.len(), "{label}[{i}]");
+        for (br, sr) in b.results.iter().zip(&s.results) {
+            assert_eq!(br.routine, sr.routine, "{label}[{i}]");
+            assert_eq!(br.provenance, sr.provenance, "{label}[{i}]");
+            // bit-identical, not approximately equal
+            let b_bits: Vec<u32> = br.output.iter().map(|v| v.to_bits()).collect();
+            let s_bits: Vec<u32> = sr.output.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(b_bits, s_bits, "{label}[{i}] routine {}", br.routine);
+        }
+        match (&b.sim, &s.sim) {
+            (Some(bs), Some(ss)) => {
+                assert_eq!(bs.makespan_s.to_bits(), ss.makespan_s.to_bits(), "{label}[{i}]")
+            }
+            (None, None) => {}
+            _ => panic!("{label}[{i}]: sim report presence differs"),
+        }
+    }
+}
+
+/// `execute_batch` (including each backend's amortizing override) must be
+/// indistinguishable from per-request `execute` on all three backends.
+#[test]
+fn execute_batch_matches_sequential_on_all_backends() {
+    let pipeline = Pipeline::default();
+    let sim = SimBackend::timing_only();
+    let backends: [&dyn Backend; 3] = [&CpuBackend, &ReferenceBackend, &sim];
+    for spec in workload_specs() {
+        let plan = pipeline.lower(&spec).unwrap();
+        let batch: Vec<ExecInputs> =
+            (0..6).map(|seed| ExecInputs::random_for(&spec, 0xBA7C4 ^ seed)).collect();
+        for backend in backends {
+            let prepared = backend.prepare(plan.clone()).unwrap();
+            let sequential: Vec<_> = batch
+                .iter()
+                .map(|inputs| backend.execute(&prepared, inputs).unwrap())
+                .collect();
+            let batched = backend.execute_batch(&prepared, &batch);
+            let label = format!("{}/{}", backend.name(), spec.cache_key());
+            assert_outcomes_bit_identical(&label, &batched, &sequential);
+        }
+    }
+}
+
+/// The sharded adapter fans a batch across worker threads without changing
+/// a single output bit, at several fan-out widths.
+#[test]
+fn sharded_backend_matches_sequential() {
+    let pipeline = Pipeline::default();
+    let spec = Spec::single(RoutineKind::Gemv, "g", 128, DataSource::Pl);
+    let plan = pipeline.lower(&spec).unwrap();
+    let batch: Vec<ExecInputs> =
+        (0..9).map(|seed| ExecInputs::random_for(&spec, 0x5AAD ^ seed)).collect();
+
+    let inner = CpuBackend;
+    let prepared = inner.prepare(plan.clone()).unwrap();
+    let sequential: Vec<_> =
+        batch.iter().map(|inputs| inner.execute(&prepared, inputs).unwrap()).collect();
+
+    for workers in [1, 2, 4, 16] {
+        let sharded = ShardedBackend::new(CpuBackend, workers);
+        assert_eq!(sharded.name(), "cpu", "adapter is name-transparent");
+        let prepared = sharded.prepare(plan.clone()).unwrap();
+        let batched = sharded.execute_batch(&prepared, &batch);
+        assert_outcomes_bit_identical(&format!("sharded-{workers}"), &batched, &sequential);
+    }
+}
+
+/// End-to-end serving: concurrent clients, batching server, sharded CPU
+/// backend — every response must equal the direct sequential execution of
+/// the same (spec, inputs), and the shared cache must show one miss per
+/// distinct spec.
+#[test]
+fn routine_server_serves_concurrent_clients_correctly() {
+    let specs = workload_specs();
+    let clients = 4;
+    let per_client = 12;
+    let pipeline = Arc::new(Pipeline::default());
+    let server = RoutineServer::new(
+        pipeline.clone(),
+        Arc::new(ShardedBackend::new(CpuBackend, 2)),
+        ServeConfig {
+            max_batch: 4,
+            linger: Duration::from_millis(2),
+            queue_capacity: 32,
+            workers: 3,
+        },
+    );
+
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let server = &server;
+            let specs = &specs;
+            s.spawn(move || {
+                for r in 0..per_client {
+                    let spec = &specs[(c + r) % specs.len()];
+                    let seed = (c * 1000 + r) as u64;
+                    let inputs = ExecInputs::random_for(spec, seed);
+                    let outcome = server.submit(spec, inputs.clone()).wait().unwrap();
+                    // parity with a direct, unbatched, unsharded execution
+                    let plan = aieblas::pipeline::lower_spec(spec).unwrap();
+                    let direct = CpuBackend
+                        .execute(&CpuBackend.prepare(Arc::new(plan)).unwrap(), &inputs)
+                        .unwrap();
+                    assert_eq!(outcome.results.len(), direct.results.len());
+                    for (a, b) in outcome.results.iter().zip(&direct.results) {
+                        let a_bits: Vec<u32> = a.output.iter().map(|v| v.to_bits()).collect();
+                        let b_bits: Vec<u32> = b.output.iter().map(|v| v.to_bits()).collect();
+                        assert_eq!(a_bits, b_bits, "served output must match direct execution");
+                    }
+                }
+            });
+        }
+    });
+
+    let report = server.join();
+    assert_eq!(report.requests, (clients * per_client) as u64);
+    assert_eq!(report.failed, 0);
+    assert!(report.batches <= report.requests, "batches never exceed requests");
+    assert!(report.mean_batch >= 1.0);
+    assert_eq!(report.cache.misses, specs.len() as u64, "server lowers each spec once");
+}
+
+/// With one dispatcher and a generous linger, a burst of same-spec
+/// requests must coalesce into fewer dispatches than requests.
+#[test]
+fn server_coalesces_same_key_bursts() {
+    let spec = Spec::single(RoutineKind::Axpy, "a", 1024, DataSource::Pl);
+    let pipeline = Arc::new(Pipeline::default());
+    // warm the plan so dispatch latency doesn't eat the linger window
+    pipeline.lower(&spec).unwrap();
+    let server = RoutineServer::new(
+        pipeline,
+        Arc::new(CpuBackend),
+        ServeConfig {
+            max_batch: 8,
+            linger: Duration::from_millis(50),
+            queue_capacity: 64,
+            workers: 1,
+        },
+    );
+    let tickets: Vec<_> =
+        (0..8).map(|i| server.submit(&spec, ExecInputs::random_for(&spec, i))).collect();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    let report = server.join();
+    assert_eq!(report.requests, 8);
+    assert!(
+        report.batches < 8,
+        "8 same-key requests with a 50 ms linger must coalesce (got {} batches)",
+        report.batches
+    );
+    assert!(report.max_batch >= 2);
+}
