@@ -1,0 +1,96 @@
+//! Persistent-plan-store bench: cold lowering vs disk-warm (deserialize a
+//! persisted plan) vs memory-warm (plan-cache hit) latency — the three
+//! start states a serving process can find itself in (DESIGN.md §10).
+//!
+//! Emits `BENCH_persist.json` (working directory, or under
+//! `AIEBLAS_BENCH_JSON_DIR`) to extend the tracked perf series.
+//!
+//! Smoke mode (CI): `AIEBLAS_BENCH_SMOKE=1` shrinks sizes so the run is a
+//! pass/fail completion check, no timing assertions.
+//!
+//! Run: `cargo bench --bench persist`
+
+use aieblas::arch::ArchConfig;
+use aieblas::blas::RoutineKind;
+use aieblas::pipeline::Pipeline;
+use aieblas::spec::{DataSource, Spec};
+use aieblas::util::bench::Bench;
+use aieblas::util::json::{obj, Json};
+
+fn main() {
+    aieblas::init();
+    let smoke = std::env::var("AIEBLAS_BENCH_SMOKE").is_ok();
+    let mut b = Bench::new("persist");
+    let mut json_rows: Vec<Json> = Vec::new();
+
+    let vec_n = if smoke { 1 << 12 } else { 1 << 20 };
+    let mat_n = if smoke { 64 } else { 256 };
+    let cases = [
+        ("axpy".to_string(), Spec::single(RoutineKind::Axpy, "a", vec_n, DataSource::Pl)),
+        ("gemv".to_string(), Spec::single(RoutineKind::Gemv, "g", mat_n, DataSource::Pl)),
+        ("axpydot_df".to_string(), Spec::axpydot_dataflow(vec_n, 2.0)),
+    ];
+
+    // fresh store directory per process so disk-warm numbers never mix
+    // runs; removed at the end.
+    let dir = std::env::temp_dir().join(format!("aieblas-bench-persist-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    for (label, spec) in &cases {
+        // cold: a fresh pipeline with no store — full validate + codegen +
+        // place + route every call.
+        let cold = b.bench(&format!("lower/cold/{label}"), || {
+            Pipeline::new(ArchConfig::vck5000()).lower(spec).unwrap().graph().nodes.len()
+        });
+
+        // disk-warm: entry persisted once, then every call is a fresh
+        // pipeline (new process stand-in) deserializing from the store.
+        Pipeline::new(ArchConfig::vck5000()).with_disk_store(&dir).lower(spec).unwrap();
+        let disk = b.bench(&format!("lower/disk_warm/{label}"), || {
+            let p = Pipeline::new(ArchConfig::vck5000()).with_disk_store(&dir);
+            let n = p.lower(spec).unwrap().graph().nodes.len();
+            assert_eq!(p.cache().stats().misses, 0, "disk-warm case must not lower");
+            n
+        });
+
+        // memory-warm: one long-lived pipeline, plan-cache hit.
+        let warm_pipeline = Pipeline::new(ArchConfig::vck5000());
+        warm_pipeline.lower(spec).unwrap();
+        let mem = b.bench(&format!("lower/mem_warm/{label}"), || {
+            warm_pipeline.lower(spec).unwrap().graph().nodes.len()
+        });
+
+        eprintln!(
+            "  {label}: cold {:.3} ms | disk-warm {:.3} ms ({:.1}x) | mem-warm {:.6} ms ({:.0}x)",
+            cold.median * 1e3,
+            disk.median * 1e3,
+            cold.median / disk.median.max(1e-12),
+            mem.median * 1e3,
+            cold.median / mem.median.max(1e-12),
+        );
+        json_rows.push(obj(vec![
+            ("case", label.as_str().into()),
+            ("cold_median_s", cold.median.into()),
+            ("disk_warm_median_s", disk.median.into()),
+            ("mem_warm_median_s", mem.median.into()),
+            ("disk_speedup", (cold.median / disk.median.max(1e-12)).into()),
+            ("mem_speedup", (cold.median / mem.median.max(1e-12)).into()),
+        ]));
+    }
+
+    b.finish();
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let doc = obj(vec![
+        ("bench", "persist".into()),
+        ("unit", "seconds".into()),
+        ("smoke", smoke.into()),
+        ("cases", Json::Arr(json_rows)),
+    ]);
+    let out_dir = std::env::var("AIEBLAS_BENCH_JSON_DIR").unwrap_or_else(|_| ".".into());
+    let path = format!("{out_dir}/BENCH_persist.json");
+    match std::fs::write(&path, doc.to_pretty() + "\n") {
+        Ok(()) => eprintln!("wrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+}

@@ -37,6 +37,9 @@ pub struct Config {
     pub check_numerics: bool,
     /// Resident capacity of the plan cache.
     pub plan_cache_capacity: usize,
+    /// Directory for the persistent plan store (`pipeline::store`); `None`
+    /// keeps lowering memoization in-memory only.
+    pub cache_dir: Option<PathBuf>,
 }
 
 impl Default for Config {
@@ -47,6 +50,7 @@ impl Default for Config {
             cpu_samples: 5,
             check_numerics: true,
             plan_cache_capacity: Pipeline::DEFAULT_CACHE_CAPACITY,
+            cache_dir: None,
         }
     }
 }
@@ -97,6 +101,12 @@ impl RunReport {
             self.plan_cache.entries,
             self.plan_cache.evictions
         ));
+        if self.plan_cache.disk_hits + self.plan_cache.disk_writes + self.plan_cache.rejected > 0 {
+            s.push_str(&format!(
+                "\nplan store: {} disk hit(s), {} write(s), {} rejected",
+                self.plan_cache.disk_hits, self.plan_cache.disk_writes, self.plan_cache.rejected
+            ));
+        }
         s
     }
 }
@@ -111,10 +121,12 @@ pub struct AieBlas {
 impl AieBlas {
     pub fn new(config: Config) -> Result<AieBlas> {
         let executor = NumericExecutor::new(&config.artifacts_dir)?;
-        let pipeline = Arc::new(Pipeline::with_cache_capacity(
-            config.arch.clone(),
-            config.plan_cache_capacity,
-        ));
+        let mut pipeline =
+            Pipeline::with_cache_capacity(config.arch.clone(), config.plan_cache_capacity);
+        if let Some(dir) = &config.cache_dir {
+            pipeline = pipeline.with_disk_store(dir);
+        }
+        let pipeline = Arc::new(pipeline);
         Ok(AieBlas { config, executor, pipeline })
     }
 

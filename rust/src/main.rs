@@ -10,6 +10,11 @@
 //! * `ablations` — the §V ablation sweeps;
 //! * `serve-bench` — drive the concurrent serving layer (queue → batcher →
 //!   backend pool) with a synthetic workload, batched vs unbatched;
+//!   `--cache-dir` persists lowered plans and `--assert-warm` turns the
+//!   run into a pass/fail warm-start check (zero lowerings, disk hits);
+//! * `cache` — manage the persistent plan store (DESIGN.md §10):
+//!   `stats`, `clear`, and `prewarm <spec.json>` to lower + persist ahead
+//!   of serving;
 //! * `info` — architecture + artifact inventory.
 
 use std::path::{Path, PathBuf};
@@ -38,6 +43,7 @@ fn app() -> App {
                 .positional("spec", "path to spec.json", true)
                 .opt_default("artifacts", "artifacts", "AOT artifact directory")
                 .opt_default("repeat", "1", "run the spec N times (warm runs hit the plan cache)")
+                .opt("cache-dir", "persistent plan-store directory (warm starts across processes)")
                 .flag("no-numerics", "skip numeric validation")
                 .flag("kernels", "print per-kernel utilization"),
         )
@@ -61,7 +67,18 @@ fn app() -> App {
                 .opt_default("shards", "1", "sharded-backend fan-out per batch")
                 .opt_default("linger-us", "200", "batching linger, microseconds")
                 .opt_default("clients", "4", "client submitter threads")
-                .opt_default("backend", "cpu", "cpu | reference | sim"),
+                .opt_default("backend", "cpu", "cpu | reference | sim")
+                .opt("cache-dir", "persistent plan-store directory shared across runs")
+                .flag(
+                    "assert-warm",
+                    "fail unless every run was served warm (zero lowerings, >0 disk hits)",
+                ),
+        )
+        .command(
+            Command::new("cache", "manage the persistent plan store")
+                .positional("action", "stats | clear | prewarm", true)
+                .positional("spec", "spec.json to prewarm (lower + persist)", false)
+                .opt_default("cache-dir", ".aieblas-plan-cache", "plan-store directory"),
         )
         .command(Command::new("info", "print architecture and artifact inventory"))
 }
@@ -122,6 +139,7 @@ fn dispatch(m: &Matches) -> CliResult {
             let sys = AieBlas::new(Config {
                 artifacts_dir: PathBuf::from(m.get("artifacts").unwrap()),
                 check_numerics: !m.has_flag("no-numerics"),
+                cache_dir: m.get("cache-dir").map(PathBuf::from),
                 ..Default::default()
             })?;
             let repeat = m.usize("repeat")?.max(1);
@@ -214,6 +232,7 @@ fn dispatch(m: &Matches) -> CliResult {
             Ok(())
         }
         "serve-bench" => serve_bench(m),
+        "cache" => cache_cmd(m),
         "info" => {
             let arch = aieblas::arch::ArchConfig::vck5000();
             println!("platform: vck5000");
@@ -244,6 +263,60 @@ fn dispatch(m: &Matches) -> CliResult {
     }
 }
 
+/// `cache stats|clear|prewarm <spec.json>` — inspect, empty, or pre-fill
+/// the persistent plan store (DESIGN.md §10).
+fn cache_cmd(m: &Matches) -> CliResult {
+    use aieblas::arch::ArchConfig;
+    use aieblas::pipeline::{Pipeline, PlanStore};
+
+    let dir = PathBuf::from(m.get("cache-dir").unwrap());
+    let store = PlanStore::new(&dir);
+    match m.positionals[0].as_str() {
+        "stats" => {
+            let s = store.stats();
+            println!(
+                "plan store {}: {} entr{} ({} bytes)",
+                dir.display(),
+                s.entries,
+                if s.entries == 1 { "y" } else { "ies" },
+                s.bytes
+            );
+            Ok(())
+        }
+        "clear" => {
+            let removed = store.clear()?;
+            println!(
+                "plan store {}: removed {removed} entr{}",
+                dir.display(),
+                if removed == 1 { "y" } else { "ies" }
+            );
+            Ok(())
+        }
+        "prewarm" => {
+            let spec_path = m
+                .positionals
+                .get(1)
+                .ok_or("prewarm needs a spec: aieblas cache prewarm <spec.json>")?;
+            let spec = Spec::from_file(Path::new(spec_path))?;
+            let pipeline = Pipeline::new(ArchConfig::vck5000()).with_disk_store(&dir);
+            pipeline.lower(&spec)?;
+            let s = pipeline.cache().stats();
+            if s.disk_hits > 0 {
+                println!("{spec_path}: already warm (served from {})", dir.display());
+            } else {
+                println!(
+                    "{spec_path}: lowered and persisted to {} ({} rejected stale entr{})",
+                    dir.display(),
+                    s.rejected,
+                    if s.rejected == 1 { "y" } else { "ies" }
+                );
+            }
+            Ok(())
+        }
+        other => Err(format!("unknown cache action {other:?} (stats | clear | prewarm)").into()),
+    }
+}
+
 /// Synthetic serving workload: `clients` submitter threads round-robin
 /// `requests` requests over `distinct` specs into a `RoutineServer`, first
 /// unbatched (max_batch = 1) and then batched, and print both reports.
@@ -268,6 +341,11 @@ fn serve_bench(m: &Matches) -> CliResult {
     let linger = Duration::from_micros(m.usize("linger-us")? as u64);
     let clients = m.usize("clients")?.max(1);
     let backend_name = m.get("backend").unwrap().to_string();
+    let cache_dir = m.get("cache-dir").map(PathBuf::from);
+    let assert_warm = m.has_flag("assert-warm");
+    if assert_warm && cache_dir.is_none() {
+        return Err("--assert-warm needs --cache-dir".into());
+    }
 
     let specs: Vec<Spec> = (0..distinct)
         .map(|i| Spec::single(RoutineKind::Axpy, &format!("r{i}"), size, DataSource::Pl))
@@ -289,8 +367,12 @@ fn serve_bench(m: &Matches) -> CliResult {
     }
 
     let run = |max_batch: usize, linger: Duration| -> Result<ServeReport, String> {
+        let mut pipeline = Pipeline::new(ArchConfig::vck5000());
+        if let Some(dir) = &cache_dir {
+            pipeline = pipeline.with_disk_store(dir);
+        }
         let server = RoutineServer::new(
-            Arc::new(Pipeline::new(ArchConfig::vck5000())),
+            Arc::new(pipeline),
             make_backend(shards)?,
             ServeConfig { max_batch, linger, queue_capacity: 256, workers },
         );
@@ -329,5 +411,20 @@ fn serve_bench(m: &Matches) -> CliResult {
         "batched vs unbatched throughput: {:.2}x",
         batched.throughput_rps / unbatched.throughput_rps.max(1e-9)
     );
+    if assert_warm {
+        // CI warm-start gate: a run against a prewarmed --cache-dir must
+        // never lower (every cold lookup is a disk hit).
+        for (phase, report) in [("unbatched", &unbatched), ("batched", &batched)] {
+            if report.cache.misses != 0 || report.cache.disk_hits == 0 {
+                return Err(format!(
+                    "warm-start assertion failed ({phase}): {} lowering(s), {} disk hit(s) \
+                     (want 0 lowerings and >0 disk hits)",
+                    report.cache.misses, report.cache.disk_hits
+                )
+                .into());
+            }
+        }
+        println!("warm-start assertion passed: zero lowerings, all plans served from disk");
+    }
     Ok(())
 }

@@ -27,6 +27,14 @@ pub struct CacheStats {
     /// Requests that waited on another thread's in-flight lowering
     /// instead of lowering redundantly (subset of `hits`).
     pub coalesced: u64,
+    /// Cold lookups served by deserializing a persisted plan from the
+    /// on-disk store instead of lowering (`pipeline::store`).
+    pub disk_hits: u64,
+    /// Lowered plans written through to the on-disk store.
+    pub disk_writes: u64,
+    /// On-disk entries rejected (corruption, format-version or
+    /// arch-fingerprint mismatch) and re-lowered.
+    pub rejected: u64,
 }
 
 impl CacheStats {
@@ -55,6 +63,9 @@ pub struct PlanCache {
     misses: AtomicU64,
     evictions: AtomicU64,
     coalesced: AtomicU64,
+    disk_hits: AtomicU64,
+    disk_writes: AtomicU64,
+    rejected: AtomicU64,
 }
 
 impl PlanCache {
@@ -66,6 +77,9 @@ impl PlanCache {
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
             coalesced: AtomicU64::new(0),
+            disk_hits: AtomicU64::new(0),
+            disk_writes: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
         }
     }
 
@@ -96,6 +110,22 @@ impl PlanCache {
     pub(crate) fn record_coalesced(&self) {
         self.hits.fetch_add(1, Ordering::Relaxed);
         self.coalesced.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a cold lookup warmed from the on-disk plan store (no
+    /// lowering ran; neither a memory `hit` nor a `miss`).
+    pub(crate) fn record_disk_hit(&self) {
+        self.disk_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one plan written through to the on-disk store.
+    pub(crate) fn record_disk_write(&self) {
+        self.disk_writes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one on-disk entry rejected (and re-lowered).
+    pub(crate) fn record_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Insert a freshly lowered plan, evicting the least recently used
@@ -134,6 +164,20 @@ impl PlanCache {
         inner.order.clear();
     }
 
+    /// Zero **every** counter — hits, misses, evictions, coalesced and the
+    /// disk-store trio — so a reset observation window starts consistent
+    /// (previously only some counters were covered, skewing `hit_rate`
+    /// and eviction-pressure readings after a reset).
+    pub fn reset_stats(&self) {
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
+        self.evictions.store(0, Ordering::Relaxed);
+        self.coalesced.store(0, Ordering::Relaxed);
+        self.disk_hits.store(0, Ordering::Relaxed);
+        self.disk_writes.store(0, Ordering::Relaxed);
+        self.rejected.store(0, Ordering::Relaxed);
+    }
+
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
@@ -141,6 +185,9 @@ impl PlanCache {
             entries: self.len(),
             evictions: self.evictions.load(Ordering::Relaxed),
             coalesced: self.coalesced.load(Ordering::Relaxed),
+            disk_hits: self.disk_hits.load(Ordering::Relaxed),
+            disk_writes: self.disk_writes.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
         }
     }
 }
@@ -192,6 +239,39 @@ mod tests {
         let s = cache.stats();
         assert_eq!(s.entries, 0);
         assert_eq!(s.hits, 1);
+    }
+
+    #[test]
+    fn reset_stats_covers_every_counter() {
+        let cache = PlanCache::new(1);
+        // drive every counter nonzero: hit, miss, eviction, coalesced,
+        // disk hit/write/reject.
+        cache.insert("a".into(), plan_for(64));
+        cache.get("a"); // hit
+        cache.record_miss();
+        cache.insert("b".into(), plan_for(128)); // evicts "a"
+        cache.record_coalesced();
+        cache.record_disk_hit();
+        cache.record_disk_write();
+        cache.record_rejected();
+        let s = cache.stats();
+        assert!(
+            s.hits > 0
+                && s.misses > 0
+                && s.evictions > 0
+                && s.coalesced > 0
+                && s.disk_hits > 0
+                && s.disk_writes > 0
+                && s.rejected > 0,
+            "precondition: every counter nonzero, got {s:?}"
+        );
+        cache.reset_stats();
+        cache.clear();
+        assert_eq!(
+            cache.stats(),
+            CacheStats::default(),
+            "reset_stats + clear must zero every field, not just hits/misses"
+        );
     }
 
     #[test]

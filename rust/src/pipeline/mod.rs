@@ -15,13 +15,19 @@
 //! (`crate::runtime::Backend`) consumes. [`Pipeline`] memoizes lowering in
 //! a [`PlanCache`] keyed on the spec's canonical JSON, so a repeated spec —
 //! the serving-heavy-traffic case — skips validation, codegen, placement
-//! and routing entirely and goes straight to execution.
+//! and routing entirely and goes straight to execution. With an attached
+//! [`PlanStore`] (see [`Pipeline::with_disk_store`]), lowered plans also
+//! persist to disk, so a restarted process warms from its predecessor's
+//! cache instead of re-lowering (DESIGN.md §10).
 
 pub mod cache;
+pub mod store;
 
 pub use cache::{CacheStats, PlanCache};
+pub use store::{LoadOutcome, PlanStore, StoreStats};
 
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::arch::ArchConfig;
@@ -84,18 +90,22 @@ impl ExecutablePlan {
     }
 }
 
+/// The architecture a spec lowers against: `default_arch` backs the
+/// default platform ("vck5000"/empty); named platforms resolve through
+/// [`crate::spec::arch_for`].
+pub fn resolve_arch(spec: &Spec, default_arch: &ArchConfig) -> Result<ArchConfig> {
+    if spec.platform.is_empty() || spec.platform == "vck5000" {
+        Ok(default_arch.clone())
+    } else {
+        crate::spec::arch_for(&spec.platform)
+    }
+}
+
 /// Stage 1: validate the spec, resolve its architecture, build the
 /// dataflow graph and generate the Vitis sources.
-///
-/// `default_arch` backs the default platform ("vck5000"/empty); named
-/// platforms resolve through [`crate::spec::arch_for`].
 pub fn plan_routines(spec: &Spec, default_arch: &ArchConfig) -> Result<RoutinePlan> {
     crate::spec::validate(spec)?;
-    let arch = if spec.platform.is_empty() || spec.platform == "vck5000" {
-        default_arch.clone()
-    } else {
-        crate::spec::arch_for(&spec.platform)?
-    };
+    let arch = resolve_arch(spec, default_arch)?;
     let built = build_graph(spec)?;
     let project = crate::codegen::generate_from_built(spec, &built)?;
     Ok(RoutinePlan { spec: spec.clone(), arch, built, project })
@@ -192,6 +202,12 @@ pub struct Pipeline {
     cache: PlanCache,
     /// Cold lowerings currently running, keyed like the cache.
     in_flight: Mutex<HashMap<String, Arc<LoweringSlot>>>,
+    /// Optional on-disk plan store: cold lowerings first try to warm from
+    /// a previous process's persisted plans and write through on success.
+    store: Option<PlanStore>,
+    /// Fingerprint of `default_arch`, stamped into (and checked against)
+    /// every store entry.
+    fingerprint: String,
 }
 
 impl Pipeline {
@@ -203,11 +219,27 @@ impl Pipeline {
     }
 
     pub fn with_cache_capacity(default_arch: ArchConfig, capacity: usize) -> Pipeline {
+        let fingerprint = store::arch_fingerprint(&default_arch);
         Pipeline {
             default_arch,
             cache: PlanCache::new(capacity),
             in_flight: Mutex::new(HashMap::new()),
+            store: None,
+            fingerprint,
         }
+    }
+
+    /// Attach an on-disk [`PlanStore`] under `dir` (builder-style): cold
+    /// lowerings lazily load persisted plans written by earlier processes
+    /// (counted as `disk_hits`) and successful lowerings write through.
+    pub fn with_disk_store(mut self, dir: impl Into<PathBuf>) -> Pipeline {
+        self.store = Some(PlanStore::new(dir));
+        self
+    }
+
+    /// The attached on-disk plan store, if any.
+    pub fn store(&self) -> Option<&PlanStore> {
+        self.store.as_ref()
     }
 
     /// Lower a spec to an executable plan, consulting the plan cache.
@@ -246,10 +278,61 @@ impl Pipeline {
             };
         }
         let guard = LeaderGuard { pipeline: self, key: key.clone(), slot };
+        // lazy-load: before paying for a full lowering, the leader (and
+        // only the leader — followers coalesce onto the slot either way)
+        // tries the on-disk store. A valid persisted plan is execution-
+        // equivalent to a fresh lowering (DESIGN.md §10), so it goes
+        // straight into the memory cache; anything unusable is rejected
+        // and falls through to a clean re-lower.
+        if let Some(store) = &self.store {
+            let loaded = match store.load(&key, &self.fingerprint) {
+                LoadOutcome::Loaded(plan) => {
+                    // the fingerprint covers the *default* arch; a named
+                    // platform resolves independently of it, so also require
+                    // the stored arch to equal what resolution produces
+                    // today — otherwise a plan lowered under old platform
+                    // constants would execute a stale hardware model.
+                    match resolve_arch(spec, &self.default_arch) {
+                        Ok(arch) if plan.plan.arch == arch => Some(Arc::from(plan)),
+                        _ => {
+                            self.cache.record_rejected();
+                            crate::log_warn!(
+                                "plan store entry rejected, re-lowering: stale arch for \
+                                 platform {:?}",
+                                spec.platform
+                            );
+                            None
+                        }
+                    }
+                }
+                LoadOutcome::Rejected(why) => {
+                    self.cache.record_rejected();
+                    crate::log_warn!("plan store entry rejected, re-lowering: {why}");
+                    None
+                }
+                LoadOutcome::Missing => None,
+            };
+            if let Some(plan) = loaded {
+                self.cache.record_disk_hit();
+                self.cache.insert(key, Arc::clone(&plan));
+                guard.slot.fill(Ok(Arc::clone(&plan)));
+                return Ok(plan);
+            }
+        }
         self.cache.record_miss();
         match lower_spec_with(spec, &self.default_arch) {
             Ok(plan) => {
                 let plan = Arc::new(plan);
+                // write-through: persistence is an optimization, so an
+                // I/O failure is logged and the lowering still succeeds.
+                if let Some(store) = &self.store {
+                    match store.save(&key, &self.fingerprint, &plan) {
+                        Ok(()) => self.cache.record_disk_write(),
+                        Err(e) => {
+                            crate::log_warn!("plan store write-through failed: {e}")
+                        }
+                    }
+                }
                 self.cache.insert(key, plan.clone());
                 guard.slot.fill(Ok(plan.clone()));
                 Ok(plan)
@@ -259,6 +342,14 @@ impl Pipeline {
                 Err(e)
             }
         }
+    }
+
+    /// Drop all resident plans **and** zero every cache counter — the
+    /// consistent reset `CacheStats` observers rely on (the on-disk store,
+    /// if any, is left untouched; use [`PlanStore::clear`] for that).
+    pub fn reset(&self) {
+        self.cache.clear();
+        self.cache.reset_stats();
     }
 
     pub fn cache(&self) -> &PlanCache {
@@ -376,6 +467,65 @@ mod tests {
             }
         });
         assert_eq!(pipeline.cache().len(), 0, "failed lowerings are not cached");
+    }
+
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        static NEXT: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let n = NEXT.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        std::env::temp_dir().join(format!("aieblas-pipe-{tag}-{}-{n}", std::process::id()))
+    }
+
+    #[test]
+    fn disk_store_warms_a_second_pipeline() {
+        let dir = tmp_dir("warm");
+        let spec = Spec::axpydot_dataflow(4096, 2.0);
+
+        let first = Pipeline::default().with_disk_store(&dir);
+        let a = first.lower(&spec).unwrap();
+        let s = first.cache().stats();
+        assert_eq!((s.misses, s.disk_writes, s.disk_hits), (1, 1, 0));
+
+        // a fresh process (modeled by a fresh pipeline) warms from disk:
+        // zero lowerings, one disk hit, and the same lowered artifacts.
+        let second = Pipeline::default().with_disk_store(&dir);
+        let b = second.lower(&spec).unwrap();
+        let s = second.cache().stats();
+        assert_eq!((s.misses, s.disk_hits, s.rejected), (0, 1, 0));
+        assert_eq!(a.graph(), b.graph());
+        assert_eq!(a.placement().locations, b.placement().locations);
+        assert_eq!(a.project().files, b.project().files);
+
+        // third lookup in the same pipeline is a plain memory hit.
+        let c = second.lower(&spec).unwrap();
+        assert!(Arc::ptr_eq(&b, &c));
+        assert_eq!(second.cache().stats().disk_hits, 1, "disk consulted once");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn different_default_arch_rejects_and_relowers() {
+        let dir = tmp_dir("arch");
+        let spec = Spec::single(RoutineKind::Axpy, "a", 2048, DataSource::Pl);
+        Pipeline::default().with_disk_store(&dir).lower(&spec).unwrap();
+
+        let other = Pipeline::new(ArchConfig::ryzen_ai()).with_disk_store(&dir);
+        let plan = other.lower(&spec).unwrap();
+        assert_eq!(plan.arch(), &ArchConfig::ryzen_ai(), "must not execute a vck5000 plan");
+        let s = other.cache().stats();
+        assert_eq!((s.rejected, s.misses, s.disk_hits), (1, 1, 0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reset_clears_plans_and_all_counters() {
+        let pipeline = Pipeline::default();
+        let spec = Spec::single(RoutineKind::Dot, "d", 1024, DataSource::Pl);
+        pipeline.lower(&spec).unwrap();
+        pipeline.lower(&spec).unwrap();
+        assert_ne!(pipeline.cache().stats(), CacheStats::default());
+        pipeline.reset();
+        assert_eq!(pipeline.cache().stats(), CacheStats::default());
+        assert_eq!(pipeline.cache().len(), 0);
     }
 
     #[test]

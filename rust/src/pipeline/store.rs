@@ -1,0 +1,754 @@
+//! The persistent plan store: disk-backed warm starts (DESIGN.md §10).
+//!
+//! Lowering a spec — validate → build graph → codegen → place → route — is
+//! the expensive cold-start path the in-memory [`PlanCache`] exists to
+//! amortize; this module extends that amortization **across processes** by
+//! serializing every lowered [`ExecutablePlan`] (routine graph, placement,
+//! routing, generated sources, architecture) to
+//! `<cache_dir>/<key_hash>.plan.json` with `util::json`, so a restarted
+//! server warms from a previous process's cache instead of re-lowering.
+//!
+//! Entries are **versioned and fingerprinted**: each file carries the store
+//! format version, the spec's full cache key, and a fingerprint of the
+//! pipeline's default architecture. A reader rejects (and the pipeline
+//! silently re-lowers) on *any* mismatch or corruption — truncated files,
+//! garbage JSON, a bumped format version, a different arch — rather than
+//! erroring; a stale cache directory can degrade warm starts but can never
+//! take the serving path down or execute a plan lowered for different
+//! hardware. Writes go through a temp file + rename so a crashed writer
+//! leaves no half-written entry under the final name.
+//!
+//! [`PlanCache`]: super::PlanCache
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use super::{ExecutablePlan, PlacedGraph, RoutinePlan};
+use crate::arch::ArchConfig;
+use crate::blas::{PortType, RoutineKind};
+use crate::codegen::GeneratedProject;
+use crate::graph::build::BuildOutput;
+use crate::graph::place::{Location, Placement};
+use crate::graph::route::{check_routing, RoutedEdge, Routing};
+use crate::graph::{EdgeKind, Graph, NodeKind};
+use crate::spec::Spec;
+use crate::util::json::{obj, Json};
+use crate::{Error, Result};
+
+/// On-disk format version. Bump on ANY change to the serialized shape;
+/// readers reject other versions and re-lower (never migrate in place).
+pub const FORMAT_VERSION: u64 = 1;
+
+/// Filename suffix for store entries.
+const ENTRY_SUFFIX: &str = ".plan.json";
+
+/// FNV-1a 64-bit hash (dependency-free, stable across processes) — used
+/// for entry filenames and the architecture fingerprint.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Fingerprint of a pipeline configuration: a hash of the default
+/// architecture's canonical JSON. Two pipelines share plans on disk iff
+/// their fingerprints match; anything else (different grid, clocks,
+/// channel counts, efficiencies …) must re-lower.
+pub fn arch_fingerprint(arch: &ArchConfig) -> String {
+    format!("arch-{:016x}", fnv1a64(arch_to_json(arch).to_compact().as_bytes()))
+}
+
+/// Outcome of one store lookup, as seen by the pipeline.
+#[derive(Debug)]
+pub enum LoadOutcome {
+    /// No entry on disk for this key — a plain cold start.
+    Missing,
+    /// A valid entry was deserialized; execution-equivalent to a fresh
+    /// lowering (DESIGN.md §10 substitution argument).
+    Loaded(Box<ExecutablePlan>),
+    /// An entry exists but failed validation (corruption, version or
+    /// fingerprint mismatch); the caller should re-lower and overwrite.
+    Rejected(String),
+}
+
+/// Aggregate on-disk state, for `aieblas cache stats`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    /// `*.plan.json` entries present.
+    pub entries: usize,
+    /// Total bytes across entries.
+    pub bytes: u64,
+}
+
+/// A directory of serialized plans, keyed like the in-memory [`PlanCache`]
+/// (the spec's canonical JSON). Thread- and process-safe for the pipeline's
+/// usage: loads are single-flight per key (the lowering leader is the only
+/// reader), and writes are atomic renames, so concurrent processes sharing
+/// one directory at worst redo each other's work.
+///
+/// [`PlanCache`]: super::PlanCache
+#[derive(Debug, Clone)]
+pub struct PlanStore {
+    dir: PathBuf,
+}
+
+impl PlanStore {
+    pub fn new(dir: impl Into<PathBuf>) -> PlanStore {
+        PlanStore { dir: dir.into() }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Entry path for a cache key (filename is the key's FNV-1a hash; the
+    /// full key is stored inside the entry and re-checked on load, so a
+    /// hash collision degrades to a rejection, never a wrong plan).
+    pub fn path_for(&self, key: &str) -> PathBuf {
+        self.dir.join(format!("{:016x}{ENTRY_SUFFIX}", fnv1a64(key.as_bytes())))
+    }
+
+    /// Look up `key`, validating version, key and fingerprint, and fully
+    /// deserializing + invariant-checking the plan. Never errors on bad
+    /// entries: anything unusable is a [`LoadOutcome::Rejected`].
+    pub fn load(&self, key: &str, fingerprint: &str) -> LoadOutcome {
+        let path = self.path_for(key);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return LoadOutcome::Missing,
+            Err(e) => return LoadOutcome::Rejected(format!("unreadable entry: {e}")),
+        };
+        match decode_entry(&text, key, fingerprint) {
+            Ok(plan) => LoadOutcome::Loaded(Box::new(plan)),
+            Err(e) => LoadOutcome::Rejected(e.to_string()),
+        }
+    }
+
+    /// Write-through one lowered plan. I/O errors surface to the caller
+    /// (which logs and carries on — persistence is an optimization, never
+    /// a correctness dependency).
+    pub fn save(&self, key: &str, fingerprint: &str, plan: &ExecutablePlan) -> Result<()> {
+        std::fs::create_dir_all(&self.dir)?;
+        let entry = obj(vec![
+            ("format_version", (FORMAT_VERSION as usize).into()),
+            ("cache_key", key.into()),
+            ("fingerprint", fingerprint.into()),
+            ("plan", plan_to_json(plan)),
+        ]);
+        let path = self.path_for(key);
+        // temp-then-rename keeps readers from ever seeing a partial entry
+        // under the final name (rename is atomic on one filesystem).
+        let tmp = self.dir.join(format!(
+            ".{:016x}.{}.tmp",
+            fnv1a64(key.as_bytes()),
+            std::process::id()
+        ));
+        let written = std::fs::write(&tmp, entry.to_pretty() + "\n")
+            .and_then(|()| std::fs::rename(&tmp, &path));
+        if let Err(e) = written {
+            // never leave a half-written temp behind on failure.
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e.into());
+        }
+        Ok(())
+    }
+
+    /// Count entries and bytes currently on disk.
+    pub fn stats(&self) -> StoreStats {
+        let mut stats = StoreStats::default();
+        for path in self.entry_paths() {
+            stats.entries += 1;
+            stats.bytes += std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+        }
+        stats
+    }
+
+    /// Remove every entry (plus any stale temp files a crashed writer
+    /// left); returns how many entries were deleted.
+    pub fn clear(&self) -> Result<usize> {
+        let mut removed = 0;
+        for path in self.entry_paths() {
+            std::fs::remove_file(&path)?;
+            removed += 1;
+        }
+        let Ok(dir) = std::fs::read_dir(&self.dir) else {
+            return Ok(removed);
+        };
+        for path in dir.filter_map(|e| e.ok()).map(|e| e.path()) {
+            let stale_tmp = path
+                .file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with('.') && n.ends_with(".tmp"));
+            if stale_tmp {
+                let _ = std::fs::remove_file(&path);
+            }
+        }
+        Ok(removed)
+    }
+
+    fn entry_paths(&self) -> Vec<PathBuf> {
+        let Ok(dir) = std::fs::read_dir(&self.dir) else {
+            return Vec::new();
+        };
+        let mut paths: Vec<PathBuf> = dir
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.ends_with(ENTRY_SUFFIX) && !n.starts_with('.'))
+            })
+            .collect();
+        paths.sort();
+        paths
+    }
+}
+
+/// Parse + validate one entry document against the expected key and
+/// fingerprint, returning the deserialized plan.
+fn decode_entry(text: &str, key: &str, fingerprint: &str) -> Result<ExecutablePlan> {
+    let json = Json::parse(text)?;
+    let version = json
+        .get("format_version")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| corrupt("missing format_version"))?;
+    if version != FORMAT_VERSION {
+        return Err(corrupt(&format!(
+            "format version {version} (reader speaks {FORMAT_VERSION})"
+        )));
+    }
+    let stored_key = json
+        .get("cache_key")
+        .and_then(Json::as_str)
+        .ok_or_else(|| corrupt("missing cache_key"))?;
+    if stored_key != key {
+        return Err(corrupt("cache key mismatch (filename hash collision?)"));
+    }
+    let stored_fp = json
+        .get("fingerprint")
+        .and_then(Json::as_str)
+        .ok_or_else(|| corrupt("missing fingerprint"))?;
+    if stored_fp != fingerprint {
+        return Err(corrupt(&format!(
+            "arch fingerprint {stored_fp} does not match pipeline {fingerprint}"
+        )));
+    }
+    let plan = plan_from_json(json.get("plan").ok_or_else(|| corrupt("missing plan"))?)?;
+    // a deserialized plan must satisfy the same invariants a fresh
+    // lowering does before any backend may execute it (DESIGN.md §6/§10).
+    plan.plan.built.graph.check_invariants()?;
+    if plan.placed.placement.locations.len() != plan.plan.built.graph.nodes.len() {
+        return Err(corrupt("placement arity does not match graph"));
+    }
+    if plan.plan.built.node_routine.len() != plan.plan.built.graph.nodes.len() {
+        return Err(corrupt("node_routine arity does not match graph"));
+    }
+    let num_edges = plan.plan.built.graph.edges.len();
+    if plan.placed.routing.routed.iter().any(|r| r.edge >= num_edges) {
+        return Err(corrupt("routing references an unknown edge"));
+    }
+    check_routing(&plan.plan.built.graph, &plan.placed.routing)?;
+    Ok(plan)
+}
+
+fn corrupt(msg: &str) -> Error {
+    Error::Runtime(format!("plan store entry rejected: {msg}"))
+}
+
+// ---------------------------------------------------------------------------
+// ExecutablePlan ⇄ Json round-trip serializers
+// ---------------------------------------------------------------------------
+
+/// Serialize a lowered plan (graph + placement + routing + generated
+/// sources + architecture) to pure data. Inverse of [`plan_from_json`];
+/// the round trip is property-tested in `rust/tests/persistence.rs`.
+pub fn plan_to_json(plan: &ExecutablePlan) -> Json {
+    obj(vec![
+        ("spec", plan.plan.spec.to_json()),
+        ("arch", arch_to_json(&plan.plan.arch)),
+        ("graph", graph_to_json(&plan.plan.built.graph)),
+        (
+            "node_routine",
+            Json::Arr(
+                plan.plan
+                    .built
+                    .node_routine
+                    .iter()
+                    .map(|r| r.map_or(Json::Null, Json::from))
+                    .collect(),
+            ),
+        ),
+        (
+            "project",
+            Json::Obj(
+                plan.plan
+                    .project
+                    .files
+                    .iter()
+                    .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                    .collect(),
+            ),
+        ),
+        ("placement", placement_to_json(&plan.placed.placement)),
+        ("routing", routing_to_json(&plan.placed.routing)),
+    ])
+}
+
+/// Deserialize a plan previously written by [`plan_to_json`].
+pub fn plan_from_json(json: &Json) -> Result<ExecutablePlan> {
+    let spec = Spec::from_json(json.get("spec").ok_or_else(|| corrupt("missing spec"))?)?;
+    let arch = arch_from_json(json.get("arch").ok_or_else(|| corrupt("missing arch"))?)?;
+    let graph = graph_from_json(json.get("graph").ok_or_else(|| corrupt("missing graph"))?)?;
+    let node_routine = json
+        .get("node_routine")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| corrupt("missing node_routine"))?
+        .iter()
+        .map(|v| match v {
+            Json::Null => Ok(None),
+            _ => v.as_usize().map(Some).ok_or_else(|| corrupt("bad node_routine entry")),
+        })
+        .collect::<Result<Vec<Option<usize>>>>()?;
+    let mut files = BTreeMap::new();
+    for (path, contents) in json
+        .get("project")
+        .and_then(Json::as_obj)
+        .ok_or_else(|| corrupt("missing project"))?
+    {
+        let text = contents.as_str().ok_or_else(|| corrupt("non-string source file"))?;
+        files.insert(path.clone(), text.to_string());
+    }
+    let placement =
+        placement_from_json(json.get("placement").ok_or_else(|| corrupt("missing placement"))?)?;
+    let routing =
+        routing_from_json(json.get("routing").ok_or_else(|| corrupt("missing routing"))?)?;
+    Ok(ExecutablePlan {
+        plan: RoutinePlan {
+            spec,
+            arch,
+            built: BuildOutput { graph, node_routine },
+            project: GeneratedProject { files },
+        },
+        placed: PlacedGraph { placement, routing },
+    })
+}
+
+fn arch_to_json(a: &ArchConfig) -> Json {
+    obj(vec![
+        ("rows", a.rows.into()),
+        ("cols", a.cols.into()),
+        ("local_mem_bytes", a.local_mem_bytes.into()),
+        ("aie_clock_hz", a.aie_clock_hz.into()),
+        ("pl_clock_hz", a.pl_clock_hz.into()),
+        ("vector_bits", a.vector_bits.into()),
+        ("fp32_macs_per_cycle", a.fp32_macs_per_cycle.into()),
+        ("stream_bits_per_cycle", a.stream_bits_per_cycle.into()),
+        ("pl_aie_channel_bw", a.pl_aie_channel_bw.into()),
+        ("pl_to_aie_channels", a.pl_to_aie_channels.into()),
+        ("aie_to_pl_channels", a.aie_to_pl_channels.into()),
+        ("ddr_channel_bw", a.ddr_channel_bw.into()),
+        ("ddr_channels", a.ddr_channels.into()),
+        ("ddr_naive_efficiency", a.ddr_naive_efficiency.into()),
+        ("ddr_burst_efficiency", a.ddr_burst_efficiency.into()),
+        ("window_overhead_cycles", (a.window_overhead_cycles as usize).into()),
+        ("noc_hop_cycles", (a.noc_hop_cycles as usize).into()),
+        ("kernel_call_cycles", (a.kernel_call_cycles as usize).into()),
+    ])
+}
+
+fn arch_from_json(j: &Json) -> Result<ArchConfig> {
+    let field = |name: &str| j.get(name).ok_or_else(|| corrupt(&format!("arch missing {name}")));
+    let us = |name: &str| {
+        field(name)?.as_usize().ok_or_else(|| corrupt(&format!("bad arch {name}")))
+    };
+    let f = |name: &str| field(name)?.as_f64().ok_or_else(|| corrupt(&format!("bad arch {name}")));
+    Ok(ArchConfig {
+        rows: us("rows")?,
+        cols: us("cols")?,
+        local_mem_bytes: us("local_mem_bytes")?,
+        aie_clock_hz: f("aie_clock_hz")?,
+        pl_clock_hz: f("pl_clock_hz")?,
+        vector_bits: us("vector_bits")?,
+        fp32_macs_per_cycle: us("fp32_macs_per_cycle")?,
+        stream_bits_per_cycle: us("stream_bits_per_cycle")?,
+        pl_aie_channel_bw: f("pl_aie_channel_bw")?,
+        pl_to_aie_channels: us("pl_to_aie_channels")?,
+        aie_to_pl_channels: us("aie_to_pl_channels")?,
+        ddr_channel_bw: f("ddr_channel_bw")?,
+        ddr_channels: us("ddr_channels")?,
+        ddr_naive_efficiency: f("ddr_naive_efficiency")?,
+        ddr_burst_efficiency: f("ddr_burst_efficiency")?,
+        window_overhead_cycles: us("window_overhead_cycles")? as u64,
+        noc_hop_cycles: us("noc_hop_cycles")? as u64,
+        kernel_call_cycles: us("kernel_call_cycles")? as u64,
+    })
+}
+
+fn node_kind_to_json(kind: &NodeKind) -> Json {
+    match kind {
+        NodeKind::AieKernel { kind, size, window, vector_bits, hint } => {
+            let mut fields: Vec<(&str, Json)> = vec![
+                ("t", "aie".into()),
+                ("routine", kind.name().into()),
+                ("size", (*size).into()),
+                ("window", (*window).into()),
+                ("vector_bits", (*vector_bits).into()),
+            ];
+            if let Some((col, row)) = hint {
+                fields.push(("hint", obj(vec![("col", (*col).into()), ("row", (*row).into())])));
+            }
+            obj(fields)
+        }
+        NodeKind::PlMm2s { burst } => obj(vec![("t", "mm2s".into()), ("burst", (*burst).into())]),
+        NodeKind::PlS2mm { burst } => obj(vec![("t", "s2mm".into()), ("burst", (*burst).into())]),
+        NodeKind::Combine { parts } => {
+            obj(vec![("t", "combine".into()), ("parts", (*parts).into())])
+        }
+        NodeKind::OnChipSource => obj(vec![("t", "source".into())]),
+        NodeKind::OnChipSink => obj(vec![("t", "sink".into())]),
+    }
+}
+
+fn node_kind_from_json(j: &Json) -> Result<NodeKind> {
+    let tag = j.get("t").and_then(Json::as_str).ok_or_else(|| corrupt("node missing tag"))?;
+    let us = |name: &str| {
+        j.get(name)
+            .and_then(Json::as_usize)
+            .ok_or_else(|| corrupt(&format!("node missing {name}")))
+    };
+    Ok(match tag {
+        "aie" => {
+            let routine = j
+                .get("routine")
+                .and_then(Json::as_str)
+                .ok_or_else(|| corrupt("aie node missing routine"))?;
+            let kind = RoutineKind::from_name(routine)
+                .ok_or_else(|| corrupt(&format!("unknown routine {routine:?}")))?;
+            let hint = match j.get("hint") {
+                None => None,
+                Some(h) => {
+                    let col = h.get("col").and_then(Json::as_usize);
+                    let row = h.get("row").and_then(Json::as_usize);
+                    match (col, row) {
+                        (Some(col), Some(row)) => Some((col, row)),
+                        _ => return Err(corrupt("bad placement hint")),
+                    }
+                }
+            };
+            NodeKind::AieKernel {
+                kind,
+                size: us("size")?,
+                window: us("window")?,
+                vector_bits: us("vector_bits")?,
+                hint,
+            }
+        }
+        "mm2s" => NodeKind::PlMm2s { burst: mover_burst(j)? },
+        "s2mm" => NodeKind::PlS2mm { burst: mover_burst(j)? },
+        "combine" => NodeKind::Combine { parts: us("parts")? },
+        "source" => NodeKind::OnChipSource,
+        "sink" => NodeKind::OnChipSink,
+        other => return Err(corrupt(&format!("unknown node tag {other:?}"))),
+    })
+}
+
+/// A PL mover's `burst` flag. Mandatory: silently defaulting a corrupt
+/// field would flip the DDR efficiency model instead of rejecting.
+fn mover_burst(j: &Json) -> Result<bool> {
+    j.get("burst").and_then(Json::as_bool).ok_or_else(|| corrupt("mover missing bool burst"))
+}
+
+fn port_ty_name(ty: PortType) -> &'static str {
+    match ty {
+        PortType::Scalar => "scalar",
+        PortType::Vector => "vector",
+        PortType::Matrix => "matrix",
+    }
+}
+
+fn port_ty_from_name(s: &str) -> Result<PortType> {
+    match s {
+        "scalar" => Ok(PortType::Scalar),
+        "vector" => Ok(PortType::Vector),
+        "matrix" => Ok(PortType::Matrix),
+        other => Err(corrupt(&format!("unknown port type {other:?}"))),
+    }
+}
+
+fn graph_to_json(g: &Graph) -> Json {
+    let nodes: Vec<Json> = g
+        .nodes
+        .iter()
+        .map(|n| obj(vec![("name", n.name.clone().into()), ("kind", node_kind_to_json(&n.kind))]))
+        .collect();
+    let edges: Vec<Json> = g
+        .edges
+        .iter()
+        .map(|e| {
+            obj(vec![
+                ("src", e.src.into()),
+                ("src_port", e.src_port.clone().into()),
+                ("dst", e.dst.into()),
+                ("dst_port", e.dst_port.clone().into()),
+                ("ty", port_ty_name(e.ty).into()),
+                (
+                    "kind",
+                    match e.kind {
+                        EdgeKind::Window => "window",
+                        EdgeKind::Stream => "stream",
+                    }
+                    .into(),
+                ),
+                ("total", e.total_elements.into()),
+                ("window", e.window_elements.into()),
+            ])
+        })
+        .collect();
+    obj(vec![("nodes", Json::Arr(nodes)), ("edges", Json::Arr(edges))])
+}
+
+fn graph_from_json(j: &Json) -> Result<Graph> {
+    let mut g = Graph::default();
+    for n in j.get("nodes").and_then(Json::as_arr).ok_or_else(|| corrupt("graph missing nodes"))? {
+        let name =
+            n.get("name").and_then(Json::as_str).ok_or_else(|| corrupt("node missing name"))?;
+        let kind =
+            node_kind_from_json(n.get("kind").ok_or_else(|| corrupt("node missing kind"))?)?;
+        g.add_node(name, kind);
+    }
+    for (i, e) in j
+        .get("edges")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| corrupt("graph missing edges"))?
+        .iter()
+        .enumerate()
+    {
+        let us = |name: &str| {
+            e.get(name)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| corrupt(&format!("edge {i} missing {name}")))
+        };
+        let s = |name: &str| {
+            e.get(name)
+                .and_then(Json::as_str)
+                .ok_or_else(|| corrupt(&format!("edge {i} missing {name}")))
+        };
+        let id = g.add_edge(
+            us("src")?,
+            s("src_port")?,
+            us("dst")?,
+            s("dst_port")?,
+            port_ty_from_json_edge(e, i)?,
+            match s("kind")? {
+                "window" => EdgeKind::Window,
+                "stream" => EdgeKind::Stream,
+                other => return Err(corrupt(&format!("edge {i}: unknown kind {other:?}"))),
+            },
+            us("total")?,
+            us("window")?,
+        );
+        debug_assert_eq!(id, i);
+    }
+    Ok(g)
+}
+
+fn port_ty_from_json_edge(e: &Json, i: usize) -> Result<PortType> {
+    port_ty_from_name(
+        e.get("ty")
+            .and_then(Json::as_str)
+            .ok_or_else(|| corrupt(&format!("edge {i} missing ty")))?,
+    )
+}
+
+fn placement_to_json(p: &Placement) -> Json {
+    let locs: Vec<Json> = p
+        .locations
+        .iter()
+        .map(|l| match *l {
+            Location::Tile { col, row } => {
+                obj(vec![("t", "tile".into()), ("col", col.into()), ("row", row.into())])
+            }
+            Location::Shim { col } => obj(vec![("t", "shim".into()), ("col", col.into())]),
+            Location::OffChip => obj(vec![("t", "off".into())]),
+        })
+        .collect();
+    obj(vec![("locations", Json::Arr(locs))])
+}
+
+fn placement_from_json(j: &Json) -> Result<Placement> {
+    let mut locations = Vec::new();
+    for l in j
+        .get("locations")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| corrupt("placement missing locations"))?
+    {
+        let tag = l.get("t").and_then(Json::as_str).ok_or_else(|| corrupt("location missing tag"))?;
+        let us = |name: &str| {
+            l.get(name)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| corrupt(&format!("location missing {name}")))
+        };
+        locations.push(match tag {
+            "tile" => Location::Tile { col: us("col")?, row: us("row")? },
+            "shim" => Location::Shim { col: us("col")? },
+            "off" => Location::OffChip,
+            other => return Err(corrupt(&format!("unknown location tag {other:?}"))),
+        });
+    }
+    Ok(Placement { locations })
+}
+
+fn routing_to_json(r: &Routing) -> Json {
+    let routed: Vec<Json> = r
+        .routed
+        .iter()
+        .map(|e| {
+            obj(vec![
+                ("edge", e.edge.into()),
+                ("hops", e.hops.into()),
+                ("p2a", e.uses_pl_to_aie.into()),
+                ("a2p", e.uses_aie_to_pl.into()),
+                ("neighbour", e.neighbour.into()),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("routed", Json::Arr(routed)),
+        ("pl_to_aie_used", r.pl_to_aie_used.into()),
+        ("aie_to_pl_used", r.aie_to_pl_used.into()),
+    ])
+}
+
+fn routing_from_json(j: &Json) -> Result<Routing> {
+    let mut routed = Vec::new();
+    for (i, e) in j
+        .get("routed")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| corrupt("routing missing routed"))?
+        .iter()
+        .enumerate()
+    {
+        let us = |name: &str| {
+            e.get(name)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| corrupt(&format!("route {i} missing {name}")))
+        };
+        let b = |name: &str| {
+            e.get(name)
+                .and_then(Json::as_bool)
+                .ok_or_else(|| corrupt(&format!("route {i} missing {name}")))
+        };
+        routed.push(RoutedEdge {
+            edge: us("edge")?,
+            hops: us("hops")?,
+            uses_pl_to_aie: b("p2a")?,
+            uses_aie_to_pl: b("a2p")?,
+            neighbour: b("neighbour")?,
+        });
+    }
+    let us = |name: &str| {
+        j.get(name)
+            .and_then(Json::as_usize)
+            .ok_or_else(|| corrupt(&format!("routing missing {name}")))
+    };
+    Ok(Routing {
+        routed,
+        pl_to_aie_used: us("pl_to_aie_used")?,
+        aie_to_pl_used: us("aie_to_pl_used")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::RoutineKind;
+    use crate::spec::DataSource;
+
+    fn tmp_store(tag: &str) -> PlanStore {
+        static NEXT: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let n = NEXT.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        PlanStore::new(std::env::temp_dir().join(format!(
+            "aieblas-store-unit-{tag}-{}-{n}",
+            std::process::id()
+        )))
+    }
+
+    fn lowered(spec: &Spec) -> ExecutablePlan {
+        crate::pipeline::lower_spec(spec).unwrap()
+    }
+
+    #[test]
+    fn plan_round_trips_through_json() {
+        for spec in [
+            Spec::single(RoutineKind::Axpy, "a", 4096, DataSource::Pl),
+            Spec::single(RoutineKind::Gemv, "g", 64, DataSource::OnChip),
+            Spec::axpydot_dataflow(8192, 2.0),
+            Spec::chain(RoutineKind::Scal, 4, 1024),
+        ] {
+            let plan = lowered(&spec);
+            let back = plan_from_json(&plan_to_json(&plan)).unwrap();
+            assert_eq!(back.plan.spec, plan.plan.spec);
+            assert_eq!(back.plan.arch, plan.plan.arch);
+            assert_eq!(back.plan.built.graph, plan.plan.built.graph);
+            assert_eq!(back.plan.built.node_routine, plan.plan.built.node_routine);
+            assert_eq!(back.plan.project.files, plan.plan.project.files);
+            assert_eq!(back.placed.placement.locations, plan.placed.placement.locations);
+            assert_eq!(back.placed.routing.routed, plan.placed.routing.routed);
+            assert_eq!(back.placed.routing.pl_to_aie_used, plan.placed.routing.pl_to_aie_used);
+            assert_eq!(back.placed.routing.aie_to_pl_used, plan.placed.routing.aie_to_pl_used);
+        }
+    }
+
+    #[test]
+    fn save_load_round_trip_on_disk() {
+        let store = tmp_store("roundtrip");
+        let spec = Spec::axpydot_dataflow(4096, 2.0);
+        let plan = lowered(&spec);
+        let fp = arch_fingerprint(&ArchConfig::vck5000());
+        store.save(&spec.cache_key(), &fp, &plan).unwrap();
+        assert_eq!(store.stats().entries, 1);
+        match store.load(&spec.cache_key(), &fp) {
+            LoadOutcome::Loaded(back) => {
+                assert_eq!(back.plan.built.graph, plan.plan.built.graph)
+            }
+            other => panic!("expected Loaded, got {other:?}"),
+        }
+        assert_eq!(store.clear().unwrap(), 1);
+        assert_eq!(store.stats().entries, 0);
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn missing_entry_is_missing_not_rejected() {
+        let store = tmp_store("missing");
+        let fp = arch_fingerprint(&ArchConfig::vck5000());
+        assert!(matches!(store.load("no-such-key", &fp), LoadOutcome::Missing));
+    }
+
+    #[test]
+    fn wrong_fingerprint_is_rejected() {
+        let store = tmp_store("fp");
+        let spec = Spec::single(RoutineKind::Dot, "d", 1024, DataSource::Pl);
+        let plan = lowered(&spec);
+        let fp = arch_fingerprint(&ArchConfig::vck5000());
+        store.save(&spec.cache_key(), &fp, &plan).unwrap();
+        let other_fp = arch_fingerprint(&ArchConfig::ryzen_ai());
+        assert!(matches!(store.load(&spec.cache_key(), &other_fp), LoadOutcome::Rejected(_)));
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn fingerprints_distinguish_architectures() {
+        assert_ne!(
+            arch_fingerprint(&ArchConfig::vck5000()),
+            arch_fingerprint(&ArchConfig::ryzen_ai())
+        );
+        assert_eq!(
+            arch_fingerprint(&ArchConfig::vck5000()),
+            arch_fingerprint(&ArchConfig::vck5000())
+        );
+    }
+}

@@ -142,7 +142,8 @@ impl ServeReport {
             "served {} request(s) ({} failed) in {} batch(es), mean batch {:.2} (max {})\n\
              latency p50 {:.3} ms / p99 {:.3} ms, queue wait p50 {:.3} ms\n\
              throughput {:.0} req/s over {:.3} s\n\
-             plan cache: {} hit(s) ({} coalesced) / {} miss(es), {} eviction(s), {} resident",
+             plan cache: {} hit(s) ({} coalesced) / {} miss(es), {} eviction(s), {} resident\n\
+             plan store: {} disk hit(s), {} write(s), {} rejected",
             self.requests,
             self.failed,
             self.batches,
@@ -158,6 +159,9 @@ impl ServeReport {
             self.cache.misses,
             self.cache.evictions,
             self.cache.entries,
+            self.cache.disk_hits,
+            self.cache.disk_writes,
+            self.cache.rejected,
         )
     }
 }
