@@ -1,7 +1,11 @@
 //! Simulator-engine microbenchmarks: host wallclock of the DES itself
 //! (the L3 hot path the §Perf pass optimizes) across graph shapes:
 //! token-loop throughput, composed pipelines, a deep 8-stage chain that
-//! stresses the ready queue, and wide fan-out.
+//! stresses the ready queue, wide fan-out, and the PR 5 headline cases —
+//! multi-rate fast-forward on gemv's re-read `x` edge and parallel
+//! simulation of independent components — each timed against the PR 2
+//! engine configuration (`multirate: false, threads: 1`) with the
+//! speedup recorded in the JSON.
 //!
 //! Emits `BENCH_sim_engine.json` (working directory, or under
 //! `AIEBLAS_BENCH_JSON_DIR`) in the same shape as `BENCH_plan_cache.json`
@@ -16,6 +20,7 @@ use std::cell::Cell;
 
 use aieblas::blas::RoutineKind;
 use aieblas::coordinator::{AieBlas, Config};
+use aieblas::sim::SimOptions;
 use aieblas::spec::{DataSource, RoutineSpec, Spec};
 use aieblas::util::bench::Bench;
 use aieblas::util::json::{obj, Json};
@@ -57,6 +62,45 @@ fn bench_case(sys: &AieBlas, b: &mut Bench, rows: &mut Vec<Json>, label: &str, s
     rows.push(obj(fields));
 }
 
+/// Time one spec under two engine configurations (the current default vs
+/// the pinned PR 2 configuration) and record the speedup.
+fn bench_vs_pr2(
+    b: &mut Bench,
+    rows: &mut Vec<Json>,
+    label: &str,
+    spec: &Spec,
+    new: &SimOptions,
+    pr2: &SimOptions,
+) {
+    let plan = aieblas::pipeline::lower_spec(spec).unwrap();
+    let sim = |opts: &SimOptions| {
+        aieblas::sim::simulate_with(
+            plan.graph(),
+            plan.placement(),
+            plan.routing(),
+            plan.arch(),
+            opts,
+        )
+        .unwrap()
+        .makespan_s
+    };
+    let makespan = Cell::new(0.0f64);
+    let new_stats = b.bench(&format!("engine/{label}"), || {
+        makespan.set(sim(new));
+        makespan.get()
+    });
+    let pr2_stats = b.bench(&format!("pr2/{label}"), || sim(pr2));
+    let speedup = pr2_stats.median / new_stats.median.max(1e-12);
+    eprintln!("  {label}: new engine {speedup:.1}x faster than the PR 2 engine");
+    rows.push(obj(vec![
+        ("case", label.into()),
+        ("engine_median_s", new_stats.median.into()),
+        ("pr2_median_s", pr2_stats.median.into()),
+        ("speedup_vs_pr2", speedup.into()),
+        ("makespan_s", makespan.get().into()),
+    ]));
+}
+
 fn main() {
     aieblas::init();
     // CI smoke mode: bounded problem sizes — catches hangs/panics/regressed
@@ -90,6 +134,36 @@ fn main() {
         wide.routines.push(RoutineSpec::new(RoutineKind::Axpy, format!("k{i}"), n));
     }
     bench_case(&sys, &mut b, &mut rows, "sim/wide16", &wide);
+
+    // --- PR 5 headline cases: new engine vs the PR 2 configuration --------
+    // `multirate: false, threads: 1` pins the PR 2 configuration
+    // (uniform-rate fast-forward only, components one after another) —
+    // a reconstruction of the old detector, not the old binary.
+    let pr2 = SimOptions { multirate: false, threads: 1 };
+    let new = SimOptions::default();
+
+    // gemv: the re-read x edge fires once per n/16 kernel iterations; the
+    // PR 2 detector can at best skip fragments between x fires, while the
+    // multi-rate detector jumps whole hyperperiods in closed form.
+    let n = if smoke { 512 } else { 2048 };
+    let gemv = Spec::single(RoutineKind::Gemv, "g", n, DataSource::Pl);
+    bench_vs_pr2(&mut b, &mut rows, &format!("sim/gemv_multirate/n={n}"), &gemv, &new, &pr2);
+
+    // wide16 again, explicitly pinning thread counts: the win here is
+    // parallel simulation of the 16 independent components.
+    let n = if smoke { 1 << 13 } else { 1 << 18 };
+    let mut wide_par = Spec { platform: "vck5000".into(), ..Default::default() };
+    for i in 0..16 {
+        wide_par.routines.push(RoutineSpec::new(RoutineKind::Axpy, format!("k{i}"), n));
+    }
+    bench_vs_pr2(
+        &mut b,
+        &mut rows,
+        &format!("sim/wide16_parallel/n={n}"),
+        &wide_par,
+        &new,
+        &pr2,
+    );
 
     // pipeline stages separately: build+place+route without simulate
     let arch = aieblas::arch::ArchConfig::vck5000();

@@ -2,15 +2,83 @@
 //!
 //! Keyed on the spec's canonical JSON (routine set, sizes, non-functional
 //! parameters, connections, platform — see [`crate::spec::Spec::cache_key`]),
-//! so a repeated spec skips re-validation, re-codegen, re-placement and
-//! re-routing. LRU-evicting with a bounded capacity; hit/miss counters are
-//! surfaced in `RunReport::summary()` for serving observability.
+//! interned as a [`PlanKey`] (an `Arc<str>` plus its precomputed FNV-1a
+//! hash) so the warm serving path never clones or re-hashes the full
+//! canonical-JSON `String` per request. A repeated spec skips
+//! re-validation, re-codegen, re-placement and re-routing. LRU-evicting
+//! with a bounded capacity; hit/miss counters are surfaced in
+//! `RunReport::summary()` for serving observability.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use super::ExecutablePlan;
+use crate::spec::Spec;
+
+/// An interned plan-cache key: the spec's canonical JSON behind a shared
+/// `Arc<str>`, with its 64-bit FNV-1a hash computed exactly once.
+///
+/// The hash front-loads every comparison (the serving batcher probes the
+/// queue per request; the cache map hashes per lookup) and doubles as the
+/// persistent store's entry filename (`pipeline::store`), so one
+/// canonicalization + one hash per request covers batching, memory
+/// caching and disk lookup. Cloning is an `Arc` bump.
+#[derive(Debug, Clone)]
+pub struct PlanKey {
+    text: Arc<str>,
+    hash: u64,
+}
+
+impl PlanKey {
+    pub fn new(text: impl Into<Arc<str>>) -> PlanKey {
+        let text = text.into();
+        let hash = crate::util::fnv1a64(text.as_bytes());
+        PlanKey { text, hash }
+    }
+
+    /// The canonical key of a spec (one `cache_key()` render + one hash).
+    pub fn of(spec: &Spec) -> PlanKey {
+        PlanKey::new(spec.cache_key())
+    }
+
+    pub fn as_str(&self) -> &str {
+        &self.text
+    }
+
+    /// The precomputed FNV-1a hash (also the store entry filename stem).
+    pub fn hash64(&self) -> u64 {
+        self.hash
+    }
+}
+
+impl PartialEq for PlanKey {
+    fn eq(&self, other: &Self) -> bool {
+        // hash first: a mismatch (the common case in the batcher's queue
+        // scan) rejects without touching the string bytes.
+        self.hash == other.hash && self.text == other.text
+    }
+}
+
+impl Eq for PlanKey {}
+
+impl std::hash::Hash for PlanKey {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        state.write_u64(self.hash);
+    }
+}
+
+impl From<&str> for PlanKey {
+    fn from(s: &str) -> PlanKey {
+        PlanKey::new(s)
+    }
+}
+
+impl std::fmt::Display for PlanKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.text)
+    }
+}
 
 /// Snapshot of the cache's counters.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -50,9 +118,10 @@ impl CacheStats {
 }
 
 struct Inner {
-    map: HashMap<String, Arc<ExecutablePlan>>,
-    /// LRU order: front = least recently used.
-    order: VecDeque<String>,
+    map: HashMap<PlanKey, Arc<ExecutablePlan>>,
+    /// LRU order: front = least recently used (`PlanKey` clones are `Arc`
+    /// bumps, not string copies).
+    order: VecDeque<PlanKey>,
 }
 
 /// Bounded, thread-safe LRU cache of lowered plans.
@@ -88,14 +157,14 @@ impl PlanCache {
     /// lowering ran", recorded by the single-flight leader via
     /// [`PlanCache::record_miss`] — so `misses == distinct cold specs`
     /// holds no matter how many threads probe concurrently.
-    pub fn get(&self, key: &str) -> Option<Arc<ExecutablePlan>> {
+    pub fn get(&self, key: &PlanKey) -> Option<Arc<ExecutablePlan>> {
         let mut inner = self.inner.lock().expect("plan cache poisoned");
         let plan = inner.map.get(key).cloned()?;
         self.hits.fetch_add(1, Ordering::Relaxed);
         if let Some(pos) = inner.order.iter().position(|k| k == key) {
             inner.order.remove(pos);
         }
-        inner.order.push_back(key.to_string());
+        inner.order.push_back(key.clone());
         Some(plan)
     }
 
@@ -130,7 +199,7 @@ impl PlanCache {
 
     /// Insert a freshly lowered plan, evicting the least recently used
     /// entry when at capacity.
-    pub fn insert(&self, key: String, plan: Arc<ExecutablePlan>) {
+    pub fn insert(&self, key: PlanKey, plan: Arc<ExecutablePlan>) {
         let mut inner = self.inner.lock().expect("plan cache poisoned");
         if inner.map.contains_key(&key) {
             // a concurrent lowering won the race; keep the resident plan.
@@ -204,13 +273,30 @@ mod tests {
     }
 
     #[test]
+    fn plan_key_interning_and_equality() {
+        let a = PlanKey::from("spec-json");
+        let b = PlanKey::from("spec-json");
+        let c = PlanKey::from("other");
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a.hash64(), crate::util::fnv1a64(b"spec-json"));
+        // clone shares the interned text: an Arc bump, not a string copy.
+        let d = a.clone();
+        assert!(std::ptr::eq(a.as_str(), d.as_str()));
+        // spec keys are exactly the canonical JSON render.
+        let spec = Spec::single(RoutineKind::Axpy, "a", 64, DataSource::Pl);
+        assert_eq!(PlanKey::of(&spec).as_str(), spec.cache_key());
+        assert_eq!(PlanKey::of(&spec), PlanKey::of(&spec.clone()));
+    }
+
+    #[test]
     fn hit_and_miss_counting() {
         let cache = PlanCache::new(4);
-        assert!(cache.get("a").is_none());
+        assert!(cache.get(&"a".into()).is_none());
         assert_eq!(cache.stats().misses, 0, "absence alone is not a miss");
         cache.record_miss(); // the lowering leader ran the pipeline
         cache.insert("a".into(), plan_for(64));
-        assert!(cache.get("a").is_some());
+        assert!(cache.get(&"a".into()).is_some());
         let s = cache.stats();
         assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
         assert!((s.hit_rate() - 0.5).abs() < 1e-12);
@@ -222,19 +308,19 @@ mod tests {
         cache.insert("a".into(), plan_for(64));
         cache.insert("b".into(), plan_for(128));
         // touch "a" so "b" is now the LRU entry
-        assert!(cache.get("a").is_some());
+        assert!(cache.get(&"a".into()).is_some());
         cache.insert("c".into(), plan_for(256));
         assert_eq!(cache.len(), 2);
-        assert!(cache.get("b").is_none(), "LRU entry should be evicted");
-        assert!(cache.get("a").is_some());
-        assert!(cache.get("c").is_some());
+        assert!(cache.get(&"b".into()).is_none(), "LRU entry should be evicted");
+        assert!(cache.get(&"a".into()).is_some());
+        assert!(cache.get(&"c".into()).is_some());
     }
 
     #[test]
     fn clear_preserves_counters() {
         let cache = PlanCache::new(2);
         cache.insert("a".into(), plan_for(64));
-        cache.get("a");
+        cache.get(&"a".into());
         cache.clear();
         let s = cache.stats();
         assert_eq!(s.entries, 0);
@@ -247,7 +333,7 @@ mod tests {
         // drive every counter nonzero: hit, miss, eviction, coalesced,
         // disk hit/write/reject.
         cache.insert("a".into(), plan_for(64));
-        cache.get("a"); // hit
+        cache.get(&"a".into()); // hit
         cache.record_miss();
         cache.insert("b".into(), plan_for(128)); // evicts "a"
         cache.record_coalesced();
@@ -293,7 +379,7 @@ mod tests {
         let first = plan_for(64);
         cache.insert("a".into(), first.clone());
         cache.insert("a".into(), plan_for(64));
-        assert!(Arc::ptr_eq(&cache.get("a").unwrap(), &first));
+        assert!(Arc::ptr_eq(&cache.get(&"a".into()).unwrap(), &first));
         assert_eq!(cache.len(), 1);
     }
 }

@@ -23,7 +23,7 @@
 pub mod cache;
 pub mod store;
 
-pub use cache::{CacheStats, PlanCache};
+pub use cache::{CacheStats, PlanCache, PlanKey};
 pub use store::{LoadOutcome, PlanStore, StoreStats};
 
 use std::collections::HashMap;
@@ -171,7 +171,7 @@ impl LoweringSlot {
 /// followers even if lowering panics (so they never block forever).
 struct LeaderGuard<'p> {
     pipeline: &'p Pipeline,
-    key: String,
+    key: PlanKey,
     slot: Arc<LoweringSlot>,
 }
 
@@ -183,7 +183,7 @@ impl Drop for LeaderGuard<'_> {
             .expect("in-flight map poisoned")
             .remove(&self.key);
         // no-op when the leader already filled the slot with its result
-        self.slot.fill(Err(format!("lowering of {:?} panicked", self.key)));
+        self.slot.fill(Err(format!("lowering of {:?} panicked", self.key.as_str())));
     }
 }
 
@@ -201,7 +201,7 @@ pub struct Pipeline {
     default_arch: ArchConfig,
     cache: PlanCache,
     /// Cold lowerings currently running, keyed like the cache.
-    in_flight: Mutex<HashMap<String, Arc<LoweringSlot>>>,
+    in_flight: Mutex<HashMap<PlanKey, Arc<LoweringSlot>>>,
     /// Optional on-disk plan store: cold lowerings first try to warm from
     /// a previous process's persisted plans and write through on success.
     store: Option<PlanStore>,
@@ -248,18 +248,26 @@ impl Pipeline {
     /// key either hit the cache, become the one lowering leader, or wait
     /// for the leader and share its plan.
     pub fn lower(&self, spec: &Spec) -> Result<Arc<ExecutablePlan>> {
-        let key = spec.cache_key();
-        if let Some(hit) = self.cache.get(&key) {
+        self.lower_keyed(&PlanKey::of(spec), spec)
+    }
+
+    /// [`Pipeline::lower`] with the spec's [`PlanKey`] already computed —
+    /// the serving layer interns the key once at submit time and reuses it
+    /// through batching, caching and the disk store, so the warm path
+    /// renders and hashes the canonical JSON exactly once per request.
+    pub fn lower_keyed(&self, key: &PlanKey, spec: &Spec) -> Result<Arc<ExecutablePlan>> {
+        debug_assert_eq!(key.as_str(), spec.cache_key(), "key must belong to spec");
+        if let Some(hit) = self.cache.get(key) {
             return Ok(hit);
         }
         let (slot, leader) = {
             let mut in_flight = self.in_flight.lock().expect("in-flight map poisoned");
             // re-check under the map lock: a leader may have completed
             // (inserted into the cache and left the map) since the peek.
-            if let Some(hit) = self.cache.get(&key) {
+            if let Some(hit) = self.cache.get(key) {
                 return Ok(hit);
             }
-            match in_flight.get(&key) {
+            match in_flight.get(key) {
                 Some(slot) => (slot.clone(), false),
                 None => {
                     let slot = LoweringSlot::new();
@@ -285,7 +293,7 @@ impl Pipeline {
         // straight into the memory cache; anything unusable is rejected
         // and falls through to a clean re-lower.
         if let Some(store) = &self.store {
-            let loaded = match store.load(&key, &self.fingerprint) {
+            let loaded = match store.load(key, &self.fingerprint) {
                 LoadOutcome::Loaded(plan) => {
                     // the fingerprint covers the *default* arch; a named
                     // platform resolves independently of it, so also require
@@ -314,7 +322,7 @@ impl Pipeline {
             };
             if let Some(plan) = loaded {
                 self.cache.record_disk_hit();
-                self.cache.insert(key, Arc::clone(&plan));
+                self.cache.insert(key.clone(), Arc::clone(&plan));
                 guard.slot.fill(Ok(Arc::clone(&plan)));
                 return Ok(plan);
             }
@@ -326,14 +334,14 @@ impl Pipeline {
                 // write-through: persistence is an optimization, so an
                 // I/O failure is logged and the lowering still succeeds.
                 if let Some(store) = &self.store {
-                    match store.save(&key, &self.fingerprint, &plan) {
+                    match store.save(key, &self.fingerprint, &plan) {
                         Ok(()) => self.cache.record_disk_write(),
                         Err(e) => {
                             crate::log_warn!("plan store write-through failed: {e}")
                         }
                     }
                 }
-                self.cache.insert(key, plan.clone());
+                self.cache.insert(key.clone(), plan.clone());
                 guard.slot.fill(Ok(plan.clone()));
                 Ok(plan)
             }

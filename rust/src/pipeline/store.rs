@@ -23,7 +23,7 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use super::{ExecutablePlan, PlacedGraph, RoutinePlan};
+use super::{ExecutablePlan, PlacedGraph, PlanKey, RoutinePlan};
 use crate::arch::ArchConfig;
 use crate::blas::{PortType, RoutineKind};
 use crate::codegen::GeneratedProject;
@@ -32,6 +32,7 @@ use crate::graph::place::{Location, Placement};
 use crate::graph::route::{check_routing, RoutedEdge, Routing};
 use crate::graph::{EdgeKind, Graph, NodeKind};
 use crate::spec::Spec;
+use crate::util::fnv1a64;
 use crate::util::json::{obj, Json};
 use crate::{Error, Result};
 
@@ -41,17 +42,6 @@ pub const FORMAT_VERSION: u64 = 1;
 
 /// Filename suffix for store entries.
 const ENTRY_SUFFIX: &str = ".plan.json";
-
-/// FNV-1a 64-bit hash (dependency-free, stable across processes) — used
-/// for entry filenames and the architecture fingerprint.
-fn fnv1a64(bytes: &[u8]) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x0000_0100_0000_01b3);
-    }
-    h
-}
 
 /// Fingerprint of a pipeline configuration: a hash of the default
 /// architecture's canonical JSON. Two pipelines share plans on disk iff
@@ -104,24 +94,25 @@ impl PlanStore {
         &self.dir
     }
 
-    /// Entry path for a cache key (filename is the key's FNV-1a hash; the
-    /// full key is stored inside the entry and re-checked on load, so a
-    /// hash collision degrades to a rejection, never a wrong plan).
-    pub fn path_for(&self, key: &str) -> PathBuf {
-        self.dir.join(format!("{:016x}{ENTRY_SUFFIX}", fnv1a64(key.as_bytes())))
+    /// Entry path for a cache key (filename is the key's interned FNV-1a
+    /// hash — no re-hash here; the full key is stored inside the entry and
+    /// re-checked on load, so a hash collision degrades to a rejection,
+    /// never a wrong plan).
+    pub fn path_for(&self, key: &PlanKey) -> PathBuf {
+        self.dir.join(format!("{:016x}{ENTRY_SUFFIX}", key.hash64()))
     }
 
     /// Look up `key`, validating version, key and fingerprint, and fully
     /// deserializing + invariant-checking the plan. Never errors on bad
     /// entries: anything unusable is a [`LoadOutcome::Rejected`].
-    pub fn load(&self, key: &str, fingerprint: &str) -> LoadOutcome {
+    pub fn load(&self, key: &PlanKey, fingerprint: &str) -> LoadOutcome {
         let path = self.path_for(key);
         let text = match std::fs::read_to_string(&path) {
             Ok(t) => t,
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => return LoadOutcome::Missing,
             Err(e) => return LoadOutcome::Rejected(format!("unreadable entry: {e}")),
         };
-        match decode_entry(&text, key, fingerprint) {
+        match decode_entry(&text, key.as_str(), fingerprint) {
             Ok(plan) => LoadOutcome::Loaded(Box::new(plan)),
             Err(e) => LoadOutcome::Rejected(e.to_string()),
         }
@@ -130,11 +121,11 @@ impl PlanStore {
     /// Write-through one lowered plan. I/O errors surface to the caller
     /// (which logs and carries on — persistence is an optimization, never
     /// a correctness dependency).
-    pub fn save(&self, key: &str, fingerprint: &str, plan: &ExecutablePlan) -> Result<()> {
+    pub fn save(&self, key: &PlanKey, fingerprint: &str, plan: &ExecutablePlan) -> Result<()> {
         std::fs::create_dir_all(&self.dir)?;
         let entry = obj(vec![
             ("format_version", (FORMAT_VERSION as usize).into()),
-            ("cache_key", key.into()),
+            ("cache_key", key.as_str().into()),
             ("fingerprint", fingerprint.into()),
             ("plan", plan_to_json(plan)),
         ]);
@@ -143,7 +134,7 @@ impl PlanStore {
         // under the final name (rename is atomic on one filesystem).
         let tmp = self.dir.join(format!(
             ".{:016x}.{}.tmp",
-            fnv1a64(key.as_bytes()),
+            key.hash64(),
             std::process::id()
         ));
         let written = std::fs::write(&tmp, entry.to_pretty() + "\n")
@@ -708,9 +699,9 @@ mod tests {
         let spec = Spec::axpydot_dataflow(4096, 2.0);
         let plan = lowered(&spec);
         let fp = arch_fingerprint(&ArchConfig::vck5000());
-        store.save(&spec.cache_key(), &fp, &plan).unwrap();
+        store.save(&PlanKey::of(&spec), &fp, &plan).unwrap();
         assert_eq!(store.stats().entries, 1);
-        match store.load(&spec.cache_key(), &fp) {
+        match store.load(&PlanKey::of(&spec), &fp) {
             LoadOutcome::Loaded(back) => {
                 assert_eq!(back.plan.built.graph, plan.plan.built.graph)
             }
@@ -725,7 +716,7 @@ mod tests {
     fn missing_entry_is_missing_not_rejected() {
         let store = tmp_store("missing");
         let fp = arch_fingerprint(&ArchConfig::vck5000());
-        assert!(matches!(store.load("no-such-key", &fp), LoadOutcome::Missing));
+        assert!(matches!(store.load(&PlanKey::from("no-such-key"), &fp), LoadOutcome::Missing));
     }
 
     #[test]
@@ -734,9 +725,9 @@ mod tests {
         let spec = Spec::single(RoutineKind::Dot, "d", 1024, DataSource::Pl);
         let plan = lowered(&spec);
         let fp = arch_fingerprint(&ArchConfig::vck5000());
-        store.save(&spec.cache_key(), &fp, &plan).unwrap();
+        store.save(&PlanKey::of(&spec), &fp, &plan).unwrap();
         let other_fp = arch_fingerprint(&ArchConfig::ryzen_ai());
-        assert!(matches!(store.load(&spec.cache_key(), &other_fp), LoadOutcome::Rejected(_)));
+        assert!(matches!(store.load(&PlanKey::of(&spec), &other_fp), LoadOutcome::Rejected(_)));
         let _ = std::fs::remove_dir_all(store.dir());
     }
 

@@ -158,6 +158,13 @@ fn check_prepared(prepared: &Prepared, backend: &'static str) -> Result<()> {
 
 /// The simulated VCK5000: DES timing from `crate::sim`, numerics from the
 /// PJRT executor (reference fallback) when one is attached.
+///
+/// The DES itself scales two ways (DESIGN.md §7): multi-rate steady-state
+/// fast-forward advances periodic regions in closed form, and independent
+/// weakly-connected components (multi-routine plans, `split` shards) are
+/// simulated on parallel workers — so the once-per-batch DES run in
+/// [`SimBackend::execute_batch`] already uses the machine's cores without
+/// any wrapping. `AIEBLAS_SIM_THREADS` caps the component parallelism.
 pub struct SimBackend<'e> {
     executor: Option<&'e NumericExecutor>,
 }
@@ -656,8 +663,10 @@ impl Backend for ReferenceBackend {
 /// reference kernels, or CPU kernels below `blas::cpu`'s internal
 /// parallelization threshold. Wrapping it around work that already fans
 /// out per request (large-`n` `CpuBackend` routines) oversubscribes the
-/// cores, and wrapping `SimBackend` re-runs its once-per-batch DES once
-/// per shard — prefer the inner backend directly in both cases.
+/// cores, and wrapping `SimBackend` is doubly wasteful: it re-runs the
+/// once-per-batch DES once per shard, and that DES already parallelizes
+/// internally across dataflow components — prefer the inner backend
+/// directly in both cases.
 pub struct ShardedBackend<B> {
     inner: B,
     workers: usize,

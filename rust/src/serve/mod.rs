@@ -24,7 +24,7 @@ use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::pipeline::{CacheStats, Pipeline};
+use crate::pipeline::{CacheStats, Pipeline, PlanKey};
 use crate::runtime::{Backend, ExecInputs, ExecOutcome};
 use crate::spec::Spec;
 use crate::{Error, Result};
@@ -55,10 +55,13 @@ impl Default for ServeConfig {
     }
 }
 
-/// One queued request.
+/// One queued request. `key` is interned at submit time ([`PlanKey`]):
+/// the batcher's queue scans compare hashes, and the dispatcher hands the
+/// same key to the pipeline — the canonical JSON is rendered and hashed
+/// exactly once per request.
 struct Request {
     spec: Spec,
-    key: String,
+    key: PlanKey,
     inputs: ExecInputs,
     enqueued: Instant,
     tx: mpsc::Sender<Result<ExecOutcome>>,
@@ -229,7 +232,7 @@ impl RoutineServer {
         let now = Instant::now();
         self.shared.first_submit.get_or_init(|| now);
         let req =
-            Request { spec: spec.clone(), key: spec.cache_key(), inputs, enqueued: now, tx };
+            Request { spec: spec.clone(), key: PlanKey::of(spec), inputs, enqueued: now, tx };
         {
             let mut q = self.shared.queue.lock().expect("serve queue poisoned");
             while q.len() >= self.shared.cfg.queue_capacity {
@@ -386,7 +389,7 @@ fn dispatch_batch(shared: &ServerShared, mut batch: Vec<Request>) {
     let attempt = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
         shared
             .pipeline
-            .lower(&batch[0].spec)
+            .lower_keyed(&batch[0].key, &batch[0].spec)
             .and_then(|plan| shared.backend.prepare(plan))
             .map(|prepared| {
                 let inputs: Vec<ExecInputs> =

@@ -17,9 +17,10 @@
 //!
 //! Two engines implement these semantics (DESIGN.md §7):
 //! * [`engine`] (default) — event-driven: ready-queue scheduling, O(1)
-//!   ring-buffer edge state, incremental stride counters, and a
-//!   steady-state fast-forward that advances periodic regions in closed
-//!   form.
+//!   ring-buffer edge state, incremental stride counters, a *multi-rate*
+//!   steady-state fast-forward that advances periodic regions (uniform
+//!   and rate-mismatched alike) in closed form, and parallel simulation
+//!   of weakly-connected components over `util::threadpool`.
 //! * [`naive`] — the original worklist-of-rounds reference, kept under
 //!   `#[cfg(test)]` / the `sim-naive` feature so parity can be asserted.
 
@@ -46,6 +47,45 @@ pub use report::SimReport;
 /// Double-buffer depth of window edges (ADF ping-pong).
 pub(crate) const EDGE_CAPACITY: usize = 2;
 
+/// Largest per-node steady-state pattern period (iterations per component
+/// hyperperiod) the multi-rate fast-forward will track. Periods beyond
+/// this would need proportionally long detection windows and finish-time
+/// history, so such nodes simply run through the event loop (gemv's
+/// `n/16`-iteration row-block period fits up to n = 8192).
+pub(crate) const PERIOD_CAP: usize = 512;
+
+/// Engine configuration for [`simulate_with`] — the defaults are what
+/// [`simulate`] uses; benches pin them down to compare engine generations
+/// (`multirate: false, threads: 1` pins the PR 2 configuration:
+/// uniform-rate fast-forward only, one component at a time).
+#[derive(Debug, Clone, Copy)]
+pub struct SimOptions {
+    /// Allow fast-forward on rate-mismatched periodic regions (multi-rate
+    /// hyperperiod jumps). When false, only uniform-rate regions jump.
+    pub multirate: bool,
+    /// Worker threads for independent weakly-connected components.
+    /// `0` = auto: `AIEBLAS_SIM_THREADS` env var, else all cores.
+    pub threads: usize,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions { multirate: true, threads: 0 }
+    }
+}
+
+/// Resolve the effective component-parallelism width.
+fn resolve_threads(requested: usize) -> usize {
+    if requested > 0 {
+        return requested;
+    }
+    std::env::var("AIEBLAS_SIM_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .filter(|&n: &usize| n > 0)
+        .unwrap_or_else(crate::util::threadpool::num_threads)
+}
+
 /// Per-node simulation schedule derived from the graph.
 pub(crate) struct NodeSched {
     /// Total iterations (windows to process).
@@ -56,19 +96,231 @@ pub(crate) struct NodeSched {
     pub(crate) launch_s: f64,
 }
 
+/// Weakly-connected components of the dataflow graph, computed **once per
+/// plan** in [`prepare`] (PR 2 recomputed them per engine run). They are
+/// both the fast-forward regions and the parallel-simulation units: no
+/// edge crosses a component, so each one simulates independently.
+pub(crate) struct Components {
+    /// Per-node component id.
+    pub(crate) of_node: Vec<usize>,
+    /// Component count.
+    pub(crate) count: usize,
+    /// Global node ids per component, ascending.
+    pub(crate) nodes: Vec<Vec<usize>>,
+    /// Global edge ids per component, ascending.
+    pub(crate) edges: Vec<Vec<usize>>,
+    /// Global node id → dense index within its component's `nodes`.
+    pub(crate) node_local: Vec<usize>,
+    /// Global edge id → dense index within its component's `edges`.
+    pub(crate) edge_local: Vec<usize>,
+    /// Total iterations per component (engine termination counts).
+    pub(crate) total_iters: Vec<usize>,
+}
+
 /// Everything both engines derive from the graph before the event loop:
-/// per-node schedules, per-edge latencies and window counts, and the
-/// adjacency lists (the worklist loop touching `graph.edges` per iteration
-/// was the top profile entry — see EXPERIMENTS.md §Perf).
+/// per-node schedules, per-edge latencies and window counts, adjacency
+/// lists, and the component partition + steady-state periods that drive
+/// the event engine's multi-rate fast-forward and parallel execution.
 pub(crate) struct Prep {
     pub(crate) sched: Vec<NodeSched>,
     pub(crate) edge_latency: Vec<f64>,
     pub(crate) in_adj: Vec<Vec<usize>>,
     pub(crate) out_adj: Vec<Vec<usize>>,
     pub(crate) edge_windows: Vec<usize>,
+    /// Per-node steady-state pattern period in own iterations (iterations
+    /// per component hyperperiod). `0` = ineligible for fast-forward
+    /// (transient node, or period beyond [`PERIOD_CAP`]).
+    pub(crate) period: Vec<usize>,
+    /// Per-edge tokens fired per component hyperperiod. `0` = sporadic:
+    /// the edge fires too rarely (or too irregularly) to translate with a
+    /// jump, so jumps must keep it silent.
+    pub(crate) unit_tokens: Vec<usize>,
+    /// Whether multi-rate detection is enabled. Gates the engine's
+    /// slaved-node shortcut so the pinned PR 2 configuration
+    /// (`SimOptions { multirate: false, .. }`) keeps PR 2 *semantics* —
+    /// uniform-rate-only fast-forward, full stability window for every
+    /// node. (It is a reconstruction, not the PR 2 binary: margin
+    /// constants and jump rounding differ slightly.)
+    pub(crate) multirate: bool,
+    pub(crate) comp: Components,
+}
+
+pub(crate) fn gcd(mut a: usize, mut b: usize) -> usize {
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+/// Union-find weakly-connected components over the dataflow edges.
+fn components(graph: &Graph, sched: &[NodeSched]) -> Components {
+    fn find(parent: &mut [usize], mut x: usize) -> usize {
+        while parent[x] != x {
+            parent[x] = parent[parent[x]];
+            x = parent[x];
+        }
+        x
+    }
+    let n = graph.nodes.len();
+    let mut parent: Vec<usize> = (0..n).collect();
+    for e in &graph.edges {
+        let (a, b) = (find(&mut parent, e.src), find(&mut parent, e.dst));
+        if a != b {
+            parent[a] = b;
+        }
+    }
+    let mut label = vec![usize::MAX; n];
+    let mut count = 0;
+    let mut of_node = vec![0usize; n];
+    for id in 0..n {
+        let root = find(&mut parent, id);
+        if label[root] == usize::MAX {
+            label[root] = count;
+            count += 1;
+        }
+        of_node[id] = label[root];
+    }
+    let mut nodes: Vec<Vec<usize>> = vec![Vec::new(); count];
+    let mut edges: Vec<Vec<usize>> = vec![Vec::new(); count];
+    let mut node_local = vec![0usize; n];
+    let mut edge_local = vec![0usize; graph.edges.len()];
+    let mut total_iters = vec![0usize; count];
+    for id in 0..n {
+        let c = of_node[id];
+        node_local[id] = nodes[c].len();
+        nodes[c].push(id);
+        total_iters[c] += sched[id].iters;
+    }
+    for e in &graph.edges {
+        let c = of_node[e.src];
+        edge_local[e.id] = edges[c].len();
+        edges[c].push(e.id);
+    }
+    Components { of_node, count, nodes, edges, node_local, edge_local, total_iters }
+}
+
+/// Derive per-node steady-state periods and per-edge hyperperiod token
+/// counts (DESIGN.md §7, multi-rate fast-forward).
+///
+/// Within one component, steady-state throughput balance forces every
+/// node to complete the same *fraction* of its total iterations per unit
+/// time, so the joint firing pattern repeats after node `i` completes
+/// `iters_i / g` iterations, where `g` is the gcd of the participating
+/// nodes' iteration counts and the participating edges' window counts
+/// (then every edge fires exactly `w / g` tokens per hyperperiod, and
+/// every stride accumulator returns to its starting value). Excluded from
+/// `g` — and handled by the jump's silent-edge bounds instead:
+///
+/// * **transient nodes** — every incident edge carries ≤ [`EDGE_CAPACITY`]
+///   windows total, so the node drains completely during warm-up (scalar
+///   alpha/beta movers); their tiny `iters` would otherwise collapse `g`;
+/// * **sporadic edges** — edges whose firing pattern repeats only after
+///   more than [`PERIOD_CAP`] iterations of either endpoint (the scalar
+///   result stream consumed on the final iteration).
+fn derive_periods(
+    graph: &Graph,
+    sched: &[NodeSched],
+    edge_windows: &[usize],
+    comp: &Components,
+    multirate: bool,
+) -> (Vec<usize>, Vec<usize>) {
+    let n = graph.nodes.len();
+    let mut period = vec![0usize; n];
+    let mut unit_tokens = vec![0usize; graph.edges.len()];
+
+    // transient: the node can run to completion without any consumer
+    // progress (all edges fit the ping-pong buffers), so it never shapes
+    // the steady state.
+    let mut transient = vec![true; n];
+    for e in &graph.edges {
+        if edge_windows[e.id] > EDGE_CAPACITY {
+            transient[e.src] = false;
+            transient[e.dst] = false;
+        }
+    }
+
+    for c in 0..comp.count {
+        // classify this component's edges.
+        let mut sporadic: Vec<bool> = Vec::with_capacity(comp.edges[c].len());
+        for &eid in &comp.edges[c] {
+            let e = &graph.edges[eid];
+            let w = edge_windows[eid];
+            let s = if w == 0 {
+                true // degenerate zero-token edge: never fires
+            } else if multirate {
+                // An edge out of (or into) a transient node is sporadic by
+                // construction: once the transient side drains during
+                // warm-up, the edge only fires on the other side's final
+                // iterations (the scalar alpha stream) — and its tiny
+                // window count would otherwise collapse the component gcd.
+                let (si, di) = (sched[e.src].iters, sched[e.dst].iters);
+                transient[e.src]
+                    || transient[e.dst]
+                    || si / gcd(w, si) > PERIOD_CAP
+                    || di / gcd(w, di) > PERIOD_CAP
+            } else {
+                // PR 2 semantics: only uniform-rate edges translate.
+                w != sched[e.src].iters || w != sched[e.dst].iters
+            };
+            sporadic.push(s);
+        }
+
+        if !multirate {
+            // PR 2 engine: period-1 detection for every node, one token
+            // per iteration on uniform edges.
+            for &id in &comp.nodes[c] {
+                period[id] = 1;
+            }
+            for (i, &eid) in comp.edges[c].iter().enumerate() {
+                unit_tokens[eid] = usize::from(!sporadic[i]);
+            }
+            continue;
+        }
+
+        // the component hyperperiod divisor.
+        let mut g = 0usize;
+        for &id in &comp.nodes[c] {
+            if !transient[id] {
+                g = gcd(g, sched[id].iters);
+            }
+        }
+        for (i, &eid) in comp.edges[c].iter().enumerate() {
+            if !sporadic[i] {
+                g = gcd(g, edge_windows[eid]);
+            }
+        }
+        if g == 0 {
+            continue; // all-transient component: nothing periodic to track
+        }
+        for &id in &comp.nodes[c] {
+            if !transient[id] {
+                let p = sched[id].iters / g;
+                if p <= PERIOD_CAP {
+                    period[id] = p;
+                }
+            }
+        }
+        for (i, &eid) in comp.edges[c].iter().enumerate() {
+            if !sporadic[i] {
+                unit_tokens[eid] = edge_windows[eid] / g;
+            }
+        }
+    }
+    (period, unit_tokens)
 }
 
 pub(crate) fn prepare(graph: &Graph, routing: &Routing, arch: &ArchConfig) -> Prep {
+    prepare_opts(graph, routing, arch, true)
+}
+
+pub(crate) fn prepare_opts(
+    graph: &Graph,
+    routing: &Routing,
+    arch: &ArchConfig,
+    multirate: bool,
+) -> Prep {
     let n = graph.nodes.len();
     let active_movers = graph.num_pl_movers().max(1);
 
@@ -144,7 +396,21 @@ pub(crate) fn prepare(graph: &Graph, routing: &Routing, arch: &ArchConfig) -> Pr
     }
     let edge_windows: Vec<usize> = graph.edges.iter().map(|e| e.num_windows()).collect();
 
-    Prep { sched, edge_latency, in_adj, out_adj, edge_windows }
+    // --- components + steady-state periods (once per plan) ------------------
+    let comp = components(graph, &sched);
+    let (period, unit_tokens) = derive_periods(graph, &sched, &edge_windows, &comp, multirate);
+
+    Prep {
+        sched,
+        edge_latency,
+        in_adj,
+        out_adj,
+        edge_windows,
+        period,
+        unit_tokens,
+        multirate,
+        comp,
+    }
 }
 
 /// Simulate a placed+routed graph; returns the timing report.
@@ -154,7 +420,21 @@ pub fn simulate(
     routing: &Routing,
     arch: &ArchConfig,
 ) -> Result<SimReport> {
-    simulate_inner(graph, placement, routing, arch, None)
+    simulate_with(graph, placement, routing, arch, &SimOptions::default())
+}
+
+/// [`simulate`] with explicit engine options (fast-forward generation,
+/// component-parallelism width). Results are bit-identical across every
+/// `threads` setting — parallelism only changes which host thread runs
+/// which component (enforced by `sim::parity_tests`).
+pub fn simulate_with(
+    graph: &Graph,
+    placement: &Placement,
+    routing: &Routing,
+    arch: &ArchConfig,
+    opts: &SimOptions,
+) -> Result<SimReport> {
+    simulate_inner(graph, placement, routing, arch, None, opts)
 }
 
 /// Simulate and additionally record a full execution trace (Chrome-trace /
@@ -166,7 +446,8 @@ pub fn simulate_traced(
     arch: &ArchConfig,
 ) -> Result<(SimReport, trace::Trace)> {
     let mut t = trace::Trace::default();
-    let rep = simulate_inner(graph, placement, routing, arch, Some(&mut t))?;
+    let rep =
+        simulate_inner(graph, placement, routing, arch, Some(&mut t), &SimOptions::default())?;
     Ok((rep, t))
 }
 
@@ -176,9 +457,11 @@ fn simulate_inner(
     routing: &Routing,
     arch: &ArchConfig,
     tracer: Option<&mut trace::Trace>,
+    opts: &SimOptions,
 ) -> Result<SimReport> {
-    let prep = prepare(graph, routing, arch);
-    let (makespan, busy_total, _stats) = engine::run(graph, placement, &prep, tracer)?;
+    let prep = prepare_opts(graph, routing, arch, opts.multirate);
+    let threads = resolve_threads(opts.threads);
+    let (makespan, busy_total, _stats) = engine::run(graph, placement, &prep, tracer, threads)?;
     Ok(report::build(graph, placement, routing, arch, makespan, &busy_total, &prep.sched))
 }
 
@@ -295,5 +578,96 @@ mod tests {
         // 1-token edges over many iterations.
         let r = sim(&Spec::single(RoutineKind::Dot, "d", 1 << 14, DataSource::Pl));
         assert!(r.makespan_s > 0.0);
+    }
+
+    #[test]
+    fn components_label_disconnected_pipelines() {
+        use crate::blas::PortType;
+        use crate::graph::{EdgeKind, NodeKind};
+        let mut g = Graph::default();
+        let a = g.add_node("a", NodeKind::OnChipSource);
+        let b = g.add_node("b", NodeKind::OnChipSink);
+        let c = g.add_node("c", NodeKind::OnChipSource);
+        let d = g.add_node("d", NodeKind::OnChipSink);
+        g.add_edge(a, "out", b, "in", PortType::Vector, EdgeKind::Window, 64, 16);
+        g.add_edge(c, "out", d, "in", PortType::Vector, EdgeKind::Window, 64, 16);
+        let sched: Vec<NodeSched> = (0..4)
+            .map(|_| NodeSched { iters: 4, service_s: 1e-6, launch_s: 0.0 })
+            .collect();
+        let comp = components(&g, &sched);
+        assert_eq!(comp.count, 2);
+        assert_eq!(comp.of_node[a], comp.of_node[b]);
+        assert_eq!(comp.of_node[c], comp.of_node[d]);
+        assert_ne!(comp.of_node[a], comp.of_node[c]);
+        assert_eq!(comp.total_iters, vec![4 + 4, 4 + 4]);
+    }
+
+    #[test]
+    fn components_partition_covers_graph() {
+        let plan = crate::pipeline::lower_spec(&Spec::axpydot_dataflow(4096, 2.0)).unwrap();
+        let prep = prepare(plan.graph(), plan.routing(), plan.arch());
+        let comp = &prep.comp;
+        assert_eq!(comp.of_node.len(), plan.graph().nodes.len());
+        let nodes_listed: usize = comp.nodes.iter().map(Vec::len).sum();
+        let edges_listed: usize = comp.edges.iter().map(Vec::len).sum();
+        assert_eq!(nodes_listed, plan.graph().nodes.len());
+        assert_eq!(edges_listed, plan.graph().edges.len());
+        for (id, &c) in comp.of_node.iter().enumerate() {
+            assert_eq!(comp.nodes[c][comp.node_local[id]], id);
+        }
+        for e in &plan.graph().edges {
+            let c = comp.of_node[e.src];
+            assert_eq!(comp.of_node[e.dst], c, "edges never cross components");
+            assert_eq!(comp.edges[c][comp.edge_local[e.id]], e.id);
+        }
+        let total: usize = comp.total_iters.iter().sum();
+        assert_eq!(total, prep.sched.iter().map(|s| s.iters).sum::<usize>());
+    }
+
+    #[test]
+    fn gemv_kernel_gets_a_multirate_period() {
+        // gemv's kernel consumes the re-read x edge every n/16 iterations;
+        // the derived period must capture that (and stay within the cap).
+        let n = 1024;
+        let plan =
+            crate::pipeline::lower_spec(&Spec::single(RoutineKind::Gemv, "g", n, DataSource::Pl))
+                .unwrap();
+        let prep = prepare(plan.graph(), plan.routing(), plan.arch());
+        let kernel = plan.graph().node_by_name("g").unwrap();
+        let p = prep.period[kernel.id];
+        assert!(p > 1, "gemv kernel must be multi-rate periodic, got period {p}");
+        assert_eq!(prep.sched[kernel.id].iters % p, 0, "period divides iterations");
+        // every non-sporadic edge fires an integral token count per
+        // hyperperiod, consistent on both sides.
+        for e in &plan.graph().edges {
+            let t = prep.unit_tokens[e.id];
+            if t == 0 {
+                continue;
+            }
+            for side in [e.src, e.dst] {
+                let ps = prep.period[side];
+                assert!(ps > 0, "shiftable edge endpoints must be eligible");
+                assert_eq!(
+                    ps * prep.edge_windows[e.id] % prep.sched[side].iters,
+                    0,
+                    "accumulators must return to their value each hyperperiod"
+                );
+                assert_eq!(ps * prep.edge_windows[e.id] / prep.sched[side].iters, t);
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_pipeline_period_is_one() {
+        let plan = crate::pipeline::lower_spec(&Spec::single(
+            RoutineKind::Axpy,
+            "a",
+            1 << 16,
+            DataSource::Pl,
+        ))
+        .unwrap();
+        let prep = prepare(plan.graph(), plan.routing(), plan.arch());
+        let kernel = plan.graph().node_by_name("a").unwrap();
+        assert_eq!(prep.period[kernel.id], 1, "uniform regions keep period-1 detection");
     }
 }

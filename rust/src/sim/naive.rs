@@ -21,6 +21,13 @@ use crate::sim::{SimReport, EDGE_CAPACITY};
 use crate::{Error, Result};
 
 /// Simulate a placed+routed graph with the reference engine.
+///
+/// Shares [`super::prepare`] with the event engine so both derive node
+/// schedules, edge latencies and adjacency identically; the component
+/// partition and steady-state periods that `Prep` also carries are
+/// engine-side acceleration metadata the reference loop deliberately
+/// ignores — it remains the plain semantic baseline the parity suite
+/// compares against.
 pub fn simulate(
     graph: &Graph,
     placement: &Placement,

@@ -2,10 +2,14 @@
 //! must reproduce the reference [`super::naive`] engine — makespan within
 //! 1e-9 relative, identical per-kernel iteration counts, utilization
 //! within 1e-9 relative — across randomized specs spanning Pl/OnChip
-//! sources, splits, bursts and composed pipelines, plus deterministic
-//! cases chosen so the steady-state fast-forward provably engages.
+//! sources, splits, bursts and composed pipelines; across fast-forward
+//! generations (PR 2 uniform-only vs multi-rate); and across component
+//! thread counts, where reports must additionally be **bit-identical**
+//! (parallelism may only change which host thread runs which component).
+//! Deterministic cases are chosen so both the uniform and the multi-rate
+//! steady-state fast-forward provably engage.
 
-use super::{engine, naive, prepare};
+use super::{engine, naive, prepare, prepare_opts, SimOptions, SimReport};
 use crate::blas::RoutineKind;
 use crate::graph::place::{Location, Placement};
 use crate::graph::route::route;
@@ -23,8 +27,8 @@ fn rel_close(a: f64, b: f64, rtol: f64) -> bool {
 /// Random spec generator: 1–4 routines over both data sources, optional
 /// split/burst/window/alpha, with compatible neighbours sometimes chained
 /// into an on-chip pipeline. Deliberately narrower sizes than
-/// `tests/properties.rs`'s generator (every case here runs *two* engines)
-/// but wider non-functional coverage (splits).
+/// `tests/properties.rs`'s generator (every case here runs *several*
+/// engine configurations) but wider non-functional coverage (splits).
 fn spec_gen() -> Gen<Spec> {
     Gen::new(|rng: &mut Rng| {
         let kinds = [
@@ -91,38 +95,75 @@ fn spec_gen() -> Gen<Spec> {
     })
 }
 
-/// Compare the two engines on one spec; `Err` describes the divergence.
-fn check_parity(spec: &Spec) -> Result<(), String> {
-    let plan = lower_spec(spec).map_err(|e| format!("lower: {e}"))?;
-    let fast = super::simulate(plan.graph(), plan.placement(), plan.routing(), plan.arch())
-        .map_err(|e| format!("engine: {e}"))?;
-    let slow = naive::simulate(plan.graph(), plan.placement(), plan.routing(), plan.arch())
-        .map_err(|e| format!("naive: {e}"))?;
-    if !rel_close(fast.makespan_s, slow.makespan_s, 1e-9) {
-        return Err(format!(
-            "makespan diverged: engine {} vs naive {}",
-            fast.makespan_s, slow.makespan_s
-        ));
+/// Loosely compare two reports (different engines / fast-forward
+/// generations: equal up to floating-point accumulation order).
+fn assert_reports_close(label: &str, a: &SimReport, b: &SimReport) -> Result<(), String> {
+    if !rel_close(a.makespan_s, b.makespan_s, 1e-9) {
+        return Err(format!("{label}: makespan diverged: {} vs {}", a.makespan_s, b.makespan_s));
     }
-    if fast.kernels.len() != slow.kernels.len() {
-        return Err("kernel count diverged".into());
+    if a.kernels.len() != b.kernels.len() {
+        return Err(format!("{label}: kernel count diverged"));
     }
-    for (f, s) in fast.kernels.iter().zip(&slow.kernels) {
-        if f.iterations != s.iterations {
-            return Err(format!("{}: iterations {} vs {}", f.name, f.iterations, s.iterations));
-        }
-        if !rel_close(f.utilization, s.utilization, 1e-9) {
+    for (x, y) in a.kernels.iter().zip(&b.kernels) {
+        if x.iterations != y.iterations {
             return Err(format!(
-                "{}: utilization {} vs {}",
-                f.name, f.utilization, s.utilization
+                "{label}/{}: iterations {} vs {}",
+                x.name, x.iterations, y.iterations
+            ));
+        }
+        if !rel_close(x.utilization, y.utilization, 1e-9) {
+            return Err(format!(
+                "{label}/{}: utilization {} vs {}",
+                x.name, x.utilization, y.utilization
             ));
         }
     }
     Ok(())
 }
 
+/// Strictly compare two reports (same engine, different thread counts:
+/// every float must be bit-identical — parallelism is pure scheduling).
+fn assert_reports_bit_identical(label: &str, a: &SimReport, b: &SimReport) -> Result<(), String> {
+    if a.makespan_s.to_bits() != b.makespan_s.to_bits() {
+        return Err(format!(
+            "{label}: makespan bits diverged: {} vs {}",
+            a.makespan_s, b.makespan_s
+        ));
+    }
+    if a.kernels.len() != b.kernels.len() {
+        return Err(format!("{label}: kernel count diverged"));
+    }
+    for (x, y) in a.kernels.iter().zip(&b.kernels) {
+        if x.iterations != y.iterations
+            || x.busy_s.to_bits() != y.busy_s.to_bits()
+            || x.utilization.to_bits() != y.utilization.to_bits()
+        {
+            return Err(format!("{label}/{}: per-kernel stats diverged bitwise", x.name));
+        }
+    }
+    Ok(())
+}
+
+/// Compare naive vs the event engine across fast-forward generations and
+/// thread counts on one spec; `Err` describes the divergence.
+fn check_parity(spec: &Spec) -> Result<(), String> {
+    let plan = lower_spec(spec).map_err(|e| format!("lower: {e}"))?;
+    let (g, p, r, a) = (plan.graph(), plan.placement(), plan.routing(), plan.arch());
+    let sim = |opts: &SimOptions| {
+        super::simulate_with(g, p, r, a, opts).map_err(|e| format!("engine: {e}"))
+    };
+    let multirate_t1 = sim(&SimOptions { multirate: true, threads: 1 })?;
+    let multirate_t4 = sim(&SimOptions { multirate: true, threads: 4 })?;
+    let uniform_t1 = sim(&SimOptions { multirate: false, threads: 1 })?;
+    let slow = naive::simulate(g, p, r, a).map_err(|e| format!("naive: {e}"))?;
+    assert_reports_close("multirate-vs-naive", &multirate_t1, &slow)?;
+    assert_reports_close("uniform-vs-naive", &uniform_t1, &slow)?;
+    assert_reports_bit_identical("threads-1-vs-4", &multirate_t1, &multirate_t4)?;
+    Ok(())
+}
+
 #[test]
-fn randomized_specs_agree_across_engines() {
+fn randomized_specs_agree_across_engines_and_thread_counts() {
     forall(&spec_gen(), PropConfig { cases: 60, ..Default::default() }, |spec| {
         if crate::spec::validate(spec).is_err() {
             return Prop::Discard;
@@ -135,18 +176,18 @@ fn randomized_specs_agree_across_engines() {
 }
 
 /// Run the event engine directly and return its fast-forward stats.
-fn run_with_stats(spec: &Spec) -> (f64, engine::EngineStats) {
+fn run_with_stats(spec: &Spec, multirate: bool) -> (f64, engine::EngineStats) {
     let plan = lower_spec(spec).unwrap();
-    let prep = prepare(plan.graph(), plan.routing(), plan.arch());
+    let prep = prepare_opts(plan.graph(), plan.routing(), plan.arch(), multirate);
     let (makespan, _busy, stats) =
-        engine::run(plan.graph(), plan.placement(), &prep, None).unwrap();
+        engine::run(plan.graph(), plan.placement(), &prep, None, 1).unwrap();
     (makespan, stats)
 }
 
 #[test]
 fn fast_forward_engages_and_matches_on_large_axpy() {
     let spec = Spec::single(RoutineKind::Axpy, "a", 1 << 20, DataSource::Pl);
-    let (_, stats) = run_with_stats(&spec);
+    let (_, stats) = run_with_stats(&spec, true);
     assert!(stats.ff_jumps > 0, "fast-forward never engaged on the flagship case");
     assert!(stats.ff_iters > 0);
     check_parity(&spec).unwrap();
@@ -155,7 +196,7 @@ fn fast_forward_engages_and_matches_on_large_axpy() {
 #[test]
 fn fast_forward_matches_on_onchip_axpy() {
     let spec = Spec::single(RoutineKind::Axpy, "a", 1 << 20, DataSource::OnChip);
-    let (_, stats) = run_with_stats(&spec);
+    let (_, stats) = run_with_stats(&spec, true);
     assert!(stats.ff_iters > 0);
     check_parity(&spec).unwrap();
 }
@@ -164,7 +205,7 @@ fn fast_forward_matches_on_onchip_axpy() {
 fn fast_forward_matches_on_deep_chain() {
     let spec = Spec::chain(RoutineKind::Copy, 8, 1 << 18);
     crate::spec::validate(&spec).unwrap();
-    let (_, stats) = run_with_stats(&spec);
+    let (_, stats) = run_with_stats(&spec, true);
     assert!(stats.ff_iters > 0, "fast-forward never engaged on the 8-stage chain");
     check_parity(&spec).unwrap();
 }
@@ -172,6 +213,89 @@ fn fast_forward_matches_on_deep_chain() {
 #[test]
 fn fast_forward_matches_on_composed_axpydot() {
     check_parity(&Spec::axpydot_dataflow(1 << 18, 2.0)).unwrap();
+}
+
+/// The PR 5 headline property: gemv's re-read `x` edge makes the kernel's
+/// dependency pattern repeat only every `n/16` iterations. The uniform
+/// (PR 2) detector can at best skip fragments *between* `x` fires; the
+/// multi-rate detector must engage across whole hyperperiods — and stay
+/// parity-exact while doing so, in both generations.
+#[test]
+fn multirate_fast_forward_engages_on_gemv() {
+    for n in [512usize, 1024] {
+        let spec = Spec::single(RoutineKind::Gemv, "g", n, DataSource::Pl);
+        let (_, multirate) = run_with_stats(&spec, true);
+        assert!(
+            multirate.ff_jumps > 0 && multirate.ff_iters > 0,
+            "n={n}: multi-rate fast-forward never engaged on gemv ({multirate:?})"
+        );
+        check_parity(&spec).unwrap();
+    }
+}
+
+#[test]
+fn multirate_fast_forward_matches_on_onchip_gemv() {
+    let spec = Spec::single(RoutineKind::Gemv, "g", 512, DataSource::OnChip);
+    let (_, stats) = run_with_stats(&spec, true);
+    assert!(stats.ff_iters > 0, "multi-rate fast-forward never engaged on on-chip gemv");
+    check_parity(&spec).unwrap();
+}
+
+/// Property over the multi-rate flagship shapes: fast-forward must engage
+/// (`ff_iters > 0`) AND makespan/utilization must match the reference
+/// engine — a silently disengaged or silently wrong jump both fail.
+#[test]
+fn multirate_cases_engage_and_hold_parity() {
+    let cases: Vec<(&str, Spec)> = vec![
+        ("gemv/pl", Spec::single(RoutineKind::Gemv, "g", 1024, DataSource::Pl)),
+        ("gemv/onchip", Spec::single(RoutineKind::Gemv, "g", 1024, DataSource::OnChip)),
+        ("axpydot/composed", Spec::axpydot_dataflow(1 << 18, 2.0)),
+        ("axpydot/composite", Spec::single(RoutineKind::Axpydot, "ad", 1 << 18, DataSource::Pl)),
+    ];
+    for (label, spec) in cases {
+        crate::spec::validate(&spec).unwrap();
+        let (_, stats) = run_with_stats(&spec, true);
+        assert!(stats.ff_iters > 0, "{label}: fast-forward never engaged");
+        check_parity(&spec).unwrap_or_else(|e| panic!("{label}: {e}"));
+    }
+}
+
+/// Parallel component simulation is pure scheduling: a wide multi-routine
+/// plan must produce bit-identical reports at every thread count, and the
+/// traced variant must record the identical span set.
+#[test]
+fn parallel_components_are_bit_deterministic() {
+    // 8 independent routines, sized so the engine's parallel fan-out gate
+    // (PARALLEL_MIN_ITERS) is comfortably exceeded and component
+    // parallelism genuinely engages.
+    let mut spec = Spec { platform: "vck5000".into(), ..Default::default() };
+    for i in 0..8 {
+        spec.routines.push(RoutineSpec::new(RoutineKind::Axpy, format!("k{i}"), 1 << 19));
+    }
+    let plan = lower_spec(&spec).unwrap();
+    let (g, p, r, a) = (plan.graph(), plan.placement(), plan.routing(), plan.arch());
+    let serial =
+        super::simulate_with(g, p, r, a, &SimOptions { multirate: true, threads: 1 }).unwrap();
+    for threads in [2usize, 4, 8, 16] {
+        let par =
+            super::simulate_with(g, p, r, a, &SimOptions { multirate: true, threads }).unwrap();
+        assert_reports_bit_identical(&format!("threads={threads}"), &serial, &par).unwrap();
+    }
+    // traced runs fan out too; span sets must be identical (order is
+    // normalized by the engine's deterministic merge).
+    let prep = prepare(g, r, a);
+    let mut t1 = super::trace::Trace::default();
+    let (_, _, stats) = engine::run(g, p, &prep, Some(&mut t1), 1).unwrap();
+    assert_eq!(stats.components, 8, "one component per independent routine");
+    let mut t8 = super::trace::Trace::default();
+    engine::run(g, p, &prep, Some(&mut t8), 8).unwrap();
+    assert_eq!(t1.spans.len(), t8.spans.len());
+    for (x, y) in t1.spans.iter().zip(&t8.spans) {
+        assert_eq!(x.node, y.node);
+        assert_eq!(x.iteration, y.iteration);
+        assert_eq!(x.start_s.to_bits(), y.start_s.to_bits());
+        assert_eq!(x.end_s.to_bits(), y.end_s.to_bits());
+    }
 }
 
 #[test]

@@ -5,30 +5,58 @@
 //! text Gantt chart — the observability a user needs to see *why* the
 //! non-dataflow axpydot is 2× slower (the dot stage idles until the DDR
 //! round trip completes).
+//!
+//! A recorded [`Span`] is four words: node id, iteration, start, end.
+//! Node names and lane labels live in a per-trace label table set once by
+//! the engine ([`Trace::set_labels`]) and resolved only at render time —
+//! recording a span allocates nothing (the engine's traced hot path used
+//! to clone two `String`s per iteration).
 
 use crate::util::json::{obj, Json};
 
-/// One recorded service interval.
-#[derive(Debug, Clone, PartialEq)]
+/// One recorded service interval. Display strings are *not* stored here;
+/// resolve them through [`Trace::name_of`] / [`Trace::lane_of`].
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Span {
     pub node: usize,
-    pub name: String,
-    /// Row label (tile/shim location).
-    pub lane: String,
     pub iteration: usize,
     pub start_s: f64,
     pub end_s: f64,
 }
 
-/// A full execution trace.
+/// A full execution trace: the spans plus the node-indexed label table
+/// (`(name, lane)` per node) they are rendered against.
 #[derive(Debug, Clone, Default)]
 pub struct Trace {
     pub spans: Vec<Span>,
+    labels: Vec<(String, String)>,
 }
 
 impl Trace {
     pub fn record(&mut self, span: Span) {
         self.spans.push(span);
+    }
+
+    /// Install the node-indexed `(name, lane)` label table (computed once
+    /// per simulation, not per span).
+    pub fn set_labels(&mut self, labels: Vec<(String, String)>) {
+        self.labels = labels;
+    }
+
+    /// Kernel name for a node id (`node<N>` when no label was installed).
+    pub fn name_of(&self, node: usize) -> String {
+        match self.labels.get(node) {
+            Some((name, _)) => name.clone(),
+            None => format!("node{node}"),
+        }
+    }
+
+    /// Row label (tile/shim location) for a node id.
+    pub fn lane_of(&self, node: usize) -> String {
+        match self.labels.get(node) {
+            Some((_, lane)) => lane.clone(),
+            None => format!("node{node}"),
+        }
     }
 
     pub fn is_empty(&self) -> bool {
@@ -40,25 +68,58 @@ impl Trace {
         self.spans.iter().map(|s| s.end_s).fold(0.0, f64::max)
     }
 
+    /// Per-node labels resolved once per render (the hot per-span loops
+    /// below must not allocate label strings per span): `(names, lanes,
+    /// used)`, indexed by node id, where `used[i]` marks nodes that appear
+    /// in at least one span (only those get lanes/rows).
+    fn label_tables(&self) -> (Vec<String>, Vec<String>, Vec<bool>) {
+        let n = self.spans.iter().map(|s| s.node + 1).max().unwrap_or(0);
+        let mut used = vec![false; n];
+        for s in &self.spans {
+            used[s.node] = true;
+        }
+        (
+            (0..n).map(|i| self.name_of(i)).collect(),
+            (0..n).map(|i| self.lane_of(i)).collect(),
+            used,
+        )
+    }
+
+    /// The sorted, deduplicated lane list of the nodes actually traced.
+    fn used_lanes<'t>(node_lanes: &'t [String], used: &[bool]) -> Vec<&'t str> {
+        let mut lanes: Vec<&str> = node_lanes
+            .iter()
+            .zip(used)
+            .filter(|(_, &u)| u)
+            .map(|(l, _)| l.as_str())
+            .collect();
+        lanes.sort_unstable();
+        lanes.dedup();
+        lanes
+    }
+
     /// Chrome-tracing "trace event" JSON (µs timestamps, `X` complete
     /// events, one tid per node lane).
     pub fn to_chrome_json(&self) -> String {
-        let mut lanes: Vec<&str> = self.spans.iter().map(|s| s.lane.as_str()).collect();
-        lanes.sort_unstable();
-        lanes.dedup();
-        let tid_of = |lane: &str| lanes.iter().position(|&l| l == lane).unwrap();
+        let (names, node_lanes, used) = self.label_tables();
+        let lanes = Self::used_lanes(&node_lanes, &used);
+        // node → tid, resolved once per node instead of once per span.
+        let tid_of: Vec<usize> = node_lanes
+            .iter()
+            .map(|lane| lanes.iter().position(|l| l == lane).unwrap_or(0))
+            .collect();
         let events: Vec<Json> = self
             .spans
             .iter()
             .map(|s| {
                 obj(vec![
-                    ("name", format!("{}#{}", s.name, s.iteration).into()),
+                    ("name", format!("{}#{}", names[s.node], s.iteration).into()),
                     ("cat", "sim".into()),
                     ("ph", "X".into()),
                     ("ts", (s.start_s * 1e6).into()),
                     ("dur", ((s.end_s - s.start_s) * 1e6).into()),
                     ("pid", 1usize.into()),
-                    ("tid", tid_of(&s.lane).into()),
+                    ("tid", tid_of[s.node].into()),
                 ])
             })
             .collect();
@@ -87,14 +148,13 @@ impl Trace {
         if total <= 0.0 || self.spans.is_empty() {
             return String::from("(empty trace)\n");
         }
-        let mut lanes: Vec<&str> = self.spans.iter().map(|s| s.lane.as_str()).collect();
-        lanes.sort_unstable();
-        lanes.dedup();
+        let (_, node_lanes, used) = self.label_tables();
+        let lanes = Self::used_lanes(&node_lanes, &used);
         let name_w = lanes.iter().map(|l| l.len()).max().unwrap_or(4).max(4);
         let mut out = String::new();
         for lane in &lanes {
             let mut cells = vec![' '; width];
-            for s in self.spans.iter().filter(|s| s.lane == *lane) {
+            for s in self.spans.iter().filter(|s| node_lanes[s.node] == *lane) {
                 let a = ((s.start_s / total) * width as f64) as usize;
                 let b = (((s.end_s / total) * width as f64).ceil() as usize).min(width);
                 for c in cells.iter_mut().take(b).skip(a.min(width.saturating_sub(1))) {
@@ -122,28 +182,24 @@ mod tests {
 
     fn sample() -> Trace {
         let mut t = Trace::default();
-        t.record(Span {
-            node: 0,
-            name: "axpy".into(),
-            lane: "aie(0,0)".into(),
-            iteration: 0,
-            start_s: 0.0,
-            end_s: 1e-6,
-        });
-        t.record(Span {
-            node: 1,
-            name: "dot".into(),
-            lane: "aie(1,0)".into(),
-            iteration: 0,
-            start_s: 1e-6,
-            end_s: 2e-6,
-        });
+        t.set_labels(vec![
+            ("axpy".into(), "aie(0,0)".into()),
+            ("dot".into(), "aie(1,0)".into()),
+        ]);
+        t.record(Span { node: 0, iteration: 0, start_s: 0.0, end_s: 1e-6 });
+        t.record(Span { node: 1, iteration: 0, start_s: 1e-6, end_s: 2e-6 });
         t
     }
 
     #[test]
     fn makespan_is_last_end() {
         assert_eq!(sample().makespan_s(), 2e-6);
+    }
+
+    #[test]
+    fn spans_are_slim() {
+        // the satellite's point: recording a span must not carry Strings.
+        assert!(std::mem::size_of::<Span>() <= 4 * 8);
     }
 
     #[test]
@@ -156,6 +212,7 @@ mod tests {
         let span = &events[2];
         assert_eq!(span.get("ph").unwrap().as_str(), Some("X"));
         assert_eq!(span.get("dur").unwrap().as_f64(), Some(1.0)); // 1 µs
+        assert_eq!(span.get("name").unwrap().as_str(), Some("axpy#0"));
     }
 
     #[test]
@@ -164,6 +221,15 @@ mod tests {
         assert_eq!(g.lines().count(), 3); // 2 lanes + axis
         assert!(g.contains("aie(0,0)"));
         assert!(g.contains('#'));
+    }
+
+    #[test]
+    fn unlabelled_nodes_render_with_fallback() {
+        let mut t = Trace::default();
+        t.record(Span { node: 7, iteration: 3, start_s: 0.0, end_s: 1e-6 });
+        assert_eq!(t.name_of(7), "node7");
+        assert!(t.to_gantt(10).contains("node7"));
+        assert!(Json::parse(&t.to_chrome_json()).is_ok());
     }
 
     #[test]

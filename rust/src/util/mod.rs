@@ -12,3 +12,26 @@ pub mod proptest;
 pub mod rng;
 pub mod table;
 pub mod threadpool;
+
+/// FNV-1a 64-bit hash (dependency-free, stable across processes) — shared
+/// by plan-key interning (`pipeline::cache::PlanKey`), the persistent
+/// store's entry filenames and the architecture fingerprint.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod fnv_tests {
+    #[test]
+    fn fnv1a64_reference_vectors() {
+        // published FNV-1a test vectors
+        assert_eq!(super::fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(super::fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_ne!(super::fnv1a64(b"ab"), super::fnv1a64(b"ba"));
+    }
+}

@@ -70,6 +70,63 @@ where
     });
 }
 
+/// Parallel indexed map: `f(i)` for every `i in 0..len`, fanned over up to
+/// `nchunks` scoped workers, results returned **in index order** (so a
+/// caller merging them is deterministic regardless of scheduling). Thin
+/// equal-weight wrapper over [`parallel_map_weighted`] (one shared
+/// implementation — the slot/panic semantics cannot drift); for items of
+/// very uneven cost pass real weights instead, as the simulator does for
+/// its dataflow components.
+pub fn parallel_map<T, F>(len: usize, nchunks: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    parallel_map_weighted(len, nchunks, &vec![1; len], f)
+}
+
+/// [`parallel_map`] with per-item weights: items are distributed over up
+/// to `nchunks` workers by longest-processing-time-first greedy binning
+/// (heaviest item into the currently lightest bin), so one dominant item
+/// — e.g. a simulation component holding most of a graph's iterations —
+/// does not serialize behind same-chunk neighbours the way contiguous
+/// index chunking would. Results are still returned **in index order**;
+/// the binning only decides which worker computes what.
+pub fn parallel_map_weighted<T, F>(len: usize, nchunks: usize, weights: &[usize], f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    assert_eq!(weights.len(), len, "one weight per item");
+    if len == 0 {
+        return Vec::new();
+    }
+    let nchunks = nchunks.clamp(1, len);
+    if nchunks == 1 {
+        return (0..len).map(f).collect();
+    }
+    let mut order: Vec<usize> = (0..len).collect();
+    order.sort_by(|&a, &b| weights[b].cmp(&weights[a]).then(a.cmp(&b)));
+    let mut bins: Vec<Vec<usize>> = vec![Vec::new(); nchunks];
+    let mut load = vec![0u64; nchunks];
+    for &i in &order {
+        let lightest = (0..nchunks).min_by_key(|&b| load[b]).expect("nchunks >= 1");
+        bins[lightest].push(i);
+        load[lightest] += weights[i].max(1) as u64;
+    }
+    let slots: Vec<std::sync::Mutex<Option<T>>> =
+        (0..len).map(|_| std::sync::Mutex::new(None)).collect();
+    parallel_chunks_with(nchunks, nchunks, |b, _, _| {
+        for &i in &bins[b] {
+            *slots[i].lock().expect("map slot poisoned") = Some(f(i));
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().expect("map slot poisoned").expect("worker panicked"))
+        .collect()
+}
+
 /// Parallel map-reduce over contiguous chunks: each chunk computes a partial
 /// with `map(start, end)`, partials are combined left-to-right with
 /// `reduce`. Deterministic combination order (important for reproducible
@@ -192,6 +249,27 @@ mod tests {
             seen_ptr.lock().unwrap().push((i, s, e));
         });
         assert_eq!(seen, vec![(0, 0, 8)]);
+    }
+
+    #[test]
+    fn map_returns_results_in_index_order() {
+        for chunks in [1, 3, 8] {
+            let out = parallel_map(17, chunks, |i| i * i);
+            assert_eq!(out, (0..17).map(|i| i * i).collect::<Vec<_>>(), "chunks={chunks}");
+        }
+        assert!(parallel_map(0, 4, |i| i).is_empty());
+    }
+
+    #[test]
+    fn weighted_map_returns_results_in_index_order() {
+        // one dominant item plus many light ones — the exact shape LPT
+        // binning exists for; results must stay index-ordered regardless.
+        let weights: Vec<usize> = (0..17).map(|i| if i == 5 { 10_000 } else { i }).collect();
+        for chunks in [1, 2, 4, 17] {
+            let out = parallel_map_weighted(17, chunks, &weights, |i| i * i);
+            assert_eq!(out, (0..17).map(|i| i * i).collect::<Vec<_>>(), "chunks={chunks}");
+        }
+        assert!(parallel_map_weighted(0, 4, &[], |i| i).is_empty());
     }
 
     #[test]

@@ -325,7 +325,7 @@ fn traced_simulation_matches_untraced_and_exports() {
     let spans_for_axpy = trace
         .spans
         .iter()
-        .filter(|s| s.name == "axpy_stage")
+        .filter(|s| trace.name_of(s.node) == "axpy_stage")
         .count();
     assert_eq!(spans_for_axpy, rep.kernels[0].iterations);
     // exports are well-formed

@@ -1,0 +1,130 @@
+#!/usr/bin/env python3
+"""Compare two directories of BENCH_*.json perf artifacts.
+
+Starts the "diffing the series across runs" ROADMAP item: CI downloads the
+previous successful run's bench-json artifact and fails the build when any
+case's median regresses by more than --max-regression (default 20%).
+
+Dependency-free (stdlib only). Matching rules:
+
+* files are matched by name (BENCH_sim_engine.json vs BENCH_sim_engine.json);
+* a file pair is skipped when the runs are not comparable (different
+  `smoke` flags, or a side is unreadable);
+* cases are matched by their "case" field; within a matched case, every
+  numeric field named `median_s` or ending in `_median_s` is compared —
+  except informational baseline fields (`pr2_*`, `naive_*`), which time
+  deliberately old engine configurations and are not perf targets;
+* baselines below --min-seconds are ignored (CI passes 1e-3: timings
+  under a millisecond on shared runners are noise, not signal);
+* a case/field present on only one side is reported but never fails the
+  diff (benches grow new cases as the engine grows).
+
+Exit status: 0 = OK (or nothing comparable), 1 = at least one regression.
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"  note: unreadable {path}: {e}")
+        return None
+
+
+# Fields timing pinned-old engine configurations: informational context
+# for the speedup columns, never gated.
+BASELINE_FIELD_PREFIXES = ("pr2_", "naive_")
+
+
+def median_fields(case):
+    for key, value in case.items():
+        if key.startswith(BASELINE_FIELD_PREFIXES):
+            continue
+        if key == "median_s" or key.endswith("_median_s"):
+            if isinstance(value, (int, float)):
+                yield key, float(value)
+
+
+def diff_file(name, base_doc, cur_doc, args):
+    if base_doc.get("smoke") != cur_doc.get("smoke"):
+        print(f"  {name}: smoke flags differ (base {base_doc.get('smoke')} vs "
+              f"current {cur_doc.get('smoke')}); not comparable, skipping")
+        return []
+    base_cases = {c.get("case"): c for c in base_doc.get("cases", []) if c.get("case")}
+    regressions = []
+    for cur in cur_doc.get("cases", []):
+        label = cur.get("case")
+        if not label:
+            continue
+        base = base_cases.get(label)
+        if base is None:
+            print(f"  {name}/{label}: new case (no baseline)")
+            continue
+        for field, cur_v in median_fields(cur):
+            base_v = base.get(field)
+            if not isinstance(base_v, (int, float)):
+                print(f"  {name}/{label}.{field}: no baseline field")
+                continue
+            base_v = float(base_v)
+            if base_v < args.min_seconds:
+                continue  # below timing resolution; ratios are noise
+            ratio = cur_v / base_v - 1.0
+            marker = "REGRESSION" if ratio > args.max_regression else "ok"
+            print(f"  {name}/{label}.{field}: base {base_v:.6g}s -> "
+                  f"current {cur_v:.6g}s ({ratio:+.1%}) {marker}")
+            if ratio > args.max_regression:
+                regressions.append((name, label, field, base_v, cur_v, ratio))
+    return regressions
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", type=Path, help="directory with the previous run's BENCH_*.json")
+    ap.add_argument("current", type=Path, help="directory with this run's BENCH_*.json")
+    ap.add_argument("--max-regression", type=float, default=0.20,
+                    help="fail when median grows by more than this fraction (default 0.20)")
+    ap.add_argument("--min-seconds", type=float, default=1e-6,
+                    help="ignore baselines below this many seconds (default 1e-6)")
+    args = ap.parse_args()
+
+    current_files = sorted(args.current.glob("BENCH_*.json"))
+    if not current_files:
+        print(f"no BENCH_*.json under {args.current}; nothing to diff")
+        return 0
+
+    regressions = []
+    compared = 0
+    for cur_path in current_files:
+        base_path = args.baseline / cur_path.name
+        if not base_path.exists():
+            print(f"  {cur_path.name}: no baseline artifact, skipping")
+            continue
+        base_doc, cur_doc = load(base_path), load(cur_path)
+        if base_doc is None or cur_doc is None:
+            continue
+        print(f"{cur_path.name}:")
+        regressions += diff_file(cur_path.name, base_doc, cur_doc, args)
+        compared += 1
+
+    if compared == 0:
+        print("no comparable bench files; treating as OK")
+        return 0
+    if regressions:
+        print(f"\n{len(regressions)} median regression(s) beyond "
+              f"{args.max_regression:.0%}:")
+        for name, label, field, base_v, cur_v, ratio in regressions:
+            print(f"  {name}/{label}.{field}: {base_v:.6g}s -> {cur_v:.6g}s ({ratio:+.1%})")
+        return 1
+    print(f"\nbench-diff OK: {compared} file(s), no median regression beyond "
+          f"{args.max_regression:.0%}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
