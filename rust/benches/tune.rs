@@ -1,0 +1,127 @@
+//! Placement-autotuner bench (DESIGN.md §11): untuned vs analytic-tuned vs
+//! full-tuned simulated makespan, plus the search cost of each tier, over
+//! naive-PL workloads where the tuner's burst variant is the headline win.
+//!
+//! The makespan columns double as the ISSUE 6 acceptance gate (asserted
+//! below, in smoke mode too — they are simulated device times, not host
+//! wallclock): the tuned makespan never exceeds the untuned one on any
+//! case, at least one case improves by ≥10%, and the analytic model's
+//! prediction lands within 5% of the DES on a uniform-rate pipeline.
+//!
+//! Emits `BENCH_tune.json` (working directory, or under
+//! `AIEBLAS_BENCH_JSON_DIR`) to extend the tracked perf series.
+//!
+//! Smoke mode (CI): `AIEBLAS_BENCH_SMOKE=1` shrinks sizes so the run is a
+//! pass/fail completion check, no host-timing assertions.
+//!
+//! Run: `cargo bench --bench tune`
+
+use aieblas::arch::ArchConfig;
+use aieblas::blas::RoutineKind;
+use aieblas::pipeline::lower_spec;
+use aieblas::sim::{analytic, simulate_plan};
+use aieblas::spec::{DataSource, Spec};
+use aieblas::tune::{tune_spec, TuneConfig, TuneMode};
+use aieblas::util::bench::Bench;
+use aieblas::util::json::{obj, Json};
+
+fn main() {
+    aieblas::init();
+    let smoke = std::env::var("AIEBLAS_BENCH_SMOKE").is_ok();
+    let mut b = Bench::new("tune");
+    let mut json_rows: Vec<Json> = Vec::new();
+
+    let arch = ArchConfig::vck5000();
+    let vec_n = if smoke { 1 << 14 } else { 1 << 20 };
+    let cases = [
+        ("axpy".to_string(), Spec::single(RoutineKind::Axpy, "a", vec_n, DataSource::Pl)),
+        ("axpydot_df".to_string(), Spec::axpydot_dataflow(vec_n, 2.0)),
+        ("scal_chain".to_string(), Spec::chain(RoutineKind::Scal, 3, vec_n / 4)),
+    ];
+    let cfg = |mode: TuneMode| TuneConfig { mode, max_candidates: 8, shortlist: 3 };
+
+    let mut best_speedup: f64 = 0.0;
+    for (label, spec) in &cases {
+        let untuned_makespan = simulate_plan(&lower_spec(spec).unwrap()).unwrap().makespan_s;
+
+        // search cost per tier (host wallclock), winning plan kept for the
+        // simulated-makespan columns.
+        let analytic_search = b.bench(&format!("search/analytic/{label}"), || {
+            tune_spec(spec, &arch, &cfg(TuneMode::Analytic)).unwrap().report.candidates.len()
+        });
+        let analytic_plan = tune_spec(spec, &arch, &cfg(TuneMode::Analytic)).unwrap().plan;
+        let analytic_makespan = simulate_plan(&analytic_plan).unwrap().makespan_s;
+
+        let full_search = b.bench(&format!("search/full/{label}"), || {
+            tune_spec(spec, &arch, &cfg(TuneMode::Full)).unwrap().report.candidates.len()
+        });
+        let full_plan = tune_spec(spec, &arch, &cfg(TuneMode::Full)).unwrap().plan;
+        let full_makespan = simulate_plan(&full_plan).unwrap().makespan_s;
+
+        // acceptance: tuning never loses, on any case, at any size.
+        assert!(
+            full_makespan <= untuned_makespan,
+            "{label}: full-tuned {full_makespan} > untuned {untuned_makespan}"
+        );
+        assert!(
+            analytic_makespan <= untuned_makespan,
+            "{label}: analytic-tuned {analytic_makespan} > untuned {untuned_makespan}"
+        );
+        best_speedup = best_speedup.max(untuned_makespan / full_makespan.max(1e-12));
+
+        eprintln!(
+            "  {label}: untuned {:.3} ms | analytic {:.3} ms | full {:.3} ms ({:.2}x) | \
+             search {:.3} / {:.3} ms",
+            untuned_makespan * 1e3,
+            analytic_makespan * 1e3,
+            full_makespan * 1e3,
+            untuned_makespan / full_makespan.max(1e-12),
+            analytic_search.median * 1e3,
+            full_search.median * 1e3,
+        );
+        json_rows.push(obj(vec![
+            ("case", label.as_str().into()),
+            ("untuned_makespan_s", untuned_makespan.into()),
+            ("analytic_makespan_s", analytic_makespan.into()),
+            ("full_makespan_s", full_makespan.into()),
+            ("full_speedup", (untuned_makespan / full_makespan.max(1e-12)).into()),
+            ("analytic_search_median_s", analytic_search.median.into()),
+            ("full_search_median_s", full_search.median.into()),
+        ]));
+    }
+    assert!(
+        best_speedup >= 1.0 / 0.9,
+        "no case improved by >= 10% (best speedup {best_speedup:.3})"
+    );
+
+    // analytic-model fidelity on a uniform-rate pipeline: the prediction
+    // must land within 5% of the DES makespan (ISSUE 6 acceptance).
+    let mut uniform = Spec::single(RoutineKind::Axpy, "u", vec_n.max(1 << 14), DataSource::Pl);
+    uniform.routines[0].window = Some(128);
+    let uniform_plan = lower_spec(&uniform).unwrap();
+    let predicted = analytic::predict_plan(&uniform_plan)
+        .expect("uniform axpy must be inside the analytic model's validity domain");
+    let simulated = simulate_plan(&uniform_plan).unwrap().makespan_s;
+    let rel_err = (predicted - simulated).abs() / simulated;
+    assert!(
+        rel_err <= 0.05,
+        "analytic {predicted} vs DES {simulated}: rel err {rel_err:.4} > 5%"
+    );
+    eprintln!("  analytic fidelity (uniform axpy): rel err {:.3}%", rel_err * 100.0);
+
+    b.finish();
+
+    let doc = obj(vec![
+        ("bench", "tune".into()),
+        ("unit", "seconds".into()),
+        ("smoke", smoke.into()),
+        ("analytic_rel_err", rel_err.into()),
+        ("cases", Json::Arr(json_rows)),
+    ]);
+    let out_dir = std::env::var("AIEBLAS_BENCH_JSON_DIR").unwrap_or_else(|_| ".".into());
+    let path = format!("{out_dir}/BENCH_tune.json");
+    match std::fs::write(&path, doc.to_pretty() + "\n") {
+        Ok(()) => eprintln!("wrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+}

@@ -21,6 +21,7 @@ use crate::runtime::{
 use crate::serve::{RoutineServer, ServeConfig};
 use crate::sim::SimReport;
 use crate::spec::{DataSource, Spec};
+use crate::tune::TuneConfig;
 use crate::util::rng::Rng;
 use crate::{Error, Result};
 
@@ -40,6 +41,9 @@ pub struct Config {
     /// Directory for the persistent plan store (`pipeline::store`); `None`
     /// keeps lowering memoization in-memory only.
     pub cache_dir: Option<PathBuf>,
+    /// Placement-autotuner policy for cold lowerings (`crate::tune`);
+    /// defaults to off (install the first valid plan).
+    pub tune: TuneConfig,
 }
 
 impl Default for Config {
@@ -51,6 +55,7 @@ impl Default for Config {
             check_numerics: true,
             plan_cache_capacity: Pipeline::DEFAULT_CACHE_CAPACITY,
             cache_dir: None,
+            tune: TuneConfig::default(),
         }
     }
 }
@@ -107,6 +112,12 @@ impl RunReport {
                 self.plan_cache.disk_hits, self.plan_cache.disk_writes, self.plan_cache.rejected
             ));
         }
+        if self.plan_cache.tuned + self.plan_cache.tune_skipped > 0 {
+            s.push_str(&format!(
+                "\nautotuner: {} tuned lowering(s), {} tuned warm start(s)",
+                self.plan_cache.tuned, self.plan_cache.tune_skipped
+            ));
+        }
         s
     }
 }
@@ -122,7 +133,8 @@ impl AieBlas {
     pub fn new(config: Config) -> Result<AieBlas> {
         let executor = NumericExecutor::new(&config.artifacts_dir)?;
         let mut pipeline =
-            Pipeline::with_cache_capacity(config.arch.clone(), config.plan_cache_capacity);
+            Pipeline::with_cache_capacity(config.arch.clone(), config.plan_cache_capacity)
+                .with_tuning(config.tune.clone());
         if let Some(dir) = &config.cache_dir {
             pipeline = pipeline.with_disk_store(dir);
         }
@@ -396,6 +408,27 @@ mod tests {
         let sys = system();
         let rep = sys.run_spec(&Spec::axpydot_dataflow(65536, 2.0)).unwrap();
         assert_eq!(rep.sim.kernels.len(), 2);
+    }
+
+    #[test]
+    fn config_tuning_flows_into_pipeline_and_report() {
+        use crate::tune::TuneMode;
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let sys = AieBlas::new(Config {
+            artifacts_dir: dir,
+            cpu_samples: 1,
+            check_numerics: false,
+            tune: TuneConfig { mode: TuneMode::Analytic, max_candidates: 4, shortlist: 2 },
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(sys.pipeline().tuning().mode, TuneMode::Analytic);
+        // naive PL movers: the analytic tier finds the burst win, so the
+        // cold lowering counts as tuned and the summary surfaces it.
+        let spec = Spec::single(RoutineKind::Axpy, "a", 1 << 16, DataSource::Pl);
+        let rep = sys.run_spec(&spec).unwrap();
+        assert_eq!(sys.plan_cache().stats().tuned, 1);
+        assert!(rep.summary().contains("autotuner:"), "{}", rep.summary());
     }
 
     #[test]

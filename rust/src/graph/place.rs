@@ -64,8 +64,86 @@ impl Placement {
     }
 }
 
-/// Place `graph` on `arch`. Deterministic for a given input.
+/// Tile scan order for the greedy placement step. Ties in the greedy cost
+/// are broken by whichever free tile is visited first, so the scan order is
+/// a genuine placement knob: column-major packs chains vertically up a
+/// column, row-major spreads them along the (shim-adjacent) bottom row.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScanOrder {
+    /// `for col { for row }` — the historical default.
+    ColMajor,
+    /// `for row { for col }`.
+    RowMajor,
+}
+
+/// Tunable knobs of the placement heuristic. [`PlaceParams::default`]
+/// reproduces [`place`] exactly (byte-identical placements), so the tuner's
+/// candidate 0 is always the untuned plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlaceParams {
+    /// Weight of the bottom-row bias in the greedy cost (`+ row * row_bias`).
+    /// 0 ignores shim proximity; larger values pull kernels toward the PL
+    /// interface at the cost of wirelength between kernels.
+    pub row_bias: usize,
+    /// Free-tile scan order (tie-break direction) for the greedy step.
+    pub scan: ScanOrder,
+    /// Bound on local-search improvement passes (0 disables the search).
+    pub swap_passes: usize,
+}
+
+impl Default for PlaceParams {
+    fn default() -> Self {
+        PlaceParams { row_bias: 1, scan: ScanOrder::ColMajor, swap_passes: 4 }
+    }
+}
+
+impl PlaceParams {
+    /// Stable one-line rendering for candidate tables and store metadata.
+    pub fn describe(&self) -> String {
+        format!(
+            "bias={} scan={} passes={}",
+            self.row_bias,
+            match self.scan {
+                ScanOrder::ColMajor => "col",
+                ScanOrder::RowMajor => "row",
+            },
+            self.swap_passes
+        )
+    }
+}
+
+/// Deterministic bounded enumeration of placement-parameter candidates for
+/// the autotuner: the cross product of row-bias weights, scan orders and
+/// local-search budgets, with the default parameters always first (so a
+/// tuner that keeps candidate 0 degrades gracefully to the untuned plan).
+/// Truncated to `limit` entries.
+pub fn candidate_params(limit: usize) -> Vec<PlaceParams> {
+    let mut out = vec![PlaceParams::default()];
+    for &row_bias in &[1usize, 0, 2, 4] {
+        for &scan in &[ScanOrder::ColMajor, ScanOrder::RowMajor] {
+            for &swap_passes in &[4usize, 0, 8] {
+                let p = PlaceParams { row_bias, scan, swap_passes };
+                if !out.contains(&p) {
+                    out.push(p);
+                }
+            }
+        }
+    }
+    out.truncate(limit.max(1));
+    out
+}
+
+/// Place `graph` on `arch` with the default heuristic parameters.
+/// Deterministic for a given input.
 pub fn place(graph: &Graph, arch: &ArchConfig) -> Result<Placement> {
+    place_with(graph, arch, &PlaceParams::default())
+}
+
+/// Place `graph` on `arch` under explicit heuristic parameters (the
+/// autotuner's candidate-enumeration entry point). Hints are always honored
+/// regardless of parameters; every returned placement satisfies the same
+/// invariants as [`place`].
+pub fn place_with(graph: &Graph, arch: &ArchConfig, params: &PlaceParams) -> Result<Placement> {
     let n = graph.nodes.len();
     let mut locations = vec![Location::OffChip; n];
     let mut occupied: BTreeMap<(usize, usize), NodeId> = BTreeMap::new();
@@ -123,22 +201,36 @@ pub fn place(graph: &Graph, arch: &ArchConfig) -> Result<Placement> {
             .filter(|&o| matches!(locations[o], Location::Tile { .. }))
             .collect();
         let mut best: Option<((usize, usize), usize)> = None;
-        for col in 0..arch.cols {
-            for row in 0..arch.rows {
-                if occupied.contains_key(&(col, row)) {
-                    continue;
+        let consider = |col: usize, row: usize, best: &mut Option<((usize, usize), usize)>| {
+            if occupied.contains_key(&(col, row)) {
+                return;
+            }
+            let cost: usize = neighbours
+                .iter()
+                .map(|&o| {
+                    let (ox, oy) = locations[o].coords();
+                    (ox.abs_diff(col as isize) + oy.abs_diff(row as isize)) as usize
+                })
+                .sum::<usize>()
+                // bias: prefer the bottom row (nearer the shim/PL).
+                + row * params.row_bias;
+            if best.is_none() || cost < best.unwrap().1 {
+                *best = Some(((col, row), cost));
+            }
+        };
+        match params.scan {
+            ScanOrder::ColMajor => {
+                for col in 0..arch.cols {
+                    for row in 0..arch.rows {
+                        consider(col, row, &mut best);
+                    }
                 }
-                let cost: usize = neighbours
-                    .iter()
-                    .map(|&o| {
-                        let (ox, oy) = locations[o].coords();
-                        (ox.abs_diff(col as isize) + oy.abs_diff(row as isize)) as usize
-                    })
-                    .sum::<usize>()
-                    // bias: prefer the bottom row (nearer the shim/PL).
-                    + row;
-                if best.is_none() || cost < best.unwrap().1 {
-                    best = Some(((col, row), cost));
+            }
+            ScanOrder::RowMajor => {
+                for row in 0..arch.rows {
+                    for col in 0..arch.cols {
+                        consider(col, row, &mut best);
+                    }
                 }
             }
         }
@@ -211,7 +303,7 @@ pub fn place(graph: &Graph, arch: &ArchConfig) -> Result<Placement> {
         .collect();
     let mut improved = true;
     let mut passes = 0;
-    while improved && passes < 4 {
+    while improved && passes < params.swap_passes {
         improved = false;
         passes += 1;
         let before = placement.wirelength(graph);
@@ -341,6 +433,64 @@ mod tests {
                 };
                 assert!(seen.insert((col, row)), "tile ({col},{row}) reused");
             }
+        }
+    }
+
+    #[test]
+    fn default_params_reproduce_place_exactly() {
+        for spec in [
+            Spec::single(RoutineKind::Axpy, "a", 4096, DataSource::Pl),
+            Spec::axpydot_dataflow(4096, 2.0),
+            Spec::chain(RoutineKind::Scal, 3, 1024),
+        ] {
+            let g = build_graph(&spec).unwrap().graph;
+            let default = place(&g, &arch()).unwrap();
+            let explicit = place_with(&g, &arch(), &PlaceParams::default()).unwrap();
+            assert_eq!(default.locations, explicit.locations);
+        }
+    }
+
+    #[test]
+    fn candidate_enumeration_is_bounded_deterministic_and_default_first() {
+        let all = candidate_params(usize::MAX);
+        assert_eq!(all[0], PlaceParams::default(), "candidate 0 must be the untuned default");
+        assert!(all.len() <= 24, "candidate space must stay bounded, got {}", all.len());
+        // no duplicates, and a second enumeration is identical.
+        for (i, a) in all.iter().enumerate() {
+            assert!(!all[i + 1..].contains(a), "duplicate candidate {a:?}");
+        }
+        assert_eq!(all, candidate_params(usize::MAX));
+        assert_eq!(candidate_params(3).len(), 3);
+        assert_eq!(candidate_params(0).len(), 1, "limit 0 still yields the default");
+    }
+
+    #[test]
+    fn every_candidate_yields_a_valid_placement() {
+        let g = build_graph(&Spec::axpydot_dataflow(4096, 2.0)).unwrap().graph;
+        for params in candidate_params(usize::MAX) {
+            let p = place_with(&g, &arch(), &params).unwrap();
+            let mut seen = std::collections::BTreeSet::new();
+            for nd in &g.nodes {
+                if matches!(nd.kind, NodeKind::AieKernel { .. }) {
+                    let Location::Tile { col, row } = p.of(nd.id) else {
+                        panic!("{}: kernel off-array under {params:?}", nd.name)
+                    };
+                    assert!(col < arch().cols && row < arch().rows);
+                    assert!(seen.insert((col, row)), "tile reuse under {params:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hints_honored_under_all_candidates() {
+        let mut spec = Spec::single(RoutineKind::Axpy, "a", 4096, DataSource::Pl);
+        spec.routines[0].placement = Some(crate::spec::Placement { col: 7, row: 3 });
+        let g = build_graph(&spec).unwrap().graph;
+        let kernel = g.node_by_name("a").unwrap().id;
+        for params in candidate_params(usize::MAX) {
+            let p = place_with(&g, &arch(), &params).unwrap();
+            assert_eq!(p.of(kernel), Location::Tile { col: 7, row: 3 }, "{params:?}");
         }
     }
 

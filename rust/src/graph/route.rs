@@ -45,6 +45,35 @@ impl Routing {
     pub fn total_hops(&self) -> usize {
         self.routed.iter().map(|r| r.hops).sum()
     }
+
+    /// Static route-quality summary for the placement autotuner: cheap,
+    /// simulation-free figures the tuner uses to break ties between
+    /// candidates whose predicted makespans are equal (fewer hops, then
+    /// fewer interface channels, then more neighbour edges).
+    pub fn cost_summary(&self) -> RouteCost {
+        RouteCost {
+            total_hops: self.total_hops(),
+            interface_channels: self.pl_to_aie_used + self.aie_to_pl_used,
+            neighbour_edges: self.routed.iter().filter(|r| r.neighbour).count(),
+        }
+    }
+}
+
+/// Simulation-free route cost used for candidate tie-breaking; see
+/// [`Routing::cost_summary`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RouteCost {
+    pub total_hops: usize,
+    pub interface_channels: usize,
+    pub neighbour_edges: usize,
+}
+
+impl RouteCost {
+    /// Ordering key: lower is better. Neighbour edges are negated (more
+    /// local-memory edges are better), after hops and channel pressure.
+    pub fn key(&self) -> (usize, usize, isize) {
+        (self.total_hops, self.interface_channels, -(self.neighbour_edges as isize))
+    }
 }
 
 /// Route every edge of a placed graph, enforcing interface capacity.
@@ -169,6 +198,18 @@ mod tests {
         let e = g.edges.iter().find(|e| e.src == a && e.dst == d).unwrap();
         assert!(r.of(e.id).neighbour, "DF edge should use neighbour memory sharing");
         assert_eq!(r.of(e.id).hops, 0);
+    }
+
+    #[test]
+    fn cost_summary_matches_route_counts() {
+        let (_, r) = routed(&Spec::single(RoutineKind::Axpy, "a", 4096, DataSource::Pl));
+        let c = r.cost_summary();
+        assert_eq!(c.total_hops, r.total_hops());
+        assert_eq!(c.interface_channels, r.pl_to_aie_used + r.aie_to_pl_used);
+        assert_eq!(c.neighbour_edges, r.routed.iter().filter(|e| e.neighbour).count());
+        // fewer hops always orders strictly better.
+        let worse = RouteCost { total_hops: c.total_hops + 1, ..c };
+        assert!(c.key() < worse.key());
     }
 
     #[test]

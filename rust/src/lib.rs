@@ -72,6 +72,7 @@ pub mod runtime;
 pub mod serve;
 pub mod sim;
 pub mod spec;
+pub mod tune;
 pub mod util;
 
 pub use error::{Error, Result};

@@ -15,6 +15,8 @@
 //! * `cache` — manage the persistent plan store (DESIGN.md §10):
 //!   `stats`, `clear`, and `prewarm <spec.json>` to lower + persist ahead
 //!   of serving;
+//! * `tune <spec.json>` — run the placement autotuner (DESIGN.md §11) and
+//!   print the candidate table (predicted + simulated makespans, winner);
 //! * `info` — architecture + artifact inventory.
 
 use std::path::{Path, PathBuf};
@@ -79,6 +81,13 @@ fn app() -> App {
                 .positional("action", "stats | clear | prewarm", true)
                 .positional("spec", "spec.json to prewarm (lower + persist)", false)
                 .opt_default("cache-dir", ".aieblas-plan-cache", "plan-store directory"),
+        )
+        .command(
+            Command::new("tune", "autotune a spec's placement and print the candidate table")
+                .positional("spec", "path to spec.json", true)
+                .opt_default("mode", "full", "analytic | full (analytic prune + DES shortlist)")
+                .opt_default("candidates", "12", "max placement candidates per graph variant")
+                .opt_default("shortlist", "4", "candidates DES-simulated in full mode"),
         )
         .command(Command::new("info", "print architecture and artifact inventory"))
 }
@@ -233,6 +242,7 @@ fn dispatch(m: &Matches) -> CliResult {
         }
         "serve-bench" => serve_bench(m),
         "cache" => cache_cmd(m),
+        "tune" => tune_cmd(m),
         "info" => {
             let arch = aieblas::arch::ArchConfig::vck5000();
             println!("platform: vck5000");
@@ -315,6 +325,63 @@ fn cache_cmd(m: &Matches) -> CliResult {
         }
         other => Err(format!("unknown cache action {other:?} (stats | clear | prewarm)").into()),
     }
+}
+
+/// `tune <spec.json>` — run the placement autotuner on one spec and print
+/// the full candidate table plus the winning plan's makespans.
+fn tune_cmd(m: &Matches) -> CliResult {
+    use aieblas::arch::ArchConfig;
+    use aieblas::tune::{tune_spec, TuneConfig, TuneMode};
+    use aieblas::util::table::{fmt_time, Table};
+
+    let spec = Spec::from_file(Path::new(&m.positionals[0]))?;
+    let mode = TuneMode::parse(m.get("mode").unwrap())?;
+    if mode == TuneMode::Off {
+        return Err("tune mode \"off\" runs no search; pick analytic or full".into());
+    }
+    let cfg = TuneConfig {
+        mode,
+        max_candidates: m.usize("candidates")?.max(1),
+        shortlist: m.usize("shortlist")?.max(1),
+    };
+    let outcome = tune_spec(&spec, &ArchConfig::vck5000(), &cfg)?;
+    let report = &outcome.report;
+
+    let fmt_opt = |v: Option<f64>| v.map_or_else(|| "-".to_string(), fmt_time);
+    let mut table =
+        Table::new(vec!["#", "candidate", "hops", "chans", "predicted", "simulated", "chosen"]);
+    for (i, c) in report.candidates.iter().enumerate() {
+        table.row(vec![
+            i.to_string(),
+            c.label.clone(),
+            c.route_cost.total_hops.to_string(),
+            c.route_cost.interface_channels.to_string(),
+            fmt_opt(c.predicted_s),
+            fmt_opt(c.simulated_s),
+            if c.chosen { "*".to_string() } else { String::new() },
+        ]);
+    }
+    println!("== tune ({} mode, {} candidate(s)) ==", report.mode.name(), report.candidates.len());
+    println!("{}", table.render());
+    println!("search time: {}", fmt_time(report.search_s));
+    let untuned = report.candidates.first();
+    let chosen = report.chosen_candidate();
+    if let (Some(u), Some(c)) = (untuned, chosen) {
+        let pick = |cand: &aieblas::tune::CandidateReport| cand.simulated_s.or(cand.predicted_s);
+        if let (Some(base), Some(best)) = (pick(u), pick(c)) {
+            if report.improved() && best > 0.0 {
+                println!(
+                    "tuned plan: {} ({:.2}× vs untuned {})",
+                    fmt_time(best),
+                    base / best,
+                    fmt_time(base)
+                );
+            } else {
+                println!("tuned plan: default placement already optimal ({})", fmt_time(base));
+            }
+        }
+    }
+    Ok(())
 }
 
 /// Synthetic serving workload: `clients` submitter threads round-robin

@@ -103,6 +103,12 @@ pub struct CacheStats {
     /// On-disk entries rejected (corruption, format-version or
     /// arch-fingerprint mismatch) and re-lowered.
     pub rejected: u64,
+    /// Cold lowerings where the autotuner installed a non-default plan
+    /// (`crate::tune`; tuning enabled and the search found a win).
+    pub tuned: u64,
+    /// Tuned plans served from cache or disk without re-running the
+    /// search (the warm-start path the persisted `tuned` field buys).
+    pub tune_skipped: u64,
 }
 
 impl CacheStats {
@@ -135,6 +141,8 @@ pub struct PlanCache {
     disk_hits: AtomicU64,
     disk_writes: AtomicU64,
     rejected: AtomicU64,
+    tuned: AtomicU64,
+    tune_skipped: AtomicU64,
 }
 
 impl PlanCache {
@@ -149,6 +157,8 @@ impl PlanCache {
             disk_hits: AtomicU64::new(0),
             disk_writes: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
+            tuned: AtomicU64::new(0),
+            tune_skipped: AtomicU64::new(0),
         }
     }
 
@@ -195,6 +205,18 @@ impl PlanCache {
     /// Record one on-disk entry rejected (and re-lowered).
     pub(crate) fn record_rejected(&self) {
         self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a cold lowering where the autotuner installed a non-default
+    /// plan.
+    pub(crate) fn record_tuned(&self) {
+        self.tuned.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a tuned plan served from the on-disk store with the search
+    /// skipped.
+    pub(crate) fn record_tune_skipped(&self) {
+        self.tune_skipped.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Insert a freshly lowered plan, evicting the least recently used
@@ -245,6 +267,8 @@ impl PlanCache {
         self.disk_hits.store(0, Ordering::Relaxed);
         self.disk_writes.store(0, Ordering::Relaxed);
         self.rejected.store(0, Ordering::Relaxed);
+        self.tuned.store(0, Ordering::Relaxed);
+        self.tune_skipped.store(0, Ordering::Relaxed);
     }
 
     pub fn stats(&self) -> CacheStats {
@@ -257,6 +281,8 @@ impl PlanCache {
             disk_hits: self.disk_hits.load(Ordering::Relaxed),
             disk_writes: self.disk_writes.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
+            tuned: self.tuned.load(Ordering::Relaxed),
+            tune_skipped: self.tune_skipped.load(Ordering::Relaxed),
         }
     }
 }
@@ -340,6 +366,8 @@ mod tests {
         cache.record_disk_hit();
         cache.record_disk_write();
         cache.record_rejected();
+        cache.record_tuned();
+        cache.record_tune_skipped();
         let s = cache.stats();
         assert!(
             s.hits > 0
@@ -348,7 +376,9 @@ mod tests {
                 && s.coalesced > 0
                 && s.disk_hits > 0
                 && s.disk_writes > 0
-                && s.rejected > 0,
+                && s.rejected > 0
+                && s.tuned > 0
+                && s.tune_skipped > 0,
             "precondition: every counter nonzero, got {s:?}"
         );
         cache.reset_stats();

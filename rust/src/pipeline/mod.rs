@@ -24,7 +24,7 @@ pub mod cache;
 pub mod store;
 
 pub use cache::{CacheStats, PlanCache, PlanKey};
-pub use store::{LoadOutcome, PlanStore, StoreStats};
+pub use store::{LoadOutcome, PlanStore, StoreStats, TunedEntry};
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -37,6 +37,7 @@ use crate::graph::place::{place, Placement};
 use crate::graph::route::{check_routing, route, Routing};
 use crate::graph::Graph;
 use crate::spec::Spec;
+use crate::tune::{tune_spec, TuneConfig, TuneMode, TuneReport, TUNER_VERSION};
 use crate::{Error, Result};
 
 /// Stage-1 output: a validated spec with its dataflow graph and the
@@ -132,6 +133,21 @@ pub fn lower_spec(spec: &Spec) -> Result<ExecutablePlan> {
     lower_spec_with(spec, &ArchConfig::vck5000())
 }
 
+/// Store provenance for a tuned lowering: enough for a warm-started
+/// process to decide whether the persisted search is still trustworthy.
+fn tuned_entry_from(report: &TuneReport) -> TunedEntry {
+    let chosen = report.chosen_candidate();
+    TunedEntry {
+        tuner_version: TUNER_VERSION,
+        mode: report.mode.name().to_string(),
+        candidates: report.candidates.len(),
+        chosen: chosen.map(|c| c.label.clone()).unwrap_or_default(),
+        improved: report.improved(),
+        predicted_s: chosen.and_then(|c| c.predicted_s),
+        simulated_s: chosen.and_then(|c| c.simulated_s),
+    }
+}
+
 /// Outcome of one lowering as seen by single-flight followers; errors
 /// travel as rendered strings (`Error` is not `Clone`).
 type LoweredResult = std::result::Result<Arc<ExecutablePlan>, String>;
@@ -208,6 +224,9 @@ pub struct Pipeline {
     /// Fingerprint of `default_arch`, stamped into (and checked against)
     /// every store entry.
     fingerprint: String,
+    /// Autotuning policy for cold lowerings (default: off — lower the
+    /// first valid plan, the historical behaviour).
+    tune: TuneConfig,
 }
 
 impl Pipeline {
@@ -226,7 +245,23 @@ impl Pipeline {
             in_flight: Mutex::new(HashMap::new()),
             store: None,
             fingerprint,
+            tune: TuneConfig::default(),
         }
+    }
+
+    /// Set the autotuning policy (builder-style). With a mode other than
+    /// [`TuneMode::Off`], cold lowerings run the placement autotuner
+    /// (`crate::tune`) and install the winning candidate; warm starts —
+    /// memory hits, and disk entries tuned under the current
+    /// [`TUNER_VERSION`] — skip the search (counted as `tune_skipped`).
+    pub fn with_tuning(mut self, tune: TuneConfig) -> Pipeline {
+        self.tune = tune;
+        self
+    }
+
+    /// The active autotuning policy.
+    pub fn tuning(&self) -> &TuneConfig {
+        &self.tune
     }
 
     /// Attach an on-disk [`PlanStore`] under `dir` (builder-style): cold
@@ -294,23 +329,41 @@ impl Pipeline {
         // and falls through to a clean re-lower.
         if let Some(store) = &self.store {
             let loaded = match store.load(key, &self.fingerprint) {
-                LoadOutcome::Loaded(plan) => {
+                LoadOutcome::Loaded(plan, tuned) => {
                     // the fingerprint covers the *default* arch; a named
                     // platform resolves independently of it, so also require
                     // the stored arch to equal what resolution produces
                     // today — otherwise a plan lowered under old platform
                     // constants would execute a stale hardware model.
-                    match resolve_arch(spec, &self.default_arch) {
-                        Ok(arch) if plan.plan.arch == arch => Some(Arc::from(plan)),
-                        _ => {
-                            self.cache.record_rejected();
-                            crate::log_warn!(
-                                "plan store entry rejected, re-lowering: stale arch for \
-                                 platform {:?}",
-                                spec.platform
-                            );
-                            None
+                    let arch_ok = matches!(
+                        resolve_arch(spec, &self.default_arch),
+                        Ok(arch) if plan.plan.arch == arch
+                    );
+                    // a tuning pipeline only trusts entries tuned under the
+                    // current tuner version — an untuned (or stale-tuner)
+                    // plan would silently pin the unsearched default. A
+                    // non-tuning pipeline takes any valid plan.
+                    let tuned_ok = if self.tune.mode == TuneMode::Off {
+                        true
+                    } else {
+                        matches!(&tuned, Some(t) if t.tuner_version == TUNER_VERSION)
+                    };
+                    if arch_ok && tuned_ok {
+                        if tuned.is_some() {
+                            self.cache.record_tune_skipped();
                         }
+                        Some(Arc::from(plan))
+                    } else {
+                        self.cache.record_rejected();
+                        crate::log_warn!(
+                            "plan store entry rejected, re-lowering: {}",
+                            if arch_ok {
+                                "entry not tuned under the current tuner version"
+                            } else {
+                                "stale arch for the requested platform"
+                            }
+                        );
+                        None
                     }
                 }
                 LoadOutcome::Rejected(why) => {
@@ -328,13 +381,24 @@ impl Pipeline {
             }
         }
         self.cache.record_miss();
-        match lower_spec_with(spec, &self.default_arch) {
-            Ok(plan) => {
+        let lowered = if self.tune.mode == TuneMode::Off {
+            lower_spec_with(spec, &self.default_arch).map(|plan| (plan, None))
+        } else {
+            tune_spec(spec, &self.default_arch, &self.tune).map(|outcome| {
+                if outcome.report.improved() {
+                    self.cache.record_tuned();
+                }
+                let entry = tuned_entry_from(&outcome.report);
+                (outcome.plan, Some(entry))
+            })
+        };
+        match lowered {
+            Ok((plan, tuned)) => {
                 let plan = Arc::new(plan);
                 // write-through: persistence is an optimization, so an
                 // I/O failure is logged and the lowering still succeeds.
                 if let Some(store) = &self.store {
-                    match store.save(key, &self.fingerprint, &plan) {
+                    match store.save_tuned(key, &self.fingerprint, &plan, tuned.as_ref()) {
                         Ok(()) => self.cache.record_disk_write(),
                         Err(e) => {
                             crate::log_warn!("plan store write-through failed: {e}")
@@ -534,6 +598,58 @@ mod tests {
         pipeline.reset();
         assert_eq!(pipeline.cache().stats(), CacheStats::default());
         assert_eq!(pipeline.cache().len(), 0);
+    }
+
+    #[test]
+    fn tuning_pipeline_tunes_cold_and_warm_starts_from_tuned_entry() {
+        let dir = tmp_dir("tune");
+        // naive PL movers: the tuner's burst variant wins, so `tuned` ticks.
+        let spec = Spec::single(RoutineKind::Axpy, "a", 1 << 16, DataSource::Pl);
+        let cfg = TuneConfig { mode: TuneMode::Full, max_candidates: 4, shortlist: 2 };
+
+        let first = Pipeline::default().with_tuning(cfg.clone()).with_disk_store(&dir);
+        let a = first.lower(&spec).unwrap();
+        let s = first.cache().stats();
+        assert_eq!((s.misses, s.disk_writes, s.tuned, s.tune_skipped), (1, 1, 1, 0));
+
+        // a tuning restart trusts the persisted search: no re-tune, no miss.
+        let second = Pipeline::default().with_tuning(cfg).with_disk_store(&dir);
+        let b = second.lower(&spec).unwrap();
+        let s = second.cache().stats();
+        assert_eq!((s.misses, s.disk_hits, s.tuned, s.tune_skipped), (0, 1, 0, 1));
+        assert_eq!(a.graph(), b.graph());
+        assert_eq!(a.placement().locations, b.placement().locations);
+
+        // a non-tuning reader accepts the tuned plan too — it is a valid
+        // lowering like any other.
+        let third = Pipeline::default().with_disk_store(&dir);
+        let c = third.lower(&spec).unwrap();
+        let s = third.cache().stats();
+        assert_eq!((s.misses, s.disk_hits, s.rejected), (0, 1, 0));
+        assert_eq!(b.graph(), c.graph());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tuning_pipeline_rejects_untuned_store_entry() {
+        let dir = tmp_dir("untuned");
+        let spec = Spec::single(RoutineKind::Axpy, "a", 1 << 16, DataSource::Pl);
+        Pipeline::default().with_disk_store(&dir).lower(&spec).unwrap();
+
+        // an untuned entry would pin the unsearched default plan forever;
+        // a tuning pipeline must reject it and run the search.
+        let cfg = TuneConfig { mode: TuneMode::Analytic, max_candidates: 4, shortlist: 2 };
+        let tuning = Pipeline::default().with_tuning(cfg.clone()).with_disk_store(&dir);
+        tuning.lower(&spec).unwrap();
+        let s = tuning.cache().stats();
+        assert_eq!((s.rejected, s.misses, s.disk_hits, s.tune_skipped), (1, 1, 0, 0));
+
+        // ...and its write-through upgrades the entry for the next restart.
+        let third = Pipeline::default().with_tuning(cfg).with_disk_store(&dir);
+        third.lower(&spec).unwrap();
+        let s = third.cache().stats();
+        assert_eq!((s.misses, s.disk_hits, s.tune_skipped), (0, 1, 1));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -38,7 +38,8 @@ use crate::{Error, Result};
 
 /// On-disk format version. Bump on ANY change to the serialized shape;
 /// readers reject other versions and re-lower (never migrate in place).
-pub const FORMAT_VERSION: u64 = 1;
+/// v2: entries carry a `tuned` field (autotuner provenance, DESIGN.md §11).
+pub const FORMAT_VERSION: u64 = 2;
 
 /// Filename suffix for store entries.
 const ENTRY_SUFFIX: &str = ".plan.json";
@@ -51,14 +52,37 @@ pub fn arch_fingerprint(arch: &ArchConfig) -> String {
     format!("arch-{:016x}", fnv1a64(arch_to_json(arch).to_compact().as_bytes()))
 }
 
+/// Tuning provenance persisted alongside a plan: which search produced
+/// it, under which tuner version, and what it predicted/measured. A
+/// tuning-enabled pipeline uses the version to decide whether a warm
+/// start may skip the search (same version) or must re-tune (the
+/// candidate space / scoring rules changed — see `crate::tune`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TunedEntry {
+    pub tuner_version: u32,
+    /// Search mode that produced the plan (`"analytic"` / `"full"`).
+    pub mode: String,
+    /// Candidates the search examined.
+    pub candidates: usize,
+    /// Label of the installed candidate.
+    pub chosen: String,
+    /// True when a non-default candidate was installed.
+    pub improved: bool,
+    /// Analytic prediction for the installed candidate, if priced.
+    pub predicted_s: Option<f64>,
+    /// DES-confirmed makespan for the installed candidate, if simulated.
+    pub simulated_s: Option<f64>,
+}
+
 /// Outcome of one store lookup, as seen by the pipeline.
 #[derive(Debug)]
 pub enum LoadOutcome {
     /// No entry on disk for this key — a plain cold start.
     Missing,
     /// A valid entry was deserialized; execution-equivalent to a fresh
-    /// lowering (DESIGN.md §10 substitution argument).
-    Loaded(Box<ExecutablePlan>),
+    /// lowering (DESIGN.md §10 substitution argument). Carries the tuning
+    /// provenance, `None` for untuned entries.
+    Loaded(Box<ExecutablePlan>, Option<TunedEntry>),
     /// An entry exists but failed validation (corruption, version or
     /// fingerprint mismatch); the caller should re-lower and overwrite.
     Rejected(String),
@@ -113,7 +137,7 @@ impl PlanStore {
             Err(e) => return LoadOutcome::Rejected(format!("unreadable entry: {e}")),
         };
         match decode_entry(&text, key.as_str(), fingerprint) {
-            Ok(plan) => LoadOutcome::Loaded(Box::new(plan)),
+            Ok((plan, tuned)) => LoadOutcome::Loaded(Box::new(plan), tuned),
             Err(e) => LoadOutcome::Rejected(e.to_string()),
         }
     }
@@ -122,11 +146,24 @@ impl PlanStore {
     /// (which logs and carries on — persistence is an optimization, never
     /// a correctness dependency).
     pub fn save(&self, key: &PlanKey, fingerprint: &str, plan: &ExecutablePlan) -> Result<()> {
+        self.save_tuned(key, fingerprint, plan, None)
+    }
+
+    /// [`PlanStore::save`] with tuning provenance (`None` = untuned; the
+    /// entry's `tuned` field is then JSON null).
+    pub fn save_tuned(
+        &self,
+        key: &PlanKey,
+        fingerprint: &str,
+        plan: &ExecutablePlan,
+        tuned: Option<&TunedEntry>,
+    ) -> Result<()> {
         std::fs::create_dir_all(&self.dir)?;
         let entry = obj(vec![
             ("format_version", (FORMAT_VERSION as usize).into()),
             ("cache_key", key.as_str().into()),
             ("fingerprint", fingerprint.into()),
+            ("tuned", tuned.map_or(Json::Null, tuned_to_json)),
             ("plan", plan_to_json(plan)),
         ]);
         let path = self.path_for(key);
@@ -199,8 +236,12 @@ impl PlanStore {
 }
 
 /// Parse + validate one entry document against the expected key and
-/// fingerprint, returning the deserialized plan.
-fn decode_entry(text: &str, key: &str, fingerprint: &str) -> Result<ExecutablePlan> {
+/// fingerprint, returning the deserialized plan and its tuning provenance.
+fn decode_entry(
+    text: &str,
+    key: &str,
+    fingerprint: &str,
+) -> Result<(ExecutablePlan, Option<TunedEntry>)> {
     let json = Json::parse(text)?;
     let version = json
         .get("format_version")
@@ -227,6 +268,13 @@ fn decode_entry(text: &str, key: &str, fingerprint: &str) -> Result<ExecutablePl
             "arch fingerprint {stored_fp} does not match pipeline {fingerprint}"
         )));
     }
+    // missing or null = untuned; a present-but-malformed field is a
+    // rejection like any other corruption (never silently dropped — a
+    // tuning-enabled reader keys its skip-the-search decision off it).
+    let tuned = match json.get("tuned") {
+        None | Some(Json::Null) => None,
+        Some(j) => Some(tuned_from_json(j)?),
+    };
     let plan = plan_from_json(json.get("plan").ok_or_else(|| corrupt("missing plan"))?)?;
     // a deserialized plan must satisfy the same invariants a fresh
     // lowering does before any backend may execute it (DESIGN.md §6/§10).
@@ -242,11 +290,55 @@ fn decode_entry(text: &str, key: &str, fingerprint: &str) -> Result<ExecutablePl
         return Err(corrupt("routing references an unknown edge"));
     }
     check_routing(&plan.plan.built.graph, &plan.placed.routing)?;
-    Ok(plan)
+    Ok((plan, tuned))
 }
 
 fn corrupt(msg: &str) -> Error {
     Error::Runtime(format!("plan store entry rejected: {msg}"))
+}
+
+fn tuned_to_json(t: &TunedEntry) -> Json {
+    obj(vec![
+        ("tuner_version", (t.tuner_version as usize).into()),
+        ("mode", t.mode.as_str().into()),
+        ("candidates", t.candidates.into()),
+        ("chosen", t.chosen.as_str().into()),
+        ("improved", t.improved.into()),
+        ("predicted_s", t.predicted_s.map_or(Json::Null, Json::Num)),
+        ("simulated_s", t.simulated_s.map_or(Json::Null, Json::Num)),
+    ])
+}
+
+fn tuned_from_json(j: &Json) -> Result<TunedEntry> {
+    let us = |name: &str| {
+        j.get(name)
+            .and_then(Json::as_usize)
+            .ok_or_else(|| corrupt(&format!("tuned missing {name}")))
+    };
+    let s = |name: &str| {
+        j.get(name)
+            .and_then(Json::as_str)
+            .ok_or_else(|| corrupt(&format!("tuned missing {name}")))
+    };
+    let opt_f = |name: &str| -> Result<Option<f64>> {
+        match j.get(name) {
+            None | Some(Json::Null) => Ok(None),
+            Some(v) => v.as_f64().map(Some).ok_or_else(|| corrupt(&format!("bad tuned {name}"))),
+        }
+    };
+    let improved = j
+        .get("improved")
+        .and_then(Json::as_bool)
+        .ok_or_else(|| corrupt("tuned missing improved"))?;
+    Ok(TunedEntry {
+        tuner_version: us("tuner_version")? as u32,
+        mode: s("mode")?.to_string(),
+        candidates: us("candidates")?,
+        chosen: s("chosen")?.to_string(),
+        improved,
+        predicted_s: opt_f("predicted_s")?,
+        simulated_s: opt_f("simulated_s")?,
+    })
 }
 
 // ---------------------------------------------------------------------------
@@ -702,13 +794,37 @@ mod tests {
         store.save(&PlanKey::of(&spec), &fp, &plan).unwrap();
         assert_eq!(store.stats().entries, 1);
         match store.load(&PlanKey::of(&spec), &fp) {
-            LoadOutcome::Loaded(back) => {
-                assert_eq!(back.plan.built.graph, plan.plan.built.graph)
+            LoadOutcome::Loaded(back, tuned) => {
+                assert_eq!(back.plan.built.graph, plan.plan.built.graph);
+                assert_eq!(tuned, None, "plain save persists no tuning provenance");
             }
             other => panic!("expected Loaded, got {other:?}"),
         }
         assert_eq!(store.clear().unwrap(), 1);
         assert_eq!(store.stats().entries, 0);
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn tuned_metadata_round_trips() {
+        let store = tmp_store("tuned");
+        let spec = Spec::single(RoutineKind::Axpy, "a", 4096, DataSource::Pl);
+        let plan = lowered(&spec);
+        let fp = arch_fingerprint(&ArchConfig::vck5000());
+        let tuned = TunedEntry {
+            tuner_version: 1,
+            mode: "full".into(),
+            candidates: 14,
+            chosen: "bias=1 scan=col passes=4 +burst".into(),
+            improved: true,
+            predicted_s: Some(1.5e-3),
+            simulated_s: None,
+        };
+        store.save_tuned(&PlanKey::of(&spec), &fp, &plan, Some(&tuned)).unwrap();
+        match store.load(&PlanKey::of(&spec), &fp) {
+            LoadOutcome::Loaded(_, Some(back)) => assert_eq!(back, tuned),
+            other => panic!("expected tuned Loaded, got {other:?}"),
+        }
         let _ = std::fs::remove_dir_all(store.dir());
     }
 

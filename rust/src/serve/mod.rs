@@ -141,7 +141,7 @@ pub struct ServeReport {
 
 impl ServeReport {
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "served {} request(s) ({} failed) in {} batch(es), mean batch {:.2} (max {})\n\
              latency p50 {:.3} ms / p99 {:.3} ms, queue wait p50 {:.3} ms\n\
              throughput {:.0} req/s over {:.3} s\n\
@@ -165,7 +165,14 @@ impl ServeReport {
             self.cache.disk_hits,
             self.cache.disk_writes,
             self.cache.rejected,
-        )
+        );
+        if self.cache.tuned + self.cache.tune_skipped > 0 {
+            s.push_str(&format!(
+                "\nautotuner: {} tuned lowering(s), {} tuned warm start(s)",
+                self.cache.tuned, self.cache.tune_skipped
+            ));
+        }
+        s
     }
 }
 

@@ -24,6 +24,7 @@
 //! * [`naive`] — the original worklist-of-rounds reference, kept under
 //!   `#[cfg(test)]` / the `sim-naive` feature so parity can be asserted.
 
+pub mod analytic;
 pub mod report;
 pub mod trace;
 
@@ -87,6 +88,7 @@ fn resolve_threads(requested: usize) -> usize {
 }
 
 /// Per-node simulation schedule derived from the graph.
+#[derive(Clone)]
 pub(crate) struct NodeSched {
     /// Total iterations (windows to process).
     pub(crate) iters: usize,
@@ -100,6 +102,7 @@ pub(crate) struct NodeSched {
 /// plan** in [`prepare`] (PR 2 recomputed them per engine run). They are
 /// both the fast-forward regions and the parallel-simulation units: no
 /// edge crosses a component, so each one simulates independently.
+#[derive(Clone)]
 pub(crate) struct Components {
     /// Per-node component id.
     pub(crate) of_node: Vec<usize>,
@@ -121,6 +124,7 @@ pub(crate) struct Components {
 /// per-node schedules, per-edge latencies and window counts, adjacency
 /// lists, and the component partition + steady-state periods that drive
 /// the event engine's multi-rate fast-forward and parallel execution.
+#[derive(Clone)]
 pub(crate) struct Prep {
     pub(crate) sched: Vec<NodeSched>,
     pub(crate) edge_latency: Vec<f64>,
@@ -143,6 +147,19 @@ pub(crate) struct Prep {
     /// constants and jump rounding differ slightly.)
     pub(crate) multirate: bool,
     pub(crate) comp: Components,
+}
+
+impl Prep {
+    /// Re-derive only what routing affects. Everything else in a `Prep` —
+    /// schedules, adjacency, windows, components, periods — depends on the
+    /// graph alone, so the placement autotuner prepares **once per graph
+    /// variant** and stamps each placement/routing candidate with fresh
+    /// per-edge latencies instead of re-running the full derivation.
+    pub(crate) fn with_routing(&self, graph: &Graph, routing: &Routing, arch: &ArchConfig) -> Prep {
+        let mut prep = self.clone();
+        prep.edge_latency = edge_latencies(graph, routing, arch);
+        prep
+    }
 }
 
 pub(crate) fn gcd(mut a: usize, mut b: usize) -> usize {
@@ -372,20 +389,7 @@ pub(crate) fn prepare_opts(
     }
 
     // --- edge latency (beyond producer service) -----------------------------
-    let mut edge_latency = vec![0.0f64; graph.edges.len()];
-    for e in &graph.edges {
-        let r = routing.of(e.id);
-        let hop_s = r.hops as f64 * arch.noc_hop_cycles as f64 * arch.aie_cycle_s();
-        let src_pl = graph.node(e.src).kind.is_pl();
-        let dst_pl = graph.node(e.dst).kind.is_pl();
-        let stream_s = if !r.neighbour && !src_pl && !dst_pl {
-            // AIE→AIE over the stream network: 4 B/cycle serialization.
-            e.window_bytes() as f64 / arch.stream_bytes_per_cycle() * arch.aie_cycle_s()
-        } else {
-            0.0 // PL transfers are costed in the mover's service time
-        };
-        edge_latency[e.id] = hop_s + stream_s;
-    }
+    let edge_latency = edge_latencies(graph, routing, arch);
 
     // --- adjacency ----------------------------------------------------------
     let mut in_adj: Vec<Vec<usize>> = vec![Vec::new(); n];
@@ -411,6 +415,26 @@ pub(crate) fn prepare_opts(
         multirate,
         comp,
     }
+}
+
+/// Per-edge transfer latency beyond the producer's service time — the only
+/// part of a [`Prep`] that depends on routing (see [`Prep::with_routing`]).
+pub(crate) fn edge_latencies(graph: &Graph, routing: &Routing, arch: &ArchConfig) -> Vec<f64> {
+    let mut edge_latency = vec![0.0f64; graph.edges.len()];
+    for e in &graph.edges {
+        let r = routing.of(e.id);
+        let hop_s = r.hops as f64 * arch.noc_hop_cycles as f64 * arch.aie_cycle_s();
+        let src_pl = graph.node(e.src).kind.is_pl();
+        let dst_pl = graph.node(e.dst).kind.is_pl();
+        let stream_s = if !r.neighbour && !src_pl && !dst_pl {
+            // AIE→AIE over the stream network: 4 B/cycle serialization.
+            e.window_bytes() as f64 / arch.stream_bytes_per_cycle() * arch.aie_cycle_s()
+        } else {
+            0.0 // PL transfers are costed in the mover's service time
+        };
+        edge_latency[e.id] = hop_s + stream_s;
+    }
+    edge_latency
 }
 
 /// Simulate a placed+routed graph; returns the timing report.
@@ -462,6 +486,22 @@ fn simulate_inner(
     let prep = prepare_opts(graph, routing, arch, opts.multirate);
     let threads = resolve_threads(opts.threads);
     let (makespan, busy_total, _stats) = engine::run(graph, placement, &prep, tracer, threads)?;
+    Ok(report::build(graph, placement, routing, arch, makespan, &busy_total, &prep.sched))
+}
+
+/// Run the event engine against an already-derived [`Prep`] — the tuner's
+/// DES tier, which shares one preparation across a whole candidate batch
+/// (`threads` as in [`SimOptions`]; 0 = auto).
+pub(crate) fn simulate_prepared(
+    graph: &Graph,
+    placement: &Placement,
+    routing: &Routing,
+    arch: &ArchConfig,
+    prep: &Prep,
+    threads: usize,
+) -> Result<SimReport> {
+    let threads = resolve_threads(threads);
+    let (makespan, busy_total, _stats) = engine::run(graph, placement, prep, None, threads)?;
     Ok(report::build(graph, placement, routing, arch, makespan, &busy_total, &prep.sched))
 }
 
@@ -622,6 +662,25 @@ mod tests {
         }
         let total: usize = comp.total_iters.iter().sum();
         assert_eq!(total, prep.sched.iter().map(|s| s.iters).sum::<usize>());
+    }
+
+    #[test]
+    fn with_routing_refresh_and_prepared_run_match_full_simulation() {
+        let plan = crate::pipeline::lower_spec(&Spec::axpydot_dataflow(1 << 14, 2.0)).unwrap();
+        let prep = prepare(plan.graph(), plan.routing(), plan.arch());
+        let restamped = prep.with_routing(plan.graph(), plan.routing(), plan.arch());
+        assert_eq!(prep.edge_latency, restamped.edge_latency);
+        let full = simulate_plan(&plan).unwrap();
+        let shared = simulate_prepared(
+            plan.graph(),
+            plan.placement(),
+            plan.routing(),
+            plan.arch(),
+            &restamped,
+            0,
+        )
+        .unwrap();
+        assert_eq!(full.makespan_s, shared.makespan_s, "shared prep must be exact");
     }
 
     #[test]

@@ -1,0 +1,473 @@
+//! Simulator-guided placement autotuner (DESIGN.md §11).
+//!
+//! Cold lowerings historically installed the *first* valid plan: the
+//! default greedy placement, the spec's transfer modes, one routing. This
+//! module instead enumerates a bounded candidate space per spec+arch —
+//! placement-heuristic parameters ([`candidate_params`]) crossed with the
+//! PL mover transfer mode (a burst-forced graph variant when the spec
+//! leaves naive movers on the table) — and installs the candidate with the
+//! smallest makespan under a two-tier oracle:
+//!
+//! 1. **analytic** ([`crate::sim::analytic`]): closed-form steady-state
+//!    makespan for uniform periodic pipelines, microseconds per candidate,
+//!    prunes the bulk of the space;
+//! 2. **DES**: the event engine confirms the surviving shortlist, sharing
+//!    one [`prepare`]-derived warm-up per graph variant and re-stamping
+//!    only the routing-dependent edge latencies per candidate
+//!    (`Prep::with_routing`).
+//!
+//! Candidate 0 is *always* the untuned default (default placement
+//! parameters, as-spec transfer modes), so `full` mode can never install
+//! a plan the DES scores worse than the untuned one, and `analytic` mode
+//! only moves off the default when the model predicts a win beyond a
+//! no-regret margin. Every candidate passes the same graph invariants and
+//! routing checks as an untuned lowering, and tuning never changes
+//! numerics: placement, routing and transfer mode are timing-only knobs,
+//! so tuned and untuned plans are bit-identical on every backend
+//! (enforced by `rust/tests/tune_parity.rs`).
+//!
+//! [`prepare`]: crate::sim
+use std::time::Instant;
+
+use crate::arch::ArchConfig;
+use crate::graph::place::{candidate_params, place_with, PlaceParams};
+use crate::graph::route::{check_routing, route, RouteCost};
+use crate::pipeline::{place_and_route, plan_routines, ExecutablePlan, PlacedGraph, RoutinePlan};
+use crate::sim;
+use crate::spec::Spec;
+use crate::{Error, Result};
+
+/// Version of the tuner's candidate space + scoring rules, stamped into
+/// persisted tuned entries. A tuning-enabled pipeline rejects tuned store
+/// entries from any other version (the search space changed, so the cached
+/// decision may no longer be the winner); untuned readers still accept
+/// them — the plan itself is valid either way.
+pub const TUNER_VERSION: u32 = 1;
+
+/// `analytic` mode keeps the untuned default unless the predicted win
+/// beats this fraction — the model is validated to ~5% against the DES,
+/// so sub-margin differences are noise, and staying on candidate 0 is the
+/// no-regret choice.
+const ANALYTIC_NO_REGRET_MARGIN: f64 = 0.02;
+
+/// How hard a cold lowering searches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TuneMode {
+    /// No search: lower the default plan (the historical behaviour).
+    #[default]
+    Off,
+    /// Analytic model only — microseconds of search, no DES runs.
+    Analytic,
+    /// Analytic pruning + DES confirmation of the shortlist.
+    Full,
+}
+
+impl TuneMode {
+    pub fn parse(s: &str) -> Result<TuneMode> {
+        match s {
+            "off" => Ok(TuneMode::Off),
+            "analytic" => Ok(TuneMode::Analytic),
+            "full" => Ok(TuneMode::Full),
+            other => Err(Error::Runtime(format!(
+                "unknown tune mode {other:?} (expected off|analytic|full)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TuneMode::Off => "off",
+            TuneMode::Analytic => "analytic",
+            TuneMode::Full => "full",
+        }
+    }
+}
+
+/// Budget caps for one tuning search.
+#[derive(Debug, Clone)]
+pub struct TuneConfig {
+    pub mode: TuneMode,
+    /// Placement-parameter candidates per graph variant (≥ 1; candidate
+    /// enumeration is deterministic, so this is a strict prefix).
+    pub max_candidates: usize,
+    /// DES runs `full` mode may spend (candidate 0 always simulates, on
+    /// top of this budget if necessary).
+    pub shortlist: usize,
+}
+
+impl Default for TuneConfig {
+    fn default() -> Self {
+        TuneConfig { mode: TuneMode::Off, max_candidates: 12, shortlist: 4 }
+    }
+}
+
+/// One scored candidate, as shown in the CLI `tune` table.
+#[derive(Debug, Clone)]
+pub struct CandidateReport {
+    /// Human-readable knob setting, e.g. `"bias=1 scan=col passes=4 +burst"`.
+    pub label: String,
+    pub params: PlaceParams,
+    /// True when this candidate forces naive PL movers to burst mode.
+    pub forced_burst: bool,
+    pub route_cost: RouteCost,
+    /// Analytic prediction (`None`: outside the model's validity).
+    pub predicted_s: Option<f64>,
+    /// DES-confirmed makespan (`None`: pruned before simulation).
+    pub simulated_s: Option<f64>,
+    pub chosen: bool,
+}
+
+/// What one search looked at and decided.
+#[derive(Debug, Clone)]
+pub struct TuneReport {
+    pub mode: TuneMode,
+    pub candidates: Vec<CandidateReport>,
+    /// Index of the installed candidate (0 = untuned default kept).
+    pub chosen: usize,
+    /// Wall-clock search time, seconds.
+    pub search_s: f64,
+}
+
+impl TuneReport {
+    /// Did the search install something other than the untuned default?
+    pub fn improved(&self) -> bool {
+        self.chosen != 0
+    }
+
+    pub fn chosen_candidate(&self) -> Option<&CandidateReport> {
+        self.candidates.get(self.chosen)
+    }
+}
+
+/// A tuned lowering: the installed plan plus the search evidence.
+#[derive(Debug, Clone)]
+pub struct TuneOutcome {
+    pub plan: ExecutablePlan,
+    pub report: TuneReport,
+}
+
+/// Internal: one enumerated candidate with its shared-warm-up `Prep`.
+struct Candidate {
+    variant: usize,
+    params: PlaceParams,
+    forced_burst: bool,
+    placed: PlacedGraph,
+    cost: RouteCost,
+    prep: sim::Prep,
+    predicted: Option<f64>,
+    simulated: Option<f64>,
+}
+
+/// Tune one spec: enumerate, score, and install the winner. `Off` mode
+/// degrades to a plain (untuned) lowering with an empty candidate table.
+pub fn tune_spec(spec: &Spec, default_arch: &ArchConfig, cfg: &TuneConfig) -> Result<TuneOutcome> {
+    let t0 = Instant::now();
+    let base = plan_routines(spec, default_arch)?;
+    let base_placed = place_and_route(&base)?;
+    if cfg.mode == TuneMode::Off {
+        return Ok(TuneOutcome {
+            plan: ExecutablePlan { plan: base, placed: base_placed },
+            report: TuneReport {
+                mode: TuneMode::Off,
+                candidates: Vec::new(),
+                chosen: 0,
+                search_s: t0.elapsed().as_secs_f64(),
+            },
+        });
+    }
+
+    // Graph variants: the as-spec graph always; a burst-forced clone when
+    // the spec has naive PL movers (burst only changes the DDR efficiency
+    // model — mover *timing* — never data values, so it is a legal knob).
+    let mut variants: Vec<(RoutinePlan, bool)> = Vec::with_capacity(2);
+    let has_naive_movers =
+        base.built.graph.num_pl_movers() > 0 && spec.routines.iter().any(|r| !r.burst);
+    variants.push((base, false));
+    if has_naive_movers {
+        let mut burst_spec = spec.clone();
+        for r in &mut burst_spec.routines {
+            r.burst = true;
+        }
+        if let Ok(plan) = plan_routines(&burst_spec, default_arch) {
+            variants.push((plan, true));
+        }
+    }
+
+    // Enumerate and score analytically. One full `prepare` per variant;
+    // each candidate only re-stamps the routing-dependent latencies.
+    let params_list = candidate_params(cfg.max_candidates);
+    let mut cands: Vec<Candidate> = Vec::new();
+    for (vi, (rp, forced_burst)) in variants.iter().enumerate() {
+        let graph = &rp.built.graph;
+        let mut base_prep: Option<sim::Prep> = None;
+        for params in &params_list {
+            let (placement, routing) = if vi == 0 && *params == PlaceParams::default() {
+                // candidate 0 reuses the untuned lowering verbatim.
+                (base_placed.placement.clone(), base_placed.routing.clone())
+            } else {
+                let Ok(placement) = place_with(graph, &rp.arch, params) else { continue };
+                let Ok(routing) = route(graph, &placement, &rp.arch) else { continue };
+                if check_routing(graph, &routing).is_err() {
+                    continue;
+                }
+                (placement, routing)
+            };
+            let cost = routing.cost_summary();
+            let prep = match &base_prep {
+                Some(p) => p.with_routing(graph, &routing, &rp.arch),
+                None => sim::prepare(graph, &routing, &rp.arch),
+            };
+            if base_prep.is_none() {
+                base_prep = Some(prep.clone());
+            }
+            let predicted = sim::analytic::predict(graph, &prep);
+            cands.push(Candidate {
+                variant: vi,
+                params: *params,
+                forced_burst: *forced_burst,
+                placed: PlacedGraph { placement, routing },
+                cost,
+                prep,
+                predicted,
+                simulated: None,
+            });
+        }
+    }
+    debug_assert!(
+        !cands.is_empty()
+            && cands[0].variant == 0
+            && cands[0].params == PlaceParams::default()
+            && !cands[0].forced_burst,
+        "candidate 0 must be the untuned default"
+    );
+
+    let chosen = match cfg.mode {
+        TuneMode::Off => 0,
+        TuneMode::Analytic => pick_analytic(&cands),
+        TuneMode::Full => {
+            simulate_shortlist(&variants, &mut cands, cfg.shortlist);
+            pick_simulated(&cands)
+        }
+    };
+
+    let plan = ExecutablePlan {
+        plan: variants[cands[chosen].variant].0.clone(),
+        placed: cands[chosen].placed.clone(),
+    };
+    let candidates = cands
+        .iter()
+        .enumerate()
+        .map(|(i, c)| CandidateReport {
+            label: {
+                let mut label = c.params.describe();
+                if c.forced_burst {
+                    label.push_str(" +burst");
+                }
+                label
+            },
+            params: c.params,
+            forced_burst: c.forced_burst,
+            route_cost: c.cost,
+            predicted_s: c.predicted,
+            simulated_s: c.simulated,
+            chosen: i == chosen,
+        })
+        .collect();
+    Ok(TuneOutcome {
+        plan,
+        report: TuneReport {
+            mode: cfg.mode,
+            candidates,
+            chosen,
+            search_s: t0.elapsed().as_secs_f64(),
+        },
+    })
+}
+
+/// Analytic selection: minimum predicted makespan (route cost, then index,
+/// break ties), accepted only beyond the no-regret margin. Keeps the
+/// default whenever the model cannot price candidate 0.
+fn pick_analytic(cands: &[Candidate]) -> usize {
+    let Some(p0) = cands[0].predicted else {
+        return 0; // outside the model's validity: no evidence, no move
+    };
+    let mut best = 0usize;
+    let mut best_p = p0;
+    for (i, c) in cands.iter().enumerate().skip(1) {
+        let Some(p) = c.predicted else { continue };
+        let better = match p.total_cmp(&best_p) {
+            std::cmp::Ordering::Less => true,
+            std::cmp::Ordering::Equal => c.cost.key() < cands[best].cost.key(),
+            std::cmp::Ordering::Greater => false,
+        };
+        if better {
+            best = i;
+            best_p = p;
+        }
+    }
+    if best != 0 && best_p >= p0 * (1.0 - ANALYTIC_NO_REGRET_MARGIN) {
+        return 0;
+    }
+    best
+}
+
+/// DES-confirm the most promising candidates (by prediction, then route
+/// cost), always including candidate 0 so the untuned baseline is priced.
+fn simulate_shortlist(variants: &[(RoutinePlan, bool)], cands: &mut [Candidate], budget: usize) {
+    let mut order: Vec<usize> = (0..cands.len()).collect();
+    order.sort_by(|&a, &b| {
+        match (cands[a].predicted, cands[b].predicted) {
+            (Some(x), Some(y)) => x
+                .total_cmp(&y)
+                .then(cands[a].cost.key().cmp(&cands[b].cost.key()))
+                .then(a.cmp(&b)),
+            (Some(_), None) => std::cmp::Ordering::Less,
+            (None, Some(_)) => std::cmp::Ordering::Greater,
+            (None, None) => cands[a].cost.key().cmp(&cands[b].cost.key()).then(a.cmp(&b)),
+        }
+    });
+    let mut shortlist: Vec<usize> = order.into_iter().take(budget.max(1)).collect();
+    if !shortlist.contains(&0) {
+        shortlist.push(0);
+    }
+    for i in shortlist {
+        let c = &mut cands[i];
+        let rp = &variants[c.variant].0;
+        // a candidate whose simulation fails is simply never chosen; the
+        // untuned default needs no simulation to remain installable.
+        c.simulated = sim::simulate_prepared(
+            &rp.built.graph,
+            &c.placed.placement,
+            &c.placed.routing,
+            &rp.arch,
+            &c.prep,
+            0,
+        )
+        .ok()
+        .map(|r| r.makespan_s);
+    }
+}
+
+/// Full-mode selection: minimum DES makespan over the simulated shortlist,
+/// lowest index on ties. Candidate 0 is always in the shortlist, so the
+/// winner is never DES-worse than the untuned plan.
+fn pick_simulated(cands: &[Candidate]) -> usize {
+    let mut best: Option<(usize, f64)> = None;
+    for (i, c) in cands.iter().enumerate() {
+        let Some(s) = c.simulated else { continue };
+        let better = match best {
+            None => true,
+            Some((_, bs)) => s.total_cmp(&bs) == std::cmp::Ordering::Less,
+        };
+        if better {
+            best = Some((i, s));
+        }
+    }
+    best.map_or(0, |(i, _)| i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::RoutineKind;
+    use crate::pipeline::lower_spec;
+    use crate::sim::simulate_plan;
+    use crate::spec::{DataSource, Spec};
+
+    fn vck() -> ArchConfig {
+        ArchConfig::vck5000()
+    }
+
+    fn cfg(mode: TuneMode) -> TuneConfig {
+        TuneConfig { mode, ..TuneConfig::default() }
+    }
+
+    #[test]
+    fn mode_parse_round_trips() {
+        for mode in [TuneMode::Off, TuneMode::Analytic, TuneMode::Full] {
+            assert_eq!(TuneMode::parse(mode.name()).unwrap(), mode);
+        }
+        assert!(TuneMode::parse("fast").is_err());
+    }
+
+    #[test]
+    fn off_mode_is_the_untuned_lowering() {
+        let spec = Spec::single(RoutineKind::Axpy, "a", 4096, DataSource::Pl);
+        let out = tune_spec(&spec, &vck(), &cfg(TuneMode::Off)).unwrap();
+        let untuned = lower_spec(&spec).unwrap();
+        assert_eq!(out.plan.graph(), untuned.graph());
+        assert_eq!(out.plan.placement().locations, untuned.placement().locations);
+        assert!(out.report.candidates.is_empty());
+        assert!(!out.report.improved());
+    }
+
+    #[test]
+    fn full_mode_flips_naive_movers_and_never_loses_to_untuned() {
+        // axpy over naive PL movers: the burst variant is the headline win.
+        let spec = Spec::single(RoutineKind::Axpy, "a", 1 << 16, DataSource::Pl);
+        let out = tune_spec(&spec, &vck(), &cfg(TuneMode::Full)).unwrap();
+        let untuned_sim =
+            out.report.candidates[0].simulated_s.expect("candidate 0 always simulates");
+        let chosen = out.report.chosen_candidate().unwrap();
+        let chosen_sim = chosen.simulated_s.expect("full mode picks a simulated candidate");
+        assert!(chosen_sim <= untuned_sim, "tuned {chosen_sim} !<= untuned {untuned_sim}");
+        assert!(chosen.forced_burst, "naive movers must tune to burst");
+        assert!(
+            chosen_sim <= 0.9 * untuned_sim,
+            "burst flip must be a ≥10% win ({chosen_sim} vs {untuned_sim})"
+        );
+        // the installed plan really is the scored one.
+        assert_eq!(simulate_plan(&out.plan).unwrap().makespan_s, chosen_sim);
+    }
+
+    #[test]
+    fn analytic_mode_finds_the_burst_win_without_des() {
+        let spec = Spec::single(RoutineKind::Axpy, "a", 1 << 16, DataSource::Pl);
+        let out = tune_spec(&spec, &vck(), &cfg(TuneMode::Analytic)).unwrap();
+        let chosen = out.report.chosen_candidate().unwrap();
+        assert!(chosen.forced_burst, "analytic tier must see the ≥3× mover speedup");
+        assert!(chosen.simulated_s.is_none(), "analytic mode must not run the DES");
+        let tuned = simulate_plan(&out.plan).unwrap().makespan_s;
+        let untuned = simulate_plan(&lower_spec(&spec).unwrap()).unwrap().makespan_s;
+        assert!(tuned < untuned, "tuned {tuned} !< untuned {untuned}");
+    }
+
+    #[test]
+    fn analytic_mode_keeps_default_outside_model_validity() {
+        // gemv is multi-rate: the analytic tier must refuse to guess.
+        let spec = Spec::single(RoutineKind::Gemv, "g", 256, DataSource::Pl);
+        let out = tune_spec(&spec, &vck(), &cfg(TuneMode::Analytic)).unwrap();
+        assert_eq!(out.report.chosen, 0, "no prediction for candidate 0 ⇒ no move");
+        assert!(out.report.candidates.iter().all(|c| c.predicted_s.is_none()));
+    }
+
+    #[test]
+    fn already_burst_spec_gets_no_burst_variant() {
+        let mut spec = Spec::single(RoutineKind::Axpy, "a", 1 << 14, DataSource::Pl);
+        spec.routines[0].burst = true;
+        let out = tune_spec(&spec, &vck(), &cfg(TuneMode::Full)).unwrap();
+        assert!(out.report.candidates.iter().all(|c| !c.forced_burst));
+    }
+
+    #[test]
+    fn tuned_plan_passes_the_same_checks_as_untuned() {
+        let spec = Spec::axpydot_dataflow(1 << 14, 2.0);
+        let out = tune_spec(&spec, &vck(), &cfg(TuneMode::Full)).unwrap();
+        out.plan.graph().check_invariants().unwrap();
+        check_routing(out.plan.graph(), out.plan.routing()).unwrap();
+        assert_eq!(out.plan.graph().nodes.len(), out.plan.placement().locations.len());
+    }
+
+    #[test]
+    fn candidate_tables_are_bounded_and_deterministic() {
+        let spec = Spec::single(RoutineKind::Dot, "d", 1 << 14, DataSource::Pl);
+        let config = TuneConfig { mode: TuneMode::Analytic, max_candidates: 6, shortlist: 2 };
+        let a = tune_spec(&spec, &vck(), &config).unwrap();
+        let b = tune_spec(&spec, &vck(), &config).unwrap();
+        assert!(a.report.candidates.len() <= 2 * 6, "two variants × six params max");
+        assert_eq!(a.report.chosen, b.report.chosen, "tuning must be deterministic");
+        let labels: Vec<&str> = a.report.candidates.iter().map(|c| c.label.as_str()).collect();
+        let labels_b: Vec<&str> = b.report.candidates.iter().map(|c| c.label.as_str()).collect();
+        assert_eq!(labels, labels_b);
+    }
+}

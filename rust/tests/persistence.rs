@@ -4,9 +4,13 @@
 //!   deserialize → execute` is bit-identical to `lower → execute` on the
 //!   Sim, Cpu and Reference backends, and a second `Pipeline` pointed at
 //!   the same cache directory serves the spec with **zero lowerings**;
-//! * corruption: a truncated entry, garbage JSON, a bumped format version
-//!   and an arch-fingerprint mismatch each fall back to a clean re-lower
-//!   (no panic, `rejected` incremented, entry rewritten).
+//! * corruption: a truncated entry, garbage JSON, a bumped (or pre-tuned
+//!   v1) format version, a malformed `tuned` field and an arch-fingerprint
+//!   mismatch each fall back to a clean re-lower (no panic, `rejected`
+//!   incremented, entry rewritten);
+//! * tuned entries (ISSUE 6): a tuning pipeline warm-starts from a
+//!   persisted tuned plan (`tune_skipped`), and rejects entries tuned
+//!   under another tuner version.
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -19,6 +23,7 @@ use aieblas::runtime::{
     Backend, CpuBackend, ExecInputs, NumericExecutor, ReferenceBackend, SimBackend,
 };
 use aieblas::spec::{DataSource, Spec};
+use aieblas::tune::{TuneConfig, TuneMode};
 use aieblas::util::json::Json;
 use aieblas::util::proptest::{forall, one_of, pair, usize_in, Config, Gen, Prop};
 
@@ -197,13 +202,85 @@ fn garbage_json_falls_back_to_relower() {
 
 #[test]
 fn format_version_bump_falls_back_to_relower() {
-    corruption_falls_back("version", |path| {
-        // a valid document from a future (or ancient) format version.
+    // 999 models a future format; 1 is the real pre-tuned-entry era —
+    // both must be rejected and re-lowered, never half-parsed.
+    for version in [999.0, 1.0] {
+        corruption_falls_back(&format!("version{version}"), |path| {
+            let doc = Json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+            let mut map = doc.as_obj().unwrap().clone();
+            map.insert("format_version".into(), Json::Num(version));
+            std::fs::write(path, Json::Obj(map).to_pretty()).unwrap();
+        });
+    }
+}
+
+#[test]
+fn malformed_tuned_field_falls_back_to_relower() {
+    corruption_falls_back("tuned-corrupt", |path| {
+        // `tuned` must be null or a provenance object; a bare number is
+        // corruption, not "untuned".
         let doc = Json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
         let mut map = doc.as_obj().unwrap().clone();
-        map.insert("format_version".into(), Json::Num(999.0));
+        map.insert("tuned".into(), Json::Num(7.0));
         std::fs::write(path, Json::Obj(map).to_pretty()).unwrap();
     });
+}
+
+fn tuned_pipeline(dir: &Path) -> Pipeline {
+    Pipeline::new(ArchConfig::vck5000())
+        .with_tuning(TuneConfig { mode: TuneMode::Full, max_candidates: 4, shortlist: 2 })
+        .with_disk_store(dir)
+}
+
+#[test]
+fn tuned_entries_warm_start_tuning_pipelines() {
+    let dir = store_dir("tuned");
+    // naive PL movers: the tuner installs the burst variant (`tuned` = 1).
+    let spec = Spec::single(RoutineKind::Axpy, "a", 1 << 16, DataSource::Pl);
+    let writer = tuned_pipeline(&dir);
+    let a = writer.lower(&spec).unwrap();
+    let s = writer.cache().stats();
+    assert_eq!((s.misses, s.disk_writes, s.tuned), (1, 1, 1));
+
+    // a restarted tuning process trusts the persisted search: zero
+    // lowerings, zero searches, one tuned warm start.
+    let reader = tuned_pipeline(&dir);
+    let b = reader.lower(&spec).unwrap();
+    let s = reader.cache().stats();
+    assert_eq!((s.misses, s.disk_hits, s.tune_skipped, s.rejected), (0, 1, 1, 0));
+    assert_eq!(a.graph(), b.graph());
+    assert_eq!(a.placement().locations, b.placement().locations);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn stale_tuner_version_falls_back_to_retune() {
+    let dir = store_dir("tunerver");
+    let spec = Spec::single(RoutineKind::Axpy, "a", 1 << 16, DataSource::Pl);
+    tuned_pipeline(&dir).lower(&spec).unwrap();
+
+    // model an entry tuned by a different tuner generation.
+    let path = entry_path(&dir);
+    let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let mut root = doc.as_obj().unwrap().clone();
+    let mut tuned_obj = root["tuned"].as_obj().unwrap().clone();
+    tuned_obj.insert("tuner_version".into(), Json::Num(999.0));
+    root.insert("tuned".into(), Json::Obj(tuned_obj));
+    std::fs::write(&path, Json::Obj(root).to_pretty()).unwrap();
+
+    // a tuning pipeline must re-run the search rather than trust it...
+    let retune = tuned_pipeline(&dir);
+    retune.lower(&spec).unwrap();
+    let s = retune.cache().stats();
+    assert_eq!((s.rejected, s.misses, s.tune_skipped, s.disk_writes), (1, 1, 0, 1));
+
+    // ...while a non-tuning pipeline takes any valid plan (the entry was
+    // just rewritten under the current tuner version anyway).
+    let off = vck_pipeline(&dir);
+    off.lower(&spec).unwrap();
+    let s = off.cache().stats();
+    assert_eq!((s.misses, s.disk_hits, s.rejected), (0, 1, 0));
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

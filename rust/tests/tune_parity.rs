@@ -1,0 +1,102 @@
+//! Tuned-vs-untuned parity (ISSUE 6 acceptance): the autotuner may change
+//! placement, routing and mover strategy, but never numerics — for every
+//! spec the tuned plan's outputs are **bit-identical** to the untuned
+//! lowering on the Cpu, Reference and Sim backends, and the tuned plan's
+//! simulated makespan never exceeds the untuned one.
+
+use std::sync::Arc;
+
+use aieblas::arch::ArchConfig;
+use aieblas::blas::RoutineKind;
+use aieblas::pipeline::{lower_spec, ExecutablePlan};
+use aieblas::runtime::{Backend, CpuBackend, ExecInputs, ReferenceBackend, SimBackend};
+use aieblas::sim::simulate_plan;
+use aieblas::spec::{DataSource, Spec};
+use aieblas::tune::{tune_spec, TuneConfig, TuneMode};
+use aieblas::util::proptest::{forall, one_of, pair, usize_in, Config, Gen, Prop};
+
+/// Spec set spanning the tuner's interesting shapes: naive PL movers (the
+/// burst-variant win), on-chip generation, multirate (outside the analytic
+/// model), and a composed multi-kernel graph.
+fn parity_specs() -> Vec<Spec> {
+    vec![
+        Spec::single(RoutineKind::Axpy, "a", 1 << 15, DataSource::Pl),
+        Spec::single(RoutineKind::Dot, "d", 1 << 14, DataSource::OnChip),
+        Spec::single(RoutineKind::Gemv, "g", 512, DataSource::Pl),
+        Spec::axpydot_dataflow(1 << 14, 2.0),
+    ]
+}
+
+fn outputs(backend: &dyn Backend, plan: Arc<ExecutablePlan>, inputs: &ExecInputs) -> Vec<Vec<f32>> {
+    let prepared = backend.prepare(plan).unwrap();
+    let outcome = backend.execute(&prepared, inputs).unwrap();
+    outcome.results.into_iter().map(|r| r.output).collect()
+}
+
+/// Bit-exact output comparison of an untuned and a tuned lowering of
+/// `spec` across all three backends; returns an error description.
+fn check_parity(spec: &Spec, cfg: &TuneConfig) -> Result<(), String> {
+    let untuned = Arc::new(lower_spec(spec).map_err(|e| e.to_string())?);
+    let tuned =
+        Arc::new(tune_spec(spec, &ArchConfig::vck5000(), cfg).map_err(|e| e.to_string())?.plan);
+    let inputs = ExecInputs::random_for(spec, 0xBEEF ^ spec.cache_key().len() as u64);
+    let sim = SimBackend::timing_only();
+    let backends: [&dyn Backend; 3] = [&CpuBackend, &ReferenceBackend, &sim];
+    for backend in backends {
+        let a = outputs(backend, untuned.clone(), &inputs);
+        let b = outputs(backend, tuned.clone(), &inputs);
+        if a != b {
+            return Err(format!("{}: tuned outputs differ from untuned", backend.name()));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn full_tuned_plans_execute_bit_identically_to_untuned() {
+    let cfg = TuneConfig { mode: TuneMode::Full, max_candidates: 6, shortlist: 2 };
+    for spec in &parity_specs() {
+        check_parity(spec, &cfg).unwrap();
+    }
+}
+
+#[test]
+fn full_tuning_never_increases_simulated_makespan() {
+    let cfg = TuneConfig { mode: TuneMode::Full, max_candidates: 6, shortlist: 2 };
+    for spec in &parity_specs() {
+        let untuned = simulate_plan(&lower_spec(spec).unwrap()).unwrap().makespan_s;
+        let plan = tune_spec(spec, &ArchConfig::vck5000(), &cfg).unwrap().plan;
+        let tuned = simulate_plan(&plan).unwrap().makespan_s;
+        assert!(tuned <= untuned, "tuned {tuned} > untuned {untuned} for {:?}", spec.cache_key());
+    }
+}
+
+#[test]
+fn analytic_tuned_plans_keep_parity_on_randomized_specs() {
+    // analytic mode runs no DES, so a wider randomized sweep stays cheap.
+    let cfg = TuneConfig { mode: TuneMode::Analytic, max_candidates: 6, shortlist: 2 };
+    let kinds = one_of(vec![
+        RoutineKind::Axpy,
+        RoutineKind::Scal,
+        RoutineKind::Dot,
+        RoutineKind::Copy,
+        RoutineKind::Nrm2,
+    ]);
+    let gen: Gen<Spec> = pair(pair(kinds, usize_in(0, 3)), usize_in(0, 1)).map(
+        |((kind, size_sel), source_sel)| {
+            let size = [1usize << 12, 1000, 1 << 14, 4096][size_sel % 4];
+            let source = if source_sel == 0 { DataSource::Pl } else { DataSource::OnChip };
+            let mut spec = Spec::single(kind, "k", size, source);
+            if size_sel == 2 {
+                spec.routines[0].window = Some(128);
+            }
+            spec
+        },
+    );
+    forall(&gen, Config { cases: 12, ..Default::default() }, |spec| {
+        match check_parity(spec, &cfg) {
+            Ok(()) => Prop::Pass,
+            Err(why) => Prop::Fail(why),
+        }
+    });
+}

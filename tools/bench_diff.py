@@ -38,8 +38,9 @@ def load(path):
 
 
 # Fields timing pinned-old engine configurations: informational context
-# for the speedup columns, never gated.
-BASELINE_FIELD_PREFIXES = ("pr2_", "naive_")
+# for the speedup columns, never gated. ("untuned_" covers the autotuner
+# bench's no-search baseline.)
+BASELINE_FIELD_PREFIXES = ("pr2_", "naive_", "untuned_")
 
 
 def median_fields(case):
