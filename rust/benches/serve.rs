@@ -96,13 +96,13 @@ fn main() {
     let unbatched = drive(
         &workload,
         Arc::new(CpuBackend),
-        ServeConfig { max_batch: 1, linger: Duration::ZERO, queue_capacity: 256, workers: 2 },
+        ServeConfig { max_batch: 1, linger: Duration::ZERO, workers: 2, ..Default::default() },
     );
     rows.push(row("cpu/unbatched", &unbatched));
     let batched = drive(
         &workload,
         Arc::new(CpuBackend),
-        ServeConfig { max_batch: 8, linger, queue_capacity: 256, workers: 2 },
+        ServeConfig { max_batch: 8, linger, workers: 2, ..Default::default() },
     );
     rows.push(row("cpu/batched", &batched));
     let ratio = batched.throughput_rps / unbatched.throughput_rps.max(1e-9);
@@ -113,7 +113,7 @@ fn main() {
         let report = drive(
             &workload,
             Arc::new(ShardedBackend::new(CpuBackend, shards)),
-            ServeConfig { max_batch: 8, linger, queue_capacity: 256, workers: 2 },
+            ServeConfig { max_batch: 8, linger, workers: 2, ..Default::default() },
         );
         rows.push(row(&format!("cpu/sharded_w{shards}"), &report));
     }

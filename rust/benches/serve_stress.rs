@@ -1,0 +1,221 @@
+//! Overload stress benchmark for `RoutineServer` hardening (ISSUE 7):
+//! measures what admission control does when offered load exceeds
+//! capacity, instead of the closed-loop in-capacity view `BENCH_serve`
+//! gives.
+//!
+//! Two phases:
+//! 1. **calibrate** — a closed-loop run under the default `Block` policy
+//!    establishes the sustainable throughput of the (deliberately slowed)
+//!    backend.
+//! 2. **overload_2x** — an open-loop run offers 2x that rate, paced
+//!    across clients, under `RejectWhenFull` with mixed priority classes.
+//!    The server must shed the excess at admission while keeping accepted
+//!    throughput near the calibrated ceiling and high-priority tail
+//!    latency below background tail latency.
+//!
+//! Emits `BENCH_serve_stress.json` (working directory, or under
+//! `AIEBLAS_BENCH_JSON_DIR`). Shed counters are run-size-dependent, so
+//! `tools/bench_diff.py` treats `shed_*` fields as non-regression
+//! baselines. The accounting invariant `attempts == answered + shed` is
+//! asserted in-process for both phases.
+//!
+//! Run: `cargo bench --bench serve_stress`
+//! Smoke mode (CI): `AIEBLAS_BENCH_SMOKE=1` shrinks the workload; no
+//! timing assertions, only the accounting invariant.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use aieblas::arch::ArchConfig;
+use aieblas::blas::RoutineKind;
+use aieblas::pipeline::Pipeline;
+use aieblas::runtime::{CpuBackend, ExecInputs, SlowBackend};
+use aieblas::serve::{
+    AdmissionPolicy, Priority, RequestOpts, RoutineServer, ServeConfig, ServeReport, SubmitOutcome,
+};
+use aieblas::spec::{DataSource, Spec};
+use aieblas::util::json::{obj, Json};
+
+const CLIENTS: usize = 4;
+
+fn specs(n: usize) -> Vec<Spec> {
+    (0..4).map(|i| Spec::single(RoutineKind::Axpy, &format!("r{i}"), n, DataSource::Pl)).collect()
+}
+
+fn server(backend_delay: Duration, policy: AdmissionPolicy) -> RoutineServer {
+    RoutineServer::new(
+        Arc::new(Pipeline::new(ArchConfig::vck5000())),
+        Arc::new(SlowBackend::new(CpuBackend, backend_delay)),
+        ServeConfig {
+            max_batch: 8,
+            linger: Duration::from_micros(100),
+            queue_capacity: 128,
+            workers: 2,
+            policy,
+            ..Default::default()
+        },
+    )
+}
+
+/// Deterministic priority mix by request index: 1/8 high, 3/8 background.
+fn priority_for(i: usize) -> Priority {
+    match i % 8 {
+        0 => Priority::High,
+        1 | 3 | 5 => Priority::Background,
+        _ => Priority::Normal,
+    }
+}
+
+/// Closed loop: every client keeps one request window in flight until the
+/// budget is spent. Establishes the sustainable rate.
+fn calibrate(requests: usize, backend_delay: Duration, specs: &[Spec]) -> ServeReport {
+    let server = server(backend_delay, AdmissionPolicy::Block);
+    std::thread::scope(|s| {
+        for c in 0..CLIENTS {
+            let server = &server;
+            s.spawn(move || {
+                let mut tickets = Vec::new();
+                for r in (c..requests).step_by(CLIENTS) {
+                    let spec = &specs[r % specs.len()];
+                    tickets.push(server.submit(spec, ExecInputs::random_for(spec, r as u64)));
+                }
+                for t in tickets {
+                    t.wait().expect("calibration request failed");
+                }
+            });
+        }
+    });
+    let report = server.join();
+    assert_eq!(
+        report.requests + report.metrics.shed_total(),
+        requests as u64,
+        "calibration accounting must balance"
+    );
+    report
+}
+
+/// Open loop: offer `offered_rps` across the clients for `requests`
+/// attempts, never blocking; excess load must shed, not queue unboundedly.
+fn overload(
+    requests: usize,
+    offered_rps: f64,
+    backend_delay: Duration,
+    specs: &[Spec],
+) -> ServeReport {
+    let server = server(backend_delay, AdmissionPolicy::RejectWhenFull);
+    let interval = Duration::from_secs_f64(CLIENTS as f64 / offered_rps.max(1.0));
+    let shed: u64 = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|c| {
+                let server = &server;
+                s.spawn(move || {
+                    let start = Instant::now();
+                    let mut shed = 0u64;
+                    let mut tickets = Vec::new();
+                    for (k, r) in (c..requests).step_by(CLIENTS).enumerate() {
+                        // fixed-schedule pacing: sleep to the k-th slot so
+                        // a slow server cannot slow the offered rate down.
+                        let due = interval * (k as u32);
+                        let now = start.elapsed();
+                        if due > now {
+                            std::thread::sleep(due - now);
+                        }
+                        let spec = &specs[r % specs.len()];
+                        let opts = RequestOpts::default().with_priority(priority_for(r));
+                        let inputs = ExecInputs::random_for(spec, r as u64);
+                        match server.try_submit(spec, inputs, opts) {
+                            SubmitOutcome::Accepted(t) => tickets.push(t),
+                            SubmitOutcome::Shed(_) => shed += 1,
+                        }
+                    }
+                    for t in tickets {
+                        t.wait().expect("accepted request must be answered");
+                    }
+                    shed
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client panicked")).sum()
+    });
+    let report = server.join();
+    assert_eq!(report.metrics.shed_total(), shed, "client-side and server-side shed counts agree");
+    assert_eq!(
+        report.requests + report.metrics.shed_total(),
+        requests as u64,
+        "overload accounting must balance"
+    );
+    report
+}
+
+fn row(label: &str, offered_rps: f64, attempts: usize, r: &ServeReport) -> Json {
+    let m = &r.metrics;
+    let shed_rate = m.shed_total() as f64 / (attempts as f64).max(1.0);
+    let class_p99 = |class: Priority| {
+        m.priorities.iter().find(|p| p.class == class).map(|p| p.p99_s).unwrap_or(0.0)
+    };
+    let high_p99 = class_p99(Priority::High);
+    let background_p99 = class_p99(Priority::Background);
+    eprintln!(
+        "  {label}: offered {offered_rps:.0} req/s -> {:.0} req/s served, \
+         shed {} ({:.1}%), p99 {:.3} ms (high {:.3} ms / bg {:.3} ms)",
+        r.throughput_rps,
+        m.shed_total(),
+        shed_rate * 100.0,
+        r.p99_latency_s * 1e3,
+        high_p99 * 1e3,
+        background_p99 * 1e3,
+    );
+    obj(vec![
+        ("case", label.into()),
+        ("offered_rps", offered_rps.into()),
+        ("attempts", (attempts as f64).into()),
+        ("requests", (r.requests as f64).into()),
+        ("throughput_rps", r.throughput_rps.into()),
+        ("p50_latency_s", r.p50_latency_s.into()),
+        ("p99_latency_s", r.p99_latency_s.into()),
+        ("high_p99_s", high_p99.into()),
+        ("background_p99_s", background_p99.into()),
+        ("shed_total", (m.shed_total() as f64).into()),
+        ("shed_queue_full", (m.shed_queue_full as f64).into()),
+        ("shed_rate", shed_rate.into()),
+        ("pool_grown", (m.pool_grown as f64).into()),
+    ])
+}
+
+fn main() {
+    aieblas::init();
+    let smoke = std::env::var("AIEBLAS_BENCH_SMOKE").is_ok();
+    let requests = if smoke { 192 } else { 2048 };
+    // the slow backend bounds capacity at roughly
+    // max_batch / delay per dispatcher, so overload is reachable quickly.
+    let backend_delay = Duration::from_micros(if smoke { 500 } else { 250 });
+    let specs = specs(if smoke { 256 } else { 4096 });
+    eprintln!("== bench: serve_stress ({requests} requests, {CLIENTS} clients, smoke={smoke}) ==");
+
+    let calibrated = calibrate(requests, backend_delay, &specs);
+    let sustainable_rps = calibrated.throughput_rps;
+    eprintln!("  calibrate: sustainable {sustainable_rps:.0} req/s (block policy)");
+
+    let offered_rps = (2.0 * sustainable_rps).max(100.0);
+    let overloaded = overload(requests, offered_rps, backend_delay, &specs);
+
+    let doc = obj(vec![
+        ("bench", "serve_stress".into()),
+        ("unit", "seconds".into()),
+        ("smoke", smoke.into()),
+        ("sustainable_rps", sustainable_rps.into()),
+        (
+            "cases",
+            Json::Arr(vec![
+                row("calibrate", sustainable_rps, requests, &calibrated),
+                row("overload_2x", offered_rps, requests, &overloaded),
+            ]),
+        ),
+    ]);
+    let dir = std::env::var("AIEBLAS_BENCH_JSON_DIR").unwrap_or_else(|_| ".".into());
+    let path = format!("{dir}/BENCH_serve_stress.json");
+    match std::fs::write(&path, doc.to_pretty() + "\n") {
+        Ok(()) => eprintln!("wrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+}

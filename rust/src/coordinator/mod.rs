@@ -44,6 +44,9 @@ pub struct Config {
     /// Placement-autotuner policy for cold lowerings (`crate::tune`);
     /// defaults to off (install the first valid plan).
     pub tune: TuneConfig,
+    /// Serving-layer defaults (admission policy, quotas, pool bounds)
+    /// used by [`AieBlas::serve_default`].
+    pub serve: ServeConfig,
 }
 
 impl Default for Config {
@@ -56,6 +59,7 @@ impl Default for Config {
             plan_cache_capacity: Pipeline::DEFAULT_CACHE_CAPACITY,
             cache_dir: None,
             tune: TuneConfig::default(),
+            serve: ServeConfig::default(),
         }
     }
 }
@@ -161,6 +165,13 @@ impl AieBlas {
     /// request queue, same-plan batching, `backend`-pool dispatch.
     pub fn serve(&self, backend: Arc<dyn Backend>, cfg: ServeConfig) -> RoutineServer {
         RoutineServer::new(self.pipeline.clone(), backend, cfg)
+    }
+
+    /// [`AieBlas::serve`] with this system's configured serving defaults
+    /// (`Config::serve`), so deployments set admission policy, quotas and
+    /// pool bounds once at system construction.
+    pub fn serve_default(&self, backend: Arc<dyn Backend>) -> RoutineServer {
+        self.serve(backend, self.config.serve.clone())
     }
 
     /// Lower a spec through the staged pipeline (cached).

@@ -13,9 +13,10 @@
 //!   plan cache) → execution behind the [`runtime::Backend`] trait
 //!   (`SimBackend` / `CpuBackend` / `ReferenceBackend`, batched via
 //!   `execute_batch`, fanned out by `ShardedBackend`) → concurrent serving
-//!   via [`serve::RoutineServer`] (bounded queue + same-plan batching +
-//!   backend pool), plus the experiment harness reproducing the paper's
-//!   Fig. 3.
+//!   via [`serve::RoutineServer`] (admission control + priority-laned
+//!   bounded queue + same-plan batching + adaptive backend pool, with
+//!   deadline handling and graceful drain), plus the experiment harness
+//!   reproducing the paper's Fig. 3.
 //! * **L2 (`python/compile/model.py`)** — JAX routine graphs.
 //! * **L1 (`python/compile/kernels/`)** — window-tiled Pallas kernels.
 //!

@@ -70,6 +70,8 @@ fn app() -> App {
                 .opt_default("linger-us", "200", "batching linger, microseconds")
                 .opt_default("clients", "4", "client submitter threads")
                 .opt_default("backend", "cpu", "cpu | reference | sim")
+                .opt_default("policy", "block", "admission policy: block | reject | watermark:<n>")
+                .opt("metrics-json", "write the batched run's ServeReport JSON to this path")
                 .opt("cache-dir", "persistent plan-store directory shared across runs")
                 .flag(
                     "assert-warm",
@@ -396,7 +398,7 @@ fn serve_bench(m: &Matches) -> CliResult {
     use aieblas::runtime::{
         Backend, CpuBackend, ExecInputs, ReferenceBackend, ShardedBackend, SimBackend,
     };
-    use aieblas::serve::{RoutineServer, ServeConfig, ServeReport};
+    use aieblas::serve::{AdmissionPolicy, RoutineServer, ServeConfig, ServeReport};
     use aieblas::spec::DataSource;
 
     let requests = m.usize("requests")?.max(1);
@@ -408,6 +410,10 @@ fn serve_bench(m: &Matches) -> CliResult {
     let linger = Duration::from_micros(m.usize("linger-us")? as u64);
     let clients = m.usize("clients")?.max(1);
     let backend_name = m.get("backend").unwrap().to_string();
+    let policy_str = m.get("policy").unwrap().to_string();
+    let policy = AdmissionPolicy::parse(&policy_str)
+        .ok_or_else(|| format!("bad --policy {policy_str:?} (block | reject | watermark:<n>)"))?;
+    let metrics_json = m.get("metrics-json").map(PathBuf::from);
     let cache_dir = m.get("cache-dir").map(PathBuf::from);
     let assert_warm = m.has_flag("assert-warm");
     if assert_warm && cache_dir.is_none() {
@@ -441,7 +447,7 @@ fn serve_bench(m: &Matches) -> CliResult {
         let server = RoutineServer::new(
             Arc::new(pipeline),
             make_backend(shards)?,
-            ServeConfig { max_batch, linger, queue_capacity: 256, workers },
+            ServeConfig { max_batch, linger, workers, policy, ..Default::default() },
         );
         std::thread::scope(|s| {
             for c in 0..clients {
@@ -454,7 +460,15 @@ fn serve_bench(m: &Matches) -> CliResult {
                         tickets.push(server.submit(spec, ExecInputs::random_for(spec, r as u64)));
                     }
                     for t in tickets {
-                        t.wait().expect("serve request failed");
+                        // non-block policies legitimately shed under load;
+                        // anything else is a real serving failure.
+                        if let Err(e) = t.wait() {
+                            let msg = e.to_string();
+                            assert!(
+                                msg.contains("shed at admission"),
+                                "serve request failed: {msg}"
+                            );
+                        }
                     }
                 });
             }
@@ -478,6 +492,11 @@ fn serve_bench(m: &Matches) -> CliResult {
         "batched vs unbatched throughput: {:.2}x",
         batched.throughput_rps / unbatched.throughput_rps.max(1e-9)
     );
+    if let Some(path) = &metrics_json {
+        std::fs::write(path, batched.to_json().to_pretty() + "\n")
+            .map_err(|e| format!("could not write {}: {e}", path.display()))?;
+        println!("wrote serve metrics to {}", path.display());
+    }
     if assert_warm {
         // CI warm-start gate: a run against a prewarmed --cache-dir must
         // never lower (every cold lookup is a disk hit).

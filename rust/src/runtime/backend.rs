@@ -24,7 +24,7 @@
 //! methods — see DESIGN.md §3 for a worked ≤30-line example.
 
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::blas::RoutineKind;
 use crate::pipeline::ExecutablePlan;
@@ -764,6 +764,57 @@ impl<B: Backend> Backend for ShardedBackend<B> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// SlowBackend
+// ---------------------------------------------------------------------------
+
+/// Latency-injection adapter: delays every execute call by a fixed amount,
+/// then delegates. Name-transparent (reports the inner backend's name) and
+/// numerics-transparent, so substitution arguments about the wrapped
+/// backend carry over unchanged.
+///
+/// This is the serving hardening suite's load generator: a deterministic
+/// "slow device" that keeps dispatchers busy long enough for queues to
+/// fill, deadlines to expire, quotas to bind and the adaptive pool to
+/// react — without depending on scheduler timing of real work.
+pub struct SlowBackend<B> {
+    inner: B,
+    delay: Duration,
+}
+
+impl<B: Backend> SlowBackend<B> {
+    pub fn new(inner: B, delay: Duration) -> SlowBackend<B> {
+        SlowBackend { inner, delay }
+    }
+
+    pub fn inner(&self) -> &B {
+        &self.inner
+    }
+}
+
+impl<B: Backend> Backend for SlowBackend<B> {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn prepare(&self, plan: Arc<ExecutablePlan>) -> Result<Prepared> {
+        self.inner.prepare(plan)
+    }
+
+    fn execute(&self, prepared: &Prepared, inputs: &ExecInputs) -> Result<ExecOutcome> {
+        std::thread::sleep(self.delay);
+        self.inner.execute(prepared, inputs)
+    }
+
+    /// One delay per *batch* (not per request): the adapter models slow
+    /// per-dispatch device setup, and keeping the batch path cheaper than
+    /// n sequential executes preserves the incentive batching exists for.
+    fn execute_batch(&self, prepared: &Prepared, batch: &[ExecInputs]) -> Vec<Result<ExecOutcome>> {
+        std::thread::sleep(self.delay);
+        self.inner.execute_batch(prepared, batch)
+    }
+}
+
 // the serving layer holds backends behind Arc<dyn Backend> across threads.
 const _: fn() = || {
     fn assert_send_sync<T: Send + Sync>() {}
@@ -771,6 +822,7 @@ const _: fn() = || {
     assert_send_sync::<CpuBackend>();
     assert_send_sync::<ReferenceBackend>();
     assert_send_sync::<ShardedBackend<CpuBackend>>();
+    assert_send_sync::<SlowBackend<CpuBackend>>();
 };
 
 #[cfg(test)]
@@ -909,6 +961,20 @@ mod tests {
         let spec = Spec::single(RoutineKind::Dot, "d", 256, DataSource::Pl);
         let prepared = CpuBackend.prepare(plan(&spec)).unwrap();
         assert!(CpuBackend.execute(&prepared, &ExecInputs::default()).is_err());
+    }
+
+    #[test]
+    fn slow_backend_is_name_and_numerics_transparent() {
+        let spec = Spec::single(RoutineKind::Axpy, "a", 256, DataSource::Pl);
+        let p = plan(&spec);
+        let inputs = ExecInputs::random_for(&spec, 7);
+        let slow = SlowBackend::new(CpuBackend, Duration::from_millis(1));
+        assert_eq!(slow.name(), CpuBackend.name());
+        let t0 = Instant::now();
+        let out = slow.execute(&slow.prepare(p.clone()).unwrap(), &inputs).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(1), "delay must be injected");
+        let direct = CpuBackend.execute(&CpuBackend.prepare(p).unwrap(), &inputs).unwrap();
+        assert_eq!(out.results[0].output, direct.results[0].output, "bit-identical delegation");
     }
 
     #[test]

@@ -22,7 +22,7 @@ use std::sync::Mutex;
 
 pub use backend::{
     Backend, CpuBackend, ExecInputs, ExecOutcome, Prepared, ReferenceBackend, RoutineResult,
-    ShardedBackend, SimBackend,
+    ShardedBackend, SimBackend, SlowBackend,
 };
 pub use manifest::Manifest;
 

@@ -1,0 +1,374 @@
+//! Admission control for the serving layer (DESIGN.md §9).
+//!
+//! Everything that decides whether a request *enters* the queue — and in
+//! what order it *leaves* — lives here: priority classes, per-tenant
+//! in-flight quotas, deadline screening, and the configurable shed
+//! policy. The dispatcher side (`mod.rs`) only sees a [`QueueState`] that
+//! hands out requests priority-first; the accounting invariant the chaos
+//! suite checks (`attempts == answered + shed`) is enforced by routing
+//! every admission decision through [`QueueState::admit`].
+
+use std::collections::{HashMap, VecDeque};
+use std::fmt;
+
+use super::{Request, ServeConfig, Ticket};
+
+/// Scheduling class carried by each request. Dispatchers drain `High`
+/// before `Normal` before `Background`; the watermark shed policy exempts
+/// `High` so latency-critical traffic keeps headroom under overload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Priority {
+    High,
+    #[default]
+    Normal,
+    Background,
+}
+
+impl Priority {
+    pub const ALL: [Priority; 3] = [Priority::High, Priority::Normal, Priority::Background];
+
+    /// Queue-lane index (0 drains first).
+    pub(crate) fn lane(self) -> usize {
+        match self {
+            Priority::High => 0,
+            Priority::Normal => 1,
+            Priority::Background => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::High => "high",
+            Priority::Normal => "normal",
+            Priority::Background => "background",
+        }
+    }
+
+    /// Parse a CLI/config spelling (`high` / `normal` / `background`).
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "high" => Some(Priority::High),
+            "normal" => Some(Priority::Normal),
+            "background" | "bg" => Some(Priority::Background),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Priority {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Per-request submission options: tenant attribution, priority class and
+/// an optional absolute deadline. `RequestOpts::default()` reproduces the
+/// pre-hardening behavior exactly (untenanted, `Normal`, no deadline).
+#[derive(Debug, Clone, Default)]
+pub struct RequestOpts {
+    /// Quota bucket; `None` (or an empty string) means untenanted traffic,
+    /// which is never quota-limited.
+    pub tenant: Option<String>,
+    pub priority: Priority,
+    /// Requests whose deadline has passed are shed at submit, or dropped
+    /// at dequeue before wasting a backend run.
+    pub deadline: Option<std::time::Instant>,
+}
+
+impl RequestOpts {
+    pub fn tenant(mut self, tenant: &str) -> Self {
+        self.tenant = Some(tenant.to_string());
+        self
+    }
+
+    pub fn with_priority(mut self, priority: Priority) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    /// Deadline `d` from now.
+    pub fn with_deadline_in(mut self, d: std::time::Duration) -> Self {
+        self.deadline = Some(std::time::Instant::now() + d);
+        self
+    }
+}
+
+/// What `submit` does when the queue is at capacity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AdmissionPolicy {
+    /// Block the submitter until space frees (back-pressure; the
+    /// pre-hardening behavior, and still the default so `serve_all`
+    /// callers see identical semantics).
+    #[default]
+    Block,
+    /// Shed with [`ShedReason::QueueFull`] instead of blocking.
+    RejectWhenFull,
+    /// Shed non-`High` requests once the queue holds this many entries,
+    /// reserving the remaining headroom for `High` traffic. A full queue
+    /// still sheds everything.
+    RejectAboveWatermark(usize),
+}
+
+impl AdmissionPolicy {
+    /// Parse a CLI spelling: `block`, `reject` / `reject-when-full`, or
+    /// `watermark:<n>`.
+    pub fn parse(s: &str) -> Option<AdmissionPolicy> {
+        let s = s.trim().to_ascii_lowercase();
+        match s.as_str() {
+            "block" => Some(AdmissionPolicy::Block),
+            "reject" | "reject-when-full" => Some(AdmissionPolicy::RejectWhenFull),
+            _ => {
+                let n = s.strip_prefix("watermark:")?;
+                Some(AdmissionPolicy::RejectAboveWatermark(n.parse().ok()?))
+            }
+        }
+    }
+}
+
+/// Why a request was refused at admission. Each reason has its own shed
+/// counter in `ServeMetrics`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    QueueFull,
+    AboveWatermark,
+    TenantQuota,
+    /// The server is draining or shut down; no worker will ever answer.
+    Draining,
+    /// The deadline had already passed at submit time.
+    DeadlineExpired,
+}
+
+impl ShedReason {
+    pub const ALL: [ShedReason; 5] = [
+        ShedReason::QueueFull,
+        ShedReason::AboveWatermark,
+        ShedReason::TenantQuota,
+        ShedReason::Draining,
+        ShedReason::DeadlineExpired,
+    ];
+
+    pub(crate) fn index(self) -> usize {
+        match self {
+            ShedReason::QueueFull => 0,
+            ShedReason::AboveWatermark => 1,
+            ShedReason::TenantQuota => 2,
+            ShedReason::Draining => 3,
+            ShedReason::DeadlineExpired => 4,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ShedReason::QueueFull => "queue full",
+            ShedReason::AboveWatermark => "above watermark",
+            ShedReason::TenantQuota => "tenant quota exceeded",
+            ShedReason::Draining => "server draining",
+            ShedReason::DeadlineExpired => "deadline expired",
+        }
+    }
+}
+
+impl fmt::Display for ShedReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Result of a non-blocking [`super::RoutineServer::try_submit`].
+pub enum SubmitOutcome {
+    /// The request is queued; wait on the ticket for its outcome.
+    Accepted(Ticket),
+    /// The request was refused and will never run.
+    Shed(ShedReason),
+}
+
+impl SubmitOutcome {
+    pub fn is_accepted(&self) -> bool {
+        matches!(self, SubmitOutcome::Accepted(_))
+    }
+
+    pub fn ticket(self) -> Option<Ticket> {
+        match self {
+            SubmitOutcome::Accepted(t) => Some(t),
+            SubmitOutcome::Shed(_) => None,
+        }
+    }
+
+    pub fn shed_reason(&self) -> Option<ShedReason> {
+        match self {
+            SubmitOutcome::Accepted(_) => None,
+            SubmitOutcome::Shed(r) => Some(*r),
+        }
+    }
+}
+
+/// Internal admission verdict: `Full` means "would block under the Block
+/// policy" — the caller decides whether to wait or shed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Admission {
+    Admit,
+    Full,
+    Shed(ShedReason),
+}
+
+/// The priority-laned queue plus the tenant ledger, guarded as one unit by
+/// the server's queue mutex. `accepted`/`answered` count every request
+/// that ever entered a lane and every request that left with a response —
+/// `is_idle` (drain's exit condition) is true only when both the lanes are
+/// empty *and* nothing is in flight between dequeue and response.
+#[derive(Default)]
+pub(crate) struct QueueState {
+    lanes: [VecDeque<Request>; 3],
+    len: usize,
+    /// In-flight (queued or dispatched, not yet answered) count per tenant.
+    tenants: HashMap<String, usize>,
+    pub(crate) accepted: u64,
+    pub(crate) answered: u64,
+}
+
+impl QueueState {
+    pub(crate) fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Decide whether `req` may enter the queue. Quota is checked before
+    /// capacity: an over-quota tenant is shed even when the queue has
+    /// room, so the reason it sees is stable across load levels.
+    pub(crate) fn admit(&self, cfg: &ServeConfig, req: &Request) -> Admission {
+        if cfg.max_inflight_per_tenant > 0 {
+            if let Some(tenant) = &req.tenant {
+                let inflight = self.tenants.get(tenant).copied().unwrap_or(0);
+                if inflight >= cfg.max_inflight_per_tenant {
+                    return Admission::Shed(ShedReason::TenantQuota);
+                }
+            }
+        }
+        if self.len >= cfg.queue_capacity {
+            return match cfg.policy {
+                AdmissionPolicy::Block => Admission::Full,
+                _ => Admission::Shed(ShedReason::QueueFull),
+            };
+        }
+        if let AdmissionPolicy::RejectAboveWatermark(w) = cfg.policy {
+            // clamp: watermark 0 would shed everything, watermark above
+            // capacity would never trigger before QueueFull anyway.
+            let w = w.clamp(1, cfg.queue_capacity);
+            if req.priority != Priority::High && self.len >= w {
+                return Admission::Shed(ShedReason::AboveWatermark);
+            }
+        }
+        Admission::Admit
+    }
+
+    /// Enqueue an admitted request (caller has already checked `admit`).
+    pub(crate) fn push(&mut self, req: Request) {
+        if let Some(tenant) = &req.tenant {
+            *self.tenants.entry(tenant.clone()).or_insert(0) += 1;
+        }
+        self.accepted += 1;
+        self.len += 1;
+        self.lanes[req.priority.lane()].push_back(req);
+    }
+
+    /// Dequeue the oldest request from the highest non-empty lane.
+    pub(crate) fn pop(&mut self) -> Option<Request> {
+        for lane in &mut self.lanes {
+            if let Some(req) = lane.pop_front() {
+                self.len -= 1;
+                return Some(req);
+            }
+        }
+        None
+    }
+
+    /// Resumable coalesce scan: starting at `*idx` in `lane`, remove and
+    /// return the next request whose plan key is `key`. Entries skipped
+    /// advance `*idx`, so a linger wakeup resumes where the last scan
+    /// stopped instead of rescanning the prefix under the lock.
+    pub(crate) fn take_matching(
+        &mut self,
+        lane: usize,
+        idx: &mut usize,
+        key: &crate::pipeline::PlanKey,
+    ) -> Option<Request> {
+        while *idx < self.lanes[lane].len() {
+            if self.lanes[lane][*idx].key == *key {
+                let req = self.lanes[lane].remove(*idx).expect("index checked");
+                self.len -= 1;
+                return Some(req);
+            }
+            *idx += 1;
+        }
+        None
+    }
+
+    /// Account one dequeued request as answered (response sent, or about
+    /// to be): releases its tenant quota slot.
+    pub(crate) fn note_done(&mut self, req: &Request) {
+        self.answered += 1;
+        if let Some(tenant) = &req.tenant {
+            if let Some(n) = self.tenants.get_mut(tenant) {
+                *n -= 1;
+                if *n == 0 {
+                    self.tenants.remove(tenant);
+                }
+            }
+        }
+    }
+
+    /// True when the lanes are empty and every accepted request has been
+    /// answered — drain's exit condition.
+    pub(crate) fn is_idle(&self) -> bool {
+        self.len == 0 && self.accepted == self.answered
+    }
+
+    /// Empty every lane (drain timeout path); the caller answers and
+    /// accounts each returned request.
+    pub(crate) fn drain_all(&mut self) -> Vec<Request> {
+        let mut out = Vec::with_capacity(self.len);
+        for lane in &mut self.lanes {
+            out.extend(lane.drain(..));
+        }
+        self.len = 0;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn priority_parse_and_lanes() {
+        assert_eq!(Priority::parse("HIGH"), Some(Priority::High));
+        assert_eq!(Priority::parse("bg"), Some(Priority::Background));
+        assert_eq!(Priority::parse("urgent"), None);
+        assert_eq!(Priority::default(), Priority::Normal);
+        let lanes: Vec<usize> = Priority::ALL.iter().map(|p| p.lane()).collect();
+        assert_eq!(lanes, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn policy_parse() {
+        assert_eq!(AdmissionPolicy::parse("block"), Some(AdmissionPolicy::Block));
+        assert_eq!(AdmissionPolicy::parse("reject"), Some(AdmissionPolicy::RejectWhenFull));
+        assert_eq!(
+            AdmissionPolicy::parse("reject-when-full"),
+            Some(AdmissionPolicy::RejectWhenFull)
+        );
+        assert_eq!(
+            AdmissionPolicy::parse("watermark:12"),
+            Some(AdmissionPolicy::RejectAboveWatermark(12))
+        );
+        assert_eq!(AdmissionPolicy::parse("watermark:lots"), None);
+        assert_eq!(AdmissionPolicy::parse("drop"), None);
+    }
+
+    #[test]
+    fn shed_reason_indices_cover_all() {
+        for (i, r) in ShedReason::ALL.iter().enumerate() {
+            assert_eq!(r.index(), i);
+            assert!(!r.name().is_empty());
+        }
+    }
+}

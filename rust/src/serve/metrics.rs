@@ -1,0 +1,530 @@
+//! Serving-layer statistics and machine-readable metrics (DESIGN.md §9).
+//!
+//! Split from `mod.rs` so the hot path is honest about what it touches:
+//! workers record into [`StatsInner`] under the stats mutex and bump
+//! lock-free [`Counters`]; `report()` takes a [`StatsSnapshot`] (clones
+//! only) and does all sorting *outside* the lock, so a 65k-sample
+//! percentile sort can no longer stall every dispatcher mid-dispatch.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::time::Instant;
+
+use super::admission::{Priority, ShedReason};
+use super::ServeConfig;
+use crate::pipeline::CacheStats;
+use crate::util::json::{obj, Json};
+
+/// Latency/queue-wait samples kept for percentile reporting. A ring of
+/// the most recent samples bounds server memory (and `report()`'s sort)
+/// regardless of how many requests a long-lived server answers.
+pub(crate) const STAT_SAMPLE_CAP: usize = 65_536;
+
+/// Per-priority-class latency rings are smaller: three of them exist and
+/// they only feed the p50/p99 columns.
+pub(crate) const PRIO_SAMPLE_CAP: usize = 16_384;
+
+/// At most this many distinct tenants get their own completion counter;
+/// the rest share an `"<other>"` bucket so hostile tenant-id cardinality
+/// cannot grow server memory without bound.
+pub(crate) const TENANT_METRIC_CAP: usize = 32;
+
+/// Record into a bounded ring: grow until the cap, then overwrite the
+/// slot of the `count`-th request (oldest-first).
+pub(crate) fn record_sample(samples: &mut Vec<f64>, cap: usize, count: u64, value: f64) {
+    if samples.len() < cap {
+        samples.push(value);
+    } else {
+        samples[(count % cap as u64) as usize] = value;
+    }
+}
+
+#[derive(Default)]
+pub(crate) struct StatsInner {
+    pub(crate) completed: u64,
+    pub(crate) failed: u64,
+    pub(crate) batches: u64,
+    pub(crate) batch_size_sum: u64,
+    pub(crate) max_batch: usize,
+    /// Per-request submit→response seconds (most recent `STAT_SAMPLE_CAP`).
+    pub(crate) latencies: Vec<f64>,
+    /// Per-request submit→dequeue seconds (most recent `STAT_SAMPLE_CAP`).
+    pub(crate) queue_waits: Vec<f64>,
+    /// Submit→response seconds by priority lane (High/Normal/Background).
+    pub(crate) lat_by_prio: [Vec<f64>; 3],
+    pub(crate) count_by_prio: [u64; 3],
+    /// Completions per tenant (bounded by `TENANT_METRIC_CAP`).
+    pub(crate) completed_by_tenant: HashMap<String, u64>,
+    pub(crate) last_done: Option<Instant>,
+}
+
+impl StatsInner {
+    /// Account one answered request. `done` is when the response was sent;
+    /// `last_done` stays monotonic so a late-locking worker with an
+    /// earlier completion cannot move the span's end backwards.
+    pub(crate) fn record_request(
+        &mut self,
+        priority: Priority,
+        tenant: Option<&str>,
+        latency_s: f64,
+        wait_s: f64,
+        failed: bool,
+        done: Instant,
+    ) {
+        let idx = self.completed;
+        self.completed += 1;
+        if failed {
+            self.failed += 1;
+        }
+        record_sample(&mut self.latencies, STAT_SAMPLE_CAP, idx, latency_s);
+        record_sample(&mut self.queue_waits, STAT_SAMPLE_CAP, idx, wait_s);
+        let lane = priority.lane();
+        let lane_count = self.count_by_prio[lane];
+        record_sample(&mut self.lat_by_prio[lane], PRIO_SAMPLE_CAP, lane_count, latency_s);
+        self.count_by_prio[lane] += 1;
+        if let Some(tenant) = tenant {
+            let key = if self.completed_by_tenant.len() >= TENANT_METRIC_CAP
+                && !self.completed_by_tenant.contains_key(tenant)
+            {
+                "<other>"
+            } else {
+                tenant
+            };
+            *self.completed_by_tenant.entry(key.to_string()).or_insert(0) += 1;
+        }
+        self.last_done = Some(self.last_done.map_or(done, |prev| prev.max(done)));
+    }
+
+    /// Clone the report's inputs while holding the stats lock; sorting
+    /// happens on the snapshot, outside it.
+    pub(crate) fn snapshot(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            completed: self.completed,
+            failed: self.failed,
+            batches: self.batches,
+            batch_size_sum: self.batch_size_sum,
+            max_batch: self.max_batch,
+            latencies: self.latencies.clone(),
+            queue_waits: self.queue_waits.clone(),
+            lat_by_prio: self.lat_by_prio.clone(),
+            count_by_prio: self.count_by_prio,
+            completed_by_tenant: self.completed_by_tenant.clone(),
+            last_done: self.last_done,
+        }
+    }
+}
+
+pub(crate) struct StatsSnapshot {
+    pub(crate) completed: u64,
+    pub(crate) failed: u64,
+    pub(crate) batches: u64,
+    pub(crate) batch_size_sum: u64,
+    pub(crate) max_batch: usize,
+    pub(crate) latencies: Vec<f64>,
+    pub(crate) queue_waits: Vec<f64>,
+    pub(crate) lat_by_prio: [Vec<f64>; 3],
+    pub(crate) count_by_prio: [u64; 3],
+    pub(crate) completed_by_tenant: HashMap<String, u64>,
+    pub(crate) last_done: Option<Instant>,
+}
+
+/// Lock-free event counters bumped outside any mutex.
+#[derive(Default)]
+pub(crate) struct Counters {
+    /// Sheds by [`ShedReason::index`].
+    pub(crate) shed: [AtomicU64; 5],
+    /// Requests dropped at dequeue because their deadline had passed.
+    pub(crate) deadline_missed: AtomicU64,
+    /// Requests purged (answered with an error) by a drain timeout.
+    pub(crate) drain_purged: AtomicU64,
+    pub(crate) pool_grown: AtomicU64,
+    pub(crate) pool_shrunk: AtomicU64,
+}
+
+impl Counters {
+    pub(crate) fn shed(&self, reason: ShedReason) {
+        self.shed[reason.index()].fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Adaptive-pool state: the current dispatcher count plus a queue-wait
+/// EWMA. The EWMA is stored as f64 bits in an atomic; concurrent
+/// observers may drop an update under a race, which only slows the
+/// signal — it steers pool sizing, not accounting.
+pub(crate) struct PoolState {
+    pub(crate) active: AtomicUsize,
+    wait_ewma_bits: AtomicU64,
+}
+
+const EWMA_ALPHA: f64 = 0.2;
+
+impl PoolState {
+    pub(crate) fn new(workers: usize) -> PoolState {
+        PoolState { active: AtomicUsize::new(workers), wait_ewma_bits: AtomicU64::new(0) }
+    }
+
+    pub(crate) fn observe_wait(&self, wait_s: f64) {
+        let prev = f64::from_bits(self.wait_ewma_bits.load(Ordering::Relaxed));
+        let next = if prev == 0.0 { wait_s } else { prev + EWMA_ALPHA * (wait_s - prev) };
+        self.wait_ewma_bits.store(next.to_bits(), Ordering::Relaxed);
+    }
+
+    pub(crate) fn wait_ewma(&self) -> f64 {
+        f64::from_bits(self.wait_ewma_bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Latency percentiles for one priority class.
+#[derive(Debug, Clone)]
+pub struct PriorityLatency {
+    pub class: Priority,
+    pub completed: u64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+}
+
+/// Machine-readable hardening counters: everything admission control,
+/// deadlines, drain and the adaptive pool did to this server's traffic.
+#[derive(Debug, Clone, Default)]
+pub struct ServeMetrics {
+    pub shed_queue_full: u64,
+    pub shed_watermark: u64,
+    pub shed_tenant_quota: u64,
+    pub shed_draining: u64,
+    pub shed_deadline: u64,
+    /// Dropped at dequeue (deadline passed while queued).
+    pub deadline_missed: u64,
+    /// Answered with an error by a drain timeout purge.
+    pub drain_purged: u64,
+    pub pool_grown: u64,
+    pub pool_shrunk: u64,
+    /// Dispatchers alive when the report was taken.
+    pub pool_workers: usize,
+    pub pool_min_workers: usize,
+    pub pool_max_workers: usize,
+    /// One entry per priority class (High, Normal, Background).
+    pub priorities: Vec<PriorityLatency>,
+    /// Completions per tenant (at most `TENANT_METRIC_CAP` + `<other>`).
+    pub tenants: Vec<(String, u64)>,
+}
+
+impl ServeMetrics {
+    /// Requests refused at admission, all reasons.
+    pub fn shed_total(&self) -> u64 {
+        self.shed_queue_full
+            + self.shed_watermark
+            + self.shed_tenant_quota
+            + self.shed_draining
+            + self.shed_deadline
+    }
+
+    pub fn to_json(&self) -> Json {
+        let priorities = Json::Arr(
+            self.priorities
+                .iter()
+                .map(|p| {
+                    obj(vec![
+                        ("class", p.class.name().into()),
+                        ("completed", (p.completed as f64).into()),
+                        ("p50_s", p.p50_s.into()),
+                        ("p99_s", p.p99_s.into()),
+                    ])
+                })
+                .collect(),
+        );
+        let tenants = Json::Arr(
+            self.tenants
+                .iter()
+                .map(|(t, n)| {
+                    obj(vec![("tenant", t.as_str().into()), ("completed", (*n as f64).into())])
+                })
+                .collect(),
+        );
+        obj(vec![
+            ("shed_queue_full", (self.shed_queue_full as f64).into()),
+            ("shed_watermark", (self.shed_watermark as f64).into()),
+            ("shed_tenant_quota", (self.shed_tenant_quota as f64).into()),
+            ("shed_draining", (self.shed_draining as f64).into()),
+            ("shed_deadline", (self.shed_deadline as f64).into()),
+            ("shed_total", (self.shed_total() as f64).into()),
+            ("deadline_missed", (self.deadline_missed as f64).into()),
+            ("drain_purged", (self.drain_purged as f64).into()),
+            ("pool_grown", (self.pool_grown as f64).into()),
+            ("pool_shrunk", (self.pool_shrunk as f64).into()),
+            ("pool_workers", self.pool_workers.into()),
+            ("pool_min_workers", self.pool_min_workers.into()),
+            ("pool_max_workers", self.pool_max_workers.into()),
+            ("priorities", priorities),
+            ("tenants", tenants),
+        ])
+    }
+}
+
+/// Queueing/batching/latency statistics for one server's lifetime.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    /// Requests answered (including failures). Shed requests never enter
+    /// this count: `attempts == requests + metrics.shed_total()`.
+    pub requests: u64,
+    /// Requests answered with an error.
+    pub failed: u64,
+    /// Batches dispatched to the backend.
+    pub batches: u64,
+    /// Mean coalesced batch size (requests / batches).
+    pub mean_batch: f64,
+    /// Largest batch dispatched.
+    pub max_batch: usize,
+    /// Median submit→response latency, seconds (over a bounded window of
+    /// the most recent `STAT_SAMPLE_CAP` requests).
+    pub p50_latency_s: f64,
+    /// 99th-percentile submit→response latency, seconds (same window).
+    pub p99_latency_s: f64,
+    /// Median submit→dequeue wait, seconds (queueing delay, same window).
+    pub p50_queue_wait_s: f64,
+    /// First submit → last response span, seconds.
+    pub wall_s: f64,
+    /// Requests per second over `wall_s`.
+    pub throughput_rps: f64,
+    /// Shared plan-cache counters (hits/misses/evictions/coalesced).
+    pub cache: CacheStats,
+    /// Admission/deadline/drain/pool hardening counters.
+    pub metrics: ServeMetrics,
+}
+
+impl ServeReport {
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "served {} request(s) ({} failed) in {} batch(es), mean batch {:.2} (max {})\n\
+             latency p50 {:.3} ms / p99 {:.3} ms, queue wait p50 {:.3} ms\n\
+             throughput {:.0} req/s over {:.3} s\n\
+             plan cache: {} hit(s) ({} coalesced) / {} miss(es), {} eviction(s), {} resident\n\
+             plan store: {} disk hit(s), {} write(s), {} rejected",
+            self.requests,
+            self.failed,
+            self.batches,
+            self.mean_batch,
+            self.max_batch,
+            self.p50_latency_s * 1e3,
+            self.p99_latency_s * 1e3,
+            self.p50_queue_wait_s * 1e3,
+            self.throughput_rps,
+            self.wall_s,
+            self.cache.hits,
+            self.cache.coalesced,
+            self.cache.misses,
+            self.cache.evictions,
+            self.cache.entries,
+            self.cache.disk_hits,
+            self.cache.disk_writes,
+            self.cache.rejected,
+        );
+        if self.cache.tuned + self.cache.tune_skipped > 0 {
+            s.push_str(&format!(
+                "\nautotuner: {} tuned lowering(s), {} tuned warm start(s)",
+                self.cache.tuned, self.cache.tune_skipped
+            ));
+        }
+        let m = &self.metrics;
+        if m.shed_total() > 0 || m.deadline_missed > 0 || m.drain_purged > 0 {
+            s.push_str(&format!(
+                "\nadmission: {} shed (full {}, watermark {}, quota {}, draining {}, deadline {}), \
+                 {} deadline miss(es), {} drain-purged",
+                m.shed_total(),
+                m.shed_queue_full,
+                m.shed_watermark,
+                m.shed_tenant_quota,
+                m.shed_draining,
+                m.shed_deadline,
+                m.deadline_missed,
+                m.drain_purged,
+            ));
+        }
+        if m.pool_grown + m.pool_shrunk > 0 || m.pool_min_workers != m.pool_max_workers {
+            s.push_str(&format!(
+                "\npool: {} worker(s) in [{}, {}], grew {} time(s), shrank {} time(s)",
+                m.pool_workers,
+                m.pool_min_workers,
+                m.pool_max_workers,
+                m.pool_grown,
+                m.pool_shrunk,
+            ));
+        }
+        let classes_used = m.priorities.iter().filter(|p| p.completed > 0).count();
+        for p in &m.priorities {
+            if p.completed > 0 && classes_used > 1 {
+                s.push_str(&format!(
+                    "\npriority {}: {} done, p50 {:.3} ms / p99 {:.3} ms",
+                    p.class,
+                    p.completed,
+                    p.p50_s * 1e3,
+                    p.p99_s * 1e3,
+                ));
+            }
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        let cache = obj(vec![
+            ("hits", self.cache.hits.into()),
+            ("coalesced", self.cache.coalesced.into()),
+            ("misses", self.cache.misses.into()),
+            ("evictions", self.cache.evictions.into()),
+            ("entries", self.cache.entries.into()),
+            ("disk_hits", self.cache.disk_hits.into()),
+            ("disk_writes", self.cache.disk_writes.into()),
+            ("rejected", self.cache.rejected.into()),
+            ("tuned", self.cache.tuned.into()),
+            ("tune_skipped", self.cache.tune_skipped.into()),
+        ]);
+        obj(vec![
+            ("requests", (self.requests as f64).into()),
+            ("failed", (self.failed as f64).into()),
+            ("batches", (self.batches as f64).into()),
+            ("mean_batch", self.mean_batch.into()),
+            ("max_batch", self.max_batch.into()),
+            ("p50_latency_s", self.p50_latency_s.into()),
+            ("p99_latency_s", self.p99_latency_s.into()),
+            ("p50_queue_wait_s", self.p50_queue_wait_s.into()),
+            ("wall_s", self.wall_s.into()),
+            ("throughput_rps", self.throughput_rps.into()),
+            ("cache", cache),
+            ("metrics", self.metrics.to_json()),
+        ])
+    }
+}
+
+/// `p`th percentile of an ascending-sorted series (nearest-rank).
+pub(crate) fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Assemble the report from a stats snapshot (sorts happen here, with no
+/// lock held) plus the lock-free counters and pool state.
+pub(crate) fn build_report(
+    snap: StatsSnapshot,
+    wall_s: f64,
+    cache: CacheStats,
+    counters: &Counters,
+    pool: &PoolState,
+    cfg: &ServeConfig,
+) -> ServeReport {
+    let mut latencies = snap.latencies;
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut waits = snap.queue_waits;
+    waits.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let priorities = Priority::ALL
+        .iter()
+        .map(|&class| {
+            let mut lat = snap.lat_by_prio[class.lane()].clone();
+            lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            PriorityLatency {
+                class,
+                completed: snap.count_by_prio[class.lane()],
+                p50_s: percentile(&lat, 50.0),
+                p99_s: percentile(&lat, 99.0),
+            }
+        })
+        .collect();
+    let mut tenants: Vec<(String, u64)> = snap.completed_by_tenant.into_iter().collect();
+    tenants.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+    let metrics = ServeMetrics {
+        shed_queue_full: counters.shed[ShedReason::QueueFull.index()].load(Ordering::Relaxed),
+        shed_watermark: counters.shed[ShedReason::AboveWatermark.index()].load(Ordering::Relaxed),
+        shed_tenant_quota: counters.shed[ShedReason::TenantQuota.index()].load(Ordering::Relaxed),
+        shed_draining: counters.shed[ShedReason::Draining.index()].load(Ordering::Relaxed),
+        shed_deadline: counters.shed[ShedReason::DeadlineExpired.index()].load(Ordering::Relaxed),
+        deadline_missed: counters.deadline_missed.load(Ordering::Relaxed),
+        drain_purged: counters.drain_purged.load(Ordering::Relaxed),
+        pool_grown: counters.pool_grown.load(Ordering::Relaxed),
+        pool_shrunk: counters.pool_shrunk.load(Ordering::Relaxed),
+        pool_workers: pool.active.load(Ordering::Relaxed),
+        pool_min_workers: cfg.min_workers,
+        pool_max_workers: cfg.max_workers,
+        priorities,
+        tenants,
+    };
+    ServeReport {
+        requests: snap.completed,
+        failed: snap.failed,
+        batches: snap.batches,
+        mean_batch: if snap.batches == 0 {
+            0.0
+        } else {
+            snap.batch_size_sum as f64 / snap.batches as f64
+        },
+        max_batch: snap.max_batch,
+        p50_latency_s: percentile(&latencies, 50.0),
+        p99_latency_s: percentile(&latencies, 99.0),
+        p50_queue_wait_s: percentile(&waits, 50.0),
+        wall_s,
+        throughput_rps: if wall_s > 0.0 { snap.completed as f64 / wall_s } else { 0.0 },
+        cache,
+        metrics,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 99.0), 4.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn record_sample_wraps_at_cap() {
+        let mut xs = Vec::new();
+        for i in 0..5 {
+            record_sample(&mut xs, 3, i, i as f64);
+        }
+        assert_eq!(xs, vec![3.0, 4.0, 2.0]);
+    }
+
+    #[test]
+    fn tenant_cardinality_is_bounded() {
+        let mut stats = StatsInner::default();
+        let t0 = Instant::now();
+        for i in 0..(TENANT_METRIC_CAP + 10) {
+            stats.record_request(Priority::Normal, Some(&format!("t{i}")), 0.0, 0.0, false, t0);
+        }
+        assert!(stats.completed_by_tenant.len() <= TENANT_METRIC_CAP + 1);
+        assert_eq!(stats.completed_by_tenant.get("<other>"), Some(&10));
+    }
+
+    #[test]
+    fn ewma_converges_toward_observations() {
+        let pool = PoolState::new(2);
+        assert_eq!(pool.wait_ewma(), 0.0);
+        for _ in 0..64 {
+            pool.observe_wait(1.0);
+        }
+        assert!(pool.wait_ewma() > 0.99, "ewma {}", pool.wait_ewma());
+    }
+
+    #[test]
+    fn metrics_json_has_shed_total() {
+        let m = ServeMetrics { shed_queue_full: 2, shed_deadline: 1, ..Default::default() };
+        let j = m.to_json().to_pretty();
+        let parsed = Json::parse(&j).unwrap();
+        match parsed {
+            Json::Obj(pairs) => {
+                let total = pairs.iter().find(|(k, _)| k == "shed_total").unwrap();
+                match total.1 {
+                    Json::Num(n) => assert_eq!(n, 3.0),
+                    ref other => panic!("expected number, got {other:?}"),
+                }
+            }
+            other => panic!("expected object, got {other:?}"),
+        }
+    }
+}

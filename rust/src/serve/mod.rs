@@ -1,33 +1,59 @@
-//! The serving layer (DESIGN.md §9): queue → batcher → backend pool.
+//! The serving layer (DESIGN.md §9): admission → queue → batcher → backend pool.
 //!
 //! [`RoutineServer`] is the host-side front door the ROADMAP's
 //! "heavy traffic" north-star asks for: callers submit `(Spec, ExecInputs)`
 //! requests and get per-request [`ExecOutcome`]s back, while the server
 //!
-//! 1. **queues** requests in a bounded queue (back-pressure: `submit`
-//!    blocks when `queue_capacity` is reached),
-//! 2. **batches** them — a dispatcher that dequeues a request coalesces
+//! 1. **admits** requests through a configurable policy
+//!    ([`AdmissionPolicy`]: block / reject-when-full / watermark) with
+//!    per-tenant in-flight quotas and deadline screening — refused
+//!    requests are *shed* with a [`ShedReason`] instead of queued,
+//! 2. **queues** admitted requests in priority lanes ([`Priority`]:
+//!    High before Normal before Background) in a bounded queue,
+//! 3. **batches** them — a dispatcher that dequeues a request coalesces
 //!    every queued request with the same plan-cache key into one batch (up
-//!    to `max_batch`, lingering up to `linger` for stragglers), and
-//! 3. **dispatches** each batch to a shared [`Backend`] via
-//!    `execute_batch`, so per-plan setup — and for the simulator the whole
-//!    DES run — is paid once per batch instead of once per request.
+//!    to `max_batch`, lingering up to `linger` for stragglers), dropping
+//!    requests whose deadline passed while they queued, and
+//! 4. **dispatches** each batch to a shared [`Backend`] via
+//!    `execute_batch` on an adaptive worker pool
+//!    (`min_workers..=max_workers`, steered by a queue-wait EWMA), so
+//!    per-plan setup — and for the simulator the whole DES run — is paid
+//!    once per batch instead of once per request.
 //!
 //! Lowering goes through a shared [`Pipeline`], so cold specs are
 //! single-flight across every dispatcher thread and warm specs are plan
-//! cache hits. Queueing, batching and latency statistics are surfaced in a
-//! [`ServeReport`].
+//! cache hits. Queueing, batching, latency and hardening statistics are
+//! surfaced in a [`ServeReport`] (machine-readable via
+//! [`ServeReport::to_json`]). [`RoutineServer::drain`] stops admissions
+//! and settles outstanding work; dropping the server still drains and
+//! answers everything.
 
-use std::collections::VecDeque;
+mod admission;
+mod metrics;
+
+pub use admission::{AdmissionPolicy, Priority, RequestOpts, ShedReason, SubmitOutcome};
+pub use metrics::{PriorityLatency, ServeMetrics, ServeReport};
+
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::pipeline::{CacheStats, Pipeline, PlanKey};
+use admission::{Admission, QueueState};
+use metrics::{Counters, PoolState, StatsInner};
+
+use crate::pipeline::{Pipeline, PlanKey};
 use crate::runtime::{Backend, ExecInputs, ExecOutcome};
 use crate::spec::Spec;
 use crate::{Error, Result};
+
+/// Hostile configs may ask for absurd linger values; a dispatcher must
+/// never sit on a partial batch longer than this.
+const LINGER_CAP: Duration = Duration::from_millis(250);
+
+/// Floor for `target_queue_wait`: below scheduling granularity the EWMA
+/// signal is pure noise.
+const TARGET_WAIT_FLOOR: Duration = Duration::from_micros(50);
 
 /// Serving-layer knobs.
 #[derive(Debug, Clone)]
@@ -36,12 +62,24 @@ pub struct ServeConfig {
     pub max_batch: usize,
     /// How long a dispatcher waits for same-key stragglers before
     /// dispatching a non-full batch. Zero still coalesces whatever is
-    /// already queued.
+    /// already queued. Clamped to 250 ms.
     pub linger: Duration,
-    /// Bounded queue depth; `submit` blocks (back-pressure) when full.
+    /// Bounded queue depth; what happens when it is reached is `policy`.
     pub queue_capacity: usize,
-    /// Dispatcher threads draining the queue (the backend pool width).
+    /// Dispatcher threads at startup (the initial backend pool width).
     pub workers: usize,
+    /// What `submit` does at capacity (default: block, the pre-hardening
+    /// behavior — `serve_all` callers see identical semantics).
+    pub policy: AdmissionPolicy,
+    /// Per-tenant in-flight (queued + dispatched) cap; 0 = unlimited.
+    /// Untenanted requests are never quota-limited.
+    pub max_inflight_per_tenant: usize,
+    /// Adaptive-pool floor; 0 means `workers` (fixed pool).
+    pub min_workers: usize,
+    /// Adaptive-pool ceiling; 0 means `workers` (fixed pool).
+    pub max_workers: usize,
+    /// Queue-wait EWMA above this grows the pool toward `max_workers`.
+    pub target_queue_wait: Duration,
 }
 
 impl Default for ServeConfig {
@@ -51,6 +89,33 @@ impl Default for ServeConfig {
             linger: Duration::from_micros(500),
             queue_capacity: 256,
             workers: 2,
+            policy: AdmissionPolicy::Block,
+            max_inflight_per_tenant: 0,
+            min_workers: 0,
+            max_workers: 0,
+            target_queue_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Clamp hostile values into a sane envelope (zero capacity/workers/
+    /// batch, absurd linger, inverted pool bounds).
+    fn normalized(self) -> ServeConfig {
+        let workers = self.workers.max(1);
+        let min_workers =
+            if self.min_workers == 0 { workers } else { self.min_workers.clamp(1, workers) };
+        let max_workers =
+            if self.max_workers == 0 { workers } else { self.max_workers.max(workers) };
+        ServeConfig {
+            max_batch: self.max_batch.max(1),
+            linger: self.linger.min(LINGER_CAP),
+            queue_capacity: self.queue_capacity.max(1),
+            workers,
+            min_workers,
+            max_workers,
+            target_queue_wait: self.target_queue_wait.max(TARGET_WAIT_FLOOR),
+            ..self
         }
     }
 }
@@ -59,12 +124,22 @@ impl Default for ServeConfig {
 /// the batcher's queue scans compare hashes, and the dispatcher hands the
 /// same key to the pipeline — the canonical JSON is rendered and hashed
 /// exactly once per request.
-struct Request {
+pub(crate) struct Request {
     spec: Spec,
     key: PlanKey,
     inputs: ExecInputs,
     enqueued: Instant,
+    priority: Priority,
+    /// Normalized at submit: empty tenant strings become `None`.
+    tenant: Option<String>,
+    deadline: Option<Instant>,
     tx: mpsc::Sender<Result<ExecOutcome>>,
+}
+
+impl Request {
+    fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| d <= now)
+    }
 }
 
 /// A handle to one submitted request.
@@ -80,99 +155,29 @@ impl Ticket {
             Err(_) => Err(Error::Runtime("request dropped by server".into())),
         }
     }
-}
 
-/// Latency/queue-wait samples kept for percentile reporting. A ring of
-/// the most recent samples bounds server memory (and `report()`'s sort)
-/// regardless of how many requests a long-lived server answers.
-const STAT_SAMPLE_CAP: usize = 65_536;
-
-#[derive(Default)]
-struct StatsInner {
-    completed: u64,
-    failed: u64,
-    batches: u64,
-    batch_size_sum: u64,
-    max_batch: usize,
-    /// Per-request submit→response seconds (most recent `STAT_SAMPLE_CAP`).
-    latencies: Vec<f64>,
-    /// Per-request submit→dequeue seconds (most recent `STAT_SAMPLE_CAP`).
-    queue_waits: Vec<f64>,
-    last_done: Option<Instant>,
-}
-
-/// Record into a bounded ring: grow until the cap, then overwrite the
-/// slot of the `count`-th request (oldest-first).
-fn record_sample(samples: &mut Vec<f64>, count: u64, value: f64) {
-    if samples.len() < STAT_SAMPLE_CAP {
-        samples.push(value);
-    } else {
-        samples[(count % STAT_SAMPLE_CAP as u64) as usize] = value;
-    }
-}
-
-/// Queueing/batching/latency statistics for one server's lifetime.
-#[derive(Debug, Clone)]
-pub struct ServeReport {
-    /// Requests answered (including failures).
-    pub requests: u64,
-    /// Requests answered with an error.
-    pub failed: u64,
-    /// Batches dispatched to the backend.
-    pub batches: u64,
-    /// Mean coalesced batch size (requests / batches).
-    pub mean_batch: f64,
-    /// Largest batch dispatched.
-    pub max_batch: usize,
-    /// Median submit→response latency, seconds (over a bounded window of
-    /// the most recent `STAT_SAMPLE_CAP` requests).
-    pub p50_latency_s: f64,
-    /// 99th-percentile submit→response latency, seconds (same window).
-    pub p99_latency_s: f64,
-    /// Median submit→dequeue wait, seconds (queueing delay, same window).
-    pub p50_queue_wait_s: f64,
-    /// First submit → last response span, seconds.
-    pub wall_s: f64,
-    /// Requests per second over `wall_s`.
-    pub throughput_rps: f64,
-    /// Shared plan-cache counters (hits/misses/evictions/coalesced).
-    pub cache: CacheStats,
-}
-
-impl ServeReport {
-    pub fn summary(&self) -> String {
-        let mut s = format!(
-            "served {} request(s) ({} failed) in {} batch(es), mean batch {:.2} (max {})\n\
-             latency p50 {:.3} ms / p99 {:.3} ms, queue wait p50 {:.3} ms\n\
-             throughput {:.0} req/s over {:.3} s\n\
-             plan cache: {} hit(s) ({} coalesced) / {} miss(es), {} eviction(s), {} resident\n\
-             plan store: {} disk hit(s), {} write(s), {} rejected",
-            self.requests,
-            self.failed,
-            self.batches,
-            self.mean_batch,
-            self.max_batch,
-            self.p50_latency_s * 1e3,
-            self.p99_latency_s * 1e3,
-            self.p50_queue_wait_s * 1e3,
-            self.throughput_rps,
-            self.wall_s,
-            self.cache.hits,
-            self.cache.coalesced,
-            self.cache.misses,
-            self.cache.evictions,
-            self.cache.entries,
-            self.cache.disk_hits,
-            self.cache.disk_writes,
-            self.cache.rejected,
-        );
-        if self.cache.tuned + self.cache.tune_skipped > 0 {
-            s.push_str(&format!(
-                "\nautotuner: {} tuned lowering(s), {} tuned warm start(s)",
-                self.cache.tuned, self.cache.tune_skipped
-            ));
+    /// Like [`Ticket::wait`], but bound the caller's exposure: a response
+    /// not ready within `timeout` returns a structured timeout error. The
+    /// ticket stays usable — wait again and the response, once produced,
+    /// is still delivered.
+    pub fn wait_timeout(&self, timeout: Duration) -> Result<ExecOutcome> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(outcome) => outcome,
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(Error::Runtime(format!(
+                "timed out after {timeout:?} waiting for server response"
+            ))),
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Err(Error::Runtime("request dropped by server".into()))
+            }
         }
-        s
+    }
+
+    /// A pre-resolved ticket carrying an admission rejection, so blocking
+    /// `submit` callers get a structured error instead of a hang.
+    fn rejected(reason: ShedReason) -> Ticket {
+        let (tx, rx) = mpsc::channel();
+        let _ = tx.send(Err(Error::Runtime(format!("request shed at admission: {reason}"))));
+        Ticket { rx }
     }
 }
 
@@ -180,11 +185,23 @@ struct ServerShared {
     pipeline: Arc<Pipeline>,
     backend: Arc<dyn Backend>,
     cfg: ServeConfig,
-    queue: Mutex<VecDeque<Request>>,
+    queue: Mutex<QueueState>,
     not_empty: Condvar,
     not_full: Condvar,
+    /// Signalled when the queue goes idle (empty and nothing in flight);
+    /// `drain` waits on it.
+    idle: Condvar,
     shutdown: AtomicBool,
+    /// Admissions closed (drain or shutdown). Set under the queue lock so
+    /// blocked submitters cannot miss it between their check and wait.
+    draining: AtomicBool,
     stats: Mutex<StatsInner>,
+    counters: Counters,
+    pool: PoolState,
+    /// Worker handles live behind the shared state so growers can
+    /// register spawned threads; `shutdown_and_join` repeatedly takes the
+    /// vec (joining outside the lock) until no straggler handle remains.
+    workers: Mutex<Vec<JoinHandle<()>>>,
     /// Set once by the first `submit` (lock-free afterwards); anchors the
     /// report's throughput span.
     first_submit: OnceLock<Instant>,
@@ -195,7 +212,6 @@ struct ServerShared {
 /// answers every outstanding request, and joins the worker threads.
 pub struct RoutineServer {
     shared: Arc<ServerShared>,
-    workers: Vec<JoinHandle<()>>,
 }
 
 impl RoutineServer {
@@ -204,51 +220,107 @@ impl RoutineServer {
         backend: Arc<dyn Backend>,
         cfg: ServeConfig,
     ) -> RoutineServer {
-        let cfg = ServeConfig {
-            max_batch: cfg.max_batch.max(1),
-            queue_capacity: cfg.queue_capacity.max(1),
-            workers: cfg.workers.max(1),
-            ..cfg
-        };
+        let cfg = cfg.normalized();
         let shared = Arc::new(ServerShared {
             pipeline,
             backend,
+            pool: PoolState::new(cfg.workers),
             cfg,
-            queue: Mutex::new(VecDeque::new()),
+            queue: Mutex::new(QueueState::default()),
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
+            idle: Condvar::new(),
             shutdown: AtomicBool::new(false),
+            draining: AtomicBool::new(false),
             stats: Mutex::new(StatsInner::default()),
+            counters: Counters::default(),
+            workers: Mutex::new(Vec::new()),
             first_submit: OnceLock::new(),
         });
-        let workers = (0..shared.cfg.workers)
-            .map(|i| {
-                let shared = shared.clone();
-                std::thread::Builder::new()
-                    .name(format!("aieblas-serve-{i}"))
-                    .spawn(move || worker_loop(&shared))
-                    .expect("spawn serve worker")
-            })
-            .collect();
-        RoutineServer { shared, workers }
+        {
+            let mut handles = shared.workers.lock().expect("serve workers poisoned");
+            for i in 0..shared.cfg.workers {
+                handles.push(spawn_worker(&shared, i));
+            }
+        }
+        RoutineServer { shared }
     }
 
-    /// Enqueue one request; blocks while the queue is at capacity.
+    /// Enqueue one request with default options; under the `Block` policy
+    /// this blocks while the queue is at capacity. On a draining/shut-down
+    /// server the returned ticket resolves immediately to a structured
+    /// rejection (it never hangs).
     pub fn submit(&self, spec: &Spec, inputs: ExecInputs) -> Ticket {
-        let (tx, rx) = mpsc::channel();
+        self.submit_with(spec, inputs, RequestOpts::default())
+    }
+
+    /// [`RoutineServer::submit`] with tenant/priority/deadline options.
+    pub fn submit_with(&self, spec: &Spec, inputs: ExecInputs, opts: RequestOpts) -> Ticket {
+        match self.admit(spec, inputs, opts, true) {
+            SubmitOutcome::Accepted(ticket) => ticket,
+            SubmitOutcome::Shed(reason) => Ticket::rejected(reason),
+        }
+    }
+
+    /// Non-blocking submit: where `submit` would block (or enqueue), this
+    /// either accepts the request or tells the caller exactly why it was
+    /// refused. Never waits, regardless of policy.
+    pub fn try_submit(&self, spec: &Spec, inputs: ExecInputs, opts: RequestOpts) -> SubmitOutcome {
+        self.admit(spec, inputs, opts, false)
+    }
+
+    fn admit(
+        &self,
+        spec: &Spec,
+        inputs: ExecInputs,
+        opts: RequestOpts,
+        may_block: bool,
+    ) -> SubmitOutcome {
         let now = Instant::now();
         self.shared.first_submit.get_or_init(|| now);
-        let req =
-            Request { spec: spec.clone(), key: PlanKey::of(spec), inputs, enqueued: now, tx };
+        if opts.deadline.is_some_and(|d| d <= now) {
+            // screen pre-queue: an already-expired request would only be
+            // dropped at dequeue — shed it before it occupies a slot.
+            self.shared.counters.shed(ShedReason::DeadlineExpired);
+            return SubmitOutcome::Shed(ShedReason::DeadlineExpired);
+        }
+        let (tx, rx) = mpsc::channel();
+        let req = Request {
+            spec: spec.clone(),
+            key: PlanKey::of(spec),
+            inputs,
+            enqueued: now,
+            priority: opts.priority,
+            tenant: opts.tenant.filter(|t| !t.is_empty()),
+            deadline: opts.deadline,
+            tx,
+        };
         {
             let mut q = self.shared.queue.lock().expect("serve queue poisoned");
-            while q.len() >= self.shared.cfg.queue_capacity {
-                q = self.shared.not_full.wait(q).expect("serve queue poisoned");
+            loop {
+                if self.shared.draining.load(Ordering::SeqCst) {
+                    self.shared.counters.shed(ShedReason::Draining);
+                    return SubmitOutcome::Shed(ShedReason::Draining);
+                }
+                match q.admit(&self.shared.cfg, &req) {
+                    Admission::Admit => break,
+                    Admission::Shed(reason) => {
+                        self.shared.counters.shed(reason);
+                        return SubmitOutcome::Shed(reason);
+                    }
+                    Admission::Full if may_block => {
+                        q = self.shared.not_full.wait(q).expect("serve queue poisoned");
+                    }
+                    Admission::Full => {
+                        self.shared.counters.shed(ShedReason::QueueFull);
+                        return SubmitOutcome::Shed(ShedReason::QueueFull);
+                    }
+                }
             }
-            q.push_back(req);
+            q.push(req);
         }
         self.shared.not_empty.notify_all();
-        Ticket { rx }
+        SubmitOutcome::Accepted(Ticket { rx })
     }
 
     /// Submit every request, then wait for all responses (in order).
@@ -258,34 +330,56 @@ impl RoutineServer {
         tickets.into_iter().map(Ticket::wait).collect()
     }
 
-    /// Snapshot the server's queueing/batching/latency statistics.
+    /// Graceful drain: stop admissions, let the pool settle queued and
+    /// in-flight work, and wait up to `timeout` for the server to go
+    /// idle. Returns `true` when everything settled; on timeout the
+    /// still-queued stragglers are answered with a structured error
+    /// (counted as `drain_purged`) and `false` is returned. Either way
+    /// the server afterwards rejects every submit with
+    /// [`ShedReason::Draining`]; `join`/drop remain the shutdown path.
+    pub fn drain(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut q = self.shared.queue.lock().expect("serve queue poisoned");
+        self.shared.draining.store(true, Ordering::SeqCst);
+        // blocked submitters must re-check the flag; workers parked on an
+        // empty queue are left to their idle timeouts.
+        self.shared.not_full.notify_all();
+        while !q.is_idle() {
+            let now = Instant::now();
+            if now >= deadline {
+                let stragglers = q.drain_all();
+                drop(q);
+                self.shared
+                    .counters
+                    .drain_purged
+                    .fetch_add(stragglers.len() as u64, Ordering::Relaxed);
+                answer_failed(&self.shared, &stragglers, "server drained before request ran");
+                return false;
+            }
+            let (guard, _) =
+                self.shared.idle.wait_timeout(q, deadline - now).expect("serve queue poisoned");
+            q = guard;
+        }
+        true
+    }
+
+    /// Snapshot the server's queueing/batching/latency/hardening
+    /// statistics. Percentile sorts happen on a clone, outside the stats
+    /// lock, so reporting never stalls the dispatchers.
     pub fn report(&self) -> ServeReport {
-        let stats = self.shared.stats.lock().expect("serve stats poisoned");
-        let mut latencies = stats.latencies.clone();
-        latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let mut waits = stats.queue_waits.clone();
-        waits.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let wall_s = match (self.shared.first_submit.get(), stats.last_done) {
+        let snap = self.shared.stats.lock().expect("serve stats poisoned").snapshot();
+        let wall_s = match (self.shared.first_submit.get(), snap.last_done) {
             (Some(t0), Some(t1)) => t1.duration_since(*t0).as_secs_f64(),
             _ => 0.0,
         };
-        ServeReport {
-            requests: stats.completed,
-            failed: stats.failed,
-            batches: stats.batches,
-            mean_batch: if stats.batches == 0 {
-                0.0
-            } else {
-                stats.batch_size_sum as f64 / stats.batches as f64
-            },
-            max_batch: stats.max_batch,
-            p50_latency_s: percentile(&latencies, 50.0),
-            p99_latency_s: percentile(&latencies, 99.0),
-            p50_queue_wait_s: percentile(&waits, 50.0),
+        metrics::build_report(
+            snap,
             wall_s,
-            throughput_rps: if wall_s > 0.0 { stats.completed as f64 / wall_s } else { 0.0 },
-            cache: self.shared.pipeline.cache().stats(),
-        }
+            self.shared.pipeline.cache().stats(),
+            &self.shared.counters,
+            &self.shared.pool,
+            &self.shared.cfg,
+        )
     }
 
     /// The shared pipeline (and its plan cache) behind this server.
@@ -295,20 +389,35 @@ impl RoutineServer {
 
     /// Shut down: drain the queue, answer everything, join the workers,
     /// and return the final report.
-    pub fn join(mut self) -> ServeReport {
+    pub fn join(self) -> ServeReport {
         self.shutdown_and_join();
         self.report()
     }
 
-    fn shutdown_and_join(&mut self) {
-        self.shared.shutdown.store(true, Ordering::SeqCst);
-        // take-and-release the queue lock so no worker misses the flag
-        // between its empty-check and its wait.
-        drop(self.shared.queue.lock().expect("serve queue poisoned"));
+    fn shutdown_and_join(&self) {
+        {
+            // both flags flip under the queue lock: a submitter between
+            // its draining-check and its wait, or a worker between its
+            // empty-check and its wait, cannot miss them.
+            let _q = self.shared.queue.lock().expect("serve queue poisoned");
+            self.shared.draining.store(true, Ordering::SeqCst);
+            self.shared.shutdown.store(true, Ordering::SeqCst);
+        }
         self.shared.not_empty.notify_all();
         self.shared.not_full.notify_all();
-        for handle in self.workers.drain(..) {
-            let _ = handle.join();
+        self.shared.idle.notify_all();
+        // growers push handles under the workers lock and re-check
+        // `shutdown` inside it, so looping take-then-join (join outside
+        // the lock, or a grower would deadlock) catches every spawn.
+        loop {
+            let handles =
+                std::mem::take(&mut *self.shared.workers.lock().expect("serve workers poisoned"));
+            if handles.is_empty() {
+                break;
+            }
+            for handle in handles {
+                let _ = handle.join();
+            }
         }
     }
 }
@@ -319,71 +428,205 @@ impl Drop for RoutineServer {
     }
 }
 
-/// `p`th percentile of an ascending-sorted series (nearest-rank).
-fn percentile(sorted: &[f64], p: f64) -> f64 {
-    if sorted.is_empty() {
-        return 0.0;
-    }
-    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
-    sorted[idx.min(sorted.len() - 1)]
+fn spawn_worker(shared: &Arc<ServerShared>, id: usize) -> JoinHandle<()> {
+    let shared = shared.clone();
+    std::thread::Builder::new()
+        .name(format!("aieblas-serve-{id}"))
+        .spawn(move || worker_loop(&shared))
+        .expect("spawn serve worker")
 }
 
-fn worker_loop(shared: &ServerShared) {
+fn worker_loop(shared: &Arc<ServerShared>) {
+    // how long an idle worker waits before considering retirement.
+    let idle_window = (shared.cfg.target_queue_wait * 8).max(Duration::from_millis(20));
     loop {
         let mut batch: Vec<Request> = Vec::new();
+        let mut expired: Vec<Request> = Vec::new();
         {
             let mut q = shared.queue.lock().expect("serve queue poisoned");
+            // seed: highest-priority oldest request, diverting any whose
+            // deadline passed while queued (answered below, without
+            // wasting a backend run on them).
             loop {
-                if let Some(first) = q.pop_front() {
-                    batch.push(first);
+                let now = Instant::now();
+                while let Some(req) = q.pop() {
+                    if req.expired(now) {
+                        expired.push(req);
+                    } else {
+                        batch.push(req);
+                        break;
+                    }
+                }
+                if !batch.is_empty() || !expired.is_empty() {
+                    shared.not_full.notify_all();
                     break;
                 }
                 if shared.shutdown.load(Ordering::SeqCst) {
                     return;
                 }
-                q = shared.not_empty.wait(q).expect("serve queue poisoned");
-            }
-            shared.not_full.notify_all();
-
-            // coalesce: pull every queued same-key request (other keys stay
-            // for the other dispatchers), lingering for stragglers until
-            // the batch fills or the deadline passes.
-            let deadline = Instant::now() + shared.cfg.linger;
-            // the prefix [0, i) has been scanned and is other-key; new
-            // arrivals only append at the back, so each linger wakeup
-            // resumes the scan instead of rescanning the whole queue under
-            // the lock. Another dispatcher removing ahead of `i` while we
-            // wait can shift an unscanned entry into the prefix — that
-            // entry is merely coalesced into a later batch, never lost.
-            let mut i = 0;
-            loop {
-                while batch.len() < shared.cfg.max_batch && i < q.len() {
-                    if q[i].key == batch[0].key {
-                        batch.push(q.remove(i).expect("index checked"));
-                        shared.not_full.notify_all();
-                    } else {
-                        i += 1;
-                    }
-                }
-                if batch.len() >= shared.cfg.max_batch || shared.shutdown.load(Ordering::SeqCst) {
-                    break;
-                }
-                let now = Instant::now();
-                if now >= deadline {
-                    break;
-                }
-                let (guard, _) = shared
+                let (guard, timeout) = shared
                     .not_empty
-                    .wait_timeout(q, deadline - now)
+                    .wait_timeout(q, idle_window)
                     .expect("serve queue poisoned");
                 q = guard;
+                if timeout.timed_out() && q.is_empty() && try_retire(shared) {
+                    return;
+                }
+            }
+
+            // coalesce: pull every queued same-key request from every
+            // lane (other keys stay for the other dispatchers), lingering
+            // for stragglers until the batch fills or the deadline
+            // passes. Each lane keeps a resume index: the scanned prefix
+            // is other-key, and new arrivals only append at the back.
+            // Another dispatcher removing ahead of an index while we wait
+            // can shift an unscanned entry into the prefix — that entry
+            // is merely coalesced into a later batch, never lost.
+            if !batch.is_empty() {
+                let key = batch[0].key.clone();
+                let linger_deadline = Instant::now() + shared.cfg.linger;
+                let mut scanned = [0usize; 3];
+                loop {
+                    let now = Instant::now();
+                    for (lane, idx) in scanned.iter_mut().enumerate() {
+                        while batch.len() < shared.cfg.max_batch {
+                            match q.take_matching(lane, idx, &key) {
+                                Some(req) if req.expired(now) => {
+                                    expired.push(req);
+                                    shared.not_full.notify_all();
+                                }
+                                Some(req) => {
+                                    batch.push(req);
+                                    shared.not_full.notify_all();
+                                }
+                                None => break,
+                            }
+                        }
+                    }
+                    if batch.len() >= shared.cfg.max_batch
+                        || shared.shutdown.load(Ordering::SeqCst)
+                        || now >= linger_deadline
+                    {
+                        break;
+                    }
+                    let (guard, _) = shared
+                        .not_empty
+                        .wait_timeout(q, linger_deadline - now)
+                        .expect("serve queue poisoned");
+                    q = guard;
+                }
             }
         }
-        dispatch_batch(shared, batch);
+        if !expired.is_empty() {
+            shared.counters.deadline_missed.fetch_add(expired.len() as u64, Ordering::Relaxed);
+            answer_failed(shared, &expired, "deadline expired before execution; request dropped");
+        }
+        if !batch.is_empty() {
+            dispatch_batch(shared, batch);
+            maybe_grow(shared);
+        }
     }
 }
 
-fn dispatch_batch(shared: &ServerShared, mut batch: Vec<Request>) {
+/// Try to leave the pool: succeeds only while more than `min_workers`
+/// dispatchers are active, so the pool shrinks back when load subsides.
+fn try_retire(shared: &ServerShared) -> bool {
+    let retired = shared
+        .pool
+        .active
+        .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| {
+            if n > shared.cfg.min_workers {
+                Some(n - 1)
+            } else {
+                None
+            }
+        })
+        .is_ok();
+    if retired {
+        shared.counters.pool_shrunk.fetch_add(1, Ordering::Relaxed);
+    }
+    retired
+}
+
+/// Grow the pool by one worker when the queue-wait EWMA says requests
+/// are waiting longer than `target_queue_wait` and there is a backlog.
+fn maybe_grow(shared: &Arc<ServerShared>) {
+    if shared.cfg.min_workers == shared.cfg.max_workers {
+        return; // fixed pool
+    }
+    if shared.shutdown.load(Ordering::SeqCst) || shared.draining.load(Ordering::SeqCst) {
+        return;
+    }
+    if shared.pool.wait_ewma() <= shared.cfg.target_queue_wait.as_secs_f64() {
+        return;
+    }
+    {
+        let q = shared.queue.lock().expect("serve queue poisoned");
+        if q.is_empty() {
+            return;
+        }
+    }
+    let mut handles = shared.workers.lock().expect("serve workers poisoned");
+    // re-checked INSIDE the workers lock: shutdown_and_join sets the flag
+    // before its first take, so a grower that sees it false here will
+    // have pushed its handle before the joiner's (repeated) take.
+    if shared.shutdown.load(Ordering::SeqCst) {
+        return;
+    }
+    let grown = shared
+        .pool
+        .active
+        .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| {
+            if n < shared.cfg.max_workers {
+                Some(n + 1)
+            } else {
+                None
+            }
+        })
+        .is_ok();
+    if grown {
+        let id = handles.len();
+        handles.push(spawn_worker(shared, id));
+        shared.counters.pool_grown.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Answer every request in `reqs` with a structured runtime error,
+/// recording them as completed+failed (they were admitted, so they count
+/// toward `requests`, keeping `attempts == requests + shed` exact).
+fn answer_failed(shared: &ServerShared, reqs: &[Request], msg: &str) {
+    let done = Instant::now();
+    {
+        let mut stats = shared.stats.lock().expect("serve stats poisoned");
+        for req in reqs {
+            let elapsed = done.duration_since(req.enqueued).as_secs_f64();
+            stats.record_request(req.priority, req.tenant.as_deref(), elapsed, elapsed, true, done);
+        }
+    }
+    for req in reqs {
+        let _ = req.tx.send(Err(Error::Runtime(msg.to_string())));
+    }
+    note_answered(shared, reqs);
+}
+
+/// Account answered requests against the queue ledger (releases tenant
+/// quota slots; flips `is_idle` for `drain`).
+fn note_answered(shared: &ServerShared, reqs: &[Request]) {
+    let idle = {
+        let mut q = shared.queue.lock().expect("serve queue poisoned");
+        for req in reqs {
+            q.note_done(req);
+        }
+        q.is_idle()
+    };
+    if idle {
+        shared.idle.notify_all();
+    }
+    // freed tenant-quota slots can unblock waiting submitters.
+    shared.not_full.notify_all();
+}
+
+fn dispatch_batch(shared: &Arc<ServerShared>, mut batch: Vec<Request>) {
     let dequeued = Instant::now();
     let per_request_err = |msg: &str, n: usize| -> Vec<Result<ExecOutcome>> {
         (0..n).map(|_| Err(Error::Runtime(msg.to_string()))).collect()
@@ -420,28 +663,31 @@ fn dispatch_batch(shared: &ServerShared, mut batch: Vec<Request>) {
         Err(_) => per_request_err("backend panicked while executing batch", batch.len()),
     };
     let done = Instant::now();
-    let mut stats = shared.stats.lock().expect("serve stats poisoned");
-    stats.batches += 1;
-    stats.batch_size_sum += batch.len() as u64;
-    stats.max_batch = stats.max_batch.max(batch.len());
-    // monotonic: a late-locking worker with an earlier completion must not
-    // move the span's end backwards (it would inflate throughput_rps).
-    stats.last_done = Some(stats.last_done.map_or(done, |prev| prev.max(done)));
-    for (req, outcome) in batch.into_iter().zip(outcomes) {
-        let idx = stats.completed;
-        stats.completed += 1;
-        if outcome.is_err() {
-            stats.failed += 1;
+    let mut wait_sum = 0.0;
+    {
+        let mut stats = shared.stats.lock().expect("serve stats poisoned");
+        stats.batches += 1;
+        stats.batch_size_sum += batch.len() as u64;
+        stats.max_batch = stats.max_batch.max(batch.len());
+        for (req, outcome) in batch.iter().zip(&outcomes) {
+            let wait_s = dequeued.duration_since(req.enqueued).as_secs_f64();
+            wait_sum += wait_s;
+            stats.record_request(
+                req.priority,
+                req.tenant.as_deref(),
+                done.duration_since(req.enqueued).as_secs_f64(),
+                wait_s,
+                outcome.is_err(),
+                done,
+            );
         }
-        record_sample(&mut stats.latencies, idx, done.duration_since(req.enqueued).as_secs_f64());
-        record_sample(
-            &mut stats.queue_waits,
-            idx,
-            dequeued.duration_since(req.enqueued).as_secs_f64(),
-        );
+    }
+    shared.pool.observe_wait(wait_sum / batch.len() as f64);
+    for (req, outcome) in batch.iter().zip(outcomes) {
         // a dropped Ticket just means the caller stopped caring.
         let _ = req.tx.send(outcome);
     }
+    note_answered(shared, &batch);
 }
 
 #[cfg(test)]
@@ -449,13 +695,21 @@ mod tests {
     use super::*;
     use crate::arch::ArchConfig;
     use crate::blas::RoutineKind;
-    use crate::runtime::CpuBackend;
+    use crate::runtime::{CpuBackend, SlowBackend};
     use crate::spec::DataSource;
 
     fn server(cfg: ServeConfig) -> RoutineServer {
         RoutineServer::new(
             Arc::new(Pipeline::new(ArchConfig::vck5000())),
             Arc::new(CpuBackend),
+            cfg,
+        )
+    }
+
+    fn slow_server(cfg: ServeConfig, delay: Duration) -> RoutineServer {
+        RoutineServer::new(
+            Arc::new(Pipeline::new(ArchConfig::vck5000())),
+            Arc::new(SlowBackend::new(CpuBackend, delay)),
             cfg,
         )
     }
@@ -473,6 +727,7 @@ mod tests {
         assert_eq!(report.failed, 0);
         assert_eq!(report.batches, 1);
         assert_eq!(report.cache.misses, 1);
+        assert_eq!(report.metrics.shed_total(), 0);
     }
 
     #[test]
@@ -543,11 +798,269 @@ mod tests {
     }
 
     #[test]
-    fn percentile_nearest_rank() {
-        let xs = [1.0, 2.0, 3.0, 4.0];
-        assert_eq!(percentile(&xs, 50.0), 3.0);
-        assert_eq!(percentile(&xs, 99.0), 4.0);
-        assert_eq!(percentile(&xs, 0.0), 1.0);
-        assert_eq!(percentile(&[], 50.0), 0.0);
+    fn try_submit_sheds_when_full_and_accounting_balances() {
+        let srv = slow_server(
+            ServeConfig {
+                max_batch: 1,
+                queue_capacity: 1,
+                workers: 1,
+                policy: AdmissionPolicy::RejectWhenFull,
+                ..Default::default()
+            },
+            Duration::from_millis(50),
+        );
+        let spec = Spec::single(RoutineKind::Axpy, "a", 256, DataSource::Pl);
+        let mut tickets = Vec::new();
+        let mut shed = 0u64;
+        for i in 0..16 {
+            let inputs = ExecInputs::random_for(&spec, i);
+            match srv.try_submit(&spec, inputs, RequestOpts::default()) {
+                SubmitOutcome::Accepted(t) => tickets.push(t),
+                SubmitOutcome::Shed(reason) => {
+                    assert_eq!(reason, ShedReason::QueueFull);
+                    shed += 1;
+                }
+            }
+        }
+        assert!(shed > 0, "a 1-deep queue over a 50 ms backend must shed rapid submits");
+        for t in tickets {
+            assert!(t.wait().is_ok());
+        }
+        let report = srv.join();
+        assert_eq!(report.requests + report.metrics.shed_total(), 16);
+        assert_eq!(report.metrics.shed_queue_full, shed);
+    }
+
+    #[test]
+    fn watermark_reserves_headroom_for_high_priority() {
+        let srv = slow_server(
+            ServeConfig {
+                max_batch: 1,
+                queue_capacity: 8,
+                workers: 1,
+                policy: AdmissionPolicy::RejectAboveWatermark(2),
+                linger: Duration::ZERO,
+                ..Default::default()
+            },
+            Duration::from_millis(50),
+        );
+        let spec = Spec::single(RoutineKind::Dot, "d", 256, DataSource::Pl);
+        // first request occupies the single worker for 50 ms.
+        let blocker = srv.submit(&spec, ExecInputs::random_for(&spec, 0));
+        let mut tickets = vec![blocker];
+        let mut normal_shed = 0;
+        for i in 1..6 {
+            let inputs = ExecInputs::random_for(&spec, i);
+            match srv.try_submit(&spec, inputs, RequestOpts::default()) {
+                SubmitOutcome::Accepted(t) => tickets.push(t),
+                SubmitOutcome::Shed(reason) => {
+                    assert_eq!(reason, ShedReason::AboveWatermark);
+                    normal_shed += 1;
+                }
+            }
+        }
+        assert!(normal_shed > 0, "normal traffic above the watermark must shed");
+        // high priority is exempt from the watermark while the queue has room.
+        let high = srv.try_submit(
+            &spec,
+            ExecInputs::random_for(&spec, 99),
+            RequestOpts::default().with_priority(Priority::High),
+        );
+        assert!(high.is_accepted(), "high priority must pass the watermark");
+        tickets.extend(high.ticket());
+        for t in tickets {
+            assert!(t.wait().is_ok());
+        }
+        let report = srv.join();
+        assert_eq!(report.metrics.shed_watermark, normal_shed);
+    }
+
+    #[test]
+    fn tenant_quota_caps_inflight_requests() {
+        let srv = slow_server(
+            ServeConfig {
+                max_batch: 1,
+                workers: 1,
+                max_inflight_per_tenant: 2,
+                ..Default::default()
+            },
+            Duration::from_millis(50),
+        );
+        let spec = Spec::single(RoutineKind::Scal, "s", 256, DataSource::Pl);
+        let mut tickets = Vec::new();
+        let mut quota_shed = 0;
+        for i in 0..5 {
+            let inputs = ExecInputs::random_for(&spec, i);
+            let opts = RequestOpts::default().tenant("greedy");
+            match srv.try_submit(&spec, inputs, opts) {
+                SubmitOutcome::Accepted(t) => tickets.push(t),
+                SubmitOutcome::Shed(reason) => {
+                    assert_eq!(reason, ShedReason::TenantQuota);
+                    quota_shed += 1;
+                }
+            }
+        }
+        assert_eq!(quota_shed, 3, "only 2 of 5 greedy-tenant requests may be in flight");
+        // untenanted traffic is never quota-limited.
+        let free = srv.try_submit(&spec, ExecInputs::random_for(&spec, 9), RequestOpts::default());
+        assert!(free.is_accepted());
+        tickets.extend(free.ticket());
+        for t in tickets {
+            assert!(t.wait().is_ok());
+        }
+        let report = srv.join();
+        assert_eq!(report.metrics.shed_tenant_quota, 3);
+    }
+
+    #[test]
+    fn deadlines_shed_at_submit_and_drop_at_dequeue() {
+        let srv = slow_server(
+            ServeConfig { max_batch: 1, workers: 1, ..Default::default() },
+            Duration::from_millis(50),
+        );
+        let spec = Spec::single(RoutineKind::Axpy, "a", 256, DataSource::Pl);
+        // already expired at submit: shed, never queued.
+        let opts = RequestOpts {
+            deadline: Some(Instant::now() - Duration::from_millis(1)),
+            ..Default::default()
+        };
+        let out = srv.try_submit(&spec, ExecInputs::random_for(&spec, 0), opts);
+        assert_eq!(out.shed_reason(), Some(ShedReason::DeadlineExpired));
+        // expires while queued behind the 50 ms blocker: dropped at
+        // dequeue with a structured error, before any backend run.
+        let blocker = srv.submit(&spec, ExecInputs::random_for(&spec, 1));
+        let doomed = srv.submit_with(
+            &spec,
+            ExecInputs::random_for(&spec, 2),
+            RequestOpts::default().with_deadline_in(Duration::from_millis(5)),
+        );
+        match doomed.wait() {
+            Err(Error::Runtime(msg)) => assert!(msg.contains("deadline"), "{msg}"),
+            other => panic!("expected deadline error, got {other:?}"),
+        }
+        assert!(blocker.wait().is_ok());
+        let report = srv.join();
+        assert_eq!(report.metrics.shed_deadline, 1);
+        assert_eq!(report.metrics.deadline_missed, 1);
+        // the missed request was admitted, so it counts as answered.
+        assert_eq!(report.requests, 2);
+        assert_eq!(report.failed, 1);
+    }
+
+    #[test]
+    fn drain_stops_admissions_and_settles_inflight() {
+        let srv = slow_server(
+            ServeConfig { max_batch: 1, workers: 1, ..Default::default() },
+            Duration::from_millis(20),
+        );
+        let spec = Spec::single(RoutineKind::Dot, "d", 256, DataSource::Pl);
+        let t0 = srv.submit(&spec, ExecInputs::random_for(&spec, 0));
+        let t1 = srv.submit(&spec, ExecInputs::random_for(&spec, 1));
+        assert!(srv.drain(Duration::from_secs(30)), "pool must settle well within 30 s");
+        assert!(t0.wait().is_ok());
+        assert!(t1.wait().is_ok());
+        // post-drain: blocking submit resolves to a structured rejection
+        // (regression: used to enqueue and hang forever).
+        match srv.submit(&spec, ExecInputs::random_for(&spec, 2)).wait() {
+            Err(Error::Runtime(msg)) => assert!(msg.contains("draining"), "{msg}"),
+            other => panic!("expected draining rejection, got {other:?}"),
+        }
+        let out = srv.try_submit(&spec, ExecInputs::random_for(&spec, 3), RequestOpts::default());
+        assert_eq!(out.shed_reason(), Some(ShedReason::Draining));
+        let report = srv.join();
+        assert_eq!(report.requests, 2);
+        assert_eq!(report.metrics.shed_draining, 2);
+    }
+
+    #[test]
+    fn drain_timeout_purges_stragglers_with_structured_error() {
+        let srv = slow_server(
+            ServeConfig { max_batch: 1, workers: 1, ..Default::default() },
+            Duration::from_millis(50),
+        );
+        let spec = Spec::single(RoutineKind::Scal, "s", 256, DataSource::Pl);
+        let tickets: Vec<Ticket> =
+            (0..3).map(|i| srv.submit(&spec, ExecInputs::random_for(&spec, i))).collect();
+        assert!(!srv.drain(Duration::ZERO), "zero-timeout drain over a busy pool must purge");
+        for t in tickets {
+            match t.wait() {
+                Ok(_) => {}
+                Err(Error::Runtime(msg)) => {
+                    assert!(msg.contains("drained"), "{msg}");
+                }
+                other => panic!("unexpected outcome {other:?}"),
+            }
+        }
+        let report = srv.join();
+        // every admitted request was answered — executed or purged.
+        assert_eq!(report.requests, 3);
+        assert!(report.metrics.drain_purged >= 2, "at least the queued stragglers are purged");
+    }
+
+    #[test]
+    fn wait_timeout_bounds_exposure_then_still_delivers() {
+        let srv = slow_server(
+            ServeConfig { max_batch: 1, workers: 1, ..Default::default() },
+            Duration::from_millis(50),
+        );
+        let spec = Spec::single(RoutineKind::Axpy, "a", 256, DataSource::Pl);
+        let ticket = srv.submit(&spec, ExecInputs::random_for(&spec, 0));
+        match ticket.wait_timeout(Duration::from_millis(1)) {
+            Err(Error::Runtime(msg)) => assert!(msg.contains("timed out"), "{msg}"),
+            other => panic!("expected timeout, got {other:?}"),
+        }
+        // the ticket is still live: the response arrives on a later wait.
+        assert!(ticket.wait_timeout(Duration::from_secs(30)).is_ok());
+        srv.join();
+    }
+
+    #[test]
+    fn adaptive_pool_grows_under_backlog() {
+        let srv = slow_server(
+            ServeConfig {
+                max_batch: 1,
+                workers: 1,
+                min_workers: 1,
+                max_workers: 3,
+                target_queue_wait: Duration::from_micros(50),
+                ..Default::default()
+            },
+            Duration::from_millis(20),
+        );
+        // distinct sizes defeat coalescing, forcing a backlog.
+        let tickets: Vec<Ticket> = (0..8)
+            .map(|i| {
+                let spec = Spec::single(RoutineKind::Axpy, "a", 256 + 16 * i, DataSource::Pl);
+                let inputs = ExecInputs::random_for(&spec, i as u64);
+                srv.submit(&spec, inputs)
+            })
+            .collect();
+        for t in tickets {
+            assert!(t.wait().is_ok());
+        }
+        let report = srv.join();
+        assert!(
+            report.metrics.pool_grown >= 1,
+            "a 20 ms-per-request backlog over a 50 µs target must grow the pool (metrics: {:?})",
+            report.metrics
+        );
+    }
+
+    #[test]
+    fn report_json_round_trips() {
+        let srv = server(ServeConfig::default());
+        let spec = Spec::single(RoutineKind::Dot, "d", 128, DataSource::Pl);
+        srv.submit(&spec, ExecInputs::random_for(&spec, 0)).wait().unwrap();
+        let report = srv.join();
+        let text = report.to_json().to_pretty();
+        let parsed = crate::util::json::Json::parse(&text).expect("report JSON must parse");
+        match parsed {
+            crate::util::json::Json::Obj(pairs) => {
+                assert!(pairs.iter().any(|(k, _)| k == "metrics"));
+                assert!(pairs.iter().any(|(k, _)| k == "throughput_rps"));
+            }
+            other => panic!("expected object, got {other:?}"),
+        }
+        assert!(report.summary().contains("served 1 request(s)"));
     }
 }

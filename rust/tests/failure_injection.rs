@@ -168,6 +168,128 @@ fn channel_exhaustion_rejected_cleanly() {
     assert!(matches!(err, aieblas::Error::Routing(_)), "{err}");
 }
 
+/// Hostile serving configs (ISSUE 7 satellite): zeroed-out knobs and
+/// absurd linger/watermark values must be clamped into a working server,
+/// not divide-by-zero, spin or stall forever.
+#[test]
+fn hostile_serve_configs_are_clamped_not_fatal() {
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    use aieblas::pipeline::Pipeline;
+    use aieblas::runtime::{CpuBackend, ExecInputs};
+    use aieblas::serve::{AdmissionPolicy, RoutineServer, ServeConfig};
+
+    let spec = Spec::single(RoutineKind::Axpy, "a", 256, DataSource::Pl);
+    let hostile = [
+        // everything zero: batch/capacity/workers/pool clamps
+        ServeConfig {
+            max_batch: 0,
+            linger: Duration::ZERO,
+            queue_capacity: 0,
+            workers: 0,
+            max_inflight_per_tenant: 0,
+            min_workers: 0,
+            max_workers: 0,
+            target_queue_wait: Duration::ZERO,
+            ..Default::default()
+        },
+        // absurd linger (10 hours) and a watermark far beyond capacity:
+        // the linger cap must keep dispatch prompt anyway.
+        ServeConfig {
+            max_batch: 4,
+            linger: Duration::from_secs(36_000),
+            queue_capacity: 8,
+            workers: 1,
+            policy: AdmissionPolicy::RejectAboveWatermark(usize::MAX),
+            ..Default::default()
+        },
+        // watermark 0 (clamped to 1) with inverted pool bounds
+        ServeConfig {
+            queue_capacity: 4,
+            workers: 2,
+            policy: AdmissionPolicy::RejectAboveWatermark(0),
+            min_workers: 7,
+            max_workers: 1,
+            ..Default::default()
+        },
+    ];
+    for (i, cfg) in hostile.into_iter().enumerate() {
+        let server = RoutineServer::new(
+            Arc::new(Pipeline::default()),
+            Arc::new(CpuBackend),
+            cfg,
+        );
+        let t0 = Instant::now();
+        let outcome = server
+            .submit(&spec, ExecInputs::random_for(&spec, i as u64))
+            .wait_timeout(Duration::from_secs(30));
+        assert!(outcome.is_ok(), "hostile config {i} must still serve: {outcome:?}");
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "hostile config {i} must answer promptly (linger clamp)"
+        );
+        server.join();
+    }
+}
+
+/// Malformed deadline/tenant options: an already-expired deadline is shed
+/// (blocking submit gets a structured error, never a hang), and an empty
+/// tenant string is untenanted — quota applies per real tenant only.
+#[test]
+fn malformed_deadline_and_tenant_requests_fail_structurally() {
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    use aieblas::pipeline::Pipeline;
+    use aieblas::runtime::{CpuBackend, ExecInputs, SlowBackend};
+    use aieblas::serve::{RequestOpts, RoutineServer, ServeConfig, ShedReason, SubmitOutcome};
+
+    let spec = Spec::single(RoutineKind::Dot, "d", 256, DataSource::Pl);
+    let server = RoutineServer::new(
+        Arc::new(Pipeline::default()),
+        // slow enough that quota-held requests stay in flight for the test
+        Arc::new(SlowBackend::new(CpuBackend, Duration::from_millis(50))),
+        ServeConfig { max_batch: 1, workers: 1, max_inflight_per_tenant: 1, ..Default::default() },
+    );
+
+    // expired deadline via try_submit: structured shed reason.
+    let expired = RequestOpts::default().with_deadline_in(Duration::ZERO);
+    let out = server.try_submit(&spec, ExecInputs::random_for(&spec, 0), expired);
+    assert_eq!(out.shed_reason(), Some(ShedReason::DeadlineExpired));
+
+    // expired deadline via blocking submit: structured error, not a hang.
+    let expired = RequestOpts::default().with_deadline_in(Duration::ZERO);
+    let err = server
+        .submit_with(&spec, ExecInputs::random_for(&spec, 1), expired)
+        .wait_timeout(Duration::from_secs(30));
+    match err {
+        Err(aieblas::Error::Runtime(msg)) => assert!(msg.contains("deadline"), "{msg}"),
+        other => panic!("expected structured deadline rejection, got {other:?}"),
+    }
+
+    // real tenant: quota of 1 binds while its first request is in flight.
+    let first = server
+        .try_submit(&spec, ExecInputs::random_for(&spec, 2), RequestOpts::default().tenant("t0"));
+    assert!(first.is_accepted());
+    let second = server
+        .try_submit(&spec, ExecInputs::random_for(&spec, 3), RequestOpts::default().tenant("t0"));
+    assert_eq!(second.shed_reason(), Some(ShedReason::TenantQuota));
+
+    // empty tenant string normalizes to untenanted: never quota-limited.
+    for seed in 4..7 {
+        let opts = RequestOpts::default().tenant("");
+        match server.try_submit(&spec, ExecInputs::random_for(&spec, seed), opts) {
+            SubmitOutcome::Accepted(_) => {}
+            SubmitOutcome::Shed(reason) => panic!("empty tenant shed with {reason}"),
+        }
+    }
+
+    let report = server.join();
+    assert_eq!(report.metrics.shed_deadline, 2);
+    assert_eq!(report.metrics.shed_tenant_quota, 1);
+}
+
 #[test]
 fn onchip_design_with_many_kernels_still_runs() {
     // the no-PL configuration must not be limited by interface channels.

@@ -1,0 +1,257 @@
+//! Chaos suite (ISSUE 7): hammer `RoutineServer` with hostile
+//! multi-tenant traffic — hot and cold specs, malformed specs, expired
+//! deadlines, an over-quota tenant and a background flood, all over a
+//! deliberately slow backend with an adaptive pool — and assert the
+//! hardening invariants:
+//!
+//! * every submitted ticket resolves (no hangs),
+//! * `attempts == answered + shed` exactly (nothing double-counted,
+//!   nothing lost),
+//! * no dispatcher dies (a sentinel request still succeeds afterwards),
+//! * high-priority p99 latency beats background p99 under saturation.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use aieblas::blas::RoutineKind;
+use aieblas::pipeline::Pipeline;
+use aieblas::runtime::{CpuBackend, ExecInputs, SlowBackend};
+use aieblas::serve::{
+    AdmissionPolicy, Priority, RequestOpts, RoutineServer, ServeConfig, SubmitOutcome, Ticket,
+};
+use aieblas::spec::{DataSource, Spec};
+
+/// One traffic stream's tally: how many submissions it attempted and the
+/// tickets for the accepted ones. Sheds are `attempts - tickets.len()`.
+struct Stream {
+    attempts: u64,
+    tickets: Vec<Ticket>,
+}
+
+fn hot_specs() -> Vec<Spec> {
+    vec![
+        Spec::single(RoutineKind::Axpy, "hot_a", 1024, DataSource::Pl),
+        Spec::single(RoutineKind::Dot, "hot_d", 2048, DataSource::Pl),
+        Spec::single(RoutineKind::Scal, "hot_s", 512, DataSource::OnChip),
+        Spec::axpydot_dataflow(2048, 2.0),
+    ]
+}
+
+#[test]
+fn chaos_mixed_hostile_load_preserves_invariants() {
+    let server = RoutineServer::new(
+        Arc::new(Pipeline::default()),
+        // 2 ms per dispatch: long enough that queues build, deadlines
+        // expire and quotas bind; short enough for a quick test.
+        Arc::new(SlowBackend::new(CpuBackend, Duration::from_millis(2))),
+        ServeConfig {
+            max_batch: 4,
+            linger: Duration::from_micros(200),
+            queue_capacity: 512,
+            workers: 2,
+            policy: AdmissionPolicy::RejectAboveWatermark(480),
+            max_inflight_per_tenant: 4,
+            min_workers: 2,
+            max_workers: 4,
+            target_queue_wait: Duration::from_micros(500),
+        },
+    );
+
+    // primer: several ms of normal-priority backlog, submitted before any
+    // stream spawns. The normal lane dequeues ahead of background, so
+    // every background request with a ~1 ms deadline submitted during the
+    // chaos window is guaranteed to expire in the queue rather than
+    // depending on thread-scheduling luck.
+    let primer_spec = Spec::single(RoutineKind::Axpy, "primer", 1024, DataSource::OnChip);
+    let primer: Vec<Ticket> = (0..16u64)
+        .map(|i| server.submit(&primer_spec, ExecInputs::random_for(&primer_spec, i)))
+        .collect();
+
+    let streams: Vec<Stream> = std::thread::scope(|s| {
+        let server = &server;
+        let mut handles = Vec::new();
+
+        // stream 1: hot traffic — four specs the cache keeps warm.
+        handles.push(s.spawn(move || {
+            let specs = hot_specs();
+            let mut st = Stream { attempts: 0, tickets: Vec::new() };
+            for i in 0..64u64 {
+                let spec = &specs[(i as usize) % specs.len()];
+                st.attempts += 1;
+                let inputs = ExecInputs::random_for(spec, i);
+                match server.try_submit(spec, inputs, RequestOpts::default()) {
+                    SubmitOutcome::Accepted(t) => st.tickets.push(t),
+                    SubmitOutcome::Shed(_) => {}
+                }
+            }
+            st
+        }));
+
+        // stream 2: cold traffic — two dozen distinct specs, each a cache
+        // miss that must not stall hot traffic's coalescing.
+        handles.push(s.spawn(move || {
+            let mut st = Stream { attempts: 0, tickets: Vec::new() };
+            for i in 0..24u64 {
+                let spec = Spec::single(
+                    RoutineKind::Axpy,
+                    &format!("cold_{i}"),
+                    256 + 32 * (i as usize),
+                    DataSource::Pl,
+                );
+                st.attempts += 1;
+                let inputs = ExecInputs::random_for(&spec, i);
+                match server.try_submit(&spec, inputs, RequestOpts::default()) {
+                    SubmitOutcome::Accepted(t) => st.tickets.push(t),
+                    SubmitOutcome::Shed(_) => {}
+                }
+            }
+            st
+        }));
+
+        // stream 3: malformed specs — admitted, then failed per-request at
+        // lowering; the dispatcher must survive every one.
+        handles.push(s.spawn(move || {
+            let bad = Spec { routines: vec![], ..Default::default() };
+            let mut st = Stream { attempts: 0, tickets: Vec::new() };
+            for _ in 0..16 {
+                st.attempts += 1;
+                match server.try_submit(&bad, ExecInputs::default(), RequestOpts::default()) {
+                    SubmitOutcome::Accepted(t) => st.tickets.push(t),
+                    SubmitOutcome::Shed(_) => {}
+                }
+            }
+            st
+        }));
+
+        // stream 4: deadline abuse — half already expired at submit
+        // (guaranteed shed), half with deadlines far shorter than the
+        // backlog (dropped at dequeue as misses).
+        handles.push(s.spawn(move || {
+            let spec = Spec::single(RoutineKind::Dot, "deadline", 512, DataSource::Pl);
+            let mut st = Stream { attempts: 0, tickets: Vec::new() };
+            for i in 0..32u64 {
+                let opts = if i % 2 == 0 {
+                    RequestOpts::default().with_deadline_in(Duration::ZERO)
+                } else {
+                    // background priority: queues behind the flood, so a
+                    // 1 ms deadline cannot survive the multi-ms backlog.
+                    RequestOpts::default()
+                        .with_priority(Priority::Background)
+                        .with_deadline_in(Duration::from_millis(1))
+                };
+                st.attempts += 1;
+                match server.try_submit(&spec, ExecInputs::random_for(&spec, i), opts) {
+                    SubmitOutcome::Accepted(t) => st.tickets.push(t),
+                    SubmitOutcome::Shed(_) => {}
+                }
+                std::thread::yield_now();
+            }
+            st
+        }));
+
+        // stream 5: greedy tenant — 32 requests against a 4-in-flight
+        // quota; most must shed with TenantQuota, none may starve others.
+        handles.push(s.spawn(move || {
+            let spec = Spec::single(RoutineKind::Scal, "greedy", 1024, DataSource::Pl);
+            let mut st = Stream { attempts: 0, tickets: Vec::new() };
+            for i in 0..32u64 {
+                let opts = RequestOpts::default().tenant("greedy");
+                st.attempts += 1;
+                match server.try_submit(&spec, ExecInputs::random_for(&spec, i), opts) {
+                    SubmitOutcome::Accepted(t) => st.tickets.push(t),
+                    SubmitOutcome::Shed(_) => {}
+                }
+            }
+            st
+        }));
+
+        // stream 6: high-priority hot spec — must cut every queue.
+        handles.push(s.spawn(move || {
+            let spec = Spec::single(RoutineKind::Axpy, "vip", 1024, DataSource::Pl);
+            let mut st = Stream { attempts: 0, tickets: Vec::new() };
+            for i in 0..30u64 {
+                let opts = RequestOpts::default().with_priority(Priority::High).tenant("vip");
+                st.attempts += 1;
+                match server.try_submit(&spec, ExecInputs::random_for(&spec, i), opts) {
+                    SubmitOutcome::Accepted(t) => st.tickets.push(t),
+                    SubmitOutcome::Shed(_) => {}
+                }
+                // pace the VIP stream so its requests sample the whole
+                // chaos window rather than one early burst.
+                std::thread::sleep(Duration::from_micros(300));
+            }
+            st
+        }));
+
+        // stream 7: background flood — a different spec than the VIP so
+        // the two classes never share a coalesced batch.
+        handles.push(s.spawn(move || {
+            let spec = Spec::single(RoutineKind::Dot, "flood", 1024, DataSource::Pl);
+            let mut st = Stream { attempts: 0, tickets: Vec::new() };
+            for i in 0..64u64 {
+                let opts = RequestOpts::default().with_priority(Priority::Background);
+                st.attempts += 1;
+                match server.try_submit(&spec, ExecInputs::random_for(&spec, i), opts) {
+                    SubmitOutcome::Accepted(t) => st.tickets.push(t),
+                    SubmitOutcome::Shed(_) => {}
+                }
+            }
+            st
+        }));
+
+        handles.into_iter().map(|h| h.join().expect("stream thread panicked")).collect()
+    });
+
+    // every ticket resolves — success or structured error, never a hang.
+    let mut attempts = 16u64; // the primer submissions
+    for t in primer {
+        t.wait_timeout(Duration::from_secs(60)).expect("primer request must succeed");
+    }
+    for st in streams {
+        attempts += st.attempts;
+        for t in st.tickets {
+            match t.wait_timeout(Duration::from_secs(60)) {
+                Err(aieblas::Error::Runtime(msg)) if msg.contains("timed out") => {
+                    panic!("ticket unresolved after 60 s: {msg}")
+                }
+                _ => {}
+            }
+        }
+    }
+
+    // no dispatcher died: a sentinel request still round-trips.
+    let sentinel = Spec::single(RoutineKind::Axpy, "sentinel", 512, DataSource::Pl);
+    attempts += 1;
+    server
+        .submit(&sentinel, ExecInputs::random_for(&sentinel, 0))
+        .wait_timeout(Duration::from_secs(60))
+        .expect("sentinel request must succeed after the chaos");
+
+    let report = server.join();
+    let m = &report.metrics;
+
+    // exact accounting: every attempt was either answered or shed.
+    assert_eq!(
+        report.requests + m.shed_total(),
+        attempts,
+        "attempts must equal answered + shed (report: {m:?})"
+    );
+    assert!(m.shed_tenant_quota > 0, "greedy tenant must hit its quota ({m:?})");
+    assert!(m.shed_deadline > 0, "pre-expired deadlines must shed at submit ({m:?})");
+    assert!(m.deadline_missed > 0, "short deadlines must be dropped at dequeue ({m:?})");
+    assert!(m.pool_grown >= 1, "the adaptive pool must grow under this backlog ({m:?})");
+
+    // priority isolation: both classes completed work, and the VIP class
+    // saw strictly better tail latency than the flood.
+    let p99 = |class: Priority| {
+        let p = m.priorities.iter().find(|p| p.class == class).expect("class present");
+        assert!(p.completed > 0, "{class} must complete requests ({m:?})");
+        p.p99_s
+    };
+    let high = p99(Priority::High);
+    let background = p99(Priority::Background);
+    assert!(
+        high < background,
+        "high-priority p99 ({high:.6}s) must beat background p99 ({background:.6}s)"
+    );
+}

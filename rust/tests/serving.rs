@@ -12,9 +12,9 @@ use std::time::Duration;
 use aieblas::blas::RoutineKind;
 use aieblas::pipeline::{ExecutablePlan, Pipeline};
 use aieblas::runtime::{
-    Backend, CpuBackend, ExecInputs, ReferenceBackend, ShardedBackend, SimBackend,
+    Backend, CpuBackend, ExecInputs, ReferenceBackend, ShardedBackend, SimBackend, SlowBackend,
 };
-use aieblas::serve::{RoutineServer, ServeConfig};
+use aieblas::serve::{AdmissionPolicy, RequestOpts, RoutineServer, ServeConfig, SubmitOutcome};
 use aieblas::spec::{DataSource, Spec};
 
 fn workload_specs() -> Vec<Spec> {
@@ -185,6 +185,7 @@ fn routine_server_serves_concurrent_clients_correctly() {
             linger: Duration::from_millis(2),
             queue_capacity: 32,
             workers: 3,
+            ..Default::default()
         },
     );
 
@@ -238,6 +239,7 @@ fn server_coalesces_same_key_bursts() {
             linger: Duration::from_millis(50),
             queue_capacity: 64,
             workers: 1,
+            ..Default::default()
         },
     );
     let tickets: Vec<_> =
@@ -253,4 +255,103 @@ fn server_coalesces_same_key_bursts() {
         report.batches
     );
     assert!(report.max_batch >= 2);
+}
+
+/// Queue saturation under the reject-when-full policy: overload sheds
+/// (with the reason counted), but every *accepted* request's output stays
+/// bit-identical to a direct sequential execution — shedding changes who
+/// gets served, never what the served requests compute.
+#[test]
+fn queue_saturation_sheds_with_reason_and_preserves_accepted_outputs() {
+    let spec = Spec::single(RoutineKind::Axpy, "a", 1024, DataSource::Pl);
+    let pipeline = Arc::new(Pipeline::default());
+    pipeline.lower(&spec).unwrap();
+    let server = RoutineServer::new(
+        pipeline,
+        // 5 ms per dispatch holds the single worker busy so rapid
+        // submissions overwhelm the 4-deep queue deterministically.
+        Arc::new(SlowBackend::new(CpuBackend, Duration::from_millis(5))),
+        ServeConfig {
+            max_batch: 1,
+            linger: Duration::ZERO,
+            queue_capacity: 4,
+            workers: 1,
+            policy: AdmissionPolicy::RejectWhenFull,
+            ..Default::default()
+        },
+    );
+
+    let total = 64u64;
+    let mut accepted: Vec<(u64, aieblas::serve::Ticket)> = Vec::new();
+    let mut shed = 0u64;
+    for seed in 0..total {
+        let inputs = ExecInputs::random_for(&spec, seed);
+        match server.try_submit(&spec, inputs, RequestOpts::default()) {
+            SubmitOutcome::Accepted(t) => accepted.push((seed, t)),
+            SubmitOutcome::Shed(_) => shed += 1,
+        }
+    }
+    assert!(shed > 0, "64 rapid submits into a 4-deep queue over a 5 ms backend must shed");
+    assert!(!accepted.is_empty(), "the queue must still admit some requests");
+
+    let plan = Arc::new(aieblas::pipeline::lower_spec(&spec).unwrap());
+    let prepared = CpuBackend.prepare(plan).unwrap();
+    for (seed, ticket) in accepted {
+        let outcome = ticket.wait().unwrap();
+        let direct = CpuBackend.execute(&prepared, &ExecInputs::random_for(&spec, seed)).unwrap();
+        let a_bits: Vec<u32> = outcome.results[0].output.iter().map(|v| v.to_bits()).collect();
+        let b_bits: Vec<u32> = direct.results[0].output.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a_bits, b_bits, "accepted request {seed} must match direct execution");
+    }
+
+    let report = server.join();
+    assert_eq!(report.metrics.shed_queue_full, shed, "every shed is counted with its reason");
+    assert_eq!(report.requests + report.metrics.shed_total(), total, "accounting balances");
+    assert_eq!(report.failed, 0);
+}
+
+/// Regression (ISSUE 7 satellite): a submit racing drain/shutdown must
+/// never enqueue a request that no worker will answer — every ticket
+/// resolves, accepted ones successfully, refused ones with a structured
+/// draining rejection.
+#[test]
+fn submit_racing_drain_never_hangs() {
+    let spec = Spec::single(RoutineKind::Dot, "d", 512, DataSource::Pl);
+    let pipeline = Arc::new(Pipeline::default());
+    pipeline.lower(&spec).unwrap();
+    let server = RoutineServer::new(
+        pipeline,
+        Arc::new(SlowBackend::new(CpuBackend, Duration::from_millis(1))),
+        ServeConfig { max_batch: 2, workers: 2, ..Default::default() },
+    );
+
+    std::thread::scope(|s| {
+        let server = &server;
+        let spec = &spec;
+        let submitter = s.spawn(move || {
+            // hammer submits until the drain flips admissions off; a full
+            // queue is back-pressure, not the signal to stop.
+            let mut tickets = Vec::new();
+            for seed in 0.. {
+                let inputs = ExecInputs::random_for(spec, seed);
+                match server.try_submit(spec, inputs, RequestOpts::default()) {
+                    SubmitOutcome::Accepted(t) => tickets.push(t),
+                    SubmitOutcome::Shed(aieblas::serve::ShedReason::Draining) => break,
+                    SubmitOutcome::Shed(_) => std::thread::yield_now(),
+                }
+            }
+            tickets
+        });
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(server.drain(Duration::from_secs(60)), "drain must settle accepted work");
+        let tickets = submitter.join().unwrap();
+        for t in tickets {
+            // bounded wait: a hang here is exactly the regression under test.
+            t.wait_timeout(Duration::from_secs(60)).unwrap();
+        }
+    });
+
+    let report = server.join();
+    assert!(report.metrics.shed_draining >= 1);
+    assert_eq!(report.failed, 0, "accepted requests all execute; none are abandoned");
 }

@@ -39,8 +39,9 @@ def load(path):
 
 # Fields timing pinned-old engine configurations: informational context
 # for the speedup columns, never gated. ("untuned_" covers the autotuner
-# bench's no-search baseline.)
-BASELINE_FIELD_PREFIXES = ("pr2_", "naive_", "untuned_")
+# bench's no-search baseline; "shed_" covers the serve_stress admission
+# counters, which scale with offered load rather than engine speed.)
+BASELINE_FIELD_PREFIXES = ("pr2_", "naive_", "untuned_", "shed_")
 
 
 def median_fields(case):
