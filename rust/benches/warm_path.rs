@@ -1,0 +1,245 @@
+//! Warm-path scalability bench (DESIGN.md §12): multithreaded warm-hit
+//! throughput of the sharded O(1) plan cache, against an in-bench
+//! replica of the old design (one mutex around a `HashMap` plus a
+//! `VecDeque` recency list refreshed by linear scan).
+//!
+//! Sweeps thread counts × cache sizes and emits `BENCH_warm_path.json`
+//! with, per cache size:
+//!
+//! * `get_median_s` — single-thread warm `get` cost per op (sub-ms, so
+//!   CI's `--min-seconds 1e-3` gate treats it as informational);
+//! * `naive_get_median_s` — same op on the old design (`naive_` prefix
+//!   exempts it from the bench-diff gate);
+//! * `tput_tN_ops_per_s` / `naive_tput_tN_ops_per_s` — aggregate warm
+//!   `get` throughput at N threads;
+//! * `scaling_vs_1t` and `scaling_efficiency` — top-thread-count
+//!   throughput relative to 1 thread (efficiency = scaling / threads).
+//!
+//! Two properties are asserted in-process:
+//!
+//! * O(1) `get`: per-op warm-hit cost at the largest size must stay
+//!   within 8× of the smallest (the old design is linear in size);
+//! * scalability: ≥4× 1-thread throughput at 16 threads — checked only
+//!   on full (non-smoke) runs on machines with ≥16 logical cores.
+//!
+//! Run: `cargo bench --bench warm_path`
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
+use std::time::{Duration, Instant};
+
+use aieblas::blas::RoutineKind;
+use aieblas::pipeline::{lower_spec, ExecutablePlan, PlanCache, PlanKey};
+use aieblas::spec::{DataSource, Spec};
+use aieblas::util::bench::Bench;
+use aieblas::util::json::{obj, Json};
+use aieblas::util::rng::Rng;
+
+/// The pre-overhaul plan cache, reproduced verbatim in spirit: one lock
+/// around the whole structure, recency tracked in a `VecDeque` whose
+/// refresh is an O(len) `iter().position()` scan. Times the design this
+/// PR replaced; its fields carry the `naive_` prefix in the JSON so the
+/// bench-diff gate never targets them.
+type NaiveInner = (HashMap<PlanKey, Arc<ExecutablePlan>>, VecDeque<PlanKey>);
+
+struct NaiveLru {
+    capacity: usize,
+    inner: Mutex<NaiveInner>,
+}
+
+impl NaiveLru {
+    fn new(capacity: usize) -> NaiveLru {
+        NaiveLru { capacity: capacity.max(1), inner: Mutex::new((HashMap::new(), VecDeque::new())) }
+    }
+
+    fn get(&self, key: &PlanKey) -> Option<Arc<ExecutablePlan>> {
+        let mut inner = self.inner.lock().unwrap();
+        let (map, order) = &mut *inner;
+        let plan = map.get(key).cloned()?;
+        if let Some(pos) = order.iter().position(|k| k == key) {
+            order.remove(pos);
+            order.push_back(key.clone());
+        }
+        Some(plan)
+    }
+
+    fn insert(&self, key: PlanKey, plan: Arc<ExecutablePlan>) {
+        let mut inner = self.inner.lock().unwrap();
+        let (map, order) = &mut *inner;
+        if map.contains_key(&key) {
+            return;
+        }
+        while map.len() >= self.capacity {
+            let Some(evicted) = order.pop_front() else { break };
+            map.remove(&evicted);
+        }
+        order.push_back(key.clone());
+        map.insert(key, plan);
+    }
+}
+
+/// Aggregate warm-`get` throughput: `threads` workers hammer random
+/// resident keys until the deadline; returns total ops per second.
+fn throughput_ops_per_s<F>(keys: &[PlanKey], threads: usize, dur: Duration, op: F) -> f64
+where
+    F: Fn(&PlanKey) + Sync,
+{
+    let total = AtomicU64::new(0);
+    let barrier = Barrier::new(threads);
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let (op, total, barrier) = (&op, &total, &barrier);
+            s.spawn(move || {
+                let mut rng = Rng::new(0xC0FF_EE00 + t as u64);
+                barrier.wait();
+                let deadline = Instant::now() + dur;
+                let mut ops = 0u64;
+                // check the clock once per chunk so timing overhead does
+                // not drown the measured op.
+                while Instant::now() < deadline {
+                    for _ in 0..64 {
+                        op(&keys[rng.below(keys.len() as u64) as usize]);
+                    }
+                    ops += 64;
+                }
+                total.fetch_add(ops, Ordering::Relaxed);
+            });
+        }
+    });
+    total.load(Ordering::Relaxed) as f64 / dur.as_secs_f64()
+}
+
+fn main() {
+    aieblas::init();
+    let smoke = std::env::var("AIEBLAS_BENCH_SMOKE").is_ok();
+    let sizes: &[usize] = if smoke { &[16, 256] } else { &[16, 1024, 16384] };
+    let threads: &[usize] = if smoke { &[1, 4] } else { &[1, 2, 4, 8, 16] };
+    let hammer_dur = Duration::from_millis(if smoke { 20 } else { 100 });
+    let iters = if smoke { 2_000u32 } else { 20_000 };
+    eprintln!("== bench: warm_path (sizes {sizes:?}, threads {threads:?}, smoke={smoke}) ==");
+
+    // every entry shares one real lowered plan: the bench times cache
+    // bookkeeping, not lowering, and plan identity is irrelevant to it.
+    let spec = Spec::single(RoutineKind::Scal, "s", 4096, DataSource::Pl);
+    let plan = Arc::new(lower_spec(&spec).expect("lower scal spec"));
+
+    let mut b = Bench::new("warm_path");
+    let mut json_rows: Vec<Json> = Vec::new();
+    let mut per_op_by_size: Vec<(usize, f64)> = Vec::new();
+
+    for &size in sizes {
+        let keys: Vec<PlanKey> =
+            (0..size).map(|i| PlanKey::new(format!("warm-path-key-{i}"))).collect();
+        let cache = PlanCache::new(size);
+        let naive = NaiveLru::new(size);
+        for key in &keys {
+            cache.insert(key.clone(), plan.clone());
+            naive.insert(key.clone(), plan.clone());
+        }
+        assert_eq!(cache.len(), size, "every key must be resident for a warm-hit bench");
+
+        // single-thread per-op cost (strided walk touches every key).
+        let sharded = b.bench(&format!("get/sharded/size={size}"), || {
+            let mut hit = 0usize;
+            let mut idx = 0usize;
+            for _ in 0..iters {
+                idx = (idx + 17) % size;
+                hit += cache.get(&keys[idx]).is_some() as usize;
+            }
+            hit
+        });
+        let naive_stats = b.bench(&format!("get/naive/size={size}"), || {
+            let mut hit = 0usize;
+            let mut idx = 0usize;
+            for _ in 0..iters {
+                idx = (idx + 17) % size;
+                hit += naive.get(&keys[idx]).is_some() as usize;
+            }
+            hit
+        });
+        let get_median_s = sharded.median / iters as f64;
+        let naive_get_median_s = naive_stats.median / iters as f64;
+        per_op_by_size.push((size, get_median_s));
+
+        let mut row = vec![
+            ("case", format!("size={size}").into()),
+            ("get_median_s", get_median_s.into()),
+            ("naive_get_median_s", naive_get_median_s.into()),
+        ];
+        let mut tput_1t = f64::NAN;
+        let mut tput_top = f64::NAN;
+        for &t in threads {
+            let tput = throughput_ops_per_s(&keys, t, hammer_dur, |k| {
+                std::hint::black_box(cache.get(k));
+            });
+            let naive_tput = throughput_ops_per_s(&keys, t, hammer_dur, |k| {
+                std::hint::black_box(naive.get(k));
+            });
+            if t == 1 {
+                tput_1t = tput;
+            }
+            tput_top = tput;
+            eprintln!(
+                "  size={size} t={t}: sharded {:.2}M ops/s, naive {:.2}M ops/s",
+                tput / 1e6,
+                naive_tput / 1e6
+            );
+            row.push((Box::leak(format!("tput_t{t}_ops_per_s").into_boxed_str()), tput.into()));
+            row.push((
+                Box::leak(format!("naive_tput_t{t}_ops_per_s").into_boxed_str()),
+                naive_tput.into(),
+            ));
+        }
+        let top_threads = *threads.last().unwrap();
+        let scaling = tput_top / tput_1t.max(1.0);
+        row.push(("scaling_vs_1t", scaling.into()));
+        row.push(("scaling_efficiency", (scaling / top_threads as f64).into()));
+        json_rows.push(obj(row));
+
+        // the 16-thread scalability acceptance bar: only meaningful off
+        // smoke and with enough cores to actually run 16 ways.
+        let cores = std::thread::available_parallelism().map_or(1, |p| p.get());
+        if !smoke && top_threads >= 16 && cores >= 16 {
+            assert!(
+                scaling >= 4.0,
+                "16-thread warm-hit throughput must be >=4x 1-thread \
+                 (size={size}: {scaling:.2}x on {cores} cores)"
+            );
+        }
+    }
+
+    // O(1) warm get: cost must be flat in cache size. The old design is
+    // linear (a 16384-entry scan costs ~1000x a 16-entry one), so a
+    // loose 8x envelope cleanly separates O(1) from O(len) while
+    // tolerating cache-hierarchy noise on shared runners.
+    let (small_size, small) = per_op_by_size.iter().copied().min_by_key(|e| e.0).unwrap();
+    let (large_size, large) = per_op_by_size.iter().copied().max_by_key(|e| e.0).unwrap();
+    let flatness = large / small.max(1e-12);
+    eprintln!(
+        "  flatness: size={small_size} {:.1}ns vs size={large_size} {:.1}ns ({flatness:.2}x)",
+        small * 1e9,
+        large * 1e9
+    );
+    assert!(
+        flatness < 8.0,
+        "warm get must be O(1) in cache size: size={large_size} costs {flatness:.2}x \
+         size={small_size} ({large:.3e}s vs {small:.3e}s)"
+    );
+
+    b.finish();
+
+    let doc = obj(vec![
+        ("bench", "warm_path".into()),
+        ("unit", "seconds".into()),
+        ("smoke", smoke.into()),
+        ("flatness_ratio", flatness.into()),
+        ("cases", Json::Arr(json_rows)),
+    ]);
+    let dir = std::env::var("AIEBLAS_BENCH_JSON_DIR").unwrap_or_else(|_| ".".into());
+    let path = format!("{dir}/BENCH_warm_path.json");
+    match std::fs::write(&path, doc.to_pretty() + "\n") {
+        Ok(()) => eprintln!("wrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+}

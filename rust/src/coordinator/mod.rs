@@ -201,7 +201,7 @@ impl AieBlas {
                 .execute(&ReferenceBackend.prepare(prepared.plan_arc().clone())?, &inputs)?;
             for (got, want) in outcome.results.iter().zip(&reference.results) {
                 numerics.push((
-                    got.routine.clone(),
+                    got.routine.to_string(),
                     NumericResult {
                         backend: got.provenance,
                         max_rel_err: max_rel_err(&got.output, &want.output),

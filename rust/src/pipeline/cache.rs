@@ -5,11 +5,19 @@
 //! interned as a [`PlanKey`] (an `Arc<str>` plus its precomputed FNV-1a
 //! hash) so the warm serving path never clones or re-hashes the full
 //! canonical-JSON `String` per request. A repeated spec skips
-//! re-validation, re-codegen, re-placement and re-routing. LRU-evicting
-//! with a bounded capacity; hit/miss counters are surfaced in
-//! `RunReport::summary()` for serving observability.
+//! re-validation, re-codegen, re-placement and re-routing.
+//!
+//! Internally the cache is **striped** (DESIGN.md §12): the key's
+//! precomputed hash selects one of a power-of-two number of lock stripes,
+//! each an independent O(1) LRU (intrusive doubly-linked order through a
+//! slab of slots, so a warm `get` is one `HashMap` probe plus four index
+//! writes — no `VecDeque` scan). Warm hits on distinct keys therefore
+//! take disjoint locks and scale with client threads, while per-stripe
+//! relaxed atomic counters keep the aggregate [`CacheStats`] exact.
+//! Small capacities collapse to a single stripe so exact global LRU
+//! semantics (and the unit tests that rely on them) are preserved.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -80,6 +88,32 @@ impl std::fmt::Display for PlanKey {
     }
 }
 
+/// Pick the stripe for a key hash among `stripes` (a power of two).
+///
+/// Uses bits 32..40 of the FNV-1a hash rather than the low bits: the
+/// stripe-local `HashMap` derives its buckets from the same 64-bit value
+/// (`PlanKey::hash` writes only `hash64()`), so stripe selection and
+/// bucket selection must consume different bit ranges or every map in a
+/// stripe would see keys agreeing in its own low bits. Shared with the
+/// pipeline's single-flight in-flight map so both layers agree on which
+/// lock guards a key.
+pub(crate) fn select_stripe(hash: u64, stripes: usize) -> usize {
+    debug_assert!(stripes.is_power_of_two());
+    ((hash >> 32) as usize) & (stripes - 1)
+}
+
+/// Stripe count for a cache of `capacity` entries: the largest power of
+/// two ≤ `min(64, capacity / 8)`, and at least 1. Small caches (< 16)
+/// get exactly one stripe — global LRU order stays exact, which the
+/// eviction unit tests (capacities 1–4) and any capacity-precise caller
+/// rely on. Large caches cap at 64 stripes: past the core count more
+/// stripes only fragment capacity.
+pub(crate) fn stripe_count_for(capacity: usize) -> usize {
+    let limit = (capacity / 8).clamp(1, 64);
+    // largest power of two ≤ limit
+    1 << (usize::BITS - 1 - limit.leading_zeros())
+}
+
 /// Snapshot of the cache's counters.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
@@ -123,20 +157,155 @@ impl CacheStats {
     }
 }
 
-struct Inner {
-    map: HashMap<PlanKey, Arc<ExecutablePlan>>,
-    /// LRU order: front = least recently used (`PlanKey` clones are `Arc`
-    /// bumps, not string copies).
-    order: VecDeque<PlanKey>,
+/// Sentinel slab index: "no neighbour" in the intrusive LRU list.
+const NIL: usize = usize::MAX;
+
+struct Slot {
+    /// `None` after eviction (the plan and key drop eagerly; the slot
+    /// waits on the free list for reuse).
+    entry: Option<(PlanKey, Arc<ExecutablePlan>)>,
+    prev: usize,
+    next: usize,
 }
 
-/// Bounded, thread-safe LRU cache of lowered plans.
-pub struct PlanCache {
-    inner: Mutex<Inner>,
+/// One stripe's resident entries: a key → slot-index map plus the slots
+/// themselves, LRU-ordered by an intrusive doubly-linked list through
+/// `prev`/`next` (head = least recently used, tail = most recently used).
+/// Every operation — hit refresh, insert, evict — is O(1): no ordered
+/// container is scanned or shifted, and slots are recycled through a free
+/// list so a stripe running at capacity performs no allocation at all.
+struct StripeInner {
+    map: HashMap<PlanKey, usize>,
+    slots: Vec<Slot>,
+    free: Vec<usize>,
+    head: usize,
+    tail: usize,
+}
+
+impl StripeInner {
+    fn with_capacity(capacity: usize) -> StripeInner {
+        StripeInner {
+            map: HashMap::with_capacity(capacity),
+            slots: Vec::with_capacity(capacity),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+        }
+    }
+
+    /// Detach slot `i` from the LRU list (it keeps its map entry).
+    fn unlink(&mut self, i: usize) {
+        let (prev, next) = (self.slots[i].prev, self.slots[i].next);
+        match prev {
+            NIL => self.head = next,
+            p => self.slots[p].next = next,
+        }
+        match next {
+            NIL => self.tail = prev,
+            n => self.slots[n].prev = prev,
+        }
+        self.slots[i].prev = NIL;
+        self.slots[i].next = NIL;
+    }
+
+    /// Append slot `i` at the most-recently-used end.
+    fn attach_mru(&mut self, i: usize) {
+        self.slots[i].prev = self.tail;
+        self.slots[i].next = NIL;
+        match self.tail {
+            NIL => self.head = i,
+            t => self.slots[t].next = i,
+        }
+        self.tail = i;
+    }
+
+    /// Look up `key`, refreshing its LRU position on a hit.
+    fn touch(&mut self, key: &PlanKey) -> Option<Arc<ExecutablePlan>> {
+        let i = *self.map.get(key)?;
+        if self.tail != i {
+            self.unlink(i);
+            self.attach_mru(i);
+        }
+        Some(self.slots[i].entry.as_ref().expect("resident slot").1.clone())
+    }
+
+    /// Insert at the MRU end, evicting from the LRU end while over
+    /// `capacity`; returns the number of evictions.
+    fn insert(&mut self, key: PlanKey, plan: Arc<ExecutablePlan>, capacity: usize) -> u64 {
+        if self.map.contains_key(&key) {
+            // a concurrent lowering won the race; keep the resident plan.
+            return 0;
+        }
+        let mut evicted = 0;
+        while self.map.len() >= capacity {
+            let lru = self.head;
+            if lru == NIL {
+                break;
+            }
+            self.unlink(lru);
+            let (old_key, _) = self.slots[lru].entry.take().expect("LRU slot resident");
+            self.map.remove(&old_key);
+            self.free.push(lru);
+            evicted += 1;
+        }
+        let i = match self.free.pop() {
+            Some(i) => i,
+            None => {
+                self.slots.push(Slot { entry: None, prev: NIL, next: NIL });
+                self.slots.len() - 1
+            }
+        };
+        self.slots[i].entry = Some((key.clone(), plan));
+        self.map.insert(key, i);
+        self.attach_mru(i);
+        evicted
+    }
+
+    fn clear(&mut self) {
+        self.map.clear();
+        self.slots.clear();
+        self.free.clear();
+        self.head = NIL;
+        self.tail = NIL;
+    }
+
+    /// Resident keys in LRU → MRU order (test/oracle support).
+    #[cfg(test)]
+    fn keys_lru_order(&self) -> Vec<PlanKey> {
+        let mut out = Vec::with_capacity(self.map.len());
+        let mut i = self.head;
+        while i != NIL {
+            out.push(self.slots[i].entry.as_ref().expect("resident slot").0.clone());
+            i = self.slots[i].next;
+        }
+        out
+    }
+}
+
+/// One lock stripe. Padded to a cache line so neighbouring stripes'
+/// mutexes and hot counters never share one (false sharing would hand
+/// back the contention the striping removes).
+#[repr(align(64))]
+struct Stripe {
+    inner: Mutex<StripeInner>,
+    /// This stripe's share of the total capacity (shares sum exactly to
+    /// the configured capacity).
     capacity: usize,
+    /// Warm-path counters live per stripe: a hit bumps only its own
+    /// stripe's cache line. Exact when summed at snapshot time.
     hits: AtomicU64,
-    misses: AtomicU64,
     evictions: AtomicU64,
+}
+
+/// Bounded, thread-safe, striped LRU cache of lowered plans. Warm `get`s
+/// on distinct keys take disjoint stripe locks; every operation is O(1)
+/// in both capacity and stripe size.
+pub struct PlanCache {
+    stripes: Box<[Stripe]>,
+    capacity: usize,
+    // Cold-path counters stay global: they are bumped at lowering /
+    // disk-store frequency, not per warm request.
+    misses: AtomicU64,
     coalesced: AtomicU64,
     disk_hits: AtomicU64,
     disk_writes: AtomicU64,
@@ -147,12 +316,24 @@ pub struct PlanCache {
 
 impl PlanCache {
     pub fn new(capacity: usize) -> PlanCache {
+        let capacity = capacity.max(1);
+        let n = stripe_count_for(capacity);
+        let (base, rem) = (capacity / n, capacity % n);
+        let stripes = (0..n)
+            .map(|i| {
+                let cap = base + usize::from(i < rem);
+                Stripe {
+                    inner: Mutex::new(StripeInner::with_capacity(cap)),
+                    capacity: cap,
+                    hits: AtomicU64::new(0),
+                    evictions: AtomicU64::new(0),
+                }
+            })
+            .collect();
         PlanCache {
-            inner: Mutex::new(Inner { map: HashMap::new(), order: VecDeque::new() }),
-            capacity: capacity.max(1),
-            hits: AtomicU64::new(0),
+            stripes,
+            capacity,
             misses: AtomicU64::new(0),
-            evictions: AtomicU64::new(0),
             coalesced: AtomicU64::new(0),
             disk_hits: AtomicU64::new(0),
             disk_writes: AtomicU64::new(0),
@@ -162,19 +343,31 @@ impl PlanCache {
         }
     }
 
+    /// Number of lock stripes (1 for small caches; see
+    /// [`stripe_count_for`]). The pipeline sizes its single-flight
+    /// in-flight map to match.
+    pub fn stripe_count(&self) -> usize {
+        self.stripes.len()
+    }
+
+    /// Total configured capacity (the per-stripe shares sum to this).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn stripe(&self, key: &PlanKey) -> &Stripe {
+        &self.stripes[select_stripe(key.hash64(), self.stripes.len())]
+    }
+
     /// Look up a plan, counting a hit and refreshing LRU order when
     /// present. Absence counts **nothing**: `misses` means "a full
     /// lowering ran", recorded by the single-flight leader via
     /// [`PlanCache::record_miss`] — so `misses == distinct cold specs`
     /// holds no matter how many threads probe concurrently.
     pub fn get(&self, key: &PlanKey) -> Option<Arc<ExecutablePlan>> {
-        let mut inner = self.inner.lock().expect("plan cache poisoned");
-        let plan = inner.map.get(key).cloned()?;
-        self.hits.fetch_add(1, Ordering::Relaxed);
-        if let Some(pos) = inner.order.iter().position(|k| k == key) {
-            inner.order.remove(pos);
-        }
-        inner.order.push_back(key.clone());
+        let stripe = self.stripe(key);
+        let plan = stripe.inner.lock().expect("plan cache poisoned").touch(key)?;
+        stripe.hits.fetch_add(1, Ordering::Relaxed);
         Some(plan)
     }
 
@@ -187,7 +380,9 @@ impl PlanCache {
     /// lowering: a hit (the plan was shared, not re-lowered) plus the
     /// `coalesced` sub-counter.
     pub(crate) fn record_coalesced(&self) {
-        self.hits.fetch_add(1, Ordering::Relaxed);
+        // attribute the hit to stripe 0: hits are reported only in
+        // aggregate, and coalescing happens at cold-lowering frequency.
+        self.stripes[0].hits.fetch_add(1, Ordering::Relaxed);
         self.coalesced.fetch_add(1, Ordering::Relaxed);
     }
 
@@ -220,28 +415,21 @@ impl PlanCache {
     }
 
     /// Insert a freshly lowered plan, evicting the least recently used
-    /// entry when at capacity.
+    /// entry **within the key's stripe** when that stripe is at capacity.
     pub fn insert(&self, key: PlanKey, plan: Arc<ExecutablePlan>) {
-        let mut inner = self.inner.lock().expect("plan cache poisoned");
-        if inner.map.contains_key(&key) {
-            // a concurrent lowering won the race; keep the resident plan.
-            return;
+        let stripe = self.stripe(&key);
+        let evicted =
+            stripe.inner.lock().expect("plan cache poisoned").insert(key, plan, stripe.capacity);
+        if evicted > 0 {
+            stripe.evictions.fetch_add(evicted, Ordering::Relaxed);
         }
-        while inner.map.len() >= self.capacity {
-            match inner.order.pop_front() {
-                Some(old) => {
-                    inner.map.remove(&old);
-                    self.evictions.fetch_add(1, Ordering::Relaxed);
-                }
-                None => break,
-            }
-        }
-        inner.order.push_back(key.clone());
-        inner.map.insert(key, plan);
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().expect("plan cache poisoned").map.len()
+        self.stripes
+            .iter()
+            .map(|s| s.inner.lock().expect("plan cache poisoned").map.len())
+            .sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -250,19 +438,22 @@ impl PlanCache {
 
     /// Drop all resident plans (counters are preserved).
     pub fn clear(&self) {
-        let mut inner = self.inner.lock().expect("plan cache poisoned");
-        inner.map.clear();
-        inner.order.clear();
+        for stripe in self.stripes.iter() {
+            stripe.inner.lock().expect("plan cache poisoned").clear();
+        }
     }
 
-    /// Zero **every** counter — hits, misses, evictions, coalesced and the
-    /// disk-store trio — so a reset observation window starts consistent
-    /// (previously only some counters were covered, skewing `hit_rate`
-    /// and eviction-pressure readings after a reset).
+    /// Zero **every** counter — the per-stripe hit/eviction atomics,
+    /// misses, coalesced and the disk-store trio — so a reset observation
+    /// window starts consistent (previously only some counters were
+    /// covered, skewing `hit_rate` and eviction-pressure readings after a
+    /// reset).
     pub fn reset_stats(&self) {
-        self.hits.store(0, Ordering::Relaxed);
+        for stripe in self.stripes.iter() {
+            stripe.hits.store(0, Ordering::Relaxed);
+            stripe.evictions.store(0, Ordering::Relaxed);
+        }
         self.misses.store(0, Ordering::Relaxed);
-        self.evictions.store(0, Ordering::Relaxed);
         self.coalesced.store(0, Ordering::Relaxed);
         self.disk_hits.store(0, Ordering::Relaxed);
         self.disk_writes.store(0, Ordering::Relaxed);
@@ -271,12 +462,22 @@ impl PlanCache {
         self.tune_skipped.store(0, Ordering::Relaxed);
     }
 
+    /// Aggregate counters: per-stripe hit/eviction atomics summed with
+    /// the global cold-path counters. Relaxed loads — exact at
+    /// quiescence, monotone-approximate while writers run (same contract
+    /// the single-counter version had).
     pub fn stats(&self) -> CacheStats {
+        let mut hits = 0;
+        let mut evictions = 0;
+        for stripe in self.stripes.iter() {
+            hits += stripe.hits.load(Ordering::Relaxed);
+            evictions += stripe.evictions.load(Ordering::Relaxed);
+        }
         CacheStats {
-            hits: self.hits.load(Ordering::Relaxed),
+            hits,
             misses: self.misses.load(Ordering::Relaxed),
             entries: self.len(),
-            evictions: self.evictions.load(Ordering::Relaxed),
+            evictions,
             coalesced: self.coalesced.load(Ordering::Relaxed),
             disk_hits: self.disk_hits.load(Ordering::Relaxed),
             disk_writes: self.disk_writes.load(Ordering::Relaxed),
@@ -284,6 +485,19 @@ impl PlanCache {
             tuned: self.tuned.load(Ordering::Relaxed),
             tune_skipped: self.tune_skipped.load(Ordering::Relaxed),
         }
+    }
+
+    /// Which stripe a key lands in (oracle tests mirror eviction
+    /// per-stripe).
+    #[cfg(test)]
+    fn stripe_of(&self, key: &PlanKey) -> usize {
+        select_stripe(key.hash64(), self.stripes.len())
+    }
+
+    /// Per-stripe resident keys in LRU → MRU order (oracle tests).
+    #[cfg(test)]
+    fn stripe_keys(&self, stripe: usize) -> Vec<PlanKey> {
+        self.stripes[stripe].inner.lock().expect("plan cache poisoned").keys_lru_order()
     }
 }
 
@@ -313,6 +527,25 @@ mod tests {
         let spec = Spec::single(RoutineKind::Axpy, "a", 64, DataSource::Pl);
         assert_eq!(PlanKey::of(&spec).as_str(), spec.cache_key());
         assert_eq!(PlanKey::of(&spec), PlanKey::of(&spec.clone()));
+    }
+
+    #[test]
+    fn stripe_counts_follow_capacity() {
+        // below 16 entries: exactly one stripe (exact global LRU).
+        for cap in [1, 2, 4, 8, 15] {
+            assert_eq!(stripe_count_for(cap), 1, "capacity {cap}");
+            assert_eq!(PlanCache::new(cap).stripe_count(), 1);
+        }
+        assert_eq!(stripe_count_for(16), 2);
+        assert_eq!(stripe_count_for(128), 16);
+        assert_eq!(stripe_count_for(1024), 64);
+        assert_eq!(stripe_count_for(1 << 20), 64, "stripes cap at 64");
+        // per-stripe shares sum exactly to the configured capacity.
+        for cap in [1, 16, 100, 129, 1000, 16384] {
+            let cache = PlanCache::new(cap);
+            let total: usize = cache.stripes.iter().map(|s| s.capacity).sum();
+            assert_eq!(total, cap, "capacity {cap} split across stripes");
+        }
     }
 
     #[test]
@@ -391,6 +624,24 @@ mod tests {
     }
 
     #[test]
+    fn reset_stats_covers_stripe_counters() {
+        // multi-stripe cache: hits and evictions land in per-stripe
+        // atomics spread across stripes; reset must zero all of them.
+        let cache = PlanCache::new(64);
+        assert!(cache.stripe_count() > 1);
+        for i in 0..128 {
+            let key: PlanKey = format!("k{i}").as_str().into();
+            cache.insert(key.clone(), plan_for(64));
+            cache.get(&key);
+        }
+        let s = cache.stats();
+        assert!(s.hits >= 128 && s.evictions > 0, "precondition: {s:?}");
+        cache.reset_stats();
+        cache.clear();
+        assert_eq!(cache.stats(), CacheStats::default());
+    }
+
+    #[test]
     fn evictions_are_counted() {
         let cache = PlanCache::new(2);
         cache.insert("a".into(), plan_for(64));
@@ -411,5 +662,133 @@ mod tests {
         cache.insert("a".into(), plan_for(64));
         assert!(Arc::ptr_eq(&cache.get(&"a".into()).unwrap(), &first));
         assert_eq!(cache.len(), 1);
+    }
+
+    /// Reference LRU: the pre-stripe `HashMap` + `VecDeque` semantics,
+    /// driven per stripe as the oracle for the intrusive list.
+    struct OracleLru {
+        resident: Vec<PlanKey>, // front = LRU
+        capacity: usize,
+    }
+
+    impl OracleLru {
+        fn get(&mut self, key: &PlanKey) -> bool {
+            match self.resident.iter().position(|k| k == key) {
+                Some(pos) => {
+                    let k = self.resident.remove(pos);
+                    self.resident.push(k);
+                    true
+                }
+                None => false,
+            }
+        }
+
+        fn insert(&mut self, key: PlanKey) -> u64 {
+            if self.resident.contains(&key) {
+                return 0;
+            }
+            let mut evicted = 0;
+            while self.resident.len() >= self.capacity {
+                self.resident.remove(0);
+                evicted += 1;
+            }
+            self.resident.push(key);
+            evicted
+        }
+    }
+
+    /// Drive a random get/insert mix against the striped cache and a
+    /// per-stripe unsharded oracle; residency, LRU order, hit and
+    /// eviction counts must agree after every step.
+    #[test]
+    fn stripe_eviction_order_matches_unsharded_oracle() {
+        for (capacity, seed) in [(4usize, 1u64), (16, 2), (48, 3)] {
+            let cache = PlanCache::new(capacity);
+            let n = cache.stripe_count();
+            let mut oracles: Vec<OracleLru> = cache
+                .stripes
+                .iter()
+                .map(|s| OracleLru { resident: Vec::new(), capacity: s.capacity })
+                .collect();
+            let keys: Vec<PlanKey> =
+                (0..capacity * 3).map(|i| PlanKey::from(format!("k{i}").as_str())).collect();
+            let plan = plan_for(64);
+            let mut rng = crate::util::rng::Rng::new(seed);
+            let (mut hits, mut evictions) = (0u64, 0u64);
+            for _ in 0..2000 {
+                let key = &keys[rng.below(keys.len() as u64) as usize];
+                let stripe = cache.stripe_of(key);
+                if rng.below(2) == 0 {
+                    let got = cache.get(key).is_some();
+                    assert_eq!(got, oracles[stripe].get(key));
+                    hits += u64::from(got);
+                } else {
+                    cache.insert(key.clone(), plan.clone());
+                    evictions += oracles[stripe].insert(key.clone());
+                }
+            }
+            for (i, oracle) in oracles.iter().enumerate() {
+                assert_eq!(
+                    cache.stripe_keys(i),
+                    oracle.resident,
+                    "stripe {i}/{n} LRU order diverged (capacity {capacity}, seed {seed})"
+                );
+            }
+            let s = cache.stats();
+            assert_eq!(s.hits, hits);
+            assert_eq!(s.evictions, evictions);
+            assert_eq!(s.entries, oracles.iter().map(|o| o.resident.len()).sum::<usize>());
+        }
+    }
+
+    /// Property: aggregate stats stay exact under a multithreaded hammer.
+    /// Each thread tallies locally what it observed; at quiescence the
+    /// summed per-stripe atomics must equal the sequential oracle
+    /// (`hits == successful gets`, and since every inserted key is
+    /// unique, `prefill + inserts == entries + evictions`).
+    #[test]
+    fn sharded_stats_exact_under_multithreaded_hammer() {
+        use std::sync::atomic::AtomicU64;
+
+        let cache = PlanCache::new(64);
+        assert!(cache.stripe_count() > 1, "hammer should cross stripes");
+        let plan = plan_for(64);
+        let prefill = 48u64;
+        let warm: Vec<PlanKey> =
+            (0..prefill).map(|i| PlanKey::from(format!("warm{i}").as_str())).collect();
+        for k in &warm {
+            cache.insert(k.clone(), plan.clone());
+        }
+        let threads = 8u64;
+        let inserts_per_thread = 32u64;
+        let observed_hits = AtomicU64::new(0);
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let (cache, plan, warm) = (&cache, &plan, &warm);
+                let observed_hits = &observed_hits;
+                s.spawn(move || {
+                    let mut rng = crate::util::rng::Rng::new(0xC0FFEE + t);
+                    let mut local_hits = 0u64;
+                    for i in 0..inserts_per_thread {
+                        for _ in 0..8 {
+                            let k = &warm[rng.below(prefill) as usize];
+                            local_hits += u64::from(cache.get(k).is_some());
+                        }
+                        // unique key per (thread, i): always a fresh insert.
+                        cache.insert(PlanKey::from(format!("t{t}-{i}").as_str()), plan.clone());
+                    }
+                    observed_hits.fetch_add(local_hits, Ordering::Relaxed);
+                });
+            }
+        });
+        let s = cache.stats();
+        assert_eq!(s.hits, observed_hits.load(Ordering::Relaxed), "hits exact: {s:?}");
+        let inserted = prefill + threads * inserts_per_thread;
+        assert_eq!(
+            s.entries as u64 + s.evictions,
+            inserted,
+            "every uniquely-inserted plan is either resident or evicted: {s:?}"
+        );
+        assert_eq!(s.entries, cache.len());
     }
 }

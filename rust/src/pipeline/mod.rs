@@ -194,7 +194,7 @@ struct LeaderGuard<'p> {
 impl Drop for LeaderGuard<'_> {
     fn drop(&mut self) {
         self.pipeline
-            .in_flight
+            .in_flight_stripe(&self.key)
             .lock()
             .expect("in-flight map poisoned")
             .remove(&self.key);
@@ -216,8 +216,11 @@ impl Drop for LeaderGuard<'_> {
 pub struct Pipeline {
     default_arch: ArchConfig,
     cache: PlanCache,
-    /// Cold lowerings currently running, keyed like the cache.
-    in_flight: Mutex<HashMap<PlanKey, Arc<LoweringSlot>>>,
+    /// Cold lowerings currently running, lock-striped by the same
+    /// hash→stripe rule as the cache (`cache::select_stripe`) so
+    /// registering a leader for one key never serializes against an
+    /// unrelated key's cold start.
+    in_flight: Box<[Mutex<HashMap<PlanKey, Arc<LoweringSlot>>>]>,
     /// Optional on-disk plan store: cold lowerings first try to warm from
     /// a previous process's persisted plans and write through on success.
     store: Option<PlanStore>,
@@ -239,14 +242,23 @@ impl Pipeline {
 
     pub fn with_cache_capacity(default_arch: ArchConfig, capacity: usize) -> Pipeline {
         let fingerprint = store::arch_fingerprint(&default_arch);
+        let cache = PlanCache::new(capacity);
+        let in_flight =
+            (0..cache.stripe_count()).map(|_| Mutex::new(HashMap::new())).collect();
         Pipeline {
             default_arch,
-            cache: PlanCache::new(capacity),
-            in_flight: Mutex::new(HashMap::new()),
+            cache,
+            in_flight,
             store: None,
             fingerprint,
             tune: TuneConfig::default(),
         }
+    }
+
+    /// The in-flight stripe guarding `key`'s cold lowering (same
+    /// selection rule as the cache stripes).
+    fn in_flight_stripe(&self, key: &PlanKey) -> &Mutex<HashMap<PlanKey, Arc<LoweringSlot>>> {
+        &self.in_flight[cache::select_stripe(key.hash64(), self.in_flight.len())]
     }
 
     /// Set the autotuning policy (builder-style). With a mode other than
@@ -296,8 +308,9 @@ impl Pipeline {
             return Ok(hit);
         }
         let (slot, leader) = {
-            let mut in_flight = self.in_flight.lock().expect("in-flight map poisoned");
-            // re-check under the map lock: a leader may have completed
+            let mut in_flight =
+                self.in_flight_stripe(key).lock().expect("in-flight map poisoned");
+            // re-check under the stripe lock: a leader may have completed
             // (inserted into the cache and left the map) since the peek.
             if let Some(hit) = self.cache.get(key) {
                 return Ok(hit);

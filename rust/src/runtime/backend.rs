@@ -71,10 +71,13 @@ impl ExecInputs {
     }
 }
 
-/// One routine's execution result.
+/// One routine's execution result. `routine` is a shared interned name
+/// ([`Prepared`] builds the `Arc<str>` once per prepare), so per-request
+/// results clone a refcount instead of a `String` — the serving warm
+/// path allocates nothing for labels.
 #[derive(Debug, Clone)]
 pub struct RoutineResult {
-    pub routine: String,
+    pub routine: Arc<str>,
     pub kind: RoutineKind,
     pub output: Vec<f32>,
     /// Which concrete implementation produced the numbers.
@@ -98,11 +101,17 @@ pub struct ExecOutcome {
 pub struct Prepared {
     plan: Arc<ExecutablePlan>,
     backend: &'static str,
+    /// Routine names interned once per prepare, indexed like
+    /// `plan.spec().routines` — execute paths label results by cloning an
+    /// `Arc` instead of allocating a `String` per routine per request.
+    names: Vec<Arc<str>>,
 }
 
 impl Prepared {
     pub fn new(plan: Arc<ExecutablePlan>, backend: &'static str) -> Prepared {
-        Prepared { plan, backend }
+        let names =
+            plan.spec().routines.iter().map(|r| Arc::<str>::from(r.name.as_str())).collect();
+        Prepared { plan, backend, names }
     }
 
     pub fn plan(&self) -> &ExecutablePlan {
@@ -115,6 +124,11 @@ impl Prepared {
 
     pub fn backend(&self) -> &'static str {
         self.backend
+    }
+
+    /// The interned routine names, indexed like `plan.spec().routines`.
+    pub fn routine_names(&self) -> &[Arc<str>] {
+        &self.names
     }
 }
 
@@ -240,16 +254,17 @@ impl<'e> SimBackend<'e> {
     /// timing-only). Shared by `execute` and `execute_batch`.
     fn numeric_results(
         &self,
-        plan: &ExecutablePlan,
+        prepared: &Prepared,
         inputs: &ExecInputs,
     ) -> Result<Vec<RoutineResult>> {
         let mut results = Vec::new();
         if !inputs.is_empty() {
-            for (i, r) in plan.spec().routines.iter().enumerate() {
+            let names = prepared.routine_names();
+            for (i, r) in prepared.plan().spec().routines.iter().enumerate() {
                 let rin = inputs.for_routine(i, &r.name)?;
                 let (output, provenance) = self.run_numeric(r.kind.name(), r.size, rin)?;
                 results.push(RoutineResult {
-                    routine: r.name.clone(),
+                    routine: names[i].clone(),
                     kind: r.kind,
                     output,
                     provenance,
@@ -274,10 +289,9 @@ impl Backend for SimBackend<'_> {
 
     fn execute(&self, prepared: &Prepared, inputs: &ExecInputs) -> Result<ExecOutcome> {
         check_prepared(prepared, self.name())?;
-        let plan = prepared.plan();
         let t0 = Instant::now();
         let sim = self.sim_report(prepared)?;
-        let results = self.numeric_results(plan, inputs)?;
+        let results = self.numeric_results(prepared, inputs)?;
         Ok(ExecOutcome {
             backend: self.name(),
             results,
@@ -297,7 +311,6 @@ impl Backend for SimBackend<'_> {
         if batch.is_empty() {
             return Vec::new();
         }
-        let plan = prepared.plan();
         let t_sim = Instant::now();
         let sim =
             match check_prepared(prepared, self.name()).and_then(|()| self.sim_report(prepared)) {
@@ -315,7 +328,7 @@ impl Backend for SimBackend<'_> {
             .iter()
             .map(|inputs| {
                 let t0 = Instant::now();
-                let results = self.numeric_results(plan, inputs)?;
+                let results = self.numeric_results(prepared, inputs)?;
                 Ok(ExecOutcome {
                     backend: self.name(),
                     results,
@@ -337,45 +350,48 @@ pub struct CpuBackend;
 impl CpuBackend {
     /// Run one routine on the optimized CPU kernels (inputs in
     /// `RoutineKind::inputs()` order; outputs concatenated like the PJRT
-    /// tuple flattening).
+    /// tuple flattening). Output buffers come from the thread-local
+    /// `util::pool` — bit-identical to fresh `vec![0.0; n]` allocations.
     pub fn run_kind(kind: RoutineKind, size: usize, inputs: &[Vec<f32>]) -> Vec<f32> {
         use crate::blas::cpu;
+        use crate::util::pool;
         let n = size;
         match kind {
             RoutineKind::Axpy => {
-                let mut z = vec![0.0; n];
+                let mut z = pool::take_zeroed(n);
                 cpu::axpy(inputs[0][0], &inputs[1], &inputs[2], &mut z);
                 z
             }
             RoutineKind::Scal => {
-                let mut z = vec![0.0; n];
+                let mut z = pool::take_zeroed(n);
                 cpu::scal(inputs[0][0], &inputs[1], &mut z);
                 z
             }
             RoutineKind::Axpby => {
-                let mut z = vec![0.0; n];
+                let mut z = pool::take_zeroed(n);
                 cpu::axpby(inputs[0][0], &inputs[2], inputs[1][0], &inputs[3], &mut z);
                 z
             }
             RoutineKind::Rot => {
-                let mut xo = vec![0.0; n];
-                let mut yo = vec![0.0; n];
+                let mut xo = pool::take_zeroed(n);
+                let mut yo = pool::take_zeroed(n);
                 cpu::rot(inputs[0][0], inputs[1][0], &inputs[2], &inputs[3], &mut xo, &mut yo);
-                xo.extend(yo);
+                xo.extend_from_slice(&yo);
+                pool::recycle(yo);
                 xo
             }
             RoutineKind::Ger => {
-                let mut out = vec![0.0; n * n];
+                let mut out = pool::take_zeroed(n * n);
                 cpu::ger(inputs[0][0], &inputs[1], &inputs[2], &inputs[3], n, n, &mut out);
                 out
             }
-            RoutineKind::Copy => inputs[0].clone(),
+            RoutineKind::Copy => pool::take_copied(&inputs[0]),
             RoutineKind::Dot => vec![cpu::dot(&inputs[0], &inputs[1])],
             RoutineKind::Nrm2 => vec![cpu::nrm2(&inputs[0])],
             RoutineKind::Asum => vec![cpu::asum(&inputs[0])],
             RoutineKind::Iamax => vec![cpu::iamax(&inputs[0]) as f32],
             RoutineKind::Gemv => {
-                let mut out = vec![0.0; n];
+                let mut out = pool::take_zeroed(n);
                 cpu::gemv(
                     inputs[0][0],
                     &inputs[1],
@@ -389,7 +405,7 @@ impl CpuBackend {
                 out
             }
             RoutineKind::Gemm => {
-                let mut out = vec![0.0; n * n];
+                let mut out = pool::take_zeroed(n * n);
                 cpu::gemm(
                     inputs[0][0],
                     &inputs[1],
@@ -409,19 +425,18 @@ impl CpuBackend {
         }
     }
 
-    /// Execute every routine of `routines` on `inputs` — shared by
+    /// Execute every routine of the prepared plan on `inputs` — shared by
     /// `execute` and `execute_batch` so the two paths cannot diverge.
-    fn routine_results(
-        routines: &[crate::spec::RoutineSpec],
-        inputs: &ExecInputs,
-    ) -> Result<Vec<RoutineResult>> {
+    fn routine_results(prepared: &Prepared, inputs: &ExecInputs) -> Result<Vec<RoutineResult>> {
+        let routines = &prepared.plan().spec().routines;
+        let names = prepared.routine_names();
         let mut results = Vec::with_capacity(routines.len());
         for (i, r) in routines.iter().enumerate() {
             let rin = inputs.for_routine(i, &r.name)?;
             validate_inputs(r.kind.name(), r.size, rin)?;
             let output = std::hint::black_box(Self::run_kind(r.kind, r.size, rin));
             results.push(RoutineResult {
-                routine: r.name.clone(),
+                routine: names[i].clone(),
                 kind: r.kind,
                 output,
                 provenance: Provenance::Cpu,
@@ -443,7 +458,7 @@ impl Backend for CpuBackend {
     fn execute(&self, prepared: &Prepared, inputs: &ExecInputs) -> Result<ExecOutcome> {
         check_prepared(prepared, self.name())?;
         let t0 = Instant::now();
-        let results = Self::routine_results(&prepared.plan().spec().routines, inputs)?;
+        let results = Self::routine_results(prepared, inputs)?;
         Ok(ExecOutcome {
             backend: self.name(),
             results,
@@ -452,18 +467,17 @@ impl Backend for CpuBackend {
         })
     }
 
-    /// Batched execution checks the prepared binding once and resolves the
-    /// plan's routine list once for the whole batch.
+    /// Batched execution checks the prepared binding once for the whole
+    /// batch.
     fn execute_batch(&self, prepared: &Prepared, batch: &[ExecInputs]) -> Vec<Result<ExecOutcome>> {
         if check_prepared(prepared, self.name()).is_err() {
             return batch.iter().map(|inputs| self.execute(prepared, inputs)).collect();
         }
-        let routines = &prepared.plan().spec().routines;
         batch
             .iter()
             .map(|inputs| {
                 let t0 = Instant::now();
-                let results = Self::routine_results(routines, inputs)?;
+                let results = Self::routine_results(prepared, inputs)?;
                 Ok(ExecOutcome {
                     backend: self.name(),
                     results,
@@ -489,6 +503,7 @@ impl ReferenceBackend {
     /// (z = w − αv with params (α, v, w)).
     pub fn execute_named(name: &str, size: usize, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
         use crate::blas::reference as r;
+        use crate::util::pool;
         let n = size;
         let need = |k: usize| -> Result<()> {
             if inputs.len() != k {
@@ -508,19 +523,19 @@ impl ReferenceBackend {
         match (name, kind) {
             ("axpy", _) => {
                 need(3)?;
-                let mut z = vec![0.0; n];
+                let mut z = pool::take_zeroed(n);
                 r::axpy(inputs[0][0], &inputs[1], &inputs[2], &mut z);
                 Ok(z)
             }
             ("axpy_neg", _) => {
                 need(3)?;
-                let mut z = vec![0.0; n];
+                let mut z = pool::take_zeroed(n);
                 r::axpy(-inputs[0][0], &inputs[1], &inputs[2], &mut z);
                 Ok(z)
             }
             (_, RoutineKind::Axpby) => {
                 need(4)?;
-                let mut z = vec![0.0; n];
+                let mut z = pool::take_zeroed(n);
                 r::axpby(inputs[0][0], &inputs[2], inputs[1][0], &inputs[3], &mut z);
                 Ok(z)
             }
@@ -528,27 +543,28 @@ impl ReferenceBackend {
                 // concatenated outputs (x_out ++ y_out), matching the PJRT
                 // tuple flattening.
                 need(4)?;
-                let mut xo = vec![0.0; n];
-                let mut yo = vec![0.0; n];
+                let mut xo = pool::take_zeroed(n);
+                let mut yo = pool::take_zeroed(n);
                 r::rot(inputs[0][0], inputs[1][0], &inputs[2], &inputs[3], &mut xo, &mut yo);
-                xo.extend(yo);
+                xo.extend_from_slice(&yo);
+                pool::recycle(yo);
                 Ok(xo)
             }
             (_, RoutineKind::Ger) => {
                 need(4)?;
-                let mut out = vec![0.0; n * n];
+                let mut out = pool::take_zeroed(n * n);
                 r::ger(inputs[0][0], &inputs[1], &inputs[2], &inputs[3], n, n, &mut out);
                 Ok(out)
             }
             (_, RoutineKind::Scal) => {
                 need(2)?;
-                let mut z = vec![0.0; n];
+                let mut z = pool::take_zeroed(n);
                 r::scal(inputs[0][0], &inputs[1], &mut z);
                 Ok(z)
             }
             (_, RoutineKind::Copy) => {
                 need(1)?;
-                Ok(inputs[0].clone())
+                Ok(pool::take_copied(&inputs[0]))
             }
             (_, RoutineKind::Dot) => {
                 need(2)?;
@@ -568,7 +584,7 @@ impl ReferenceBackend {
             }
             (_, RoutineKind::Gemv) => {
                 need(5)?;
-                let mut out = vec![0.0; n];
+                let mut out = pool::take_zeroed(n);
                 r::gemv(
                     inputs[0][0],
                     &inputs[1],
@@ -583,7 +599,7 @@ impl ReferenceBackend {
             }
             (_, RoutineKind::Gemm) => {
                 need(5)?;
-                let mut out = vec![0.0; n * n];
+                let mut out = pool::take_zeroed(n * n);
                 r::gemm(
                     inputs[0][0],
                     &inputs[1],
@@ -610,19 +626,18 @@ impl ReferenceBackend {
         Self::execute_named(kind.name(), size, inputs)
     }
 
-    /// Execute every routine of `routines` on `inputs` — shared by
+    /// Execute every routine of the prepared plan on `inputs` — shared by
     /// `execute` and `execute_batch` so the two paths cannot diverge.
-    fn routine_results(
-        routines: &[crate::spec::RoutineSpec],
-        inputs: &ExecInputs,
-    ) -> Result<Vec<RoutineResult>> {
+    fn routine_results(prepared: &Prepared, inputs: &ExecInputs) -> Result<Vec<RoutineResult>> {
+        let routines = &prepared.plan().spec().routines;
+        let names = prepared.routine_names();
         let mut results = Vec::with_capacity(routines.len());
         for (i, r) in routines.iter().enumerate() {
             let rin = inputs.for_routine(i, &r.name)?;
             validate_inputs(r.kind.name(), r.size, rin)?;
             let output = Self::run_kind(r.kind, r.size, rin)?;
             results.push(RoutineResult {
-                routine: r.name.clone(),
+                routine: names[i].clone(),
                 kind: r.kind,
                 output,
                 provenance: Provenance::Reference,
@@ -644,7 +659,7 @@ impl Backend for ReferenceBackend {
     fn execute(&self, prepared: &Prepared, inputs: &ExecInputs) -> Result<ExecOutcome> {
         check_prepared(prepared, self.name())?;
         let t0 = Instant::now();
-        let results = Self::routine_results(&prepared.plan().spec().routines, inputs)?;
+        let results = Self::routine_results(prepared, inputs)?;
         Ok(ExecOutcome {
             backend: self.name(),
             results,
@@ -658,12 +673,11 @@ impl Backend for ReferenceBackend {
         if check_prepared(prepared, self.name()).is_err() {
             return batch.iter().map(|inputs| self.execute(prepared, inputs)).collect();
         }
-        let routines = &prepared.plan().spec().routines;
         batch
             .iter()
             .map(|inputs| {
                 let t0 = Instant::now();
-                let results = Self::routine_results(routines, inputs)?;
+                let results = Self::routine_results(prepared, inputs)?;
                 Ok(ExecOutcome {
                     backend: self.name(),
                     results,

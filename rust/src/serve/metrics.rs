@@ -1,13 +1,17 @@
-//! Serving-layer statistics and machine-readable metrics (DESIGN.md §9).
+//! Serving-layer statistics and machine-readable metrics (DESIGN.md §9, §12).
 //!
 //! Split from `mod.rs` so the hot path is honest about what it touches:
-//! workers record into [`StatsInner`] under the stats mutex and bump
-//! lock-free [`Counters`]; `report()` takes a [`StatsSnapshot`] (clones
-//! only) and does all sorting *outside* the lock, so a 65k-sample
-//! percentile sort can no longer stall every dispatcher mid-dispatch.
+//! each dispatcher records into **its own** [`StatsShard`] (one shard per
+//! dispatcher id, so the shard mutex is uncontended in steady state) and
+//! bumps lock-free [`Counters`]; `report()` merges the shards into a
+//! [`StatsSnapshot`] (counter sums are exact — every answered request is
+//! recorded in exactly one shard) and does all sorting *outside* any
+//! lock. Latency samples live in fixed-size deterministic [`Reservoir`]s,
+//! so a long-running server's stats memory is O(1) in request count.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
 use std::time::Instant;
 
 use super::admission::{Priority, ShedReason};
@@ -15,13 +19,17 @@ use super::ServeConfig;
 use crate::pipeline::CacheStats;
 use crate::util::json::{obj, Json};
 
-/// Latency/queue-wait samples kept for percentile reporting. A ring of
-/// the most recent samples bounds server memory (and `report()`'s sort)
-/// regardless of how many requests a long-lived server answers.
+/// Number of stats shards. Dispatcher `id` owns shard `id % STATS_SHARDS`;
+/// the adaptive pool tops out well below this, so in practice every live
+/// dispatcher records into a private shard.
+pub(crate) const STATS_SHARDS: usize = 16;
+
+/// Latency/queue-wait samples kept for percentile reporting, totalled
+/// across shards (each shard's reservoir holds `1/STATS_SHARDS` of this).
 pub(crate) const STAT_SAMPLE_CAP: usize = 65_536;
 
-/// Per-priority-class latency rings are smaller: three of them exist and
-/// they only feed the p50/p99 columns.
+/// Per-priority-class totals are smaller: three of them exist per shard
+/// and they only feed the p50/p99 columns.
 pub(crate) const PRIO_SAMPLE_CAP: usize = 16_384;
 
 /// At most this many distinct tenants get their own completion counter;
@@ -29,36 +37,100 @@ pub(crate) const PRIO_SAMPLE_CAP: usize = 16_384;
 /// cannot grow server memory without bound.
 pub(crate) const TENANT_METRIC_CAP: usize = 32;
 
-/// Record into a bounded ring: grow until the cap, then overwrite the
-/// slot of the `count`-th request (oldest-first).
-pub(crate) fn record_sample(samples: &mut Vec<f64>, cap: usize, count: u64, value: f64) {
-    if samples.len() < cap {
-        samples.push(value);
-    } else {
-        samples[(count % cap as u64) as usize] = value;
+/// Fixed-size uniform sample of an unbounded stream (Algorithm R over a
+/// deterministic xorshift64* stream). Replaces the old most-recent-window
+/// ring: memory and `report()` sort cost stay O(cap) however many
+/// requests a long-lived server answers, and — unlike the ring — the pool
+/// is an unbiased sample of the *whole* stream, so lifetime p50/p99 do
+/// not silently become "p50 of the last window". Deterministic: the same
+/// observation sequence always yields the same sample set.
+pub(crate) struct Reservoir {
+    cap: usize,
+    seen: u64,
+    samples: Vec<f64>,
+    rng: u64,
+}
+
+impl Reservoir {
+    pub(crate) fn new(cap: usize) -> Reservoir {
+        assert!(cap > 0, "reservoir cap must be positive");
+        Reservoir { cap, seen: 0, samples: Vec::new(), rng: 0x9E37_79B9_7F4A_7C15 }
+    }
+
+    /// Record one observation: fill to `cap`, then the `i`-th observation
+    /// replaces a uniformly random resident sample with probability
+    /// `cap/i` (Algorithm R), keeping the pool uniform over the stream.
+    pub(crate) fn record(&mut self, value: f64) {
+        self.seen += 1;
+        if self.samples.len() < self.cap {
+            self.samples.push(value);
+            return;
+        }
+        // xorshift64* : deterministic, nonzero-seeded, passes enough of
+        // BigCrush for sampling duty without pulling in the util Rng's
+        // 4-word state per reservoir.
+        self.rng ^= self.rng << 13;
+        self.rng ^= self.rng >> 7;
+        self.rng ^= self.rng << 17;
+        let j = self.rng.wrapping_mul(0x2545_F491_4F6C_DD1D) % self.seen;
+        if (j as usize) < self.cap {
+            self.samples[j as usize] = value;
+        }
+    }
+
+    pub(crate) fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    pub(crate) fn seen(&self) -> u64 {
+        self.seen
     }
 }
 
-#[derive(Default)]
-pub(crate) struct StatsInner {
+/// One dispatcher's private statistics. All counters are exact (a request
+/// is recorded in exactly one shard); the latency pools are bounded
+/// reservoirs merged at snapshot time.
+pub(crate) struct StatsShard {
     pub(crate) completed: u64,
     pub(crate) failed: u64,
     pub(crate) batches: u64,
     pub(crate) batch_size_sum: u64,
     pub(crate) max_batch: usize,
-    /// Per-request submit→response seconds (most recent `STAT_SAMPLE_CAP`).
-    pub(crate) latencies: Vec<f64>,
-    /// Per-request submit→dequeue seconds (most recent `STAT_SAMPLE_CAP`).
-    pub(crate) queue_waits: Vec<f64>,
+    /// Per-request submit→response seconds (uniform reservoir).
+    pub(crate) latencies: Reservoir,
+    /// Per-request submit→dequeue seconds (uniform reservoir).
+    pub(crate) queue_waits: Reservoir,
     /// Submit→response seconds by priority lane (High/Normal/Background).
-    pub(crate) lat_by_prio: [Vec<f64>; 3],
+    pub(crate) lat_by_prio: [Reservoir; 3],
     pub(crate) count_by_prio: [u64; 3],
     /// Completions per tenant (bounded by `TENANT_METRIC_CAP`).
     pub(crate) completed_by_tenant: HashMap<String, u64>,
     pub(crate) last_done: Option<Instant>,
 }
 
-impl StatsInner {
+impl StatsShard {
+    pub(crate) fn new() -> StatsShard {
+        let cap = STAT_SAMPLE_CAP / STATS_SHARDS;
+        let prio_cap = PRIO_SAMPLE_CAP / STATS_SHARDS;
+        StatsShard {
+            completed: 0,
+            failed: 0,
+            batches: 0,
+            batch_size_sum: 0,
+            max_batch: 0,
+            latencies: Reservoir::new(cap),
+            queue_waits: Reservoir::new(cap),
+            lat_by_prio: [
+                Reservoir::new(prio_cap),
+                Reservoir::new(prio_cap),
+                Reservoir::new(prio_cap),
+            ],
+            count_by_prio: [0; 3],
+            completed_by_tenant: HashMap::new(),
+            last_done: None,
+        }
+    }
+
     /// Account one answered request. `done` is when the response was sent;
     /// `last_done` stays monotonic so a late-locking worker with an
     /// earlier completion cannot move the span's end backwards.
@@ -71,16 +143,14 @@ impl StatsInner {
         failed: bool,
         done: Instant,
     ) {
-        let idx = self.completed;
         self.completed += 1;
         if failed {
             self.failed += 1;
         }
-        record_sample(&mut self.latencies, STAT_SAMPLE_CAP, idx, latency_s);
-        record_sample(&mut self.queue_waits, STAT_SAMPLE_CAP, idx, wait_s);
+        self.latencies.record(latency_s);
+        self.queue_waits.record(wait_s);
         let lane = priority.lane();
-        let lane_count = self.count_by_prio[lane];
-        record_sample(&mut self.lat_by_prio[lane], PRIO_SAMPLE_CAP, lane_count, latency_s);
+        self.lat_by_prio[lane].record(latency_s);
         self.count_by_prio[lane] += 1;
         if let Some(tenant) = tenant {
             let key = if self.completed_by_tenant.len() >= TENANT_METRIC_CAP
@@ -94,23 +164,79 @@ impl StatsInner {
         }
         self.last_done = Some(self.last_done.map_or(done, |prev| prev.max(done)));
     }
+}
 
-    /// Clone the report's inputs while holding the stats lock; sorting
-    /// happens on the snapshot, outside it.
-    pub(crate) fn snapshot(&self) -> StatsSnapshot {
-        StatsSnapshot {
-            completed: self.completed,
-            failed: self.failed,
-            batches: self.batches,
-            batch_size_sum: self.batch_size_sum,
-            max_batch: self.max_batch,
-            latencies: self.latencies.clone(),
-            queue_waits: self.queue_waits.clone(),
-            lat_by_prio: self.lat_by_prio.clone(),
-            count_by_prio: self.count_by_prio,
-            completed_by_tenant: self.completed_by_tenant.clone(),
-            last_done: self.last_done,
+/// All dispatchers' stats: one [`StatsShard`] per dispatcher id. A
+/// dispatcher locks only its own shard (uncontended in steady state —
+/// the lock exists so `report()` can read a consistent shard, not to
+/// mediate between writers); the merge happens at snapshot time.
+pub(crate) struct ShardedStats {
+    shards: Vec<Mutex<StatsShard>>,
+}
+
+impl ShardedStats {
+    pub(crate) fn new() -> ShardedStats {
+        ShardedStats {
+            shards: (0..STATS_SHARDS).map(|_| Mutex::new(StatsShard::new())).collect(),
         }
+    }
+
+    /// The shard owned by dispatcher `id` (ids wrap at `STATS_SHARDS`;
+    /// caller threads with no dispatcher id — the drain purge — use 0).
+    pub(crate) fn shard(&self, id: usize) -> &Mutex<StatsShard> {
+        &self.shards[id % STATS_SHARDS]
+    }
+
+    /// Merge every shard into one snapshot. Counter sums are exact — each
+    /// answered request was recorded under exactly one shard lock, and
+    /// the merge locks each shard in turn, so at quiescence this equals
+    /// what a single global `Mutex<StatsInner>` would have accumulated.
+    /// Percentiles come from pooling the per-shard reservoirs; with the
+    /// batcher spreading work across dispatchers the shard streams are
+    /// near-identically distributed and pooling is an unbiased estimate.
+    pub(crate) fn snapshot(&self) -> StatsSnapshot {
+        let mut snap = StatsSnapshot {
+            completed: 0,
+            failed: 0,
+            batches: 0,
+            batch_size_sum: 0,
+            max_batch: 0,
+            latencies: Vec::new(),
+            queue_waits: Vec::new(),
+            lat_by_prio: [Vec::new(), Vec::new(), Vec::new()],
+            count_by_prio: [0; 3],
+            completed_by_tenant: HashMap::new(),
+            last_done: None,
+        };
+        for shard in &self.shards {
+            let s = shard.lock().expect("stats shard poisoned");
+            snap.completed += s.completed;
+            snap.failed += s.failed;
+            snap.batches += s.batches;
+            snap.batch_size_sum += s.batch_size_sum;
+            snap.max_batch = snap.max_batch.max(s.max_batch);
+            snap.latencies.extend_from_slice(s.latencies.samples());
+            snap.queue_waits.extend_from_slice(s.queue_waits.samples());
+            for lane in 0..3 {
+                snap.lat_by_prio[lane].extend_from_slice(s.lat_by_prio[lane].samples());
+                snap.count_by_prio[lane] += s.count_by_prio[lane];
+            }
+            for (tenant, n) in &s.completed_by_tenant {
+                let key = if snap.completed_by_tenant.len() >= TENANT_METRIC_CAP
+                    && !snap.completed_by_tenant.contains_key(tenant)
+                {
+                    "<other>"
+                } else {
+                    tenant.as_str()
+                };
+                *snap.completed_by_tenant.entry(key.to_string()).or_insert(0) += n;
+            }
+            snap.last_done = match (snap.last_done, s.last_done) {
+                (Some(a), Some(b)) => Some(a.max(b)),
+                (a, b) => a.or(b),
+            };
+        }
+        snap
     }
 }
 
@@ -482,23 +608,91 @@ mod tests {
     }
 
     #[test]
-    fn record_sample_wraps_at_cap() {
-        let mut xs = Vec::new();
-        for i in 0..5 {
-            record_sample(&mut xs, 3, i, i as f64);
+    fn reservoir_is_bounded_and_deterministic() {
+        let mut a = Reservoir::new(8);
+        let mut b = Reservoir::new(8);
+        for i in 0..10_000 {
+            a.record(i as f64);
+            b.record(i as f64);
         }
-        assert_eq!(xs, vec![3.0, 4.0, 2.0]);
+        assert_eq!(a.samples().len(), 8, "memory stays O(cap)");
+        assert_eq!(a.seen(), 10_000);
+        assert_eq!(a.samples(), b.samples(), "same stream, same sample set");
+    }
+
+    /// Feed a shuffled grid over [0, 1) — whose exact percentiles are
+    /// known — through a reservoir sized like one stats shard; the
+    /// sampled p50/p99 must land within sampling-error tolerance.
+    #[test]
+    fn reservoir_percentiles_within_tolerance_of_exact() {
+        let n = 100_000u64;
+        let mut values: Vec<f64> = (0..n).map(|i| i as f64 / n as f64).collect();
+        let mut rng = crate::util::rng::Rng::new(42);
+        for i in (1..values.len()).rev() {
+            values.swap(i, rng.below(i as u64 + 1) as usize);
+        }
+        let mut res = Reservoir::new(STAT_SAMPLE_CAP / STATS_SHARDS);
+        for v in values {
+            res.record(v);
+        }
+        let mut sampled = res.samples().to_vec();
+        sampled.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p50 = percentile(&sampled, 50.0);
+        let p99 = percentile(&sampled, 99.0);
+        assert!((p50 - 0.5).abs() < 0.05, "sampled p50 {p50} vs exact 0.5");
+        assert!((p99 - 0.99).abs() < 0.05, "sampled p99 {p99} vs exact 0.99");
+    }
+
+    /// The sharded merge: counters sum exactly, and pooled percentiles
+    /// stay within tolerance when the per-dispatcher streams are
+    /// identically distributed (round-robin, like the batcher's fan-out).
+    #[test]
+    fn sharded_snapshot_merges_counters_exactly_and_percentiles_closely() {
+        let stats = ShardedStats::new();
+        let n = 40_000u64;
+        let t0 = Instant::now();
+        for i in 0..n {
+            let latency = (i % 1000) as f64 / 1000.0;
+            let mut shard =
+                stats.shard(i as usize % STATS_SHARDS).lock().expect("stats shard poisoned");
+            shard.record_request(Priority::Normal, None, latency, 0.0, i % 10 == 0, t0);
+        }
+        let snap = stats.snapshot();
+        assert_eq!(snap.completed, n, "completions sum exactly across shards");
+        assert_eq!(snap.failed, n / 10);
+        assert_eq!(snap.count_by_prio[Priority::Normal.lane()], n);
+        let mut lat = snap.latencies;
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p50 = percentile(&lat, 50.0);
+        assert!((p50 - 0.5).abs() < 0.05, "merged p50 {p50} vs exact ~0.5");
     }
 
     #[test]
     fn tenant_cardinality_is_bounded() {
-        let mut stats = StatsInner::default();
+        let mut stats = StatsShard::new();
         let t0 = Instant::now();
         for i in 0..(TENANT_METRIC_CAP + 10) {
             stats.record_request(Priority::Normal, Some(&format!("t{i}")), 0.0, 0.0, false, t0);
         }
         assert!(stats.completed_by_tenant.len() <= TENANT_METRIC_CAP + 1);
         assert_eq!(stats.completed_by_tenant.get("<other>"), Some(&10));
+    }
+
+    /// The merge folds tenant maps with the same cardinality cap a single
+    /// shard enforces, so a hostile tenant spread across dispatchers
+    /// still cannot grow the report without bound.
+    #[test]
+    fn merged_tenant_cardinality_is_bounded() {
+        let stats = ShardedStats::new();
+        let t0 = Instant::now();
+        for i in 0..(STATS_SHARDS * TENANT_METRIC_CAP) {
+            let mut shard = stats.shard(i % STATS_SHARDS).lock().expect("stats shard poisoned");
+            shard.record_request(Priority::Normal, Some(&format!("t{i}")), 0.0, 0.0, false, t0);
+        }
+        let snap = stats.snapshot();
+        assert!(snap.completed_by_tenant.len() <= TENANT_METRIC_CAP + 1);
+        let total: u64 = snap.completed_by_tenant.values().sum();
+        assert_eq!(total, (STATS_SHARDS * TENANT_METRIC_CAP) as u64, "no completion lost");
     }
 
     #[test]

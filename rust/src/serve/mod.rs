@@ -40,7 +40,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use admission::{Admission, QueueState};
-use metrics::{Counters, PoolState, StatsInner};
+use metrics::{Counters, PoolState, ShardedStats};
 
 use crate::pipeline::{Pipeline, PlanKey};
 use crate::runtime::{Backend, ExecInputs, ExecOutcome};
@@ -195,7 +195,10 @@ struct ServerShared {
     /// Admissions closed (drain or shutdown). Set under the queue lock so
     /// blocked submitters cannot miss it between their check and wait.
     draining: AtomicBool,
-    stats: Mutex<StatsInner>,
+    /// Per-dispatcher stats shards (DESIGN.md §12): each worker records
+    /// into its own shard, so the per-batch bookkeeping never serializes
+    /// the pool; `report` merges all shards into one snapshot.
+    stats: ShardedStats,
     counters: Counters,
     pool: PoolState,
     /// Worker handles live behind the shared state so growers can
@@ -232,7 +235,7 @@ impl RoutineServer {
             idle: Condvar::new(),
             shutdown: AtomicBool::new(false),
             draining: AtomicBool::new(false),
-            stats: Mutex::new(StatsInner::default()),
+            stats: ShardedStats::new(),
             counters: Counters::default(),
             workers: Mutex::new(Vec::new()),
             first_submit: OnceLock::new(),
@@ -353,7 +356,7 @@ impl RoutineServer {
                     .counters
                     .drain_purged
                     .fetch_add(stragglers.len() as u64, Ordering::Relaxed);
-                answer_failed(&self.shared, &stragglers, "server drained before request ran");
+                answer_failed(&self.shared, &stragglers, "server drained before request ran", 0);
                 return false;
             }
             let (guard, _) =
@@ -367,7 +370,7 @@ impl RoutineServer {
     /// statistics. Percentile sorts happen on a clone, outside the stats
     /// lock, so reporting never stalls the dispatchers.
     pub fn report(&self) -> ServeReport {
-        let snap = self.shared.stats.lock().expect("serve stats poisoned").snapshot();
+        let snap = self.shared.stats.snapshot();
         let wall_s = match (self.shared.first_submit.get(), snap.last_done) {
             (Some(t0), Some(t1)) => t1.duration_since(*t0).as_secs_f64(),
             _ => 0.0,
@@ -432,16 +435,23 @@ fn spawn_worker(shared: &Arc<ServerShared>, id: usize) -> JoinHandle<()> {
     let shared = shared.clone();
     std::thread::Builder::new()
         .name(format!("aieblas-serve-{id}"))
-        .spawn(move || worker_loop(&shared))
+        .spawn(move || worker_loop(&shared, id))
         .expect("spawn serve worker")
 }
 
-fn worker_loop(shared: &Arc<ServerShared>) {
+fn worker_loop(shared: &Arc<ServerShared>, id: usize) {
     // how long an idle worker waits before considering retirement.
     let idle_window = (shared.cfg.target_queue_wait * 8).max(Duration::from_millis(20));
+    // this dispatcher's stats shard: effectively private in steady state
+    // (pool widths stay well under STATS_SHARDS), so per-batch stats
+    // updates never serialize the pool (DESIGN.md §12).
+    let shard = id % metrics::STATS_SHARDS;
+    // scratch reused across iterations — warm-path dispatch allocates no
+    // fresh control-plane buffers per batch.
+    let mut batch: Vec<Request> = Vec::new();
+    let mut expired: Vec<Request> = Vec::new();
+    let mut inputs_scratch: Vec<ExecInputs> = Vec::new();
     loop {
-        let mut batch: Vec<Request> = Vec::new();
-        let mut expired: Vec<Request> = Vec::new();
         {
             let mut q = shared.queue.lock().expect("serve queue poisoned");
             // seed: highest-priority oldest request, diverting any whose
@@ -519,10 +529,16 @@ fn worker_loop(shared: &Arc<ServerShared>) {
         }
         if !expired.is_empty() {
             shared.counters.deadline_missed.fetch_add(expired.len() as u64, Ordering::Relaxed);
-            answer_failed(shared, &expired, "deadline expired before execution; request dropped");
+            answer_failed(
+                shared,
+                &expired,
+                "deadline expired before execution; request dropped",
+                shard,
+            );
+            expired.clear();
         }
         if !batch.is_empty() {
-            dispatch_batch(shared, batch);
+            dispatch_batch(shared, &mut batch, &mut inputs_scratch, shard);
             maybe_grow(shared);
         }
     }
@@ -592,12 +608,13 @@ fn maybe_grow(shared: &Arc<ServerShared>) {
 }
 
 /// Answer every request in `reqs` with a structured runtime error,
-/// recording them as completed+failed (they were admitted, so they count
-/// toward `requests`, keeping `attempts == requests + shed` exact).
-fn answer_failed(shared: &ServerShared, reqs: &[Request], msg: &str) {
+/// recording them into stats shard `shard` as completed+failed (they
+/// were admitted, so they count toward `requests`, keeping
+/// `attempts == requests + shed` exact).
+fn answer_failed(shared: &ServerShared, reqs: &[Request], msg: &str, shard: usize) {
     let done = Instant::now();
     {
-        let mut stats = shared.stats.lock().expect("serve stats poisoned");
+        let mut stats = shared.stats.shard(shard).lock().expect("serve stats poisoned");
         for req in reqs {
             let elapsed = done.duration_since(req.enqueued).as_secs_f64();
             stats.record_request(req.priority, req.tenant.as_deref(), elapsed, elapsed, true, done);
@@ -626,11 +643,27 @@ fn note_answered(shared: &ServerShared, reqs: &[Request]) {
     shared.not_full.notify_all();
 }
 
-fn dispatch_batch(shared: &Arc<ServerShared>, mut batch: Vec<Request>) {
+/// Dispatch one coalesced batch and answer every request in it. `batch`
+/// and `inputs_scratch` are the calling dispatcher's reusable scratch:
+/// both are left empty on return, and the consumed per-request input
+/// vectors are recycled into this thread's buffer pool (`util::pool`)
+/// where the backend's next dispatch draws its output buffers from.
+fn dispatch_batch(
+    shared: &Arc<ServerShared>,
+    batch: &mut Vec<Request>,
+    inputs_scratch: &mut Vec<ExecInputs>,
+    shard: usize,
+) {
     let dequeued = Instant::now();
     let per_request_err = |msg: &str, n: usize| -> Vec<Result<ExecOutcome>> {
         (0..n).map(|_| Err(Error::Runtime(msg.to_string()))).collect()
     };
+    // inputs move out of the requests before the unwind-isolated attempt
+    // so the closure only borrows them immutably — they are reclaimed for
+    // the pool below no matter how the attempt ends.
+    inputs_scratch.clear();
+    inputs_scratch.extend(batch.iter_mut().map(|r| std::mem::take(&mut r.inputs)));
+    let inputs: &[ExecInputs] = inputs_scratch;
     // lower once per batch (single-flight dedups concurrent cold lowerings
     // from other dispatchers), then execute. A panicking backend must not
     // kill this dispatcher — queued requests would never be answered — so
@@ -641,11 +674,7 @@ fn dispatch_batch(shared: &Arc<ServerShared>, mut batch: Vec<Request>) {
             .pipeline
             .lower_keyed(&batch[0].key, &batch[0].spec)
             .and_then(|plan| shared.backend.prepare(plan))
-            .map(|prepared| {
-                let inputs: Vec<ExecInputs> =
-                    batch.iter_mut().map(|r| std::mem::take(&mut r.inputs)).collect();
-                shared.backend.execute_batch(&prepared, &inputs)
-            })
+            .map(|prepared| shared.backend.execute_batch(&prepared, inputs))
     }));
     let outcomes: Vec<Result<ExecOutcome>> = match attempt {
         Ok(Ok(outcomes)) if outcomes.len() == batch.len() => outcomes,
@@ -665,7 +694,7 @@ fn dispatch_batch(shared: &Arc<ServerShared>, mut batch: Vec<Request>) {
     let done = Instant::now();
     let mut wait_sum = 0.0;
     {
-        let mut stats = shared.stats.lock().expect("serve stats poisoned");
+        let mut stats = shared.stats.shard(shard).lock().expect("serve stats poisoned");
         stats.batches += 1;
         stats.batch_size_sum += batch.len() as u64;
         stats.max_batch = stats.max_batch.max(batch.len());
@@ -687,7 +716,17 @@ fn dispatch_batch(shared: &Arc<ServerShared>, mut batch: Vec<Request>) {
         // a dropped Ticket just means the caller stopped caring.
         let _ = req.tx.send(outcome);
     }
-    note_answered(shared, &batch);
+    note_answered(shared, batch.as_slice());
+    // the consumed request inputs are dead here (outputs left with the
+    // responses); feed their allocations back to this thread's pool.
+    for inputs in inputs_scratch.drain(..) {
+        for routine_inputs in inputs.per_routine {
+            for buf in routine_inputs {
+                crate::util::pool::recycle(buf);
+            }
+        }
+    }
+    batch.clear();
 }
 
 #[cfg(test)]

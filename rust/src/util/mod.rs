@@ -8,6 +8,7 @@ pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod logging;
+pub mod pool;
 pub mod proptest;
 pub mod rng;
 pub mod table;

@@ -1,0 +1,159 @@
+//! Thread-local `f32` buffer pool for the dispatch hot path (DESIGN.md §12).
+//!
+//! Warm serving traffic used to allocate every output vector
+//! (`vec![0.0; n]` in the Cpu/Reference kernel walks) and drop every
+//! request's input vectors per dispatch. The pool closes that loop on
+//! each thread: backends draw zeroed buffers from their thread's pool and
+//! the serve dispatcher recycles consumed input vectors back into its
+//! own, so steady-state dispatch on one thread reuses the same handful of
+//! allocations instead of round-tripping the global allocator per
+//! request.
+//!
+//! Lifetime rules (the reasons this is safe and bounded):
+//! * `take_*` transfers **ownership** out of the pool — a taken buffer is
+//!   an ordinary `Vec<f32>` that may outlive the pool, the thread, or be
+//!   handed to another thread (outcome vectors leave the server with the
+//!   response; they are simply never recycled in that case).
+//! * `recycle` is best-effort: retention is capped per thread (count and
+//!   bytes), so recycling on a thread that never takes — or taking on a
+//!   thread that never recycles — degrades to plain allocation, never to
+//!   unbounded growth.
+//! * Buffers are re-zeroed (`take_zeroed`) or fully overwritten
+//!   (`take_copied`) on the way out, so pooling is invisible to numerics:
+//!   outputs are bit-identical to freshly allocated ones.
+
+use std::cell::RefCell;
+
+/// Buffers retained per thread.
+const MAX_POOLED: usize = 32;
+
+/// Bytes retained per thread (16 MiB: a few level-3 `n×n` outputs).
+const MAX_POOLED_BYTES: usize = 16 << 20;
+
+struct Pool {
+    bufs: Vec<Vec<f32>>,
+    bytes: usize,
+}
+
+impl Pool {
+    const fn new() -> Pool {
+        Pool { bufs: Vec::new(), bytes: 0 }
+    }
+
+    fn take(&mut self, min_capacity: usize) -> Option<Vec<f32>> {
+        // newest-first: the most recently recycled buffer is the most
+        // likely to still be cache-warm and the right size.
+        for i in (0..self.bufs.len()).rev() {
+            if self.bufs[i].capacity() >= min_capacity {
+                let buf = self.bufs.swap_remove(i);
+                self.bytes -= buf.capacity() * std::mem::size_of::<f32>();
+                return Some(buf);
+            }
+        }
+        None
+    }
+
+    fn recycle(&mut self, buf: Vec<f32>) {
+        let bytes = buf.capacity() * std::mem::size_of::<f32>();
+        if bytes == 0 || self.bufs.len() >= MAX_POOLED || self.bytes + bytes > MAX_POOLED_BYTES {
+            return; // dropped: retention stays bounded
+        }
+        self.bytes += bytes;
+        self.bufs.push(buf);
+    }
+}
+
+thread_local! {
+    static POOL: RefCell<Pool> = const { RefCell::new(Pool::new()) };
+}
+
+/// An all-zeros length-`n` vector, reusing a pooled allocation when one
+/// with enough capacity is available. Numerically identical to
+/// `vec![0.0; n]`.
+pub fn take_zeroed(n: usize) -> Vec<f32> {
+    match POOL.with(|p| p.borrow_mut().take(n)) {
+        Some(mut buf) => {
+            buf.clear();
+            buf.resize(n, 0.0);
+            buf
+        }
+        None => vec![0.0; n],
+    }
+}
+
+/// A copy of `src`, reusing a pooled allocation when possible.
+/// Numerically identical to `src.to_vec()`.
+pub fn take_copied(src: &[f32]) -> Vec<f32> {
+    match POOL.with(|p| p.borrow_mut().take(src.len())) {
+        Some(mut buf) => {
+            buf.clear();
+            buf.extend_from_slice(src);
+            buf
+        }
+        None => src.to_vec(),
+    }
+}
+
+/// Return a buffer to this thread's pool (best-effort; see module docs).
+pub fn recycle(buf: Vec<f32>) {
+    POOL.with(|p| p.borrow_mut().recycle(buf));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_zeroed_matches_fresh_allocation() {
+        let mut buf = take_zeroed(16);
+        for (i, v) in buf.iter_mut().enumerate() {
+            *v = i as f32 + 1.0;
+        }
+        recycle(buf);
+        // the recycled (dirty) buffer must come back fully zeroed.
+        let again = take_zeroed(16);
+        assert_eq!(again, vec![0.0; 16]);
+        // shrinking reuse zeroes exactly n elements.
+        recycle(again);
+        let small = take_zeroed(4);
+        assert_eq!(small, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn take_copied_matches_to_vec() {
+        recycle(vec![9.0; 32]);
+        let src = [1.0f32, 2.0, 3.0];
+        assert_eq!(take_copied(&src), src.to_vec());
+    }
+
+    #[test]
+    fn reuse_actually_happens_on_one_thread() {
+        let buf = take_zeroed(1024);
+        let ptr = buf.as_ptr();
+        recycle(buf);
+        let again = take_zeroed(512);
+        assert_eq!(again.as_ptr(), ptr, "pooled allocation must be reused");
+    }
+
+    #[test]
+    fn retention_is_bounded() {
+        // over-recycle: the pool must cap its retained count...
+        for _ in 0..(MAX_POOLED * 2) {
+            recycle(vec![0.0; 8]);
+        }
+        let retained = POOL.with(|p| p.borrow().bufs.len());
+        assert!(retained <= MAX_POOLED);
+        // ...and its retained bytes (one buffer over the byte cap drops).
+        recycle(vec![0.0; MAX_POOLED_BYTES / std::mem::size_of::<f32>() + 1]);
+        let bytes = POOL.with(|p| p.borrow().bytes);
+        assert!(bytes <= MAX_POOLED_BYTES);
+    }
+
+    #[test]
+    fn zero_capacity_buffers_are_not_retained() {
+        let before = POOL.with(|p| p.borrow().bufs.len());
+        recycle(Vec::new());
+        let after = POOL.with(|p| p.borrow().bufs.len());
+        assert_eq!(before, after);
+    }
+}

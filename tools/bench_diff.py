@@ -17,7 +17,10 @@ Dependency-free (stdlib only). Matching rules:
 * baselines below --min-seconds are ignored (CI passes 1e-3: timings
   under a millisecond on shared runners are noise, not signal);
 * a case/field present on only one side is reported but never fails the
-  diff (benches grow new cases as the engine grows).
+  diff (benches grow new cases as the engine grows);
+* a brand-new BENCH_*.json with no baseline artifact at all is reported
+  informationally (its gated fields are printed as "new, not gated") and
+  never fails the diff — the next run picks it up as a baseline.
 
 Exit status: 0 = OK (or nothing comparable), 1 = at least one regression.
 """
@@ -85,7 +88,19 @@ def diff_file(name, base_doc, cur_doc, args):
     return regressions
 
 
-def main():
+def report_new_file(name, cur_doc):
+    """A bench artifact with no baseline: print what the next run will
+    gate against, but never fail on it."""
+    print(f"  {name}: new bench (no baseline artifact) — informational only")
+    for case in cur_doc.get("cases", []):
+        label = case.get("case")
+        if not label:
+            continue
+        for field, value in median_fields(case):
+            print(f"    {name}/{label}.{field}: {value:.6g}s (new, not gated)")
+
+
+def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("baseline", type=Path, help="directory with the previous run's BENCH_*.json")
     ap.add_argument("current", type=Path, help="directory with this run's BENCH_*.json")
@@ -93,7 +108,7 @@ def main():
                     help="fail when median grows by more than this fraction (default 0.20)")
     ap.add_argument("--min-seconds", type=float, default=1e-6,
                     help="ignore baselines below this many seconds (default 1e-6)")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     current_files = sorted(args.current.glob("BENCH_*.json"))
     if not current_files:
@@ -105,7 +120,9 @@ def main():
     for cur_path in current_files:
         base_path = args.baseline / cur_path.name
         if not base_path.exists():
-            print(f"  {cur_path.name}: no baseline artifact, skipping")
+            cur_doc = load(cur_path)
+            if cur_doc is not None:
+                report_new_file(cur_path.name, cur_doc)
             continue
         base_doc, cur_doc = load(base_path), load(cur_path)
         if base_doc is None or cur_doc is None:

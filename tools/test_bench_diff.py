@@ -1,0 +1,91 @@
+#!/usr/bin/env python3
+"""Unit tests for tools/bench_diff.py (stdlib only).
+
+Run: python3 tools/test_bench_diff.py
+"""
+
+import json
+import sys
+import tempfile
+import unittest
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+import bench_diff  # noqa: E402
+
+
+def write_doc(directory, name, cases, smoke=False):
+    doc = {"bench": name, "unit": "seconds", "smoke": smoke, "cases": cases}
+    path = Path(directory) / f"BENCH_{name}.json"
+    path.write_text(json.dumps(doc))
+    return path
+
+
+def run_diff(base, cur, **kw):
+    argv = [str(base), str(cur)]
+    argv += ["--max-regression", str(kw.get("max_regression", 0.20))]
+    argv += ["--min-seconds", str(kw.get("min_seconds", 1e-3))]
+    return bench_diff.main(argv)
+
+
+class BenchDiffTests(unittest.TestCase):
+    def setUp(self):
+        self._tmp = tempfile.TemporaryDirectory()
+        root = Path(self._tmp.name)
+        self.base = root / "base"
+        self.cur = root / "cur"
+        self.base.mkdir()
+        self.cur.mkdir()
+
+    def tearDown(self):
+        self._tmp.cleanup()
+
+    def test_new_file_without_baseline_is_informational(self):
+        # a brand-new BENCH file must be reported, not gated: exit 0 even
+        # though nothing is comparable.
+        write_doc(self.cur, "warm_path", [{"case": "size=16", "get_median_s": 2.0}])
+        self.assertEqual(run_diff(self.base, self.cur), 0)
+
+    def test_regression_beyond_threshold_fails(self):
+        write_doc(self.base, "x", [{"case": "a", "run_median_s": 1.0}])
+        write_doc(self.cur, "x", [{"case": "a", "run_median_s": 1.5}])
+        self.assertEqual(run_diff(self.base, self.cur), 1)
+
+    def test_within_threshold_passes(self):
+        write_doc(self.base, "x", [{"case": "a", "run_median_s": 1.0}])
+        write_doc(self.cur, "x", [{"case": "a", "run_median_s": 1.1}])
+        self.assertEqual(run_diff(self.base, self.cur), 0)
+
+    def test_baseline_prefixed_fields_are_never_gated(self):
+        # naive_/pr2_/untuned_/shed_ fields time deliberately old configs;
+        # a 100x "regression" there must not fail the build.
+        write_doc(self.base, "x", [{"case": "a", "naive_get_median_s": 1.0,
+                                    "run_median_s": 1.0}])
+        write_doc(self.cur, "x", [{"case": "a", "naive_get_median_s": 100.0,
+                                   "run_median_s": 1.0}])
+        self.assertEqual(run_diff(self.base, self.cur), 0)
+
+    def test_sub_min_seconds_baselines_are_ignored(self):
+        # a 1 µs-scale median may regress 10x without failing: below
+        # --min-seconds the ratio is timing noise.
+        write_doc(self.base, "x", [{"case": "a", "get_median_s": 1e-6}])
+        write_doc(self.cur, "x", [{"case": "a", "get_median_s": 1e-5}])
+        self.assertEqual(run_diff(self.base, self.cur), 0)
+
+    def test_smoke_flag_mismatch_skips_file(self):
+        write_doc(self.base, "x", [{"case": "a", "run_median_s": 1.0}], smoke=True)
+        write_doc(self.cur, "x", [{"case": "a", "run_median_s": 9.0}], smoke=False)
+        self.assertEqual(run_diff(self.base, self.cur), 0)
+
+    def test_new_case_in_existing_file_is_informational(self):
+        write_doc(self.base, "x", [{"case": "a", "run_median_s": 1.0}])
+        write_doc(self.cur, "x", [{"case": "a", "run_median_s": 1.0},
+                                  {"case": "b", "run_median_s": 99.0}])
+        self.assertEqual(run_diff(self.base, self.cur), 0)
+
+    def test_empty_current_dir_is_ok(self):
+        self.assertEqual(run_diff(self.base, self.cur), 0)
+
+
+if __name__ == "__main__":
+    unittest.main()
