@@ -1,0 +1,139 @@
+//! HTTP front-door bench: framing + handler overhead on top of the
+//! serving layer, measured over real loopback TCP (DESIGN.md §13).
+//!
+//! Three cases:
+//! * `healthz` — pure frame/dispatch round trip, no serving work;
+//! * `run_warm` — a plan-cached `/v1/run` in checksum mode, the steady
+//!   state of a serving process;
+//! * `run_concurrent` — 4 clients hammering the same warm spec: per-
+//!   request latency distribution plus aggregate requests/s.
+//!
+//! Emits `BENCH_http.json` (working directory, or under
+//! `AIEBLAS_BENCH_JSON_DIR`) to extend the tracked perf series.
+//!
+//! Smoke mode (CI): `AIEBLAS_BENCH_SMOKE=1` shrinks sizes so the run is a
+//! pass/fail completion check, no timing assertions.
+//!
+//! Run: `cargo bench --bench http`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use aieblas::arch::ArchConfig;
+use aieblas::blas::RoutineKind;
+use aieblas::http::client::{self, ClientConfig};
+use aieblas::http::{HttpConfig, HttpServer};
+use aieblas::pipeline::Pipeline;
+use aieblas::runtime::CpuBackend;
+use aieblas::serve::{RoutineServer, ServeConfig};
+use aieblas::spec::{DataSource, Spec};
+use aieblas::util::bench::{Bench, Stats};
+use aieblas::util::json::{obj, Json};
+
+fn main() {
+    aieblas::init();
+    let smoke = std::env::var("AIEBLAS_BENCH_SMOKE").is_ok();
+    let mut b = Bench::new("http");
+    let mut json_rows: Vec<Json> = Vec::new();
+
+    let size = if smoke { 256 } else { 4096 };
+    let total = if smoke { 32 } else { 256 };
+    let clients = 4usize;
+
+    let pipeline = Arc::new(Pipeline::new(ArchConfig::vck5000()));
+    let server =
+        Arc::new(RoutineServer::new(pipeline, Arc::new(CpuBackend), ServeConfig::default()));
+    let http = HttpServer::bind("127.0.0.1:0", server, None, HttpConfig::default())
+        .expect("bind loopback");
+    let addr = http.local_addr().to_string();
+    let cfg = ClientConfig::default();
+
+    // healthz: the floor — one connection, one frame, no serving work.
+    let health = b.bench("healthz", || {
+        let (status, _) = client::get(&addr, "/v1/healthz", &cfg).unwrap();
+        assert_eq!(status, 200);
+        status
+    });
+    json_rows.push(obj(vec![
+        ("case", "healthz".into()),
+        ("median_s", health.median.into()),
+    ]));
+
+    // warm /v1/run: the plan is cached after the priming call; checksum
+    // mode keeps the response payload flat across sizes.
+    let spec = Spec::single(RoutineKind::Axpy, "a", size, DataSource::Pl);
+    let mut body = obj(vec![("spec", spec.to_json())]);
+    if let Json::Obj(map) = &mut body {
+        map.insert("include_values".into(), Json::Bool(false));
+    }
+    let (status, first) = client::post_json(&addr, "/v1/run", &body, &cfg).unwrap();
+    assert_eq!(status, 200, "priming run failed: {}", first.to_compact());
+    let warm = b.bench("run_warm", || {
+        let (status, _) = client::post_json(&addr, "/v1/run", &body, &cfg).unwrap();
+        assert_eq!(status, 200);
+        status
+    });
+    json_rows.push(obj(vec![
+        ("case", "run_warm".into()),
+        ("median_s", warm.median.into()),
+    ]));
+
+    // concurrent: 4 clients over the same warm spec. Latency samples are
+    // per request; rps is the aggregate over the phase's wall clock.
+    let t0 = Instant::now();
+    let latencies: Vec<f64> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let (addr, body, cfg) = (&addr, &body, &cfg);
+                s.spawn(move || {
+                    let mut xs = Vec::new();
+                    for _ in (c..total).step_by(clients) {
+                        let t = Instant::now();
+                        let (status, _) = client::post_json(addr, "/v1/run", body, cfg).unwrap();
+                        assert_eq!(status, 200);
+                        xs.push(t.elapsed().as_secs_f64());
+                    }
+                    xs
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().expect("client thread")).collect()
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let rps = latencies.len() as f64 / wall.max(1e-9);
+    let p99 = {
+        let mut xs = latencies.clone();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs[((xs.len() as f64 * 0.99) as usize).min(xs.len() - 1)]
+    };
+    let conc = Stats::from_samples(latencies);
+    b.record("run_concurrent", conc);
+    eprintln!(
+        "  concurrent: {total} request(s), {clients} client(s): {rps:.0} req/s, p99 {:.3} ms",
+        p99 * 1e3
+    );
+    json_rows.push(obj(vec![
+        ("case", "run_concurrent".into()),
+        ("median_s", conc.median.into()),
+        ("p99_s", p99.into()),
+        ("rps", rps.into()),
+    ]));
+
+    // graceful exit: stop the listener and drain the serving layer so the
+    // bench process leaves no threads behind.
+    http.shutdown();
+    b.finish();
+
+    let doc = obj(vec![
+        ("bench", "http".into()),
+        ("unit", "seconds".into()),
+        ("smoke", smoke.into()),
+        ("cases", Json::Arr(json_rows)),
+    ]);
+    let out_dir = std::env::var("AIEBLAS_BENCH_JSON_DIR").unwrap_or_else(|_| ".".into());
+    let path = format!("{out_dir}/BENCH_http.json");
+    match std::fs::write(&path, doc.to_pretty() + "\n") {
+        Ok(()) => eprintln!("wrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+}

@@ -1,0 +1,539 @@
+//! The stable v1 wire API (DESIGN.md §13).
+//!
+//! Every JSON document that crosses a process boundary — HTTP request and
+//! response bodies (`crate::http`), `serve-bench --metrics-json` output —
+//! is shaped here, in one place, so the network edge and the tooling
+//! cannot drift apart. Three rules govern the format:
+//!
+//! 1. **Versioned envelopes.** Every response object carries `"v": 1`
+//!    ([`API_VERSION`]); requests may carry it and are rejected when it
+//!    names a version this server does not speak. The version only bumps
+//!    on an incompatible change, mirroring the plan store's
+//!    `FORMAT_VERSION` policy (DESIGN.md §10).
+//! 2. **Structured errors.** Failures are never bare strings on the wire:
+//!    they are an [`ApiError`] `{code, message, retryable}` with a stable
+//!    machine-readable [`ErrorCode`] mapped to a fixed HTTP status —
+//!    admission sheds are 429/503, deadline failures 504, caller mistakes
+//!    400-class, everything else 500-class.
+//! 3. **Strict requests.** Unknown request fields are rejected (like
+//!    `Spec::from_json`), so a client typo cannot silently change
+//!    behavior.
+
+use std::time::Duration;
+
+use crate::runtime::ExecOutcome;
+use crate::serve::{Priority, RequestOpts, ServeReport, ShedReason};
+use crate::spec::Spec;
+use crate::util::json::{obj, Json};
+use crate::Error;
+
+/// Wire-format version. Bumps only on incompatible changes to the request
+/// or response shapes; additive fields do not bump it (clients must
+/// ignore fields they do not know).
+pub const API_VERSION: u64 = 1;
+
+/// Stable machine-readable error codes, each pinned to one HTTP status.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Malformed JSON, invalid spec, unknown request field.
+    BadRequest,
+    /// No such route.
+    NotFound,
+    /// Route exists, method does not.
+    MethodNotAllowed,
+    /// Request body over the configured limit.
+    PayloadTooLarge,
+    /// Shed at admission: bounded queue at capacity.
+    ShedQueueFull,
+    /// Shed at admission: non-High traffic above the watermark.
+    ShedWatermark,
+    /// Shed at admission: per-tenant in-flight quota exhausted.
+    ShedTenantQuota,
+    /// Shed at admission (or purged mid-flight): the server is draining.
+    ShedDraining,
+    /// The request's deadline had already passed at submit time.
+    DeadlineExpired,
+    /// The deadline passed while the request was queued; it was dropped
+    /// before a backend run.
+    DeadlineMissed,
+    /// The server-side wait bound elapsed before the backend answered.
+    Timeout,
+    /// Proxying to the owning shard failed.
+    Upstream,
+    /// Anything else: backend failure, panic, lost response channel.
+    Internal,
+}
+
+impl ErrorCode {
+    pub const ALL: [ErrorCode; 13] = [
+        ErrorCode::BadRequest,
+        ErrorCode::NotFound,
+        ErrorCode::MethodNotAllowed,
+        ErrorCode::PayloadTooLarge,
+        ErrorCode::ShedQueueFull,
+        ErrorCode::ShedWatermark,
+        ErrorCode::ShedTenantQuota,
+        ErrorCode::ShedDraining,
+        ErrorCode::DeadlineExpired,
+        ErrorCode::DeadlineMissed,
+        ErrorCode::Timeout,
+        ErrorCode::Upstream,
+        ErrorCode::Internal,
+    ];
+
+    /// The stable wire spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::NotFound => "not_found",
+            ErrorCode::MethodNotAllowed => "method_not_allowed",
+            ErrorCode::PayloadTooLarge => "payload_too_large",
+            ErrorCode::ShedQueueFull => "shed_queue_full",
+            ErrorCode::ShedWatermark => "shed_watermark",
+            ErrorCode::ShedTenantQuota => "shed_tenant_quota",
+            ErrorCode::ShedDraining => "shed_draining",
+            ErrorCode::DeadlineExpired => "deadline_expired",
+            ErrorCode::DeadlineMissed => "deadline_missed",
+            ErrorCode::Timeout => "timeout",
+            ErrorCode::Upstream => "upstream",
+            ErrorCode::Internal => "internal",
+        }
+    }
+
+    /// The HTTP status this code always maps to.
+    pub fn http_status(self) -> u16 {
+        match self {
+            ErrorCode::BadRequest => 400,
+            ErrorCode::NotFound => 404,
+            ErrorCode::MethodNotAllowed => 405,
+            ErrorCode::PayloadTooLarge => 413,
+            ErrorCode::ShedQueueFull
+            | ErrorCode::ShedWatermark
+            | ErrorCode::ShedTenantQuota => 429,
+            ErrorCode::ShedDraining => 503,
+            ErrorCode::DeadlineExpired | ErrorCode::DeadlineMissed | ErrorCode::Timeout => 504,
+            ErrorCode::Upstream => 502,
+            ErrorCode::Internal => 500,
+        }
+    }
+
+    /// Whether retrying the identical request can reasonably succeed.
+    /// Load sheds and transient upstream failures are retryable; caller
+    /// mistakes and blown deadlines are not (the caller's deadline is
+    /// gone either way).
+    pub fn retryable(self) -> bool {
+        matches!(
+            self,
+            ErrorCode::ShedQueueFull
+                | ErrorCode::ShedWatermark
+                | ErrorCode::ShedTenantQuota
+                | ErrorCode::ShedDraining
+                | ErrorCode::Timeout
+                | ErrorCode::Upstream
+        )
+    }
+
+    /// Parse the wire spelling back (clients, tests, the smoke driver).
+    pub fn parse(s: &str) -> Option<ErrorCode> {
+        ErrorCode::ALL.iter().copied().find(|c| c.name() == s)
+    }
+}
+
+/// A structured wire error: `{code, message, retryable}` inside a
+/// versioned `{"v": 1, "error": …}` envelope.
+#[derive(Debug, Clone)]
+pub struct ApiError {
+    pub code: ErrorCode,
+    pub message: String,
+    pub retryable: bool,
+}
+
+impl ApiError {
+    pub fn new(code: ErrorCode, message: impl Into<String>) -> ApiError {
+        ApiError { code, message: message.into(), retryable: code.retryable() }
+    }
+
+    /// The structured error for an admission shed, one code per reason.
+    pub fn from_shed(reason: ShedReason) -> ApiError {
+        let code = match reason {
+            ShedReason::QueueFull => ErrorCode::ShedQueueFull,
+            ShedReason::AboveWatermark => ErrorCode::ShedWatermark,
+            ShedReason::TenantQuota => ErrorCode::ShedTenantQuota,
+            ShedReason::Draining => ErrorCode::ShedDraining,
+            ShedReason::DeadlineExpired => ErrorCode::DeadlineExpired,
+        };
+        ApiError::new(code, format!("request shed at admission: {reason}"))
+    }
+
+    /// Classify a crate error produced *after* admission (ticket wait,
+    /// lowering, backend execution). Spec/JSON problems are the caller's;
+    /// the serving layer's structured drop messages are recognized by the
+    /// markers its tests already pin down; everything else is internal.
+    pub fn from_error(e: &Error) -> ApiError {
+        let msg = e.to_string();
+        let code = match e {
+            Error::Spec(_) | Error::Json(_) | Error::Graph(_) => ErrorCode::BadRequest,
+            Error::Runtime(m) => {
+                if m.contains("deadline expired before execution") {
+                    ErrorCode::DeadlineMissed
+                } else if m.contains("drained") || m.contains("draining") {
+                    ErrorCode::ShedDraining
+                } else if m.contains("timed out") {
+                    ErrorCode::Timeout
+                } else {
+                    ErrorCode::Internal
+                }
+            }
+            _ => ErrorCode::Internal,
+        };
+        ApiError::new(code, msg)
+    }
+
+    pub fn http_status(&self) -> u16 {
+        self.code.http_status()
+    }
+
+    /// The versioned wire envelope: `{"v": 1, "error": {…}}`.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("v", (API_VERSION as f64).into()),
+            (
+                "error",
+                obj(vec![
+                    ("code", self.code.name().into()),
+                    ("message", self.message.as_str().into()),
+                    ("retryable", self.retryable.into()),
+                ]),
+            ),
+        ])
+    }
+
+    /// Parse a wire error body back into a structured error (clients and
+    /// the shard proxy, which relays upstream errors verbatim).
+    pub fn from_json(json: &Json) -> Option<ApiError> {
+        let err = json.get("error")?;
+        Some(ApiError {
+            code: ErrorCode::parse(err.get("code")?.as_str()?)?,
+            message: err.get("message")?.as_str()?.to_string(),
+            retryable: err.get("retryable")?.as_bool()?,
+        })
+    }
+}
+
+/// One `/v1/run` request: the spec to execute plus serving options. The
+/// execution inputs are generated server-side from `seed` (deterministic
+/// standard-normal, exactly `ExecInputs::random_for`), so request bodies
+/// stay spec-sized; `include_values: false` additionally slims the
+/// response to per-routine checksums.
+#[derive(Debug, Clone)]
+pub struct RunRequest {
+    pub spec: Spec,
+    pub tenant: Option<String>,
+    pub priority: Priority,
+    /// Relative deadline; the server converts it to an absolute deadline
+    /// at admission. `Some(0)` is always already expired.
+    pub deadline_ms: Option<u64>,
+    /// Seed for the deterministic server-side input generation.
+    pub seed: u64,
+    /// When false, responses carry `checksum` instead of `values`.
+    pub include_values: bool,
+}
+
+impl RunRequest {
+    pub fn new(spec: Spec) -> RunRequest {
+        RunRequest {
+            spec,
+            tenant: None,
+            priority: Priority::Normal,
+            deadline_ms: None,
+            seed: 0,
+            include_values: true,
+        }
+    }
+
+    /// Parse a request body. Unknown top-level fields and unsupported
+    /// versions are rejected — mistyped options must fail loudly, not
+    /// silently run with defaults.
+    pub fn from_json(json: &Json) -> Result<RunRequest, ApiError> {
+        let bad = |m: String| ApiError::new(ErrorCode::BadRequest, m);
+        let map = json
+            .as_obj()
+            .ok_or_else(|| bad("request body must be a JSON object".into()))?;
+        for key in map.keys() {
+            if !matches!(
+                key.as_str(),
+                "v" | "spec" | "tenant" | "priority" | "deadline_ms" | "seed" | "include_values"
+            ) {
+                return Err(bad(format!("unknown request field {key:?}")));
+            }
+        }
+        if let Some(v) = json.get("v") {
+            if v.as_u64() != Some(API_VERSION) {
+                return Err(bad(format!(
+                    "unsupported api version {} (this server speaks v{API_VERSION})",
+                    v.to_compact()
+                )));
+            }
+        }
+        let spec_json = json.get("spec").ok_or_else(|| bad("missing \"spec\"".into()))?;
+        let spec = Spec::from_json(spec_json).map_err(|e| bad(e.to_string()))?;
+        let tenant = match json.get("tenant") {
+            None => None,
+            Some(t) => Some(
+                t.as_str()
+                    .ok_or_else(|| bad("\"tenant\" must be a string".into()))?
+                    .to_string(),
+            ),
+        };
+        let priority = match json.get("priority") {
+            None => Priority::Normal,
+            Some(p) => {
+                let s = p.as_str().ok_or_else(|| bad("\"priority\" must be a string".into()))?;
+                Priority::parse(s).ok_or_else(|| {
+                    bad(format!("unknown priority {s:?} (high | normal | background)"))
+                })?
+            }
+        };
+        let deadline_ms = match json.get("deadline_ms") {
+            None => None,
+            Some(d) => Some(
+                d.as_u64()
+                    .ok_or_else(|| bad("\"deadline_ms\" must be a non-negative integer".into()))?,
+            ),
+        };
+        let seed = match json.get("seed") {
+            None => 0,
+            Some(s) => s
+                .as_u64()
+                .ok_or_else(|| bad("\"seed\" must be a non-negative integer".into()))?,
+        };
+        let include_values = match json.get("include_values") {
+            None => true,
+            Some(b) => b
+                .as_bool()
+                .ok_or_else(|| bad("\"include_values\" must be a boolean".into()))?,
+        };
+        Ok(RunRequest { spec, tenant, priority, deadline_ms, seed, include_values })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![("v", (API_VERSION as f64).into()), ("spec", self.spec.to_json())];
+        if let Some(t) = &self.tenant {
+            pairs.push(("tenant", t.as_str().into()));
+        }
+        if self.priority != Priority::Normal {
+            pairs.push(("priority", self.priority.name().into()));
+        }
+        if let Some(d) = self.deadline_ms {
+            pairs.push(("deadline_ms", (d as f64).into()));
+        }
+        if self.seed != 0 {
+            pairs.push(("seed", (self.seed as f64).into()));
+        }
+        if !self.include_values {
+            pairs.push(("include_values", false.into()));
+        }
+        obj(pairs)
+    }
+
+    /// The serving-layer options this request asks for.
+    pub fn opts(&self) -> RequestOpts {
+        let mut opts = RequestOpts::default().with_priority(self.priority);
+        if let Some(t) = &self.tenant {
+            opts = opts.tenant(t);
+        }
+        if let Some(ms) = self.deadline_ms {
+            opts = opts.with_deadline_in(Duration::from_millis(ms));
+        }
+        opts
+    }
+}
+
+/// Render one `/v1/run` success body: per-routine outputs plus the plan
+/// cache counters at response time and coarse timing. `cache` is the
+/// *pipeline-lifetime* snapshot (same counters `/v1/statsz` reports), the
+/// cross-process warm-start evidence the smoke driver asserts on.
+pub fn run_response(
+    req: &RunRequest,
+    outcome: &ExecOutcome,
+    cache: &crate::pipeline::CacheStats,
+) -> Json {
+    let outputs = Json::Arr(
+        outcome
+            .results
+            .iter()
+            .map(|r| {
+                let mut pairs = vec![
+                    ("routine", r.routine.as_ref().into()),
+                    ("kind", r.kind.name().into()),
+                    ("len", r.output.len().into()),
+                ];
+                if req.include_values {
+                    pairs.push((
+                        "values",
+                        Json::Arr(r.output.iter().map(|&x| Json::Num(x as f64)).collect()),
+                    ));
+                } else {
+                    let checksum: f64 = r.output.iter().map(|&x| x as f64).sum();
+                    pairs.push(("checksum", checksum.into()));
+                }
+                obj(pairs)
+            })
+            .collect(),
+    );
+    let mut timing = vec![("wall_s", outcome.wall_s.into())];
+    if let Some(sim) = &outcome.sim {
+        timing.push(("sim_makespan_s", sim.makespan_s.into()));
+    }
+    obj(vec![
+        ("v", (API_VERSION as f64).into()),
+        ("backend", outcome.backend.into()),
+        ("outputs", outputs),
+        ("cache", cache_json(cache)),
+        ("timing", obj(timing)),
+    ])
+}
+
+/// The wire shape of the plan-cache counters, shared by `/v1/run`,
+/// `/v1/statsz` (via [`report_json`]) and the smoke assertions.
+pub fn cache_json(cache: &crate::pipeline::CacheStats) -> Json {
+    obj(vec![
+        ("hits", (cache.hits as f64).into()),
+        ("coalesced", (cache.coalesced as f64).into()),
+        ("misses", (cache.misses as f64).into()),
+        ("evictions", (cache.evictions as f64).into()),
+        ("entries", cache.entries.into()),
+        ("disk_hits", (cache.disk_hits as f64).into()),
+        ("disk_writes", (cache.disk_writes as f64).into()),
+        ("rejected", (cache.rejected as f64).into()),
+        ("tuned", (cache.tuned as f64).into()),
+        ("tune_skipped", (cache.tune_skipped as f64).into()),
+    ])
+}
+
+/// Wrap a [`ServeReport`] in the versioned envelope — the `/v1/statsz`
+/// body, and what `serve-bench --metrics-json` writes, so offline tooling
+/// parses one shape wherever the report came from.
+pub fn report_json(report: &ServeReport) -> Json {
+    match report.to_json() {
+        Json::Obj(mut map) => {
+            map.insert("v".into(), Json::Num(API_VERSION as f64));
+            Json::Obj(map)
+        }
+        other => obj(vec![("v", (API_VERSION as f64).into()), ("report", other)]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::RoutineKind;
+    use crate::spec::DataSource;
+
+    #[test]
+    fn error_codes_round_trip_with_fixed_statuses() {
+        for code in ErrorCode::ALL {
+            assert_eq!(ErrorCode::parse(code.name()), Some(code));
+            assert!((400..=599).contains(&code.http_status()), "{code:?}");
+        }
+        assert_eq!(ErrorCode::parse("nope"), None);
+        // the statuses the ISSUE pins down: shed → 429, deadline → 504,
+        // caller mistakes → 400.
+        assert_eq!(ErrorCode::ShedQueueFull.http_status(), 429);
+        assert_eq!(ErrorCode::ShedTenantQuota.http_status(), 429);
+        assert_eq!(ErrorCode::DeadlineExpired.http_status(), 504);
+        assert_eq!(ErrorCode::DeadlineMissed.http_status(), 504);
+        assert_eq!(ErrorCode::BadRequest.http_status(), 400);
+    }
+
+    #[test]
+    fn every_shed_reason_maps_to_a_distinct_code() {
+        let codes: Vec<ErrorCode> =
+            ShedReason::ALL.iter().map(|&r| ApiError::from_shed(r).code).collect();
+        for (i, a) in codes.iter().enumerate() {
+            for b in &codes[i + 1..] {
+                assert_ne!(a, b, "shed reasons must not share error codes");
+            }
+        }
+        assert!(ApiError::from_shed(ShedReason::QueueFull).retryable);
+        assert!(!ApiError::from_shed(ShedReason::DeadlineExpired).retryable);
+    }
+
+    #[test]
+    fn api_error_json_round_trips() {
+        let e = ApiError::new(ErrorCode::ShedDraining, "server draining");
+        let parsed = ApiError::from_json(&Json::parse(&e.to_json().to_compact()).unwrap()).unwrap();
+        assert_eq!(parsed.code, ErrorCode::ShedDraining);
+        assert_eq!(parsed.message, "server draining");
+        assert!(parsed.retryable);
+        assert_eq!(e.http_status(), 503);
+    }
+
+    #[test]
+    fn from_error_classifies_serving_failures() {
+        let cases = [
+            (Error::Spec("bad".into()), ErrorCode::BadRequest),
+            (
+                Error::Runtime("deadline expired before execution; request dropped".into()),
+                ErrorCode::DeadlineMissed,
+            ),
+            (Error::Runtime("server drained before request ran".into()), ErrorCode::ShedDraining),
+            (Error::Runtime("timed out after 1s waiting".into()), ErrorCode::Timeout),
+            (Error::Runtime("backend panicked while executing batch".into()), ErrorCode::Internal),
+        ];
+        for (err, want) in cases {
+            assert_eq!(ApiError::from_error(&err).code, want, "{err}");
+        }
+    }
+
+    #[test]
+    fn run_request_round_trips_and_rejects_junk() {
+        let spec = Spec::single(RoutineKind::Axpy, "a", 256, DataSource::Pl);
+        let req = RunRequest {
+            tenant: Some("acme".into()),
+            priority: Priority::High,
+            deadline_ms: Some(250),
+            seed: 7,
+            include_values: false,
+            ..RunRequest::new(spec)
+        };
+        let parsed =
+            RunRequest::from_json(&Json::parse(&req.to_json().to_compact()).unwrap()).unwrap();
+        assert_eq!(parsed.tenant.as_deref(), Some("acme"));
+        assert_eq!(parsed.priority, Priority::High);
+        assert_eq!(parsed.deadline_ms, Some(250));
+        assert_eq!(parsed.seed, 7);
+        assert!(!parsed.include_values);
+        assert_eq!(parsed.spec.cache_key(), req.spec.cache_key());
+
+        // unknown fields, bad version, missing spec, bad priority: all 400.
+        for body in [
+            r#"{"spec": {"routines": []}, "bogus": 1}"#,
+            r#"{"v": 2, "spec": {"routines": []}}"#,
+            r#"{"tenant": "t"}"#,
+            r#"{"spec": {"routines": [{"routine": "axpy", "name": "a", "size": 64}]}, "priority": "urgent"}"#,
+            r#"[1, 2]"#,
+        ] {
+            let err = RunRequest::from_json(&Json::parse(body).unwrap()).unwrap_err();
+            assert_eq!(err.code, ErrorCode::BadRequest, "{body}");
+        }
+    }
+
+    #[test]
+    fn opts_carry_tenant_priority_deadline() {
+        let spec = Spec::single(RoutineKind::Dot, "d", 64, DataSource::Pl);
+        let req = RunRequest {
+            tenant: Some("t".into()),
+            priority: Priority::Background,
+            deadline_ms: Some(1_000),
+            ..RunRequest::new(spec)
+        };
+        let opts = req.opts();
+        assert_eq!(opts.tenant.as_deref(), Some("t"));
+        assert_eq!(opts.priority, Priority::Background);
+        assert!(opts.deadline.is_some());
+        // deadline_ms: 0 must produce an already-expired deadline.
+        let req0 = RunRequest { deadline_ms: Some(0), ..req };
+        assert!(req0.opts().deadline.unwrap() <= std::time::Instant::now());
+    }
+}

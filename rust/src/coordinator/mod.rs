@@ -133,7 +133,75 @@ pub struct AieBlas {
     pipeline: Arc<Pipeline>,
 }
 
+/// Fluent construction for [`AieBlas`]: defaults and validation in one
+/// place. Hostile values are clamped rather than rejected (matching the
+/// serving layer's envelope): zero sample counts and zero cache capacity
+/// become 1. `build()` is the only exit, so every builder-made system has
+/// passed through the same normalization.
+#[derive(Debug, Clone)]
+pub struct AieBlasBuilder {
+    config: Config,
+}
+
+impl AieBlasBuilder {
+    pub fn artifacts_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.config.artifacts_dir = dir.into();
+        self
+    }
+
+    pub fn arch(mut self, arch: ArchConfig) -> Self {
+        self.config.arch = arch;
+        self
+    }
+
+    pub fn cpu_samples(mut self, n: usize) -> Self {
+        self.config.cpu_samples = n;
+        self
+    }
+
+    pub fn check_numerics(mut self, on: bool) -> Self {
+        self.config.check_numerics = on;
+        self
+    }
+
+    pub fn plan_cache_capacity(mut self, n: usize) -> Self {
+        self.config.plan_cache_capacity = n;
+        self
+    }
+
+    /// Enable the persistent plan store under `dir`.
+    pub fn cache_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.config.cache_dir = Some(dir.into());
+        self
+    }
+
+    pub fn tune(mut self, tune: TuneConfig) -> Self {
+        self.config.tune = tune;
+        self
+    }
+
+    /// Serving defaults used by [`AieBlas::serve_default`].
+    pub fn serve(mut self, serve: ServeConfig) -> Self {
+        self.config.serve = serve;
+        self
+    }
+
+    /// Clamp hostile values and construct the system.
+    pub fn build(mut self) -> Result<AieBlas> {
+        self.config.cpu_samples = self.config.cpu_samples.max(1);
+        self.config.plan_cache_capacity = self.config.plan_cache_capacity.max(1);
+        AieBlas::new(self.config)
+    }
+}
+
 impl AieBlas {
+    /// Start an [`AieBlasBuilder`] from [`Config::default`]. Preferred over
+    /// filling in a `Config` literal: validation lives in `build()`.
+    /// (`AieBlas::new(Config)` remains for existing callers.)
+    pub fn builder() -> AieBlasBuilder {
+        AieBlasBuilder { config: Config::default() }
+    }
+
     pub fn new(config: Config) -> Result<AieBlas> {
         let executor = NumericExecutor::new(&config.artifacts_dir)?;
         let mut pipeline =

@@ -1,0 +1,103 @@
+//! A tiny blocking HTTP/1.1 client over `std::net::TcpStream`.
+//!
+//! Serves three callers: the shard router's proxy hop, the e2e tests,
+//! and the loopback bench. One request per connection (`Connection:
+//! close`) keeps it trivially correct; the proxy hop is a loopback or
+//! rack-local connection where setup cost is noise next to a lowering.
+
+use std::io::{BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use super::framing::{read_response, FrameError, HttpResponse};
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// Client-side limits, deliberately mirroring the server's defaults.
+#[derive(Debug, Clone)]
+pub struct ClientConfig {
+    pub connect_timeout: Duration,
+    pub io_timeout: Duration,
+    pub max_body: usize,
+}
+
+impl Default for ClientConfig {
+    fn default() -> Self {
+        ClientConfig {
+            connect_timeout: Duration::from_secs(2),
+            io_timeout: Duration::from_secs(60),
+            max_body: 64 * 1024 * 1024,
+        }
+    }
+}
+
+fn transport(msg: String) -> Error {
+    Error::Runtime(format!("http transport: {msg}"))
+}
+
+/// Issue one request and read the full response. `body: None` sends no
+/// body (GET); `Some` sends it with a `Content-Length`.
+pub fn request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&[u8]>,
+    extra_headers: &[(&str, &str)],
+    cfg: &ClientConfig,
+) -> Result<HttpResponse> {
+    let sock_addr = addr
+        .to_socket_addrs()
+        .map_err(|e| transport(format!("bad address {addr:?}: {e}")))?
+        .next()
+        .ok_or_else(|| transport(format!("address {addr:?} resolved to nothing")))?;
+    let stream = TcpStream::connect_timeout(&sock_addr, cfg.connect_timeout)
+        .map_err(|e| transport(format!("connect {addr}: {e}")))?;
+    stream.set_read_timeout(Some(cfg.io_timeout)).map_err(|e| transport(e.to_string()))?;
+    stream.set_write_timeout(Some(cfg.io_timeout)).map_err(|e| transport(e.to_string()))?;
+    stream.set_nodelay(true).ok();
+
+    let mut head = format!("{method} {path} HTTP/1.1\r\nhost: {addr}\r\nconnection: close\r\n");
+    for (k, v) in extra_headers {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    let body = body.unwrap_or(&[]);
+    if !body.is_empty() || method == "POST" {
+        head.push_str("content-type: application/json\r\n");
+        head.push_str(&format!("content-length: {}\r\n", body.len()));
+    }
+    head.push_str("\r\n");
+
+    let mut stream = stream;
+    stream
+        .write_all(head.as_bytes())
+        .and_then(|_| stream.write_all(body))
+        .and_then(|_| stream.flush())
+        .map_err(|e| transport(format!("send to {addr}: {e}")))?;
+
+    let mut reader = BufReader::new(stream);
+    read_response(&mut reader, cfg.max_body).map_err(|e| match e {
+        FrameError::Io(io) => transport(format!("read from {addr}: {io}")),
+        other => transport(format!("response from {addr}: {other}")),
+    })
+}
+
+/// GET `path`, parsing the body as JSON. Returns `(status, json)`.
+pub fn get(addr: &str, path: &str, cfg: &ClientConfig) -> Result<(u16, Json)> {
+    let resp = request(addr, "GET", path, None, &[], cfg)?;
+    parse_body(addr, resp)
+}
+
+/// POST a JSON document to `path`. Returns `(status, json)`.
+pub fn post_json(addr: &str, path: &str, body: &Json, cfg: &ClientConfig) -> Result<(u16, Json)> {
+    let bytes = body.to_compact().into_bytes();
+    let resp = request(addr, "POST", path, Some(&bytes), &[], cfg)?;
+    parse_body(addr, resp)
+}
+
+fn parse_body(addr: &str, resp: HttpResponse) -> Result<(u16, Json)> {
+    let text = std::str::from_utf8(&resp.body)
+        .map_err(|_| transport(format!("non-utf8 response body from {addr}")))?;
+    let json = Json::parse(text)
+        .map_err(|e| transport(format!("non-json response body from {addr}: {e}")))?;
+    Ok((resp.status, json))
+}

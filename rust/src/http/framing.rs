@@ -1,0 +1,360 @@
+//! Minimal HTTP/1.1 framing over blocking streams (DESIGN.md §13).
+//!
+//! Just enough of RFC 9112 for a JSON API behind a trusted load balancer:
+//! `Content-Length` bodies only (no chunked transfer coding), header
+//! names lowercased at parse, a hard cap on header-block and body size so
+//! a hostile peer cannot balloon memory, and explicit keep-alive
+//! semantics (HTTP/1.1 defaults on, `Connection: close` or HTTP/1.0
+//! turns it off). Everything reads through `BufRead`, so the server
+//! wraps each connection in one `BufReader` and repeated keep-alive
+//! requests reuse its buffer.
+
+use std::io::{BufRead, Read, Write};
+
+/// Cap on the request line + header block. 16 KiB fits any sane client;
+/// past it we assume abuse and drop the connection.
+const MAX_HEAD_BYTES: usize = 16 * 1024;
+
+/// Cap on a single header/request line within the head.
+const MAX_LINE_BYTES: usize = 8 * 1024;
+
+/// Why a request could not be framed. The server maps each variant to a
+/// status (or silence, for a clean EOF between keep-alive requests).
+#[derive(Debug)]
+pub enum FrameError {
+    /// Clean end of stream before any request byte — the peer closed a
+    /// keep-alive connection. Not an error; just stop serving it.
+    Eof,
+    /// Transport failure (includes read timeouts).
+    Io(std::io::Error),
+    /// The bytes were not a parseable HTTP/1.x request.
+    Malformed(String),
+    /// `Content-Length` exceeded the configured limit. The request is a
+    /// well-formed frame, so the server can still answer 413.
+    BodyTooLarge { limit: usize },
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Eof => write!(f, "connection closed"),
+            FrameError::Io(e) => write!(f, "i/o error: {e}"),
+            FrameError::Malformed(m) => write!(f, "malformed request: {m}"),
+            FrameError::BodyTooLarge { limit } => {
+                write!(f, "request body exceeds the {limit}-byte limit")
+            }
+        }
+    }
+}
+
+/// One parsed request. Header names are lowercased; values are trimmed.
+#[derive(Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    /// `HTTP/1.1` or `HTTP/1.0` (anything else is rejected at parse).
+    pub version: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// First value of `name` (callers pass lowercase).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Whether the connection should stay open after this exchange.
+    /// HTTP/1.1 defaults to keep-alive unless `Connection: close`;
+    /// HTTP/1.0 defaults to close unless `Connection: keep-alive`.
+    pub fn keep_alive(&self) -> bool {
+        let conn = self.header("connection").map(|v| v.to_ascii_lowercase());
+        match self.version.as_str() {
+            "HTTP/1.0" => conn.as_deref() == Some("keep-alive"),
+            _ => conn.as_deref() != Some("close"),
+        }
+    }
+}
+
+/// Read one `\r\n`- (or `\n`-) terminated line, refusing to buffer more
+/// than `MAX_LINE_BYTES`. Returns the line without its terminator.
+fn read_line(r: &mut impl BufRead, first: bool) -> Result<String, FrameError> {
+    let mut line = Vec::new();
+    loop {
+        let mut byte = [0u8; 1];
+        match r.read(&mut byte) {
+            Ok(0) => {
+                // EOF with nothing read on the request line = peer closed
+                // between keep-alive requests; mid-line EOF is malformed.
+                if first && line.is_empty() {
+                    return Err(FrameError::Eof);
+                }
+                return Err(FrameError::Malformed("unexpected end of stream".into()));
+            }
+            Ok(_) => {
+                if byte[0] == b'\n' {
+                    if line.last() == Some(&b'\r') {
+                        line.pop();
+                    }
+                    return String::from_utf8(line)
+                        .map_err(|_| FrameError::Malformed("non-utf8 header bytes".into()));
+                }
+                line.push(byte[0]);
+                if line.len() > MAX_LINE_BYTES {
+                    return Err(FrameError::Malformed("header line too long".into()));
+                }
+            }
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
+}
+
+/// Frame one request off the stream. `max_body` bounds the body we will
+/// buffer; a larger declared `Content-Length` yields
+/// [`FrameError::BodyTooLarge`] *without* reading the body (the server
+/// answers 413 and closes, since the stream is no longer in sync).
+pub fn read_request(r: &mut impl BufRead, max_body: usize) -> Result<HttpRequest, FrameError> {
+    let request_line = read_line(r, true)?;
+    let mut parts = request_line.split_whitespace();
+    let method = parts
+        .next()
+        .ok_or_else(|| FrameError::Malformed("empty request line".into()))?
+        .to_string();
+    let path = parts
+        .next()
+        .ok_or_else(|| FrameError::Malformed("request line missing path".into()))?
+        .to_string();
+    let version = parts
+        .next()
+        .ok_or_else(|| FrameError::Malformed("request line missing version".into()))?
+        .to_string();
+    if parts.next().is_some() {
+        return Err(FrameError::Malformed("request line has trailing tokens".into()));
+    }
+    if version != "HTTP/1.1" && version != "HTTP/1.0" {
+        return Err(FrameError::Malformed(format!("unsupported version {version:?}")));
+    }
+
+    let mut headers = Vec::new();
+    let mut head_bytes = request_line.len();
+    loop {
+        let line = read_line(r, false)?;
+        if line.is_empty() {
+            break;
+        }
+        head_bytes += line.len();
+        if head_bytes > MAX_HEAD_BYTES {
+            return Err(FrameError::Malformed("header block too large".into()));
+        }
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| FrameError::Malformed(format!("header without colon: {line:?}")))?;
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    let req = HttpRequest { method, path, version, headers, body: Vec::new() };
+    if req.header("transfer-encoding").is_some() {
+        return Err(FrameError::Malformed("transfer-encoding is not supported".into()));
+    }
+    let len = match req.header("content-length") {
+        None => 0,
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| FrameError::Malformed(format!("bad content-length {v:?}")))?,
+    };
+    if len > max_body {
+        return Err(FrameError::BodyTooLarge { limit: max_body });
+    }
+    let mut body = vec![0u8; len];
+    if len > 0 {
+        r.read_exact(&mut body).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                FrameError::Malformed("body shorter than content-length".into())
+            } else {
+                FrameError::Io(e)
+            }
+        })?;
+    }
+    Ok(HttpRequest { body, ..req })
+}
+
+/// One response, as the client side parses it.
+#[derive(Debug)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpResponse {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+}
+
+/// Frame one response off the stream (the proxy/client side).
+pub fn read_response(r: &mut impl BufRead, max_body: usize) -> Result<HttpResponse, FrameError> {
+    let status_line = read_line(r, true)?;
+    let mut parts = status_line.split_whitespace();
+    let version = parts.next().unwrap_or_default();
+    if !version.starts_with("HTTP/1.") {
+        return Err(FrameError::Malformed(format!("bad status line {status_line:?}")));
+    }
+    let status: u16 = parts
+        .next()
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| FrameError::Malformed("status line missing code".into()))?;
+
+    let mut headers = Vec::new();
+    loop {
+        let line = read_line(r, false)?;
+        if line.is_empty() {
+            break;
+        }
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| FrameError::Malformed(format!("header without colon: {line:?}")))?;
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+    let resp = HttpResponse { status, headers, body: Vec::new() };
+    let len = match resp.header("content-length") {
+        None => 0,
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| FrameError::Malformed(format!("bad content-length {v:?}")))?,
+    };
+    if len > max_body {
+        return Err(FrameError::BodyTooLarge { limit: max_body });
+    }
+    let mut body = vec![0u8; len];
+    if len > 0 {
+        r.read_exact(&mut body).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                FrameError::Malformed("body shorter than content-length".into())
+            } else {
+                FrameError::Io(e)
+            }
+        })?;
+    }
+    Ok(HttpResponse { body, ..resp })
+}
+
+/// Standard reason phrases for the statuses this API emits.
+pub fn reason_phrase(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        502 => "Bad Gateway",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+/// Write one `application/json` response frame.
+pub fn write_response(
+    w: &mut impl Write,
+    status: u16,
+    body: &[u8],
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
+        reason_phrase(status),
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    w.write_all(head.as_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn parse(bytes: &[u8], max_body: usize) -> Result<HttpRequest, FrameError> {
+        read_request(&mut BufReader::new(bytes), max_body)
+    }
+
+    #[test]
+    fn parses_post_with_body_and_keep_alive_defaults() {
+        let req = parse(
+            b"POST /v1/run HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\nabcd",
+            1024,
+        )
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/run");
+        assert_eq!(req.body, b"abcd");
+        assert_eq!(req.header("host"), Some("x"));
+        assert!(req.keep_alive());
+    }
+
+    #[test]
+    fn connection_close_and_http10_semantics() {
+        let close = parse(b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n", 64).unwrap();
+        assert!(!close.keep_alive());
+        let old = parse(b"GET / HTTP/1.0\r\n\r\n", 64).unwrap();
+        assert!(!old.keep_alive());
+        let old_ka = parse(b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n", 64).unwrap();
+        assert!(old_ka.keep_alive());
+    }
+
+    #[test]
+    fn rejects_oversized_body_without_reading_it() {
+        let err = parse(b"POST /v1/run HTTP/1.1\r\nContent-Length: 999\r\n\r\n", 100).unwrap_err();
+        match err {
+            FrameError::BodyTooLarge { limit } => assert_eq!(limit, 100),
+            other => panic!("expected BodyTooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_frames() {
+        for bytes in [
+            &b"NOT A REQUEST\r\n\r\n"[..],
+            &b"GET /x HTTP/2\r\n\r\n"[..],
+            &b"GET /x HTTP/1.1\r\nbadheader\r\n\r\n"[..],
+            &b"POST /x HTTP/1.1\r\nContent-Length: nope\r\n\r\n"[..],
+            &b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n"[..],
+            &b"POST /x HTTP/1.1\r\nContent-Length: 10\r\n\r\nshort"[..],
+        ] {
+            assert!(
+                matches!(parse(bytes, 1024), Err(FrameError::Malformed(_))),
+                "{:?}",
+                String::from_utf8_lossy(bytes)
+            );
+        }
+    }
+
+    #[test]
+    fn eof_before_any_byte_is_eof_not_malformed() {
+        assert!(matches!(parse(b"", 64), Err(FrameError::Eof)));
+        assert!(matches!(parse(b"GET", 64), Err(FrameError::Malformed(_))));
+    }
+
+    #[test]
+    fn response_round_trips_through_writer_and_reader() {
+        let mut wire = Vec::new();
+        write_response(&mut wire, 429, br#"{"e":1}"#, true).unwrap();
+        let resp = read_response(&mut BufReader::new(&wire[..]), 1024).unwrap();
+        assert_eq!(resp.status, 429);
+        assert_eq!(resp.body, br#"{"e":1}"#);
+        assert_eq!(resp.header("connection"), Some("keep-alive"));
+        assert_eq!(resp.header("content-type"), Some("application/json"));
+    }
+
+    #[test]
+    fn bare_lf_line_endings_are_tolerated() {
+        let req = parse(b"GET /v1/healthz HTTP/1.1\nHost: x\n\n", 64).unwrap();
+        assert_eq!(req.path, "/v1/healthz");
+        assert_eq!(req.header("host"), Some("x"));
+    }
+}

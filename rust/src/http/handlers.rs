@@ -1,0 +1,245 @@
+//! The `/v1` route handlers: HTTP frames in, versioned `crate::api` JSON
+//! out. Handlers never touch sockets — they map a parsed request to
+//! `(status, Json)`, which keeps every route unit-testable without a
+//! listener and guarantees the error invariant the tests pin down: every
+//! failure path produces a structured [`ApiError`] body.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::api::{self, ApiError, ErrorCode, RunRequest};
+use crate::pipeline::PlanKey;
+use crate::runtime::ExecInputs;
+use crate::serve::{RoutineServer, SubmitOutcome, Ticket};
+use crate::util::json::{obj, Json};
+
+use super::framing::HttpRequest;
+use super::router::{shards_json, ShardRouter, FORWARDED_HEADER};
+use super::server::HttpConfig;
+
+/// Everything a handler needs, shared across connection threads.
+pub struct Ctx {
+    pub server: Arc<RoutineServer>,
+    pub router: Option<ShardRouter>,
+    pub cfg: HttpConfig,
+    /// Set by `/v1/drain` (and server shutdown) so `/v1/healthz` reports
+    /// the instance as draining before the balancer's next probe.
+    pub draining: AtomicBool,
+}
+
+impl Ctx {
+    pub fn new(server: Arc<RoutineServer>, router: Option<ShardRouter>, cfg: HttpConfig) -> Ctx {
+        Ctx { server, router, cfg, draining: AtomicBool::new(false) }
+    }
+}
+
+fn err(e: ApiError) -> (u16, Json) {
+    (e.http_status(), e.to_json())
+}
+
+/// Dispatch one framed request. Total: every input maps to a response.
+pub fn handle(ctx: &Ctx, req: &HttpRequest) -> (u16, Json) {
+    let forwarded = req.header(FORWARDED_HEADER).is_some();
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/v1/healthz") => healthz(ctx),
+        ("GET", "/v1/statsz") => (200, api::report_json(&ctx.server.report())),
+        ("POST", "/v1/run") => match parse_body(&req.body) {
+            Err(e) => err(e),
+            Ok(json) => run_one(ctx, &json, forwarded),
+        },
+        ("POST", "/v1/batch") => match parse_body(&req.body) {
+            Err(e) => err(e),
+            Ok(json) => run_batch(ctx, &json, forwarded),
+        },
+        ("POST", "/v1/drain") => drain(ctx, &req.body),
+        // known routes with the wrong method get 405, not 404, so a
+        // misdirected client learns which mistake it made.
+        (_, "/v1/healthz" | "/v1/statsz" | "/v1/run" | "/v1/batch" | "/v1/drain") => err(
+            ApiError::new(
+                ErrorCode::MethodNotAllowed,
+                format!("{} not allowed on {}", req.method, req.path),
+            ),
+        ),
+        _ => err(ApiError::new(ErrorCode::NotFound, format!("no route {}", req.path))),
+    }
+}
+
+fn parse_body(body: &[u8]) -> Result<Json, ApiError> {
+    let text = std::str::from_utf8(body)
+        .map_err(|_| ApiError::new(ErrorCode::BadRequest, "request body is not utf-8"))?;
+    Json::parse(text).map_err(|e| ApiError::new(ErrorCode::BadRequest, e.to_string()))
+}
+
+fn healthz(ctx: &Ctx) -> (u16, Json) {
+    (
+        200,
+        obj(vec![
+            ("v", (api::API_VERSION as f64).into()),
+            ("status", "ok".into()),
+            ("draining", ctx.draining.load(Ordering::SeqCst).into()),
+            ("shards", shards_json(ctx.router.as_ref())),
+        ]),
+    )
+}
+
+/// `/v1/run`: parse, route to the owning shard, execute locally or relay
+/// the owner's response verbatim.
+fn run_one(ctx: &Ctx, body: &Json, forwarded: bool) -> (u16, Json) {
+    let req = match RunRequest::from_json(body) {
+        Ok(r) => r,
+        Err(e) => return err(e),
+    };
+    let key = PlanKey::of(&req.spec);
+    if !forwarded {
+        if let Some(router) = &ctx.router {
+            let shard = router.shard_of(&key);
+            if shard != router.self_index() {
+                return proxy(router, shard, "/v1/run", body);
+            }
+        }
+    }
+    let ticket = match submit(ctx, &req) {
+        Ok(t) => t,
+        Err(e) => return err(e),
+    };
+    finish(ctx, &req, ticket)
+}
+
+fn submit(ctx: &Ctx, req: &RunRequest) -> Result<Ticket, ApiError> {
+    let inputs = ExecInputs::random_for(&req.spec, req.seed);
+    match ctx.server.try_submit(&req.spec, inputs, req.opts()) {
+        SubmitOutcome::Accepted(t) => Ok(t),
+        SubmitOutcome::Shed(reason) => Err(ApiError::from_shed(reason)),
+    }
+}
+
+fn finish(ctx: &Ctx, req: &RunRequest, ticket: Ticket) -> (u16, Json) {
+    match ticket.wait_timeout(ctx.cfg.request_timeout) {
+        Ok(outcome) => {
+            let cache = ctx.server.pipeline().cache().stats();
+            (200, api::run_response(req, &outcome, &cache))
+        }
+        Err(e) => err(ApiError::from_error(&e)),
+    }
+}
+
+/// Relay to the owning shard. Transport failures become `upstream`; a
+/// non-JSON body from a peer is also `upstream` (the peer is broken).
+fn proxy(router: &ShardRouter, shard: usize, path: &str, body: &Json) -> (u16, Json) {
+    let bytes = body.to_compact().into_bytes();
+    match router.forward(shard, path, &bytes) {
+        Ok(resp) => match std::str::from_utf8(&resp.body).ok().and_then(|t| Json::parse(t).ok()) {
+            Some(json) => (resp.status, json),
+            None => err(ApiError::new(
+                ErrorCode::Upstream,
+                format!("shard {shard} returned an unparseable body"),
+            )),
+        },
+        Err(e) => err(ApiError::new(ErrorCode::Upstream, format!("shard {shard}: {e}"))),
+    }
+}
+
+/// `/v1/batch`: `{"requests": [...]}` or a bare array. Local requests are
+/// all submitted before any wait (so the batcher can coalesce them);
+/// remote ones are proxied. The response is 200 with per-item bodies in
+/// request order — each either a run response or a structured error.
+fn run_batch(ctx: &Ctx, body: &Json, forwarded: bool) -> (u16, Json) {
+    let items = match body.get("requests").and_then(Json::as_arr).or_else(|| body.as_arr()) {
+        Some(items) => items,
+        None => {
+            return err(ApiError::new(
+                ErrorCode::BadRequest,
+                "batch body must be {\"requests\": [...]} or a JSON array",
+            ))
+        }
+    };
+    if items.len() > ctx.cfg.max_batch_items {
+        return err(ApiError::new(
+            ErrorCode::PayloadTooLarge,
+            format!("batch of {} exceeds the {}-item limit", items.len(), ctx.cfg.max_batch_items),
+        ));
+    }
+
+    // Pass 1: parse + submit everything local so same-plan requests
+    // coalesce in the server's batcher.
+    enum Pending {
+        Done(Json),
+        Local(RunRequest, Ticket),
+        Remote(usize, Json),
+    }
+    let mut pending = Vec::with_capacity(items.len());
+    for item in items {
+        match RunRequest::from_json(item) {
+            Err(e) => pending.push(Pending::Done(e.to_json())),
+            Ok(req) => {
+                let key = PlanKey::of(&req.spec);
+                let remote = (!forwarded)
+                    .then_some(ctx.router.as_ref())
+                    .flatten()
+                    .and_then(|r| {
+                        let shard = r.shard_of(&key);
+                        (shard != r.self_index()).then_some(shard)
+                    });
+                match remote {
+                    Some(shard) => pending.push(Pending::Remote(shard, item.clone())),
+                    None => match submit(ctx, &req) {
+                        Ok(t) => pending.push(Pending::Local(req, t)),
+                        Err(e) => pending.push(Pending::Done(e.to_json())),
+                    },
+                }
+            }
+        }
+    }
+
+    // Pass 2: resolve in order.
+    let results: Vec<Json> = pending
+        .into_iter()
+        .map(|p| match p {
+            Pending::Done(json) => json,
+            Pending::Local(req, ticket) => finish(ctx, &req, ticket).1,
+            Pending::Remote(shard, item) => {
+                let router = ctx.router.as_ref().expect("remote implies router");
+                proxy(router, shard, "/v1/run", &item).1
+            }
+        })
+        .collect();
+    (
+        200,
+        obj(vec![
+            ("v", (api::API_VERSION as f64).into()),
+            ("results", Json::Arr(results)),
+        ]),
+    )
+}
+
+/// `/v1/drain`: stop admissions and wait (bounded) for in-flight work.
+/// Optional body `{"timeout_ms": n}` overrides the configured default.
+fn drain(ctx: &Ctx, body: &[u8]) -> (u16, Json) {
+    let timeout = if body.is_empty() {
+        ctx.cfg.drain_timeout
+    } else {
+        let json = match parse_body(body) {
+            Ok(j) => j,
+            Err(e) => return err(e),
+        };
+        match json.get("timeout_ms") {
+            None => ctx.cfg.drain_timeout,
+            Some(t) => match t.as_u64() {
+                Some(ms) => Duration::from_millis(ms),
+                None => {
+                    return err(ApiError::new(
+                        ErrorCode::BadRequest,
+                        "\"timeout_ms\" must be a non-negative integer",
+                    ))
+                }
+            },
+        }
+    };
+    ctx.draining.store(true, Ordering::SeqCst);
+    let drained = ctx.server.drain(timeout);
+    (
+        200,
+        obj(vec![("v", (api::API_VERSION as f64).into()), ("drained", drained.into())]),
+    )
+}

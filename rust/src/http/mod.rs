@@ -1,0 +1,32 @@
+//! The HTTP/1.1 front door (DESIGN.md §13).
+//!
+//! A dependency-free `std::net` server exposing `serve::RoutineServer`
+//! over the versioned v1 wire API (`crate::api`):
+//!
+//! | route          | method | body                                     |
+//! |----------------|--------|------------------------------------------|
+//! | `/v1/run`      | POST   | `RunRequest` → run response or `ApiError`|
+//! | `/v1/batch`    | POST   | `{"requests": [...]}` → per-item results |
+//! | `/v1/healthz`  | GET    | liveness + draining flag + shard map     |
+//! | `/v1/statsz`   | GET    | `ServeReport` (cache + serve metrics)    |
+//! | `/v1/drain`    | POST   | stop admissions, settle in-flight work   |
+//!
+//! Layering, bottom up: [`framing`] turns byte streams into requests and
+//! responses (Content-Length only, bounded head/body, keep-alive);
+//! [`handlers`] maps parsed requests to `(status, Json)` pure-functionally;
+//! [`server`] owns the listener, connection threads and graceful
+//! shutdown; [`router`] adds the multi-process dimension — a
+//! [`ShardRouter`] consistent-hashes each spec's `PlanKey` across N peer
+//! processes sharing one `--cache-dir`, proxying misdirected requests one
+//! hop to the owner, so every plan is lowered once per fleet and read
+//! disk-warm everywhere else ([`crate::pipeline::store`]).
+
+pub mod client;
+pub mod framing;
+pub mod handlers;
+pub mod router;
+pub mod server;
+
+pub use framing::{HttpRequest, HttpResponse};
+pub use router::{ShardRouter, FORWARDED_HEADER};
+pub use server::{HttpConfig, HttpServer};

@@ -1,0 +1,129 @@
+//! Shard-aware request routing (DESIGN.md §13).
+//!
+//! N serving processes share one persistent plan store (`--cache-dir`);
+//! each owns a deterministic slice of the spec space so a given plan is
+//! lowered (and tuned) by exactly one process, then read disk-warm by
+//! the rest through the store's atomic write-through. The routing rule
+//! is one line and must stay identical in every process and in offline
+//! tooling:
+//!
+//! ```text
+//! shard(spec) = PlanKey::of(spec).hash64() % peers.len()
+//! ```
+//!
+//! `PlanKey.hash64()` is the same FNV-1a the plan cache stripes and the
+//! store's filenames derive from, so routing, caching and persistence
+//! all agree on identity. A request landing on the wrong process is
+//! proxied one hop to the owner over plain TCP; the proxied request
+//! carries [`FORWARDED_HEADER`] so the owner always handles it locally —
+//! a disagreement about shard maps degrades to one extra hop, never a
+//! proxy loop.
+
+use crate::pipeline::PlanKey;
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+use super::client::{self, ClientConfig};
+use super::framing::HttpResponse;
+
+/// Marks a proxied request; the receiving shard must handle it locally.
+pub const FORWARDED_HEADER: &str = "x-aieblas-forwarded";
+
+/// The static shard map: every process runs the same peer list in the
+/// same order, differing only in `self_index`.
+#[derive(Debug, Clone)]
+pub struct ShardRouter {
+    peers: Vec<String>,
+    self_index: usize,
+    client: ClientConfig,
+}
+
+impl ShardRouter {
+    pub fn new(peers: Vec<String>, self_index: usize) -> Result<ShardRouter> {
+        if peers.is_empty() {
+            return Err(Error::Runtime("shard router needs at least one peer".into()));
+        }
+        if self_index >= peers.len() {
+            return Err(Error::Runtime(format!(
+                "shard index {self_index} out of range for {} peer(s)",
+                peers.len()
+            )));
+        }
+        Ok(ShardRouter { peers, self_index, client: ClientConfig::default() })
+    }
+
+    pub fn peers(&self) -> &[String] {
+        &self.peers
+    }
+
+    pub fn self_index(&self) -> usize {
+        self.self_index
+    }
+
+    /// The routing rule. Must match DESIGN.md §13 and `tools/http_smoke.py`.
+    pub fn shard_of(&self, key: &PlanKey) -> usize {
+        (key.hash64() % self.peers.len() as u64) as usize
+    }
+
+    pub fn is_local(&self, key: &PlanKey) -> bool {
+        self.shard_of(key) == self.self_index
+    }
+
+    /// Proxy a request body one hop to `shard`, tagging it forwarded.
+    pub fn forward(&self, shard: usize, path: &str, body: &[u8]) -> Result<HttpResponse> {
+        let addr = &self.peers[shard];
+        client::request(addr, "POST", path, Some(body), &[(FORWARDED_HEADER, "1")], &self.client)
+    }
+}
+
+/// Shard-map summary for `/v1/healthz`.
+pub fn shards_json(router: Option<&ShardRouter>) -> Json {
+    match router {
+        None => crate::util::json::obj(vec![
+            ("peers", Json::Arr(vec![])),
+            ("self_index", 0usize.into()),
+        ]),
+        Some(r) => crate::util::json::obj(vec![
+            (
+                "peers",
+                Json::Arr(r.peers().iter().map(|p| Json::Str(p.clone())).collect()),
+            ),
+            ("self_index", r.self_index().into()),
+        ]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_validates_peers_and_index() {
+        assert!(ShardRouter::new(vec![], 0).is_err());
+        assert!(ShardRouter::new(vec!["a:1".into()], 1).is_err());
+        let r = ShardRouter::new(vec!["a:1".into(), "b:2".into()], 1).unwrap();
+        assert_eq!(r.self_index(), 1);
+        assert_eq!(r.peers().len(), 2);
+    }
+
+    #[test]
+    fn routing_is_deterministic_and_covers_both_shards() {
+        let r = ShardRouter::new(vec!["a:1".into(), "b:2".into()], 0).unwrap();
+        let mut seen = [false, false];
+        for size in [64usize, 128, 256, 512, 1024, 2048, 4096, 8192] {
+            let key = PlanKey::new(format!("spec-{size}"));
+            let s = r.shard_of(&key);
+            assert_eq!(s, r.shard_of(&key), "stable per key");
+            assert!(s < 2);
+            seen[s] = true;
+        }
+        // FNV-1a over distinct keys must not collapse onto one shard.
+        assert!(seen[0] && seen[1], "8 distinct keys all hashed to one shard");
+    }
+
+    #[test]
+    fn single_peer_owns_everything() {
+        let r = ShardRouter::new(vec!["only:1".into()], 0).unwrap();
+        assert!(r.is_local(&PlanKey::new("anything")));
+    }
+}

@@ -1,0 +1,258 @@
+//! The listener: accept loop, per-connection threads, keep-alive, and
+//! graceful shutdown through `RoutineServer::drain`.
+//!
+//! Thread-per-connection is deliberate: the expensive work (lowering,
+//! backend execution) already runs on the `RoutineServer`'s dispatcher
+//! pool, so connection threads spend their lives parked in blocking
+//! reads. The connection count is capped ([`HttpConfig::max_connections`])
+//! and every socket carries a read timeout, so a slow-loris peer costs
+//! one bounded thread, not the listener.
+
+use std::io::BufReader;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::api::{ApiError, ErrorCode};
+use crate::serve::RoutineServer;
+use crate::{Error, Result};
+
+use super::framing::{read_request, write_response, FrameError};
+use super::handlers::{handle, Ctx};
+use super::router::ShardRouter;
+
+/// HTTP-layer limits. All clamped in [`HttpConfig::normalized`]; hostile
+/// values degrade to the envelope instead of erroring, matching the
+/// serving layer's PR 7 posture.
+#[derive(Debug, Clone)]
+pub struct HttpConfig {
+    /// Largest request body we will buffer.
+    pub max_body: usize,
+    /// Most items one `/v1/batch` may carry.
+    pub max_batch_items: usize,
+    /// Socket read timeout: a peer silent this long is dropped.
+    pub read_timeout: Duration,
+    /// Bound on one request's end-to-end wait for the serving layer.
+    pub request_timeout: Duration,
+    /// Default `/v1/drain` (and shutdown) drain bound.
+    pub drain_timeout: Duration,
+    /// Concurrent-connection cap; excess connections get a 503 and close.
+    pub max_connections: usize,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig {
+            max_body: 4 * 1024 * 1024,
+            max_batch_items: 256,
+            read_timeout: Duration::from_secs(10),
+            request_timeout: Duration::from_secs(60),
+            drain_timeout: Duration::from_secs(5),
+            max_connections: 1024,
+        }
+    }
+}
+
+impl HttpConfig {
+    fn normalized(self) -> HttpConfig {
+        HttpConfig {
+            max_body: self.max_body.max(1024),
+            max_batch_items: self.max_batch_items.max(1),
+            read_timeout: self.read_timeout.max(Duration::from_millis(10)),
+            request_timeout: self.request_timeout.max(Duration::from_millis(10)),
+            // zero means "purge immediately", which drain supports; only
+            // cap nothing here.
+            drain_timeout: self.drain_timeout,
+            max_connections: self.max_connections.max(1),
+        }
+    }
+}
+
+/// A running HTTP front door over one [`RoutineServer`].
+pub struct HttpServer {
+    ctx: Arc<Ctx>,
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+    conns: Arc<ConnTracker>,
+}
+
+/// Live-connection bookkeeping: a counter for the cap and the join
+/// handles so shutdown can wait for in-flight responses to flush.
+struct ConnTracker {
+    live: AtomicUsize,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl HttpServer {
+    /// Bind `addr` and start serving. `addr` may use port 0 to let the
+    /// OS pick (see [`HttpServer::local_addr`]) — tests rely on this.
+    pub fn bind(
+        addr: &str,
+        server: Arc<RoutineServer>,
+        router: Option<ShardRouter>,
+        cfg: HttpConfig,
+    ) -> Result<HttpServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| Error::Runtime(format!("bind {addr}: {e}")))?;
+        let local = listener.local_addr().map_err(Error::Io)?;
+        let ctx = Arc::new(Ctx::new(server, router, cfg.normalized()));
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns = Arc::new(ConnTracker {
+            live: AtomicUsize::new(0),
+            handles: Mutex::new(Vec::new()),
+        });
+
+        let accept_ctx = ctx.clone();
+        let accept_stop = stop.clone();
+        let accept_conns = conns.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("http-accept".into())
+            .spawn(move || accept_loop(listener, accept_ctx, accept_stop, accept_conns))
+            .map_err(Error::Io)?;
+
+        Ok(HttpServer { ctx, addr: local, stop, accept_thread: Some(accept_thread), conns })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Shared handler context (tests poke `draining`; `shutdown` uses it).
+    pub fn routine_server(&self) -> &Arc<RoutineServer> {
+        &self.ctx.server
+    }
+
+    /// Whether `/v1/drain` has been requested (the CLI's exit signal).
+    pub fn is_draining(&self) -> bool {
+        self.ctx.draining.load(Ordering::SeqCst)
+    }
+
+    /// Graceful shutdown: stop accepting, finish in-flight connections,
+    /// then drain the serving layer. Returns whether the drain completed
+    /// inside the configured bound.
+    pub fn shutdown(mut self) -> bool {
+        self.stop_listener();
+        self.ctx.draining.store(true, Ordering::SeqCst);
+        self.ctx.server.drain(self.ctx.cfg.drain_timeout)
+    }
+
+    fn stop_listener(&mut self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // Poke the blocking accept() awake so the loop observes `stop`.
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_millis(500));
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        let handles: Vec<JoinHandle<()>> =
+            std::mem::take(&mut *self.conns.handles.lock().expect("conn handles poisoned"));
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop_listener();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    ctx: Arc<Ctx>,
+    stop: Arc<AtomicBool>,
+    conns: Arc<ConnTracker>,
+) {
+    for stream in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match stream {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        if conns.live.load(Ordering::SeqCst) >= ctx.cfg.max_connections {
+            let e = ApiError::new(ErrorCode::ShedDraining, "connection limit reached");
+            let mut s = stream;
+            let _ = write_response(&mut s, 503, e.to_json().to_compact().as_bytes(), false);
+            continue;
+        }
+        conns.live.fetch_add(1, Ordering::SeqCst);
+        let conn_ctx = ctx.clone();
+        let conn_stop = stop.clone();
+        let conn_conns = conns.clone();
+        let handle = std::thread::Builder::new().name("http-conn".into()).spawn(move || {
+            serve_connection(stream, &conn_ctx, &conn_stop);
+            conn_conns.live.fetch_sub(1, Ordering::SeqCst);
+        });
+        match handle {
+            Ok(h) => {
+                let mut guard = conns.handles.lock().expect("conn handles poisoned");
+                // prune finished threads so the vec tracks live
+                // connections, not connection history.
+                guard.retain(|h| !h.is_finished());
+                guard.push(h);
+            }
+            Err(_) => {
+                conns.live.fetch_sub(1, Ordering::SeqCst);
+            }
+        }
+    }
+}
+
+/// One connection's request loop: frame, handle, respond, repeat while
+/// keep-alive holds. Framing failures answer with a structured error
+/// where the stream is still coherent (oversized body, malformed head)
+/// and close either way.
+fn serve_connection(stream: TcpStream, ctx: &Ctx, stop: &AtomicBool) {
+    let _ = stream.set_read_timeout(Some(ctx.cfg.read_timeout));
+    let _ = stream.set_write_timeout(Some(ctx.cfg.read_timeout));
+    let _ = stream.set_nodelay(true);
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+
+    loop {
+        match read_request(&mut reader, ctx.cfg.max_body) {
+            Ok(req) => {
+                let keep_alive = req.keep_alive() && !stop.load(Ordering::SeqCst);
+                let (status, body) = handle(ctx, &req);
+                let bytes = body.to_compact().into_bytes();
+                if write_response(&mut writer, status, &bytes, keep_alive).is_err() {
+                    return;
+                }
+                if !keep_alive {
+                    return;
+                }
+            }
+            Err(FrameError::BodyTooLarge { limit }) => {
+                // well-formed frame, oversized declaration: answer 413.
+                // The unread body leaves the stream out of sync, so close.
+                let e = ApiError::new(
+                    ErrorCode::PayloadTooLarge,
+                    format!("request body exceeds the {limit}-byte limit"),
+                );
+                let body = e.to_json().to_compact();
+                let _ = write_response(&mut writer, 413, body.as_bytes(), false);
+                return;
+            }
+            Err(FrameError::Malformed(msg)) => {
+                let e = ApiError::new(ErrorCode::BadRequest, format!("malformed request: {msg}"));
+                let body = e.to_json().to_compact();
+                let _ = write_response(&mut writer, 400, body.as_bytes(), false);
+                return;
+            }
+            // clean close between requests, or a dead/timed-out peer:
+            // nothing sensible to send.
+            Err(FrameError::Eof) | Err(FrameError::Io(_)) => return,
+        }
+    }
+}

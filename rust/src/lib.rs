@@ -15,8 +15,10 @@
 //!   `execute_batch`, fanned out by `ShardedBackend`) → concurrent serving
 //!   via [`serve::RoutineServer`] (admission control + priority-laned
 //!   bounded queue + same-plan batching + adaptive backend pool, with
-//!   deadline handling and graceful drain), plus the experiment harness
-//!   reproducing the paper's Fig. 3.
+//!   deadline handling and graceful drain), exposed over the network by
+//!   the [`http`] front door (versioned v1 wire API in [`api`],
+//!   shard-aware routing by `PlanKey` across processes sharing one plan
+//!   store), plus the experiment harness reproducing the paper's Fig. 3.
 //! * **L2 (`python/compile/model.py`)** — JAX routine graphs.
 //! * **L1 (`python/compile/kernels/`)** — window-tiled Pallas kernels.
 //!
@@ -61,12 +63,14 @@
 //! DESIGN.md §3.
 
 pub mod aie;
+pub mod api;
 pub mod arch;
 pub mod blas;
 pub mod codegen;
 pub mod coordinator;
 pub mod error;
 pub mod graph;
+pub mod http;
 pub mod pipeline;
 pub mod pl;
 pub mod runtime;

@@ -8,6 +8,10 @@
 //!   warm plan-cache hits;
 //! * `fig3 [--panel …]` — reproduce the paper's Fig. 3 series;
 //! * `ablations` — the §V ablation sweeps;
+//! * `serve` — run the HTTP/1.1 front door (DESIGN.md §13): `/v1/run`,
+//!   `/v1/batch`, `/v1/healthz`, `/v1/statsz`, `/v1/drain`; `--peers` +
+//!   `--shard-index` make this process one shard of a fleet sharing one
+//!   `--cache-dir` plan store (requests consistent-hash by `PlanKey`);
 //! * `serve-bench` — drive the concurrent serving layer (queue → batcher →
 //!   backend pool) with a synthetic workload, batched vs unbatched;
 //!   `--cache-dir` persists lowered plans and `--assert-warm` turns the
@@ -23,7 +27,7 @@ use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
 use aieblas::blas::RoutineKind;
-use aieblas::coordinator::{experiments, AieBlas, Config};
+use aieblas::coordinator::{experiments, AieBlas};
 use aieblas::spec::Spec;
 use aieblas::util::cli::{App, Command, Matches, Parsed};
 
@@ -58,6 +62,22 @@ fn app() -> App {
         .command(
             Command::new("ablations", "run the §V ablation sweeps (A1–A3)")
                 .opt_default("artifacts", "artifacts", "AOT artifact directory"),
+        )
+        .command(
+            Command::new("serve", "run the HTTP front door over the serving layer")
+                .opt_required("listen", "address to bind, e.g. 127.0.0.1:8080")
+                .opt("peers", "comma-separated shard addresses (same list everywhere)")
+                .opt_default("shard-index", "0", "this process's index into --peers")
+                .opt_default("workers", "2", "server dispatcher threads")
+                .opt_default("batch", "8", "max coalesced batch size")
+                .opt_default("queue", "256", "bounded request-queue depth")
+                .opt_default("policy", "block", "admission policy: block | reject | watermark:<n>")
+                .opt_default("backend", "cpu", "cpu | reference | sim")
+                .opt("cache-dir", "persistent plan-store directory shared across the fleet")
+                .opt_default("max-body-kib", "4096", "largest request body accepted, KiB")
+                .opt_default("read-timeout-ms", "10000", "per-socket read timeout")
+                .opt_default("request-timeout-ms", "60000", "bound on one request's serving wait")
+                .opt_default("drain-timeout-ms", "5000", "default /v1/drain (and shutdown) bound"),
         )
         .command(
             Command::new("serve-bench", "drive the serving layer with a synthetic workload")
@@ -147,12 +167,13 @@ fn dispatch(m: &Matches) -> CliResult {
         }
         "run" => {
             let spec = Spec::from_file(Path::new(&m.positionals[0]))?;
-            let sys = AieBlas::new(Config {
-                artifacts_dir: PathBuf::from(m.get("artifacts").unwrap()),
-                check_numerics: !m.has_flag("no-numerics"),
-                cache_dir: m.get("cache-dir").map(PathBuf::from),
-                ..Default::default()
-            })?;
+            let mut builder = AieBlas::builder()
+                .artifacts_dir(m.get("artifacts").unwrap())
+                .check_numerics(!m.has_flag("no-numerics"));
+            if let Some(dir) = m.get("cache-dir") {
+                builder = builder.cache_dir(dir);
+            }
+            let sys = builder.build()?;
             let repeat = m.usize("repeat")?.max(1);
             let mut report = sys.run_spec(&spec)?;
             for _ in 1..repeat {
@@ -174,11 +195,10 @@ fn dispatch(m: &Matches) -> CliResult {
             Ok(())
         }
         "fig3" => {
-            let sys = AieBlas::new(Config {
-                artifacts_dir: PathBuf::from(m.get("artifacts").unwrap()),
-                check_numerics: false,
-                ..Default::default()
-            })?;
+            let sys = AieBlas::builder()
+                .artifacts_dir(m.get("artifacts").unwrap())
+                .check_numerics(false)
+                .build()?;
             let panel = m.get("panel").unwrap();
             let mut tables = Vec::new();
             if panel == "axpy" || panel == "all" {
@@ -214,11 +234,10 @@ fn dispatch(m: &Matches) -> CliResult {
             Ok(())
         }
         "ablations" => {
-            let sys = AieBlas::new(Config {
-                artifacts_dir: PathBuf::from(m.get("artifacts").unwrap()),
-                check_numerics: false,
-                ..Default::default()
-            })?;
+            let sys = AieBlas::builder()
+                .artifacts_dir(m.get("artifacts").unwrap())
+                .check_numerics(false)
+                .build()?;
             println!("== A1: burst-optimized movers (axpy) ==");
             println!(
                 "{}",
@@ -242,6 +261,7 @@ fn dispatch(m: &Matches) -> CliResult {
             );
             Ok(())
         }
+        "serve" => serve_cmd(m),
         "serve-bench" => serve_bench(m),
         "cache" => cache_cmd(m),
         "tune" => tune_cmd(m),
@@ -273,6 +293,80 @@ fn dispatch(m: &Matches) -> CliResult {
         }
         other => Err(format!("unhandled command {other:?}").into()),
     }
+}
+
+/// `serve --listen <addr>` — run the HTTP front door until drained.
+///
+/// With `--peers a,b,c --shard-index i` this process serves shard `i` of
+/// the fleet: requests whose `PlanKey` hashes elsewhere are proxied one
+/// hop to the owner, and every process shares the `--cache-dir` plan
+/// store, so each plan is lowered exactly once fleet-wide. The process
+/// exits cleanly after `POST /v1/drain` settles in-flight work.
+fn serve_cmd(m: &Matches) -> CliResult {
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    use aieblas::arch::ArchConfig;
+    use aieblas::http::{HttpConfig, HttpServer, ShardRouter};
+    use aieblas::pipeline::Pipeline;
+    use aieblas::runtime::{Backend, CpuBackend, ReferenceBackend, SimBackend};
+    use aieblas::serve::{AdmissionPolicy, RoutineServer, ServeConfig};
+
+    let listen = m.get("listen").unwrap().to_string();
+    let policy_str = m.get("policy").unwrap().to_string();
+    let policy = AdmissionPolicy::parse(&policy_str)
+        .ok_or_else(|| format!("bad --policy {policy_str:?} (block | reject | watermark:<n>)"))?;
+    let backend: Arc<dyn Backend> = match m.get("backend").unwrap() {
+        "cpu" => Arc::new(CpuBackend),
+        "reference" => Arc::new(ReferenceBackend),
+        "sim" => Arc::new(SimBackend::timing_only()),
+        other => return Err(format!("unknown backend {other:?} (cpu | reference | sim)").into()),
+    };
+    let router = match m.get("peers") {
+        None => None,
+        Some(peers) => {
+            let peers: Vec<String> = peers
+                .split(',')
+                .map(str::trim)
+                .filter(|p| !p.is_empty())
+                .map(String::from)
+                .collect();
+            Some(ShardRouter::new(peers, m.usize("shard-index")?)?)
+        }
+    };
+
+    let mut pipeline = Pipeline::new(ArchConfig::vck5000());
+    if let Some(dir) = m.get("cache-dir") {
+        pipeline = pipeline.with_disk_store(Path::new(dir));
+    }
+    let serve_cfg = ServeConfig::builder()
+        .max_batch(m.usize("batch")?)
+        .workers(m.usize("workers")?)
+        .queue_capacity(m.usize("queue")?)
+        .policy(policy)
+        .build();
+    let server = Arc::new(RoutineServer::new(Arc::new(pipeline), backend, serve_cfg));
+
+    let http_cfg = HttpConfig {
+        max_body: m.usize("max-body-kib")?.saturating_mul(1024),
+        read_timeout: Duration::from_millis(m.usize("read-timeout-ms")? as u64),
+        request_timeout: Duration::from_millis(m.usize("request-timeout-ms")? as u64),
+        drain_timeout: Duration::from_millis(m.usize("drain-timeout-ms")? as u64),
+        ..Default::default()
+    };
+    let http = HttpServer::bind(&listen, server, router, http_cfg)?;
+    // the smoke driver greps this line for the resolved address (port 0).
+    println!("aieblas serving on http://{}", http.local_addr());
+    if let Some(shard) = m.get("peers").map(|_| m.usize("shard-index")).transpose()? {
+        println!("shard {shard} of the configured peer fleet");
+    }
+
+    while !http.is_draining() {
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    println!("drain requested; shutting down");
+    http.shutdown();
+    Ok(())
 }
 
 /// `cache stats|clear|prewarm <spec.json>` — inspect, empty, or pre-fill
@@ -447,7 +541,12 @@ fn serve_bench(m: &Matches) -> CliResult {
         let server = RoutineServer::new(
             Arc::new(pipeline),
             make_backend(shards)?,
-            ServeConfig { max_batch, linger, workers, policy, ..Default::default() },
+            ServeConfig::builder()
+                .max_batch(max_batch)
+                .linger(linger)
+                .workers(workers)
+                .policy(policy)
+                .build(),
         );
         std::thread::scope(|s| {
             for c in 0..clients {
@@ -493,7 +592,9 @@ fn serve_bench(m: &Matches) -> CliResult {
         batched.throughput_rps / unbatched.throughput_rps.max(1e-9)
     );
     if let Some(path) = &metrics_json {
-        std::fs::write(path, batched.to_json().to_pretty() + "\n")
+        // the versioned v1 envelope (crate::api), same shape /v1/statsz
+        // serves, so offline tooling parses one format either way.
+        std::fs::write(path, aieblas::api::report_json(&batched).to_pretty() + "\n")
             .map_err(|e| format!("could not write {}: {e}", path.display()))?;
         println!("wrote serve metrics to {}", path.display());
     }

@@ -492,16 +492,16 @@ impl ServeReport {
 
     pub fn to_json(&self) -> Json {
         let cache = obj(vec![
-            ("hits", self.cache.hits.into()),
-            ("coalesced", self.cache.coalesced.into()),
-            ("misses", self.cache.misses.into()),
-            ("evictions", self.cache.evictions.into()),
+            ("hits", (self.cache.hits as f64).into()),
+            ("coalesced", (self.cache.coalesced as f64).into()),
+            ("misses", (self.cache.misses as f64).into()),
+            ("evictions", (self.cache.evictions as f64).into()),
             ("entries", self.cache.entries.into()),
-            ("disk_hits", self.cache.disk_hits.into()),
-            ("disk_writes", self.cache.disk_writes.into()),
-            ("rejected", self.cache.rejected.into()),
-            ("tuned", self.cache.tuned.into()),
-            ("tune_skipped", self.cache.tune_skipped.into()),
+            ("disk_hits", (self.cache.disk_hits as f64).into()),
+            ("disk_writes", (self.cache.disk_writes as f64).into()),
+            ("rejected", (self.cache.rejected as f64).into()),
+            ("tuned", (self.cache.tuned as f64).into()),
+            ("tune_skipped", (self.cache.tune_skipped as f64).into()),
         ]);
         obj(vec![
             ("requests", (self.requests as f64).into()),

@@ -99,6 +99,16 @@ impl Default for ServeConfig {
 }
 
 impl ServeConfig {
+    /// Start a [`ServeConfigBuilder`] from the defaults. This is the
+    /// preferred construction path: defaults, knob-by-knob overrides and
+    /// the hostile-value clamps all live in one place, and `build()`
+    /// always returns an already-normalized config. The struct's public
+    /// fields remain usable for literal construction (existing tests and
+    /// callers), but new code should go through the builder.
+    pub fn builder() -> ServeConfigBuilder {
+        ServeConfigBuilder { cfg: ServeConfig::default() }
+    }
+
     /// Clamp hostile values into a sane envelope (zero capacity/workers/
     /// batch, absurd linger, inverted pool bounds).
     fn normalized(self) -> ServeConfig {
@@ -117,6 +127,64 @@ impl ServeConfig {
             target_queue_wait: self.target_queue_wait.max(TARGET_WAIT_FLOOR),
             ..self
         }
+    }
+}
+
+/// Fluent construction for [`ServeConfig`]. Every setter takes the raw
+/// requested value; `build()` runs the same clamps `RoutineServer::new`
+/// applies, so a builder-made config is valid by construction and the two
+/// paths can never disagree about what "sane" means.
+#[derive(Debug, Clone)]
+pub struct ServeConfigBuilder {
+    cfg: ServeConfig,
+}
+
+impl ServeConfigBuilder {
+    pub fn max_batch(mut self, n: usize) -> Self {
+        self.cfg.max_batch = n;
+        self
+    }
+
+    pub fn linger(mut self, d: Duration) -> Self {
+        self.cfg.linger = d;
+        self
+    }
+
+    pub fn queue_capacity(mut self, n: usize) -> Self {
+        self.cfg.queue_capacity = n;
+        self
+    }
+
+    pub fn workers(mut self, n: usize) -> Self {
+        self.cfg.workers = n;
+        self
+    }
+
+    pub fn policy(mut self, policy: AdmissionPolicy) -> Self {
+        self.cfg.policy = policy;
+        self
+    }
+
+    pub fn max_inflight_per_tenant(mut self, n: usize) -> Self {
+        self.cfg.max_inflight_per_tenant = n;
+        self
+    }
+
+    /// Adaptive-pool bounds; `(0, 0)` keeps a fixed pool of `workers`.
+    pub fn pool_bounds(mut self, min: usize, max: usize) -> Self {
+        self.cfg.min_workers = min;
+        self.cfg.max_workers = max;
+        self
+    }
+
+    pub fn target_queue_wait(mut self, d: Duration) -> Self {
+        self.cfg.target_queue_wait = d;
+        self
+    }
+
+    /// Finish, applying the hostile-value clamps (PR 7 envelope).
+    pub fn build(self) -> ServeConfig {
+        self.cfg.normalized()
     }
 }
 

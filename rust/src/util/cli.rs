@@ -259,6 +259,16 @@ impl App {
                 cmd.name, required_pos
             )));
         }
+        // Surplus positionals are as much a usage error as unknown
+        // options: `cache stats extra` or a typo'd bare word must fail
+        // loudly, not run with the junk silently ignored.
+        if m.positionals.len() > cmd.positionals.len() {
+            return Err(CliError(format!(
+                "unexpected positional argument {:?} for {}",
+                m.positionals[cmd.positionals.len()],
+                cmd.name
+            )));
+        }
         Ok(Parsed::Matches(m))
     }
 }
@@ -322,6 +332,17 @@ mod tests {
         assert!(app()
             .parse(&args(&["run", "s.json", "--routine", "axpy", "--bogus"]))
             .is_err());
+    }
+
+    #[test]
+    fn surplus_positional_is_error() {
+        let err = app()
+            .parse(&args(&["run", "s.json", "stray", "--routine", "axpy"]))
+            .unwrap_err();
+        assert!(err.0.contains("unexpected positional"), "{err}");
+        assert!(err.0.contains("stray"), "{err}");
+        // zero-positional commands reject any bare word.
+        assert!(app().parse(&args(&["info", "huh"])).is_err());
     }
 
     #[test]

@@ -1,0 +1,428 @@
+//! End-to-end tests for the HTTP front door (ISSUE 9): real TCP sockets
+//! against in-process `HttpServer`s.
+//!
+//! Coverage pinned here:
+//! * `/v1/run` + `/v1/batch` round trips (values, cache counters, stats);
+//! * every error path returns a structured `ApiError` with the v1 status
+//!   mapping (malformed body 400, bad spec 400, bad route 404, wrong
+//!   method 405, oversized body 413, expired deadline 504, draining 503);
+//! * drain under load resolves every in-flight connection;
+//! * two servers sharing one `--cache-dir`: a spec lowered by A is a
+//!   disk-warm zero-lowering hit on B (the fleet warm-start guarantee);
+//! * shard routing: a request landing on the wrong shard is proxied to
+//!   the owner and executes there;
+//! * keep-alive: two requests over one connection.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use aieblas::arch::ArchConfig;
+use aieblas::blas::RoutineKind;
+use aieblas::http::client::{self, ClientConfig};
+use aieblas::http::{HttpConfig, HttpServer, ShardRouter};
+use aieblas::pipeline::{Pipeline, PlanKey};
+use aieblas::runtime::{Backend, CpuBackend, SlowBackend};
+use aieblas::serve::{RoutineServer, ServeConfig};
+use aieblas::spec::{DataSource, Spec};
+use aieblas::util::json::{obj, Json};
+
+/// Fresh per-test store directory (no tempdir crate in the offline
+/// registry); removed on success, best-effort.
+fn store_dir(tag: &str) -> PathBuf {
+    static NEXT: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let n = NEXT.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    std::env::temp_dir().join(format!("aieblas-http-{tag}-{}-{n}", std::process::id()))
+}
+
+fn spec_of(size: usize) -> Spec {
+    Spec::single(RoutineKind::Axpy, "a", size, DataSource::Pl)
+}
+
+fn run_body(spec: &Spec) -> Json {
+    obj(vec![("spec", spec.to_json())])
+}
+
+/// Start an HTTP server over a fresh pipeline + CpuBackend.
+fn start(
+    cache_dir: Option<&std::path::Path>,
+    router: Option<ShardRouter>,
+    http_cfg: HttpConfig,
+    backend: Arc<dyn Backend>,
+    serve_cfg: ServeConfig,
+) -> HttpServer {
+    let mut pipeline = Pipeline::new(ArchConfig::vck5000());
+    if let Some(dir) = cache_dir {
+        pipeline = pipeline.with_disk_store(dir);
+    }
+    let server = Arc::new(RoutineServer::new(Arc::new(pipeline), backend, serve_cfg));
+    HttpServer::bind("127.0.0.1:0", server, router, http_cfg).expect("bind loopback")
+}
+
+fn quick_http_cfg() -> HttpConfig {
+    HttpConfig {
+        read_timeout: Duration::from_millis(500),
+        drain_timeout: Duration::from_secs(10),
+        ..Default::default()
+    }
+}
+
+fn default_start() -> HttpServer {
+    start(None, None, quick_http_cfg(), Arc::new(CpuBackend), ServeConfig::default())
+}
+
+fn cc() -> ClientConfig {
+    ClientConfig { io_timeout: Duration::from_secs(30), ..Default::default() }
+}
+
+fn addr(srv: &HttpServer) -> String {
+    srv.local_addr().to_string()
+}
+
+/// Error body shape: `{"v":1,"error":{"code":<expected>,...}}`.
+fn assert_api_error(status: u16, body: &Json, want_status: u16, want_code: &str) {
+    assert_eq!(status, want_status, "body: {}", body.to_compact());
+    let err = body.get("error").expect("error object");
+    assert_eq!(err.get("code").and_then(Json::as_str), Some(want_code));
+    assert!(err.get("message").and_then(Json::as_str).is_some());
+    assert!(err.get("retryable").and_then(Json::as_bool).is_some());
+    assert_eq!(body.get("v").and_then(Json::as_u64), Some(1));
+}
+
+#[test]
+fn run_then_statsz_round_trip() {
+    let srv = default_start();
+    let a = addr(&srv);
+
+    let (status, body) = client::post_json(&a, "/v1/run", &run_body(&spec_of(256)), &cc()).unwrap();
+    assert_eq!(status, 200, "{}", body.to_compact());
+    assert_eq!(body.get("v").and_then(Json::as_u64), Some(1));
+    let outputs = body.get("outputs").and_then(Json::as_arr).expect("outputs");
+    assert_eq!(outputs.len(), 1);
+    assert_eq!(outputs[0].get("routine").and_then(Json::as_str), Some("a"));
+    assert_eq!(outputs[0].get("len").and_then(Json::as_usize), Some(256));
+    assert_eq!(
+        outputs[0].get("values").and_then(Json::as_arr).map(|v| v.len()),
+        Some(256),
+        "include_values defaults on"
+    );
+    assert_eq!(body.path("cache.misses").and_then(Json::as_u64), Some(1), "cold lowering");
+
+    // same spec again: warm hit, and checksum mode slims the payload.
+    let mut body2 = run_body(&spec_of(256));
+    if let Json::Obj(map) = &mut body2 {
+        map.insert("include_values".into(), Json::Bool(false));
+    }
+    let (status, warm) = client::post_json(&a, "/v1/run", &body2, &cc()).unwrap();
+    assert_eq!(status, 200);
+    assert!(warm.path("outputs").and_then(Json::as_arr).unwrap()[0].get("values").is_none());
+    assert!(warm.path("outputs").and_then(Json::as_arr).unwrap()[0].get("checksum").is_some());
+    assert!(warm.path("cache.hits").and_then(Json::as_u64).unwrap() >= 1);
+
+    let (status, stats) = client::get(&a, "/v1/statsz", &cc()).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(stats.get("v").and_then(Json::as_u64), Some(1));
+    assert_eq!(stats.path("cache.misses").and_then(Json::as_u64), Some(1));
+    assert!(stats.get("requests").and_then(Json::as_f64).unwrap() >= 2.0);
+    assert!(stats.get("metrics").is_some(), "ServeMetrics embedded");
+
+    let (status, health) = client::get(&a, "/v1/healthz", &cc()).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(health.get("status").and_then(Json::as_str), Some("ok"));
+    assert_eq!(health.get("draining").and_then(Json::as_bool), Some(false));
+
+    srv.shutdown();
+}
+
+#[test]
+fn batch_round_trip_preserves_order() {
+    let srv = default_start();
+    let a = addr(&srv);
+
+    let batch = obj(vec![(
+        "requests",
+        Json::Arr(vec![
+            run_body(&spec_of(64)),
+            Json::parse(r#"{"spec": {"routines": []}}"#).unwrap(), // invalid spec
+            run_body(&spec_of(128)),
+        ]),
+    )]);
+    let (status, body) = client::post_json(&a, "/v1/batch", &batch, &cc()).unwrap();
+    assert_eq!(status, 200, "{}", body.to_compact());
+    let results = body.get("results").and_then(Json::as_arr).expect("results");
+    assert_eq!(results.len(), 3);
+    assert_eq!(
+        results[0].path("outputs").and_then(Json::as_arr).unwrap()[0]
+            .get("len")
+            .and_then(Json::as_usize),
+        Some(64)
+    );
+    assert_eq!(
+        results[1].path("error.code").and_then(Json::as_str),
+        Some("bad_request"),
+        "per-item failures are structured in place"
+    );
+    assert_eq!(
+        results[2].path("outputs").and_then(Json::as_arr).unwrap()[0]
+            .get("len")
+            .and_then(Json::as_usize),
+        Some(128)
+    );
+
+    // a bare array works too.
+    let (status, body) =
+        client::post_json(&a, "/v1/batch", &Json::Arr(vec![run_body(&spec_of(64))]), &cc())
+            .unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(body.get("results").and_then(Json::as_arr).map(|r| r.len()), Some(1));
+
+    srv.shutdown();
+}
+
+#[test]
+fn every_error_path_returns_structured_api_error() {
+    let mut http_cfg = quick_http_cfg();
+    http_cfg.max_body = 1024;
+    let srv = start(None, None, http_cfg, Arc::new(CpuBackend), ServeConfig::default());
+    let a = addr(&srv);
+
+    // malformed JSON → 400.
+    let resp = client::request(&a, "POST", "/v1/run", Some(b"{nope"), &[], &cc()).unwrap();
+    let json = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+    assert_api_error(resp.status, &json, 400, "bad_request");
+
+    // valid JSON, invalid spec → 400.
+    let bad_spec = Json::parse(r#"{"spec": {"routines": []}}"#).unwrap();
+    let (s, b) = client::post_json(&a, "/v1/run", &bad_spec, &cc()).unwrap();
+    assert_api_error(s, &b, 400, "bad_request");
+
+    // unknown request field → 400.
+    let (s, b) = client::post_json(
+        &a,
+        "/v1/run",
+        &Json::parse(r#"{"spec": {"routines": []}, "bogus": true}"#).unwrap(),
+        &cc(),
+    )
+    .unwrap();
+    assert_api_error(s, &b, 400, "bad_request");
+
+    // unknown route → 404; known route, wrong method → 405.
+    let (s, b) = client::get(&a, "/v2/run", &cc()).unwrap();
+    assert_api_error(s, &b, 404, "not_found");
+    let (s, b) = client::get(&a, "/v1/run", &cc()).unwrap();
+    assert_api_error(s, &b, 405, "method_not_allowed");
+
+    // body over max_body → 413.
+    let big = vec![b'x'; 4096];
+    let resp = client::request(&a, "POST", "/v1/run", Some(&big), &[], &cc()).unwrap();
+    let json = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+    assert_api_error(resp.status, &json, 413, "payload_too_large");
+
+    // deadline_ms 0 is already expired at admission → 504.
+    let mut body = run_body(&spec_of(64));
+    if let Json::Obj(map) = &mut body {
+        map.insert("deadline_ms".into(), Json::Num(0.0));
+    }
+    let (s, b) = client::post_json(&a, "/v1/run", &body, &cc()).unwrap();
+    assert_api_error(s, &b, 504, "deadline_expired");
+
+    srv.shutdown();
+}
+
+#[test]
+fn drain_rejects_new_work_and_reports_draining() {
+    let srv = default_start();
+    let a = addr(&srv);
+
+    let (s, _) = client::post_json(&a, "/v1/run", &run_body(&spec_of(64)), &cc()).unwrap();
+    assert_eq!(s, 200);
+
+    let (s, b) = client::post_json(
+        &a,
+        "/v1/drain",
+        &Json::parse(r#"{"timeout_ms": 5000}"#).unwrap(),
+        &cc(),
+    )
+    .unwrap();
+    assert_eq!(s, 200);
+    assert_eq!(b.get("drained").and_then(Json::as_bool), Some(true));
+
+    let (s, b) = client::get(&a, "/v1/healthz", &cc()).unwrap();
+    assert_eq!(s, 200);
+    assert_eq!(b.get("draining").and_then(Json::as_bool), Some(true));
+
+    // post-drain submissions shed with the draining code → 503.
+    let (s, b) = client::post_json(&a, "/v1/run", &run_body(&spec_of(64)), &cc()).unwrap();
+    assert_api_error(s, &b, 503, "shed_draining");
+}
+
+/// Drain while slow requests are in flight: every connection must still
+/// get a parseable JSON response (success or structured error) — none
+/// may hang or be dropped mid-frame.
+#[test]
+fn drain_under_load_resolves_every_connection() {
+    let backend = Arc::new(SlowBackend::new(CpuBackend, Duration::from_millis(30)));
+    let serve_cfg = ServeConfig::builder().workers(1).max_batch(1).build();
+    let srv = start(None, None, quick_http_cfg(), backend, serve_cfg);
+    let a = addr(&srv);
+
+    let results: Vec<(u16, Json)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..6)
+            .map(|i| {
+                let a = a.clone();
+                // distinct sizes so nothing coalesces: 6 serial 30 ms runs.
+                s.spawn(move || {
+                    client::post_json(&a, "/v1/run", &run_body(&spec_of(64 << i)), &cc()).unwrap()
+                })
+            })
+            .collect();
+        // let the queue build, then drain mid-flight.
+        std::thread::sleep(Duration::from_millis(40));
+        let (s_drain, b) = client::post_json(&a, "/v1/drain", &Json::Null, &cc()).unwrap();
+        assert_eq!(s_drain, 200, "{}", b.to_compact());
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+    });
+
+    for (status, body) in &results {
+        let ok = *status == 200 && body.get("outputs").is_some();
+        let structured_err = body.path("error.code").and_then(Json::as_str).is_some();
+        assert!(
+            ok || structured_err,
+            "connection resolved to neither success nor ApiError: {status} {}",
+            body.to_compact()
+        );
+    }
+    // drain answered everything; at least the in-flight request ran.
+    assert!(results.iter().any(|(s, _)| *s == 200), "nothing completed");
+}
+
+/// The fleet warm-start guarantee: server B, sharing A's store, serves
+/// A's spec with zero lowerings and a disk hit.
+#[test]
+fn second_server_on_shared_store_is_disk_warm() {
+    let dir = store_dir("warm");
+    let spec = spec_of(512);
+
+    let a_srv = start(
+        Some(&dir),
+        None,
+        quick_http_cfg(),
+        Arc::new(CpuBackend),
+        ServeConfig::default(),
+    );
+    let (s, b) = client::post_json(&addr(&a_srv), "/v1/run", &run_body(&spec), &cc()).unwrap();
+    assert_eq!(s, 200);
+    assert_eq!(b.path("cache.misses").and_then(Json::as_u64), Some(1));
+    assert!(b.path("cache.disk_writes").and_then(Json::as_u64).unwrap() >= 1, "wrote through");
+    a_srv.shutdown();
+
+    let b_srv = start(
+        Some(&dir),
+        None,
+        quick_http_cfg(),
+        Arc::new(CpuBackend),
+        ServeConfig::default(),
+    );
+    let (s, b) = client::post_json(&addr(&b_srv), "/v1/run", &run_body(&spec), &cc()).unwrap();
+    assert_eq!(s, 200);
+    assert_eq!(b.path("cache.misses").and_then(Json::as_u64), Some(0), "zero lowerings on B");
+    assert!(b.path("cache.disk_hits").and_then(Json::as_u64).unwrap() >= 1, "served from disk");
+    b_srv.shutdown();
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Two shards, each claiming half the key space: a spec owned by the
+/// *other* shard is proxied there and executes on the owner (visible in
+/// the owner's statsz request count).
+#[test]
+fn shard_router_proxies_to_the_owner() {
+    let dir = store_dir("shard");
+    // Reserve two distinct loopback ports up front (bind both before
+    // dropping either) so the full shard map is known before any server
+    // starts; the tiny release-then-rebind window is benign in-process.
+    let ports: Vec<u16> = {
+        let listeners: Vec<std::net::TcpListener> = (0..2)
+            .map(|_| std::net::TcpListener::bind("127.0.0.1:0").expect("reserve port"))
+            .collect();
+        listeners.iter().map(|l| l.local_addr().unwrap().port()).collect()
+    };
+    let peers: Vec<String> = ports.iter().map(|p| format!("127.0.0.1:{p}")).collect();
+
+    let bind_shard = |i: usize| {
+        let router = ShardRouter::new(peers.clone(), i).unwrap();
+        let pipeline = Pipeline::new(ArchConfig::vck5000()).with_disk_store(&dir);
+        let server = Arc::new(RoutineServer::new(
+            Arc::new(pipeline),
+            Arc::new(CpuBackend),
+            ServeConfig::default(),
+        ));
+        HttpServer::bind(&peers[i], server, Some(router), quick_http_cfg()).expect("bind shard")
+    };
+    let srv_a = bind_shard(0);
+    let srv_b = bind_shard(1);
+
+    // find one spec per shard (the routing rule is public and stable).
+    let router = ShardRouter::new(peers.clone(), 0).unwrap();
+    let mut owned = [None, None];
+    for i in 0..32 {
+        let spec = spec_of(64 + 16 * i);
+        let shard = router.shard_of(&PlanKey::of(&spec));
+        if owned[shard].is_none() {
+            owned[shard] = Some(spec);
+        }
+    }
+    let (spec_for_a, spec_for_b) =
+        (owned[0].take().expect("shard-0 spec"), owned[1].take().expect("shard-1 spec"));
+
+    // both POSTed to A: A's own spec runs locally, B's is proxied.
+    for spec in [&spec_for_a, &spec_for_b] {
+        let (s, b) = client::post_json(&peers[0], "/v1/run", &run_body(spec), &cc()).unwrap();
+        assert_eq!(s, 200, "{}", b.to_compact());
+    }
+    let (_, stats_a) = client::get(&peers[0], "/v1/statsz", &cc()).unwrap();
+    let (_, stats_b) = client::get(&peers[1], "/v1/statsz", &cc()).unwrap();
+    assert_eq!(stats_a.get("requests").and_then(Json::as_f64), Some(1.0), "A ran its own spec");
+    assert_eq!(stats_b.get("requests").and_then(Json::as_f64), Some(1.0), "B ran the proxied one");
+
+    // healthz exposes the shard map.
+    let (_, health) = client::get(&peers[1], "/v1/healthz", &cc()).unwrap();
+    assert_eq!(health.path("shards.self_index").and_then(Json::as_usize), Some(1));
+    assert_eq!(
+        health.path("shards.peers").and_then(Json::as_arr).map(|p| p.len()),
+        Some(2)
+    );
+
+    srv_a.shutdown();
+    srv_b.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Two requests over one kept-alive connection, framed by hand.
+#[test]
+fn keep_alive_serves_sequential_requests_on_one_connection() {
+    use std::io::{BufReader, Write};
+
+    let srv = default_start();
+    let stream = std::net::TcpStream::connect(srv.local_addr()).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+
+    let body = run_body(&spec_of(64)).to_compact();
+    let frame = format!(
+        "POST /v1/run HTTP/1.1\r\nhost: t\r\ncontent-type: application/json\r\ncontent-length: {}\r\n\r\n{}",
+        body.len(),
+        body
+    );
+    for round in 0..2 {
+        writer.write_all(frame.as_bytes()).unwrap();
+        writer.flush().unwrap();
+        let resp = aieblas::http::framing::read_response(&mut reader, 1 << 20).unwrap();
+        assert_eq!(resp.status, 200, "round {round}");
+        assert_eq!(resp.header("connection"), Some("keep-alive"), "round {round}");
+    }
+    drop(writer);
+    drop(reader);
+    srv.shutdown();
+}

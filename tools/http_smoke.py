@@ -1,0 +1,262 @@
+#!/usr/bin/env python3
+"""End-to-end smoke test for the aieblas HTTP front door (DESIGN.md §13).
+
+Drives the real `aieblas serve` binary over loopback TCP, stdlib only:
+
+1. **Cold serve.** A fresh process with a fresh `--cache-dir`: a cold
+   `/v1/run` must report `cache.misses >= 1` and `disk_writes >= 1`;
+   a garbage body must come back `400` with a structured
+   `{"error": {"code": ...}}`; `POST /v1/drain` must settle in-flight
+   work and exit the process cleanly.
+2. **Warm start.** A second process sharing the same store: the same
+   spec must serve with `cache.misses == 0` (zero lowerings) and
+   `cache.disk_hits > 0` — the fleet warm-start guarantee.
+3. **Shard fleet.** Two processes with `--peers a,b --shard-index 0/1`
+   on a fresh store: distinct specs all POSTed to shard A must all
+   succeed, and each shard's `/v1/statsz` request count must match the
+   routing rule `shard = fnv1a64(cache_key) % len(peers)` (replicated
+   below) — proving wrong-shard requests were proxied to their owner.
+
+Usage:
+  python3 tools/http_smoke.py --binary target/release/aieblas
+"""
+
+import argparse
+import json
+import re
+import shutil
+import socket
+import subprocess
+import sys
+import tempfile
+import threading
+import urllib.error
+import urllib.request
+
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x100000001B3
+MASK64 = 0xFFFFFFFFFFFFFFFF
+
+
+def fnv1a64(data: bytes) -> int:
+    """The crate's util::fnv1a64 — keep byte-for-byte identical."""
+    h = FNV_OFFSET
+    for b in data:
+        h ^= b
+        h = (h * FNV_PRIME) & MASK64
+    return h
+
+
+def cache_key(name: str, size: int) -> str:
+    """Canonical cache key of a single-routine PL axpy spec.
+
+    Mirrors Spec::to_json().to_compact(): BTreeMap ordering (sorted
+    keys), defaults filled in, no whitespace. Any drift from the Rust
+    rendering fails phase 3 loudly, which is the point.
+    """
+    return (
+        '{"connections":[],"data_source":"pl","platform":"vck5000",'
+        '"routines":[{"name":"%s","routine":"axpy","size":%d}]}' % (name, size)
+    )
+
+
+def shard_of(name: str, size: int, peers: int) -> int:
+    return fnv1a64(cache_key(name, size).encode()) % peers
+
+
+def run_body(name: str, size: int) -> dict:
+    return {"spec": {"routines": [{"routine": "axpy", "name": name, "size": size}]}}
+
+
+def http(addr: str, method: str, path: str, body=None, raw: bytes = None):
+    """One request; returns (status, parsed-json). 4xx/5xx don't raise."""
+    data = raw if raw is not None else (
+        None if body is None else json.dumps(body).encode()
+    )
+    req = urllib.request.Request(
+        "http://%s%s" % (addr, path),
+        data=data,
+        method=method,
+        headers={"content-type": "application/json"},
+    )
+    try:
+        with urllib.request.urlopen(req, timeout=60) as resp:
+            return resp.status, json.loads(resp.read().decode())
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read().decode())
+
+
+class Server:
+    """One `aieblas serve` process; parses the announced address."""
+
+    def __init__(self, binary, cache_dir, listen="127.0.0.1:0", extra=()):
+        cmd = [binary, "serve", "--listen", listen, "--cache-dir", cache_dir]
+        cmd += list(extra)
+        self.proc = subprocess.Popen(
+            cmd, stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True
+        )
+        self.addr = self._wait_for_addr()
+
+    def _wait_for_addr(self, timeout=60):
+        found = {}
+
+        def reader():
+            for line in self.proc.stdout:
+                sys.stdout.write("  | " + line)
+                m = re.search(r"serving on http://(\S+)", line)
+                if m and "addr" not in found:
+                    found["addr"] = m.group(1)
+
+        self.reader = threading.Thread(target=reader, daemon=True)
+        self.reader.start()
+        deadline = threading.Event()
+        for _ in range(timeout * 10):
+            if "addr" in found:
+                return found["addr"]
+            if self.proc.poll() is not None:
+                raise RuntimeError("server exited before announcing its address")
+            deadline.wait(0.1)
+        raise RuntimeError("server never announced its address")
+
+    def drain(self):
+        status, body = http(self.addr, "POST", "/v1/drain", body={})
+        assert status == 200, body
+        assert body.get("drained") is True, body
+        self.proc.wait(timeout=60)
+        assert self.proc.returncode == 0, "serve exited %r" % self.proc.returncode
+
+    def kill(self):
+        if self.proc.poll() is None:
+            self.proc.kill()
+            self.proc.wait(timeout=10)
+
+
+def check(cond, msg):
+    if not cond:
+        raise AssertionError(msg)
+    print("  ok: %s" % msg)
+
+
+def free_ports(n):
+    socks = [socket.socket() for _ in range(n)]
+    for s in socks:
+        s.bind(("127.0.0.1", 0))
+    ports = [s.getsockname()[1] for s in socks]
+    for s in socks:
+        s.close()
+    return ports
+
+
+def phase_cold(binary, store):
+    print("== phase 1: cold serve, error shapes, drain ==")
+    srv = Server(binary, store)
+    try:
+        status, body = http(srv.addr, "POST", "/v1/run", body=run_body("smoke", 256))
+        check(status == 200, "cold /v1/run is 200")
+        check(body["cache"]["misses"] >= 1, "cold run lowered (misses >= 1)")
+        check(body["cache"]["disk_writes"] >= 1, "plan written through to the store")
+        check(body["v"] == 1, "versioned envelope")
+
+        status, body = http(srv.addr, "POST", "/v1/run", raw=b"{nope")
+        check(status == 400, "garbage body is 400")
+        check("code" in body.get("error", {}), "error body is structured")
+
+        status, body = http(srv.addr, "GET", "/v1/healthz")
+        check(status == 200 and body["status"] == "ok", "healthz ok")
+        srv.drain()
+        print("  ok: drained and exited 0")
+    finally:
+        srv.kill()
+
+
+def phase_warm(binary, store):
+    print("== phase 2: second process, zero-lowering warm start ==")
+    srv = Server(binary, store)
+    try:
+        status, body = http(srv.addr, "POST", "/v1/run", body=run_body("smoke", 256))
+        check(status == 200, "warm /v1/run is 200")
+        check(body["cache"]["misses"] == 0, "second process performed zero lowerings")
+        check(body["cache"]["disk_hits"] > 0, "plan served from the shared store")
+        srv.drain()
+    finally:
+        srv.kill()
+
+
+def phase_shards(binary, store):
+    print("== phase 3: two-shard fleet, proxy to owner ==")
+    ports = free_ports(2)
+    peers = ["127.0.0.1:%d" % p for p in ports]
+    peer_flag = ",".join(peers)
+
+    # Distinct specs with deterministic ownership under the replicated
+    # routing rule; grow until both shards own at least one.
+    specs, expected = [], [0, 0]
+    size = 64
+    while len(specs) < 8 or min(expected) == 0:
+        name = "shard%d" % len(specs)
+        owner = shard_of(name, size, 2)
+        specs.append((name, size, owner))
+        expected[owner] += 1
+        size += 16
+        if len(specs) > 64:
+            raise AssertionError("64 distinct specs all hashed to one shard")
+
+    servers = []
+    try:
+        for i in range(2):
+            servers.append(
+                Server(
+                    binary,
+                    store,
+                    listen=peers[i],
+                    extra=["--peers", peer_flag, "--shard-index", str(i)],
+                )
+            )
+        a = servers[0].addr
+        for name, size, _owner in specs:
+            status, body = http(a, "POST", "/v1/run", body=run_body(name, size))
+            check(status == 200, "run %s (size %d) is 200" % (name, size))
+
+        for i, srv in enumerate(servers):
+            status, stats = http(srv.addr, "GET", "/v1/statsz")
+            check(status == 200, "shard %d statsz is 200" % i)
+            got = int(stats["requests"])
+            check(
+                got == expected[i],
+                "shard %d executed %d request(s) (routing rule agrees)" % (i, got),
+            )
+
+        status, health = http(servers[1].addr, "GET", "/v1/healthz")
+        check(health["shards"]["self_index"] == 1, "healthz reports shard index")
+        check(len(health["shards"]["peers"]) == 2, "healthz reports the peer map")
+
+        for srv in servers:
+            srv.drain()
+    finally:
+        for srv in servers:
+            srv.kill()
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--binary",
+        default="target/release/aieblas",
+        help="path to the aieblas CLI (default: target/release/aieblas)",
+    )
+    args = ap.parse_args()
+
+    warm_store = tempfile.mkdtemp(prefix="aieblas-http-smoke-warm-")
+    shard_store = tempfile.mkdtemp(prefix="aieblas-http-smoke-shard-")
+    try:
+        phase_cold(args.binary, warm_store)
+        phase_warm(args.binary, warm_store)
+        phase_shards(args.binary, shard_store)
+    finally:
+        shutil.rmtree(warm_store, ignore_errors=True)
+        shutil.rmtree(shard_store, ignore_errors=True)
+    print("http smoke: all phases passed")
+
+
+if __name__ == "__main__":
+    main()
