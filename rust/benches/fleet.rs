@@ -1,0 +1,223 @@
+//! Fleet fault-tolerance bench (DESIGN.md §14): what does losing a shard
+//! cost, and how fast does the breaker react?
+//!
+//! A 2-shard loopback fleet over one shared plan store, driven through
+//! shard 0:
+//! * `steady` — both shards up: mixed local + proxied warm requests;
+//! * `degraded` — shard 1 killed: the same workload served via breaker-
+//!   gated local failover (`degraded_*` fields are exempt from the CI
+//!   regression gate — failover latency includes breaker transients);
+//! * `breaker` — trip latency (kill → breaker open) and recover latency
+//!   (restart → breaker closed), both probe-driven.
+//!
+//! Emits `BENCH_fleet.json` (working directory, or under
+//! `AIEBLAS_BENCH_JSON_DIR`) to extend the tracked perf series.
+//!
+//! Smoke mode (CI): `AIEBLAS_BENCH_SMOKE=1` shrinks request counts so the
+//! run is a pass/fail completion check, no timing assertions.
+//!
+//! Run: `cargo bench --bench fleet`
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use aieblas::arch::ArchConfig;
+use aieblas::blas::RoutineKind;
+use aieblas::http::client::{self, ClientConfig, RetryPolicy};
+use aieblas::http::{HealthConfig, HttpConfig, HttpServer, ShardRouter};
+use aieblas::pipeline::{Pipeline, PlanKey};
+use aieblas::runtime::CpuBackend;
+use aieblas::serve::{RoutineServer, ServeConfig};
+use aieblas::spec::{DataSource, Spec};
+use aieblas::util::bench::{Bench, Stats};
+use aieblas::util::json::{obj, Json};
+
+fn store_dir() -> PathBuf {
+    std::env::temp_dir().join(format!("aieblas-bench-fleet-{}", std::process::id()))
+}
+
+fn bind_shard(peers: &[String], i: usize, dir: &std::path::Path) -> HttpServer {
+    let router = ShardRouter::new(peers.to_vec(), i)
+        .expect("router")
+        .with_health(HealthConfig {
+            trip_threshold: 2,
+            cooldown: Duration::from_millis(200),
+        })
+        .with_retry(RetryPolicy {
+            max_attempts: 2,
+            base_backoff: Duration::from_millis(5),
+            max_backoff: Duration::from_millis(20),
+            budget: Duration::from_millis(200),
+        })
+        .with_client(ClientConfig {
+            connect_timeout: Duration::from_millis(500),
+            io_timeout: Duration::from_secs(10),
+            ..Default::default()
+        });
+    let pipeline = Pipeline::new(ArchConfig::vck5000()).with_disk_store(dir);
+    let server = Arc::new(RoutineServer::new(
+        Arc::new(pipeline),
+        Arc::new(CpuBackend),
+        ServeConfig::default(),
+    ));
+    let cfg = HttpConfig {
+        probe_interval: Duration::from_millis(50),
+        drain_timeout: Duration::from_secs(5),
+        ..Default::default()
+    };
+    HttpServer::bind(&peers[i], server, Some(router), cfg).expect("bind shard")
+}
+
+fn breaker_of(addr: &str, peer: usize) -> String {
+    let (_, health) = client::get(addr, "/v1/healthz", &ClientConfig::default()).expect("healthz");
+    health
+        .path("shards.peers")
+        .and_then(Json::as_arr)
+        .and_then(|p| p.get(peer))
+        .and_then(|p| p.get("breaker"))
+        .and_then(Json::as_str)
+        .expect("peer breaker field")
+        .to_string()
+}
+
+/// Seconds until `breaker_of(addr, peer)` reports `want` (10 s cap).
+fn wait_breaker(addr: &str, peer: usize, want: &str) -> f64 {
+    let t0 = Instant::now();
+    while breaker_of(addr, peer) != want {
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "breaker never became {want}"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+/// Drive `total` warm requests round-robin over `bodies` into `addr`,
+/// returning per-request latency samples. Every response must be 200 —
+/// in degraded mode that is exactly the §14 availability contract.
+fn drive(addr: &str, bodies: &[Vec<u8>], total: usize, phase: &str) -> Vec<f64> {
+    let cfg = ClientConfig::default();
+    let policy = RetryPolicy::default();
+    let mut xs = Vec::with_capacity(total);
+    for i in 0..total {
+        let body = &bodies[i % bodies.len()];
+        let t = Instant::now();
+        let resp =
+            client::request_with_retry(addr, "POST", "/v1/run", Some(body), &[], &cfg, &policy, true)
+                .unwrap_or_else(|e| panic!("{phase} request {i} failed: {e}"));
+        assert_eq!(resp.status, 200, "{phase} request {i}");
+        xs.push(t.elapsed().as_secs_f64());
+    }
+    xs
+}
+
+fn main() {
+    aieblas::init();
+    let smoke = std::env::var("AIEBLAS_BENCH_SMOKE").is_ok();
+    let mut b = Bench::new("fleet");
+    let mut json_rows: Vec<Json> = Vec::new();
+
+    let total = if smoke { 24 } else { 160 };
+    let size = if smoke { 256 } else { 4096 };
+    let dir = store_dir();
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let ports: Vec<u16> = {
+        let listeners: Vec<std::net::TcpListener> = (0..2)
+            .map(|_| std::net::TcpListener::bind("127.0.0.1:0").expect("reserve port"))
+            .collect();
+        listeners.iter().map(|l| l.local_addr().unwrap().port()).collect()
+    };
+    let peers: Vec<String> = ports.iter().map(|p| format!("127.0.0.1:{p}")).collect();
+    let mut servers: Vec<Option<HttpServer>> =
+        (0..2).map(|i| Some(bind_shard(&peers, i, &dir))).collect();
+
+    // A body per shard so the steady workload exercises both the local
+    // path and the proxy hop; `include_values: false` keeps payloads flat.
+    let router = ShardRouter::new(peers.clone(), 0).expect("router");
+    let mut by_shard: [Option<Spec>; 2] = [None, None];
+    for i in 0..64 {
+        let spec = Spec::single(RoutineKind::Axpy, "a", size + 16 * i, DataSource::Pl);
+        let shard = router.shard_of(&PlanKey::of(&spec));
+        if by_shard[shard].is_none() {
+            by_shard[shard] = Some(spec);
+        }
+    }
+    let bodies: Vec<Vec<u8>> = by_shard
+        .iter()
+        .map(|s| {
+            let spec = s.as_ref().expect("64 specs cover both shards");
+            let mut body = obj(vec![("spec", spec.to_json())]);
+            if let Json::Obj(map) = &mut body {
+                map.insert("include_values".into(), Json::Bool(false));
+            }
+            body.to_compact().into_bytes()
+        })
+        .collect();
+
+    // Prime: one lowering per spec, written through to the shared store.
+    drive(&peers[0], &bodies, bodies.len(), "prime");
+
+    // Phase 1: both shards up.
+    let t0 = Instant::now();
+    let steady = Stats::from_samples(drive(&peers[0], &bodies, total, "steady"));
+    let steady_rps = total as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+    b.record("steady", steady);
+    json_rows.push(obj(vec![
+        ("case", "steady".into()),
+        ("median_s", steady.median.into()),
+        ("rps", steady_rps.into()),
+    ]));
+
+    // Phase 2: kill shard 1 and time the probe-driven breaker trip.
+    servers[1].take().expect("shard 1 live").shutdown();
+    let trip_s = wait_breaker(&peers[0], 1, "open");
+
+    // Phase 3: the same workload, one shard down. Shard 1's keys are
+    // served locally via failover; throughput dips, availability holds.
+    let t0 = Instant::now();
+    let degraded = Stats::from_samples(drive(&peers[0], &bodies, total, "degraded"));
+    let degraded_rps = total as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+    b.record("degraded", degraded);
+    json_rows.push(obj(vec![
+        ("case", "degraded".into()),
+        ("degraded_median_s", degraded.median.into()),
+        ("degraded_rps", degraded_rps.into()),
+    ]));
+
+    // Phase 4: restart and time the probe-driven recovery.
+    servers[1] = Some(bind_shard(&peers, 1, &dir));
+    let recover_s = wait_breaker(&peers[0], 1, "closed");
+    json_rows.push(obj(vec![
+        ("case", "breaker".into()),
+        ("trip_s", trip_s.into()),
+        ("recover_s", recover_s.into()),
+    ]));
+    eprintln!(
+        "  fleet: steady {steady_rps:.0} req/s, one-shard-down {degraded_rps:.0} req/s, \
+         breaker trip {:.0} ms / recover {:.0} ms",
+        trip_s * 1e3,
+        recover_s * 1e3
+    );
+
+    for srv in servers.into_iter().flatten() {
+        srv.shutdown();
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+    b.finish();
+
+    let doc = obj(vec![
+        ("bench", "fleet".into()),
+        ("unit", "seconds".into()),
+        ("smoke", smoke.into()),
+        ("cases", Json::Arr(json_rows)),
+    ]);
+    let out_dir = std::env::var("AIEBLAS_BENCH_JSON_DIR").unwrap_or_else(|_| ".".into());
+    let path = format!("{out_dir}/BENCH_fleet.json");
+    match std::fs::write(&path, doc.to_pretty() + "\n") {
+        Ok(()) => eprintln!("wrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+}

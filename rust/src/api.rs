@@ -32,6 +32,11 @@ use crate::Error;
 /// ignore fields they do not know).
 pub const API_VERSION: u64 = 1;
 
+/// Value of the `retry-after` header sent with every 429/503 response.
+/// One second: long enough to let a shed clear, short enough that a
+/// well-behaved client's backoff dominates (DESIGN.md §14).
+pub const RETRY_AFTER_SECS: u64 = 1;
+
 /// Stable machine-readable error codes, each pinned to one HTTP status.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ErrorCode {
@@ -60,12 +65,20 @@ pub enum ErrorCode {
     Timeout,
     /// Proxying to the owning shard failed.
     Upstream,
+    /// Transport to the owning shard: connection refused.
+    UpstreamConnect,
+    /// Transport to the owning shard: connect or I/O timed out.
+    UpstreamTimeout,
+    /// Transport to the owning shard: connection reset mid-exchange.
+    UpstreamReset,
+    /// Transport to the owning shard: response frame was truncated.
+    UpstreamTruncated,
     /// Anything else: backend failure, panic, lost response channel.
     Internal,
 }
 
 impl ErrorCode {
-    pub const ALL: [ErrorCode; 13] = [
+    pub const ALL: [ErrorCode; 17] = [
         ErrorCode::BadRequest,
         ErrorCode::NotFound,
         ErrorCode::MethodNotAllowed,
@@ -78,6 +91,10 @@ impl ErrorCode {
         ErrorCode::DeadlineMissed,
         ErrorCode::Timeout,
         ErrorCode::Upstream,
+        ErrorCode::UpstreamConnect,
+        ErrorCode::UpstreamTimeout,
+        ErrorCode::UpstreamReset,
+        ErrorCode::UpstreamTruncated,
         ErrorCode::Internal,
     ];
 
@@ -96,6 +113,10 @@ impl ErrorCode {
             ErrorCode::DeadlineMissed => "deadline_missed",
             ErrorCode::Timeout => "timeout",
             ErrorCode::Upstream => "upstream",
+            ErrorCode::UpstreamConnect => "upstream_connect",
+            ErrorCode::UpstreamTimeout => "upstream_timeout",
+            ErrorCode::UpstreamReset => "upstream_reset",
+            ErrorCode::UpstreamTruncated => "upstream_truncated",
             ErrorCode::Internal => "internal",
         }
     }
@@ -111,8 +132,14 @@ impl ErrorCode {
             | ErrorCode::ShedWatermark
             | ErrorCode::ShedTenantQuota => 429,
             ErrorCode::ShedDraining => 503,
-            ErrorCode::DeadlineExpired | ErrorCode::DeadlineMissed | ErrorCode::Timeout => 504,
-            ErrorCode::Upstream => 502,
+            ErrorCode::DeadlineExpired
+            | ErrorCode::DeadlineMissed
+            | ErrorCode::Timeout
+            | ErrorCode::UpstreamTimeout => 504,
+            ErrorCode::Upstream
+            | ErrorCode::UpstreamConnect
+            | ErrorCode::UpstreamReset
+            | ErrorCode::UpstreamTruncated => 502,
             ErrorCode::Internal => 500,
         }
     }
@@ -130,6 +157,10 @@ impl ErrorCode {
                 | ErrorCode::ShedDraining
                 | ErrorCode::Timeout
                 | ErrorCode::Upstream
+                | ErrorCode::UpstreamConnect
+                | ErrorCode::UpstreamTimeout
+                | ErrorCode::UpstreamReset
+                | ErrorCode::UpstreamTruncated
         )
     }
 
@@ -408,6 +439,8 @@ pub fn cache_json(cache: &crate::pipeline::CacheStats) -> Json {
         ("rejected", (cache.rejected as f64).into()),
         ("tuned", (cache.tuned as f64).into()),
         ("tune_skipped", (cache.tune_skipped as f64).into()),
+        ("tmp_swept", (cache.tmp_swept as f64).into()),
+        ("store_fallbacks", (cache.store_fallbacks as f64).into()),
     ])
 }
 

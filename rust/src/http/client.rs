@@ -4,12 +4,29 @@
 //! and the loopback bench. One request per connection (`Connection:
 //! close`) keeps it trivially correct; the proxy hop is a loopback or
 //! rack-local connection where setup cost is noise next to a lowering.
+//!
+//! Fleet fault tolerance (DESIGN.md §14) needs two things from the
+//! transport edge:
+//!
+//! * **classified failures** — [`TransportError`] distinguishes refused
+//!   vs timed-out vs reset vs truncated, each mapped to a distinct
+//!   [`ErrorCode`] so a proxy can put the real failure mode on the wire
+//!   instead of one opaque string;
+//! * **bounded retries** — [`request_with_retry`] retries only failures
+//!   that are safe to retry (a refused connect never delivered bytes;
+//!   anything after the request may have been acked is retried only for
+//!   idempotent requests), under capped exponential backoff with
+//!   deterministic jitter and a hard wall-clock budget so retries can
+//!   never amplify an outage.
 
 use std::io::{BufReader, Write};
 use std::net::{TcpStream, ToSocketAddrs};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::framing::{read_response, FrameError, HttpResponse};
+use crate::api::{ApiError, ErrorCode};
+use crate::util::faults::{FaultPlan, FaultSite};
+use crate::util::fnv1a64;
 use crate::util::json::Json;
 use crate::{Error, Result};
 
@@ -19,6 +36,9 @@ pub struct ClientConfig {
     pub connect_timeout: Duration,
     pub io_timeout: Duration,
     pub max_body: usize,
+    /// Chaos hook: when set, `ConnectRefuse` faults fire before any
+    /// socket work, as if the peer refused the connection.
+    pub faults: Option<FaultPlan>,
 }
 
 impl Default for ClientConfig {
@@ -27,12 +47,105 @@ impl Default for ClientConfig {
             connect_timeout: Duration::from_secs(2),
             io_timeout: Duration::from_secs(60),
             max_body: 64 * 1024 * 1024,
+            faults: None,
         }
     }
 }
 
-fn transport(msg: String) -> Error {
-    Error::Runtime(format!("http transport: {msg}"))
+/// A classified transport failure. `Refused` is known to have happened
+/// before any request byte left this process; the other variants may
+/// have raced a request the peer already accepted, so only idempotent
+/// requests retry them.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TransportError {
+    /// TCP connect refused (or address unusable): nothing was sent.
+    Refused(String),
+    /// Connect or I/O deadline elapsed.
+    Timeout(String),
+    /// Peer reset/aborted the connection mid-exchange.
+    Reset(String),
+    /// Response frame ended before its declared length.
+    Truncated(String),
+    /// Anything else (resolution failure, protocol violation, …).
+    Other(String),
+}
+
+impl TransportError {
+    /// The wire [`ErrorCode`] a proxy should report for this failure.
+    pub fn code(&self) -> ErrorCode {
+        match self {
+            TransportError::Refused(_) => ErrorCode::UpstreamConnect,
+            TransportError::Timeout(_) => ErrorCode::UpstreamTimeout,
+            TransportError::Reset(_) => ErrorCode::UpstreamReset,
+            TransportError::Truncated(_) => ErrorCode::UpstreamTruncated,
+            TransportError::Other(_) => ErrorCode::Upstream,
+        }
+    }
+
+    /// Whether a retry can reasonably succeed (transport failures are
+    /// transient by nature; `Other` covers config mistakes too, so it
+    /// does not retry).
+    pub fn retryable(&self) -> bool {
+        !matches!(self, TransportError::Other(_))
+    }
+
+    /// True when the failure provably happened before any request byte
+    /// was sent, making a retry safe even for non-idempotent requests.
+    pub fn before_send(&self) -> bool {
+        matches!(self, TransportError::Refused(_))
+    }
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::Refused(m) => write!(f, "connection refused: {m}"),
+            TransportError::Timeout(m) => write!(f, "timed out: {m}"),
+            TransportError::Reset(m) => write!(f, "connection reset: {m}"),
+            TransportError::Truncated(m) => write!(f, "truncated response: {m}"),
+            TransportError::Other(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl From<TransportError> for Error {
+    fn from(e: TransportError) -> Error {
+        Error::Runtime(format!("http transport: {e}"))
+    }
+}
+
+/// Classify a socket-level error by `io::ErrorKind`.
+fn classify_io(context: &str, e: &std::io::Error) -> TransportError {
+    use std::io::ErrorKind;
+    let msg = format!("{context}: {e}");
+    match e.kind() {
+        ErrorKind::ConnectionRefused => TransportError::Refused(msg),
+        ErrorKind::TimedOut | ErrorKind::WouldBlock => TransportError::Timeout(msg),
+        ErrorKind::ConnectionReset | ErrorKind::ConnectionAborted | ErrorKind::BrokenPipe => {
+            TransportError::Reset(msg)
+        }
+        ErrorKind::UnexpectedEof => TransportError::Truncated(msg),
+        _ => TransportError::Other(msg),
+    }
+}
+
+/// Classify a response-framing failure. A close before or inside the
+/// declared body is truncation (the 502-worthy kind a proxy must name);
+/// other malformations are protocol violations.
+fn classify_frame(addr: &str, e: FrameError) -> TransportError {
+    match e {
+        FrameError::Io(io) => classify_io(&format!("read from {addr}"), &io),
+        FrameError::Eof => {
+            TransportError::Truncated(format!("read from {addr}: closed before a status line"))
+        }
+        FrameError::Malformed(m)
+            if m.contains("body shorter than content-length")
+                || m.contains("unexpected end of stream") =>
+        {
+            TransportError::Truncated(format!("response from {addr}: {m}"))
+        }
+        other => TransportError::Other(format!("response from {addr}: {other}")),
+    }
 }
 
 /// Issue one request and read the full response. `body: None` sends no
@@ -44,16 +157,28 @@ pub fn request(
     body: Option<&[u8]>,
     extra_headers: &[(&str, &str)],
     cfg: &ClientConfig,
-) -> Result<HttpResponse> {
+) -> std::result::Result<HttpResponse, TransportError> {
+    if let Some(faults) = &cfg.faults {
+        if faults.fire(FaultSite::ConnectRefuse) {
+            return Err(TransportError::Refused(format!("connect {addr}: injected fault")));
+        }
+    }
     let sock_addr = addr
         .to_socket_addrs()
-        .map_err(|e| transport(format!("bad address {addr:?}: {e}")))?
+        .map_err(|e| TransportError::Other(format!("bad address {addr:?}: {e}")))?
         .next()
-        .ok_or_else(|| transport(format!("address {addr:?} resolved to nothing")))?;
+        .ok_or_else(|| TransportError::Other(format!("address {addr:?} resolved to nothing")))?;
     let stream = TcpStream::connect_timeout(&sock_addr, cfg.connect_timeout)
-        .map_err(|e| transport(format!("connect {addr}: {e}")))?;
-    stream.set_read_timeout(Some(cfg.io_timeout)).map_err(|e| transport(e.to_string()))?;
-    stream.set_write_timeout(Some(cfg.io_timeout)).map_err(|e| transport(e.to_string()))?;
+        .map_err(|e| match classify_io(&format!("connect {addr}"), &e) {
+            // A connect that timed out never delivered the request
+            // either; fold it into the before-send class.
+            TransportError::Timeout(m) => TransportError::Refused(m),
+            other => other,
+        })?;
+    stream
+        .set_read_timeout(Some(cfg.io_timeout))
+        .and_then(|_| stream.set_write_timeout(Some(cfg.io_timeout)))
+        .map_err(|e| TransportError::Other(format!("socket setup for {addr}: {e}")))?;
     stream.set_nodelay(true).ok();
 
     let mut head = format!("{method} {path} HTTP/1.1\r\nhost: {addr}\r\nconnection: close\r\n");
@@ -72,13 +197,115 @@ pub fn request(
         .write_all(head.as_bytes())
         .and_then(|_| stream.write_all(body))
         .and_then(|_| stream.flush())
-        .map_err(|e| transport(format!("send to {addr}: {e}")))?;
+        .map_err(|e| classify_io(&format!("send to {addr}"), &e))?;
 
     let mut reader = BufReader::new(stream);
-    read_response(&mut reader, cfg.max_body).map_err(|e| match e {
-        FrameError::Io(io) => transport(format!("read from {addr}: {io}")),
-        other => transport(format!("response from {addr}: {other}")),
-    })
+    read_response(&mut reader, cfg.max_body).map_err(|e| classify_frame(addr, e))
+}
+
+/// Retry schedule for [`request_with_retry`]: capped exponential
+/// backoff with deterministic jitter under a total wall-clock budget.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Total attempts including the first (1 = no retry).
+    pub max_attempts: u32,
+    /// Backoff before the first retry; doubles each retry.
+    pub base_backoff: Duration,
+    /// Backoff ceiling.
+    pub max_backoff: Duration,
+    /// Hard wall-clock budget for attempts *and* sleeps; a retry whose
+    /// backoff would cross the budget is not taken. Retries can delay a
+    /// request by at most this much — they cannot amplify an outage.
+    pub budget: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 3,
+            base_backoff: Duration::from_millis(20),
+            max_backoff: Duration::from_millis(200),
+            budget: Duration::from_secs(1),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Clamp hostile values to workable ranges (mirrors
+    /// `HttpConfig::normalized`).
+    pub fn normalized(&self) -> RetryPolicy {
+        let base = self.base_backoff.clamp(Duration::from_millis(1), Duration::from_secs(10));
+        RetryPolicy {
+            max_attempts: self.max_attempts.clamp(1, 16),
+            base_backoff: base,
+            max_backoff: self.max_backoff.clamp(base, Duration::from_secs(30)),
+            budget: self.budget.clamp(Duration::from_millis(10), Duration::from_secs(60)),
+        }
+    }
+
+    /// Backoff before retry number `retry` (1-based): `base * 2^(retry-1)`
+    /// capped at `max_backoff`, scaled by a deterministic jitter in
+    /// `[0.5, 1.0)` derived from `(site, retry)` — no global RNG, so
+    /// identical runs back off identically while distinct callers spread
+    /// out instead of thundering back in lockstep.
+    pub fn backoff(&self, site: &str, retry: u32) -> Duration {
+        let exp = self.base_backoff.saturating_mul(1u32 << (retry - 1).min(16));
+        let capped = exp.min(self.max_backoff);
+        let h = fnv1a64(format!("{site}#{retry}").as_bytes());
+        let jitter = 0.5 + (h % 1024) as f64 / 2048.0;
+        capped.mul_f64(jitter)
+    }
+}
+
+/// Whether a response status + body says "retrying may succeed". Only
+/// 502/503/504 qualify, and only when the structured error agrees (an
+/// unparseable body on those statuses is assumed retryable — it usually
+/// means an intermediary, not the serving layer, answered).
+fn response_retryable(resp: &HttpResponse) -> bool {
+    if !matches!(resp.status, 502 | 503 | 504) {
+        return false;
+    }
+    match std::str::from_utf8(&resp.body).ok().and_then(|t| Json::parse(t).ok()) {
+        Some(json) => ApiError::from_json(&json).map(|e| e.retryable).unwrap_or(true),
+        None => true,
+    }
+}
+
+/// [`request`] with bounded retries. `idempotent` declares that the peer
+/// executing the request twice is acceptable; without it only failures
+/// that provably happened before any byte was sent (refused connects)
+/// are retried, and 5xx responses — which prove the request was acked by
+/// the application layer — never are.
+#[allow(clippy::too_many_arguments)]
+pub fn request_with_retry(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&[u8]>,
+    extra_headers: &[(&str, &str)],
+    cfg: &ClientConfig,
+    policy: &RetryPolicy,
+    idempotent: bool,
+) -> std::result::Result<HttpResponse, TransportError> {
+    let policy = policy.normalized();
+    let start = Instant::now();
+    let mut retry = 0u32;
+    loop {
+        let result = request(addr, method, path, body, extra_headers, cfg);
+        let should_retry = match &result {
+            Ok(resp) => idempotent && response_retryable(resp),
+            Err(e) => e.retryable() && (e.before_send() || idempotent),
+        };
+        retry += 1;
+        if !should_retry || retry >= policy.max_attempts {
+            return result;
+        }
+        let backoff = policy.backoff(&format!("{addr}{path}"), retry);
+        if start.elapsed() + backoff > policy.budget {
+            return result;
+        }
+        std::thread::sleep(backoff);
+    }
 }
 
 /// GET `path`, parsing the body as JSON. Returns `(status, json)`.
@@ -96,8 +323,133 @@ pub fn post_json(addr: &str, path: &str, body: &Json, cfg: &ClientConfig) -> Res
 
 fn parse_body(addr: &str, resp: HttpResponse) -> Result<(u16, Json)> {
     let text = std::str::from_utf8(&resp.body)
-        .map_err(|_| transport(format!("non-utf8 response body from {addr}")))?;
-    let json = Json::parse(text)
-        .map_err(|e| transport(format!("non-json response body from {addr}: {e}")))?;
+        .map_err(|_| Error::Runtime(format!("http transport: non-utf8 body from {addr}")))?;
+    let json = Json::parse(text).map_err(|e| {
+        Error::Runtime(format!("http transport: non-json body from {addr}: {e}"))
+    })?;
     Ok((resp.status, json))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn io_error_kinds_classify() {
+        use std::io::{Error as IoError, ErrorKind};
+        let cases = [
+            (ErrorKind::ConnectionRefused, ErrorCode::UpstreamConnect),
+            (ErrorKind::TimedOut, ErrorCode::UpstreamTimeout),
+            (ErrorKind::WouldBlock, ErrorCode::UpstreamTimeout),
+            (ErrorKind::ConnectionReset, ErrorCode::UpstreamReset),
+            (ErrorKind::BrokenPipe, ErrorCode::UpstreamReset),
+            (ErrorKind::UnexpectedEof, ErrorCode::UpstreamTruncated),
+            (ErrorKind::PermissionDenied, ErrorCode::Upstream),
+        ];
+        for (kind, want) in cases {
+            let te = classify_io("test", &IoError::new(kind, "boom"));
+            assert_eq!(te.code(), want, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn truncation_markers_classify_as_truncated() {
+        for e in [
+            FrameError::Eof,
+            FrameError::Malformed("body shorter than content-length".into()),
+            FrameError::Malformed("unexpected end of stream".into()),
+        ] {
+            let te = classify_frame("127.0.0.1:1", e);
+            assert_eq!(te.code(), ErrorCode::UpstreamTruncated);
+            assert!(te.retryable());
+        }
+        let other = classify_frame("127.0.0.1:1", FrameError::Malformed("bad header".into()));
+        assert_eq!(other.code(), ErrorCode::Upstream);
+        assert!(!other.retryable());
+    }
+
+    #[test]
+    fn only_refused_is_safe_before_send() {
+        assert!(TransportError::Refused("x".into()).before_send());
+        assert!(!TransportError::Timeout("x".into()).before_send());
+        assert!(!TransportError::Reset("x".into()).before_send());
+        assert!(!TransportError::Truncated("x".into()).before_send());
+    }
+
+    #[test]
+    fn backoff_grows_caps_and_is_deterministic() {
+        let p = RetryPolicy::default().normalized();
+        let b1 = p.backoff("a:1/v1/run", 1);
+        let b2 = p.backoff("a:1/v1/run", 2);
+        let b9 = p.backoff("a:1/v1/run", 9);
+        assert!(b1 < b2, "{b1:?} !< {b2:?}");
+        // jitter is in [0.5, 1.0): the cap bounds every backoff.
+        assert!(b9 <= p.max_backoff);
+        assert!(b9 >= p.max_backoff.mul_f64(0.5));
+        assert_eq!(b1, p.backoff("a:1/v1/run", 1), "same site+retry, same jitter");
+        assert_ne!(
+            p.backoff("a:1/v1/run", 1),
+            p.backoff("b:2/v1/run", 1),
+            "different sites spread out"
+        );
+    }
+
+    #[test]
+    fn policy_normalization_clamps_hostile_values() {
+        let p = RetryPolicy {
+            max_attempts: 0,
+            base_backoff: Duration::ZERO,
+            max_backoff: Duration::ZERO,
+            budget: Duration::from_secs(1 << 30),
+        }
+        .normalized();
+        assert_eq!(p.max_attempts, 1);
+        assert!(p.base_backoff >= Duration::from_millis(1));
+        assert!(p.max_backoff >= p.base_backoff);
+        assert!(p.budget <= Duration::from_secs(60));
+    }
+
+    #[test]
+    fn injected_connect_refusal_needs_no_listener() {
+        let cfg = ClientConfig {
+            faults: Some(crate::util::faults::FaultPlan::parse("connect_refuse=1").unwrap()),
+            ..Default::default()
+        };
+        // Address is never dialed: the fault fires first.
+        let err = request("203.0.113.1:9", "GET", "/v1/healthz", None, &[], &cfg).unwrap_err();
+        assert!(matches!(err, TransportError::Refused(_)), "{err:?}");
+        assert!(err.before_send());
+    }
+
+    #[test]
+    fn retry_policy_gives_up_within_budget() {
+        let cfg = ClientConfig {
+            connect_timeout: Duration::from_millis(200),
+            faults: Some(crate::util::faults::FaultPlan::parse("connect_refuse=1").unwrap()),
+            ..Default::default()
+        };
+        let policy = RetryPolicy {
+            max_attempts: 4,
+            base_backoff: Duration::from_millis(5),
+            max_backoff: Duration::from_millis(10),
+            budget: Duration::from_millis(500),
+        };
+        let t0 = Instant::now();
+        let err = request_with_retry(
+            "203.0.113.1:9",
+            "POST",
+            "/v1/run",
+            Some(b"{}"),
+            &[],
+            &cfg,
+            &policy,
+            false,
+        )
+        .unwrap_err();
+        assert!(matches!(err, TransportError::Refused(_)));
+        // 4 attempts (refused is before-send, so even non-idempotent
+        // requests retried), all faster than the budget.
+        assert_eq!(cfg.faults.as_ref().unwrap().injected(FaultSite::ConnectRefuse), 4);
+        assert!(t0.elapsed() < Duration::from_secs(2));
+    }
 }

@@ -263,12 +263,29 @@ pub fn write_response(
     body: &[u8],
     keep_alive: bool,
 ) -> std::io::Result<()> {
-    let head = format!(
-        "HTTP/1.1 {status} {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
+    write_response_with(w, status, body, keep_alive, &[])
+}
+
+/// [`write_response`] plus extra headers (e.g. `retry-after` on every
+/// 429/503 — DESIGN.md §14). Callers own header validity; names and
+/// values must be token/field-safe.
+pub fn write_response_with(
+    w: &mut impl Write,
+    status: u16,
+    body: &[u8],
+    keep_alive: bool,
+    extra_headers: &[(&str, &str)],
+) -> std::io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {status} {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\nconnection: {}\r\n",
         reason_phrase(status),
         body.len(),
         if keep_alive { "keep-alive" } else { "close" },
     );
+    for (k, v) in extra_headers {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    head.push_str("\r\n");
     w.write_all(head.as_bytes())?;
     w.write_all(body)?;
     w.flush()
@@ -349,6 +366,18 @@ mod tests {
         assert_eq!(resp.body, br#"{"e":1}"#);
         assert_eq!(resp.header("connection"), Some("keep-alive"));
         assert_eq!(resp.header("content-type"), Some("application/json"));
+    }
+
+    #[test]
+    fn extra_headers_ride_the_response_frame() {
+        let mut wire = Vec::new();
+        write_response_with(&mut wire, 503, br#"{"e":1}"#, false, &[("retry-after", "1")])
+            .unwrap();
+        let resp = read_response(&mut BufReader::new(&wire[..]), 1024).unwrap();
+        assert_eq!(resp.status, 503);
+        assert_eq!(resp.header("retry-after"), Some("1"));
+        assert_eq!(resp.header("connection"), Some("close"));
+        assert_eq!(resp.body, br#"{"e":1}"#);
     }
 
     #[test]

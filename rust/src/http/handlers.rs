@@ -3,8 +3,15 @@
 //! `(status, Json)`, which keeps every route unit-testable without a
 //! listener and guarantees the error invariant the tests pin down: every
 //! failure path produces a structured [`ApiError`] body.
+//!
+//! Cross-shard requests route through [`route_remote`]: the owner's
+//! breaker gates the proxy hop, and both an open breaker and a failed
+//! hop fall back to serving the request **locally** from the shared
+//! plan store (DESIGN.md §14). The store's write-through makes the
+//! failover answer bit-identical to the owner's — a dead shard costs
+//! duplicate lowering work, never availability or correctness.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -18,6 +25,18 @@ use super::framing::HttpRequest;
 use super::router::{shards_json, ShardRouter, FORWARDED_HEADER};
 use super::server::HttpConfig;
 
+/// Fleet failover accounting, surfaced on `/v1/statsz` (overlaid into
+/// `ServeMetrics` — the serving core never sees the HTTP fleet).
+#[derive(Debug, Default)]
+pub struct FleetCounters {
+    /// Requests owned by another shard but served locally because the
+    /// owner was unavailable (breaker open or the proxy hop failed).
+    pub failover_served: AtomicU64,
+    /// The subset that had to lower locally (plan not already memory-
+    /// warm here) — the duplicate-work cost of failover.
+    pub failover_lowerings: AtomicU64,
+}
+
 /// Everything a handler needs, shared across connection threads.
 pub struct Ctx {
     pub server: Arc<RoutineServer>,
@@ -26,11 +45,18 @@ pub struct Ctx {
     /// Set by `/v1/drain` (and server shutdown) so `/v1/healthz` reports
     /// the instance as draining before the balancer's next probe.
     pub draining: AtomicBool,
+    pub fleet: FleetCounters,
 }
 
 impl Ctx {
     pub fn new(server: Arc<RoutineServer>, router: Option<ShardRouter>, cfg: HttpConfig) -> Ctx {
-        Ctx { server, router, cfg, draining: AtomicBool::new(false) }
+        Ctx {
+            server,
+            router,
+            cfg,
+            draining: AtomicBool::new(false),
+            fleet: FleetCounters::default(),
+        }
     }
 }
 
@@ -43,7 +69,7 @@ pub fn handle(ctx: &Ctx, req: &HttpRequest) -> (u16, Json) {
     let forwarded = req.header(FORWARDED_HEADER).is_some();
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/v1/healthz") => healthz(ctx),
-        ("GET", "/v1/statsz") => (200, api::report_json(&ctx.server.report())),
+        ("GET", "/v1/statsz") => statsz(ctx),
         ("POST", "/v1/run") => match parse_body(&req.body) {
             Err(e) => err(e),
             Ok(json) => run_one(ctx, &json, forwarded),
@@ -72,15 +98,31 @@ fn parse_body(body: &[u8]) -> Result<Json, ApiError> {
 }
 
 fn healthz(ctx: &Ctx) -> (u16, Json) {
-    (
-        200,
-        obj(vec![
-            ("v", (api::API_VERSION as f64).into()),
-            ("status", "ok".into()),
-            ("draining", ctx.draining.load(Ordering::SeqCst).into()),
-            ("shards", shards_json(ctx.router.as_ref())),
-        ]),
-    )
+    let mut pairs = vec![
+        ("v", (api::API_VERSION as f64).into()),
+        ("status", "ok".into()),
+        ("draining", ctx.draining.load(Ordering::SeqCst).into()),
+        ("shards", shards_json(ctx.router.as_ref())),
+    ];
+    if let Some(faults) = ctx.cfg.faults.as_ref().filter(|f| f.is_active()) {
+        pairs.push(("faults", faults.to_json()));
+    }
+    (200, obj(pairs))
+}
+
+/// `/v1/statsz`: the serving report with the HTTP fleet's failover and
+/// breaker counters overlaid (the serving core's `build_report` leaves
+/// them zero — they are front-door facts).
+fn statsz(ctx: &Ctx) -> (u16, Json) {
+    let mut report = ctx.server.report();
+    report.metrics.failover_served = ctx.fleet.failover_served.load(Ordering::Relaxed);
+    report.metrics.failover_lowerings = ctx.fleet.failover_lowerings.load(Ordering::Relaxed);
+    if let Some(router) = &ctx.router {
+        let (trips, closes) = router.breaker_counters();
+        report.metrics.breaker_trips = trips;
+        report.metrics.breaker_closes = closes;
+    }
+    (200, api::report_json(&report))
 }
 
 /// `/v1/run`: parse, route to the owning shard, execute locally or relay
@@ -95,15 +137,21 @@ fn run_one(ctx: &Ctx, body: &Json, forwarded: bool) -> (u16, Json) {
         if let Some(router) = &ctx.router {
             let shard = router.shard_of(&key);
             if shard != router.self_index() {
-                return proxy(router, shard, "/v1/run", body);
+                return route_remote(ctx, router, shard, body, &req, &key);
             }
         }
     }
-    let ticket = match submit(ctx, &req) {
+    serve_local(ctx, &req)
+}
+
+/// Submit + wait on this process — the terminal step of both the owner
+/// path and the failover path.
+fn serve_local(ctx: &Ctx, req: &RunRequest) -> (u16, Json) {
+    let ticket = match submit(ctx, req) {
         Ok(t) => t,
         Err(e) => return err(e),
     };
-    finish(ctx, &req, ticket)
+    finish(ctx, req, ticket)
 }
 
 fn submit(ctx: &Ctx, req: &RunRequest) -> Result<Ticket, ApiError> {
@@ -124,26 +172,64 @@ fn finish(ctx: &Ctx, req: &RunRequest, ticket: Ticket) -> (u16, Json) {
     }
 }
 
-/// Relay to the owning shard. Transport failures become `upstream`; a
-/// non-JSON body from a peer is also `upstream` (the peer is broken).
-fn proxy(router: &ShardRouter, shard: usize, path: &str, body: &Json) -> (u16, Json) {
-    let bytes = body.to_compact().into_bytes();
-    match router.forward(shard, path, &bytes) {
-        Ok(resp) => match std::str::from_utf8(&resp.body).ok().and_then(|t| Json::parse(t).ok()) {
-            Some(json) => (resp.status, json),
-            None => err(ApiError::new(
-                ErrorCode::Upstream,
-                format!("shard {shard} returned an unparseable body"),
-            )),
-        },
-        Err(e) => err(ApiError::new(ErrorCode::Upstream, format!("shard {shard}: {e}"))),
+/// Route a request owned by another shard: proxy when the owner's
+/// breaker admits it, otherwise (or when the hop fails at the
+/// transport layer) serve locally via failover. The classified
+/// transport code is only logged — the caller sees a successful
+/// response either way, which is the §14 availability contract.
+fn route_remote(
+    ctx: &Ctx,
+    router: &ShardRouter,
+    shard: usize,
+    body: &Json,
+    req: &RunRequest,
+    key: &PlanKey,
+) -> (u16, Json) {
+    if router.peer_available(shard) {
+        let bytes = body.to_compact().into_bytes();
+        match router.forward(shard, "/v1/run", &bytes) {
+            Ok(resp) => {
+                return match std::str::from_utf8(&resp.body)
+                    .ok()
+                    .and_then(|t| Json::parse(t).ok())
+                {
+                    Some(json) => (resp.status, json),
+                    // The peer answered garbage: it is alive but broken,
+                    // so failover would mask a real bug. Name it.
+                    None => err(ApiError::new(
+                        ErrorCode::Upstream,
+                        format!("shard {shard} returned an unparseable body"),
+                    )),
+                };
+            }
+            Err(e) => {
+                crate::log_warn!(
+                    "shard {shard} unreachable ({}: {e}); serving locally via failover",
+                    e.code().name()
+                );
+            }
+        }
     }
+    failover_local(ctx, req, key, shard)
+}
+
+/// Serve another shard's key here. Counts the request, and counts a
+/// lowering when the plan is not already memory-warm locally (it will
+/// be found disk-warm or cold-lowered through the shared store — both
+/// produce the bit-identical plan the owner would have served).
+fn failover_local(ctx: &Ctx, req: &RunRequest, key: &PlanKey, _shard: usize) -> (u16, Json) {
+    ctx.fleet.failover_served.fetch_add(1, Ordering::Relaxed);
+    if !ctx.server.pipeline().cache().contains(key) {
+        ctx.fleet.failover_lowerings.fetch_add(1, Ordering::Relaxed);
+    }
+    serve_local(ctx, req)
 }
 
 /// `/v1/batch`: `{"requests": [...]}` or a bare array. Local requests are
 /// all submitted before any wait (so the batcher can coalesce them);
-/// remote ones are proxied. The response is 200 with per-item bodies in
-/// request order — each either a run response or a structured error.
+/// remote ones are proxied (with the same breaker-gated failover as
+/// `/v1/run`). The response is 200 with per-item bodies in request order
+/// — each either a run response or a structured error.
 fn run_batch(ctx: &Ctx, body: &Json, forwarded: bool) -> (u16, Json) {
     let items = match body.get("requests").and_then(Json::as_arr).or_else(|| body.as_arr()) {
         Some(items) => items,
@@ -166,7 +252,7 @@ fn run_batch(ctx: &Ctx, body: &Json, forwarded: bool) -> (u16, Json) {
     enum Pending {
         Done(Json),
         Local(RunRequest, Ticket),
-        Remote(usize, Json),
+        Remote(usize, RunRequest, Json),
     }
     let mut pending = Vec::with_capacity(items.len());
     for item in items {
@@ -182,7 +268,7 @@ fn run_batch(ctx: &Ctx, body: &Json, forwarded: bool) -> (u16, Json) {
                         (shard != r.self_index()).then_some(shard)
                     });
                 match remote {
-                    Some(shard) => pending.push(Pending::Remote(shard, item.clone())),
+                    Some(shard) => pending.push(Pending::Remote(shard, req, item.clone())),
                     None => match submit(ctx, &req) {
                         Ok(t) => pending.push(Pending::Local(req, t)),
                         Err(e) => pending.push(Pending::Done(e.to_json())),
@@ -198,9 +284,10 @@ fn run_batch(ctx: &Ctx, body: &Json, forwarded: bool) -> (u16, Json) {
         .map(|p| match p {
             Pending::Done(json) => json,
             Pending::Local(req, ticket) => finish(ctx, &req, ticket).1,
-            Pending::Remote(shard, item) => {
+            Pending::Remote(shard, req, item) => {
                 let router = ctx.router.as_ref().expect("remote implies router");
-                proxy(router, shard, "/v1/run", &item).1
+                let key = PlanKey::of(&req.spec);
+                route_remote(ctx, router, shard, &item, &req, &key).1
             }
         })
         .collect();

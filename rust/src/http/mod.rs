@@ -20,6 +20,14 @@
 //! processes sharing one `--cache-dir`, proxying misdirected requests one
 //! hop to the owner, so every plan is lowered once per fleet and read
 //! disk-warm everywhere else ([`crate::pipeline::store`]).
+//!
+//! Fleet fault tolerance rides the same layers (DESIGN.md §14): the
+//! client classifies transport failures ([`TransportError`]) and retries
+//! retryable ones under a budgeted [`RetryPolicy`]; the router keeps a
+//! per-peer circuit breaker ([`BreakerState`]) fed by a background
+//! `/v1/healthz` probe thread; and the handlers fail over to local
+//! serving from the shared store when an owner shard is down, so peer
+//! death degrades throughput, never availability.
 
 pub mod client;
 pub mod framing;
@@ -27,6 +35,7 @@ pub mod handlers;
 pub mod router;
 pub mod server;
 
+pub use client::{ClientConfig, RetryPolicy, TransportError};
 pub use framing::{HttpRequest, HttpResponse};
-pub use router::{ShardRouter, FORWARDED_HEADER};
+pub use router::{BreakerState, HealthConfig, PeerState, ShardRouter, FORWARDED_HEADER};
 pub use server::{HttpConfig, HttpServer};

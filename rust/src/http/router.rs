@@ -1,4 +1,4 @@
-//! Shard-aware request routing (DESIGN.md §13).
+//! Shard-aware request routing with per-peer health (DESIGN.md §13–§14).
 //!
 //! N serving processes share one persistent plan store (`--cache-dir`);
 //! each owns a deterministic slice of the spec space so a given plan is
@@ -18,16 +18,145 @@
 //! carries [`FORWARDED_HEADER`] so the owner always handles it locally —
 //! a disagreement about shard maps degrades to one extra hop, never a
 //! proxy loop.
+//!
+//! # Peer health and circuit breakers (§14)
+//!
+//! The static shard map says who *should* serve a key; the per-peer
+//! [`BreakerState`] says who *can* right now. Every peer starts
+//! `Closed`. [`HealthConfig::trip_threshold`] consecutive transport
+//! failures (from proxy hops or the background `/v1/healthz` probe)
+//! trip it `Open`: the peer is not dialed at all and its keys are
+//! served locally via failover (`http::handlers`). After
+//! [`HealthConfig::cooldown`] the breaker admits exactly one trial
+//! request (`HalfOpen`); success closes it, failure re-opens it and
+//! restarts the cooldown. Shedding 429/503s from a live peer do NOT
+//! count as failures — an overloaded peer is alive, and failing over
+//! onto it from here would only move the overload around.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::pipeline::PlanKey;
 use crate::util::json::Json;
 use crate::{Error, Result};
 
-use super::client::{self, ClientConfig};
+use super::client::{self, ClientConfig, RetryPolicy, TransportError};
 use super::framing::HttpResponse;
 
 /// Marks a proxied request; the receiving shard must handle it locally.
 pub const FORWARDED_HEADER: &str = "x-aieblas-forwarded";
+
+/// Circuit-breaker state of one peer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BreakerState {
+    /// Normal: requests flow.
+    #[default]
+    Closed,
+    /// Tripped: the peer is not dialed until the cooldown elapses.
+    Open,
+    /// Cooldown elapsed: exactly one trial request is in flight.
+    HalfOpen,
+}
+
+impl BreakerState {
+    pub fn name(self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half_open",
+        }
+    }
+}
+
+/// Coarse peer condition derived from the breaker, for operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PeerState {
+    /// Breaker closed, no recent failures.
+    Up,
+    /// Failures accumulating or a half-open trial under way.
+    Degraded,
+    /// Breaker open: traffic fails over.
+    Down,
+}
+
+impl PeerState {
+    pub fn name(self) -> &'static str {
+        match self {
+            PeerState::Up => "up",
+            PeerState::Degraded => "degraded",
+            PeerState::Down => "down",
+        }
+    }
+}
+
+/// Breaker tuning; `normalized()` clamps hostile values.
+#[derive(Debug, Clone)]
+pub struct HealthConfig {
+    /// Consecutive transport failures that trip the breaker.
+    pub trip_threshold: u32,
+    /// How long an open breaker waits before admitting a trial.
+    pub cooldown: Duration,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        HealthConfig { trip_threshold: 3, cooldown: Duration::from_millis(500) }
+    }
+}
+
+impl HealthConfig {
+    pub fn normalized(&self) -> HealthConfig {
+        HealthConfig {
+            trip_threshold: self.trip_threshold.clamp(1, 1024),
+            cooldown: self.cooldown.clamp(Duration::from_millis(10), Duration::from_secs(60)),
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+struct PeerHealth {
+    consecutive_failures: u32,
+    breaker: BreakerState,
+    opened_at: Option<Instant>,
+    /// True while the half-open trial is outstanding; other callers see
+    /// the peer as unavailable so one slow trial cannot become many.
+    trial_in_flight: bool,
+}
+
+/// Shared, lock-per-peer health state. Lives behind an `Arc` so every
+/// `ShardRouter` clone (handler contexts, the probe thread) observes
+/// one fleet view.
+#[derive(Debug)]
+struct HealthTable {
+    peers: Vec<Mutex<PeerHealth>>,
+    cfg: HealthConfig,
+    trips: AtomicU64,
+    closes: AtomicU64,
+}
+
+impl HealthTable {
+    fn new(n: usize, cfg: HealthConfig) -> HealthTable {
+        HealthTable {
+            peers: (0..n).map(|_| Mutex::new(PeerHealth::default())).collect(),
+            cfg: cfg.normalized(),
+            trips: AtomicU64::new(0),
+            closes: AtomicU64::new(0),
+        }
+    }
+
+    fn lock(&self, shard: usize) -> std::sync::MutexGuard<'_, PeerHealth> {
+        self.peers[shard].lock().expect("peer health poisoned")
+    }
+}
+
+/// One peer's health, snapshotted for `/v1/healthz`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PeerSnapshot {
+    pub state: PeerState,
+    pub breaker: BreakerState,
+    pub consecutive_failures: u32,
+}
 
 /// The static shard map: every process runs the same peer list in the
 /// same order, differing only in `self_index`.
@@ -36,6 +165,8 @@ pub struct ShardRouter {
     peers: Vec<String>,
     self_index: usize,
     client: ClientConfig,
+    retry: RetryPolicy,
+    health: Arc<HealthTable>,
 }
 
 impl ShardRouter {
@@ -49,7 +180,32 @@ impl ShardRouter {
                 peers.len()
             )));
         }
-        Ok(ShardRouter { peers, self_index, client: ClientConfig::default() })
+        let health = Arc::new(HealthTable::new(peers.len(), HealthConfig::default()));
+        Ok(ShardRouter {
+            peers,
+            self_index,
+            client: ClientConfig::default(),
+            retry: RetryPolicy::default(),
+            health,
+        })
+    }
+
+    /// Replace the breaker tuning (fresh table; call before serving).
+    pub fn with_health(mut self, cfg: HealthConfig) -> ShardRouter {
+        self.health = Arc::new(HealthTable::new(self.peers.len(), cfg));
+        self
+    }
+
+    /// Replace the proxy-hop client config (timeouts, fault plan).
+    pub fn with_client(mut self, client: ClientConfig) -> ShardRouter {
+        self.client = client;
+        self
+    }
+
+    /// Replace the proxy-hop retry policy.
+    pub fn with_retry(mut self, retry: RetryPolicy) -> ShardRouter {
+        self.retry = retry;
+        self
     }
 
     pub fn peers(&self) -> &[String] {
@@ -69,24 +225,172 @@ impl ShardRouter {
         self.shard_of(key) == self.self_index
     }
 
-    /// Proxy a request body one hop to `shard`, tagging it forwarded.
-    pub fn forward(&self, shard: usize, path: &str, body: &[u8]) -> Result<HttpResponse> {
+    /// Whether `shard` should be dialed right now. Open breakers say no
+    /// until their cooldown elapses, then admit exactly one half-open
+    /// trial; the caller that got `true` must report the outcome via
+    /// [`record_success`] / [`record_failure`] or the trial slot leaks
+    /// until the next probe resolves it.
+    ///
+    /// [`record_success`]: ShardRouter::record_success
+    /// [`record_failure`]: ShardRouter::record_failure
+    pub fn peer_available(&self, shard: usize) -> bool {
+        let mut p = self.health.lock(shard);
+        match p.breaker {
+            BreakerState::Closed => true,
+            BreakerState::Open => {
+                let cooled =
+                    p.opened_at.map(|t| t.elapsed() >= self.health.cfg.cooldown).unwrap_or(true);
+                if cooled {
+                    p.breaker = BreakerState::HalfOpen;
+                    p.trial_in_flight = true;
+                    true
+                } else {
+                    false
+                }
+            }
+            BreakerState::HalfOpen => {
+                if p.trial_in_flight {
+                    false
+                } else {
+                    p.trial_in_flight = true;
+                    true
+                }
+            }
+        }
+    }
+
+    /// A dial of `shard` reached the application layer.
+    pub fn record_success(&self, shard: usize) {
+        let mut p = self.health.lock(shard);
+        p.consecutive_failures = 0;
+        p.trial_in_flight = false;
+        if p.breaker != BreakerState::Closed {
+            p.breaker = BreakerState::Closed;
+            p.opened_at = None;
+            self.health.closes.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// A dial of `shard` failed at the transport layer.
+    pub fn record_failure(&self, shard: usize) {
+        let mut p = self.health.lock(shard);
+        p.consecutive_failures = p.consecutive_failures.saturating_add(1);
+        p.trial_in_flight = false;
+        let trip = match p.breaker {
+            BreakerState::Closed => p.consecutive_failures >= self.health.cfg.trip_threshold,
+            BreakerState::HalfOpen => true,
+            BreakerState::Open => false,
+        };
+        if trip {
+            p.breaker = BreakerState::Open;
+            p.opened_at = Some(Instant::now());
+            self.health.trips.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Health snapshot of one peer.
+    pub fn peer_snapshot(&self, shard: usize) -> PeerSnapshot {
+        let p = self.health.lock(shard);
+        let state = match p.breaker {
+            BreakerState::Open => PeerState::Down,
+            BreakerState::HalfOpen => PeerState::Degraded,
+            BreakerState::Closed if p.consecutive_failures > 0 => PeerState::Degraded,
+            BreakerState::Closed => PeerState::Up,
+        };
+        PeerSnapshot { state, breaker: p.breaker, consecutive_failures: p.consecutive_failures }
+    }
+
+    /// Lifetime `(trips, closes)` across all peers.
+    pub fn breaker_counters(&self) -> (u64, u64) {
+        (self.health.trips.load(Ordering::Relaxed), self.health.closes.load(Ordering::Relaxed))
+    }
+
+    /// One background health probe of `shard`: GET `/v1/healthz` with
+    /// tight timeouts, recording the outcome. Probes dial even an open
+    /// breaker — they *are* the recovery path that closes it — and skip
+    /// the fault plan (chaos targets serving traffic; a probe made
+    /// flaky by injection would fight the determinism it exists for).
+    pub fn probe(&self, shard: usize) -> bool {
+        if shard == self.self_index {
+            return true;
+        }
+        let cfg = ClientConfig {
+            connect_timeout: self.client.connect_timeout.min(Duration::from_secs(1)),
+            io_timeout: self.client.io_timeout.min(Duration::from_secs(2)),
+            faults: None,
+            ..self.client.clone()
+        };
+        let ok = matches!(
+            client::request(&self.peers[shard], "GET", "/v1/healthz", None, &[], &cfg),
+            Ok(resp) if resp.status == 200
+        );
+        if ok {
+            self.record_success(shard);
+        } else {
+            self.record_failure(shard);
+        }
+        ok
+    }
+
+    /// Proxy a request body one hop to `shard`, tagging it forwarded,
+    /// with retries (proxied runs are deterministic server-side — a
+    /// duplicate execution costs duplicate work, never a wrong answer —
+    /// so the hop is idempotent). Records breaker health: any parsed
+    /// HTTP response proves the peer alive; transport failures count
+    /// toward the trip threshold.
+    pub fn forward(
+        &self,
+        shard: usize,
+        path: &str,
+        body: &[u8],
+    ) -> std::result::Result<HttpResponse, TransportError> {
         let addr = &self.peers[shard];
-        client::request(addr, "POST", path, Some(body), &[(FORWARDED_HEADER, "1")], &self.client)
+        let result = client::request_with_retry(
+            addr,
+            "POST",
+            path,
+            Some(body),
+            &[(FORWARDED_HEADER, "1")],
+            &self.client,
+            &self.retry,
+            true,
+        );
+        match &result {
+            Ok(_) => self.record_success(shard),
+            Err(_) => self.record_failure(shard),
+        }
+        result
     }
 }
 
-/// Shard-map summary for `/v1/healthz`.
+/// Shard-map summary for `/v1/healthz`: the peer list with per-peer
+/// breaker state, plus this process's index.
 pub fn shards_json(router: Option<&ShardRouter>) -> Json {
+    use crate::util::json::obj;
     match router {
-        None => crate::util::json::obj(vec![
-            ("peers", Json::Arr(vec![])),
-            ("self_index", 0usize.into()),
-        ]),
-        Some(r) => crate::util::json::obj(vec![
+        None => obj(vec![("peers", Json::Arr(vec![])), ("self_index", 0usize.into())]),
+        Some(r) => obj(vec![
             (
                 "peers",
-                Json::Arr(r.peers().iter().map(|p| Json::Str(p.clone())).collect()),
+                Json::Arr(
+                    r.peers()
+                        .iter()
+                        .enumerate()
+                        .map(|(i, p)| {
+                            let snap = r.peer_snapshot(i);
+                            obj(vec![
+                                ("addr", Json::Str(p.clone())),
+                                ("self", (i == r.self_index()).into()),
+                                ("state", snap.state.name().into()),
+                                ("breaker", snap.breaker.name().into()),
+                                (
+                                    "consecutive_failures",
+                                    (snap.consecutive_failures as f64).into(),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
             ),
             ("self_index", r.self_index().into()),
         ]),
@@ -125,5 +429,117 @@ mod tests {
     fn single_peer_owns_everything() {
         let r = ShardRouter::new(vec!["only:1".into()], 0).unwrap();
         assert!(r.is_local(&PlanKey::new("anything")));
+    }
+
+    #[test]
+    fn breaker_trips_after_threshold_and_half_opens_after_cooldown() {
+        let r = ShardRouter::new(vec!["a:1".into(), "b:2".into()], 0)
+            .unwrap()
+            .with_health(HealthConfig {
+                trip_threshold: 2,
+                cooldown: Duration::from_millis(20),
+            });
+        assert!(r.peer_available(1));
+        assert_eq!(r.peer_snapshot(1).state, PeerState::Up);
+
+        r.record_failure(1);
+        assert_eq!(r.peer_snapshot(1).breaker, BreakerState::Closed);
+        assert_eq!(r.peer_snapshot(1).state, PeerState::Degraded);
+        assert!(r.peer_available(1), "one failure under threshold keeps flowing");
+
+        r.record_failure(1);
+        assert_eq!(r.peer_snapshot(1).breaker, BreakerState::Open);
+        assert_eq!(r.peer_snapshot(1).state, PeerState::Down);
+        assert!(!r.peer_available(1), "open breaker blocks immediately");
+        assert_eq!(r.breaker_counters().0, 1);
+
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(r.peer_available(1), "cooldown admits the half-open trial");
+        assert_eq!(r.peer_snapshot(1).breaker, BreakerState::HalfOpen);
+        assert!(!r.peer_available(1), "only one trial at a time");
+
+        // Trial fails: straight back to Open, no threshold needed.
+        r.record_failure(1);
+        assert_eq!(r.peer_snapshot(1).breaker, BreakerState::Open);
+        assert_eq!(r.breaker_counters().0, 2);
+
+        // Next trial succeeds: breaker closes and counts it.
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(r.peer_available(1));
+        r.record_success(1);
+        let snap = r.peer_snapshot(1);
+        assert_eq!(snap.breaker, BreakerState::Closed);
+        assert_eq!(snap.state, PeerState::Up);
+        assert_eq!(snap.consecutive_failures, 0);
+        assert_eq!(r.breaker_counters(), (2, 1));
+    }
+
+    #[test]
+    fn clones_share_one_health_table() {
+        let r = ShardRouter::new(vec!["a:1".into(), "b:2".into()], 0)
+            .unwrap()
+            .with_health(HealthConfig {
+                trip_threshold: 1,
+                cooldown: Duration::from_secs(60),
+            });
+        let clone = r.clone();
+        r.record_failure(1);
+        assert_eq!(clone.peer_snapshot(1).breaker, BreakerState::Open);
+        assert!(!clone.peer_available(1));
+    }
+
+    #[test]
+    fn health_config_clamps_hostile_values() {
+        let cfg = HealthConfig { trip_threshold: 0, cooldown: Duration::ZERO }.normalized();
+        assert_eq!(cfg.trip_threshold, 1);
+        assert!(cfg.cooldown >= Duration::from_millis(10));
+        let cfg = HealthConfig {
+            trip_threshold: u32::MAX,
+            cooldown: Duration::from_secs(1 << 20),
+        }
+        .normalized();
+        assert_eq!(cfg.trip_threshold, 1024);
+        assert!(cfg.cooldown <= Duration::from_secs(60));
+    }
+
+    #[test]
+    fn failed_probe_of_a_dead_peer_counts_toward_the_breaker() {
+        // 203.0.113.0/24 is TEST-NET-3; nothing listens there, but to
+        // keep the test offline-fast we point at a loopback port we
+        // just closed: connect refuses immediately.
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap().to_string();
+        drop(l);
+        let r = ShardRouter::new(vec!["self:1".into(), addr], 0)
+            .unwrap()
+            .with_health(HealthConfig {
+                trip_threshold: 2,
+                cooldown: Duration::from_secs(60),
+            });
+        assert!(r.probe(0), "self-probe is a no-op success");
+        assert!(!r.probe(1));
+        assert!(!r.probe(1));
+        assert_eq!(r.peer_snapshot(1).breaker, BreakerState::Open);
+        assert_eq!(r.breaker_counters().0, 1);
+    }
+
+    #[test]
+    fn shards_json_reports_breaker_per_peer() {
+        let r = ShardRouter::new(vec!["a:1".into(), "b:2".into()], 0)
+            .unwrap()
+            .with_health(HealthConfig {
+                trip_threshold: 1,
+                cooldown: Duration::from_secs(60),
+            });
+        r.record_failure(1);
+        let j = shards_json(Some(&r));
+        let peers = match j.get("peers") {
+            Some(Json::Arr(p)) => p,
+            other => panic!("peers not an array: {other:?}"),
+        };
+        assert_eq!(peers.len(), 2);
+        assert_eq!(peers[0].get("state").and_then(|s| s.as_str()), Some("up"));
+        assert_eq!(peers[1].get("breaker").and_then(|s| s.as_str()), Some("open"));
+        assert_eq!(peers[1].get("state").and_then(|s| s.as_str()), Some("down"));
     }
 }

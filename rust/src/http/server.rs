@@ -7,21 +7,36 @@
 //! reads. The connection count is capped ([`HttpConfig::max_connections`])
 //! and every socket carries a read timeout, so a slow-loris peer costs
 //! one bounded thread, not the listener.
+//!
+//! In fleet mode (a router with >1 peers) the server also runs a
+//! background probe thread that GETs every peer's `/v1/healthz` each
+//! [`HttpConfig::probe_interval`], feeding the router's circuit
+//! breakers so a dead peer is detected even when no traffic routes to
+//! it (DESIGN.md §14). A configured [`FaultPlan`] injects 503 bursts at
+//! accept, read stalls and truncated responses per connection — the
+//! chaos suite's server-side failure modes.
 
-use std::io::BufReader;
+use std::io::{BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::api::{ApiError, ErrorCode};
+use crate::api::{ApiError, ErrorCode, RETRY_AFTER_SECS};
 use crate::serve::RoutineServer;
+use crate::util::faults::{FaultPlan, FaultSite};
 use crate::{Error, Result};
 
-use super::framing::{read_request, write_response, FrameError};
+use super::framing::{read_request, write_response, write_response_with, FrameError};
 use super::handlers::{handle, Ctx};
 use super::router::ShardRouter;
+
+/// `retry-after` header attached to every 429/503 (DESIGN.md §14).
+const RETRY_AFTER_HEADER: &[(&str, &str)] = &[("retry-after", "1")];
+// The literal must track the API constant; a const assert keeps them
+// honest without a runtime format.
+const _: () = assert!(RETRY_AFTER_SECS == 1);
 
 /// HTTP-layer limits. All clamped in [`HttpConfig::normalized`]; hostile
 /// values degrade to the envelope instead of erroring, matching the
@@ -40,6 +55,11 @@ pub struct HttpConfig {
     pub drain_timeout: Duration,
     /// Concurrent-connection cap; excess connections get a 503 and close.
     pub max_connections: usize,
+    /// Period of the background peer-health probe (fleet mode only).
+    pub probe_interval: Duration,
+    /// Server-side chaos hook: 503 bursts at accept, read stalls and
+    /// response truncation per connection. `None` in production.
+    pub faults: Option<FaultPlan>,
 }
 
 impl Default for HttpConfig {
@@ -51,12 +71,16 @@ impl Default for HttpConfig {
             request_timeout: Duration::from_secs(60),
             drain_timeout: Duration::from_secs(5),
             max_connections: 1024,
+            probe_interval: Duration::from_millis(500),
+            faults: None,
         }
     }
 }
 
 impl HttpConfig {
-    fn normalized(self) -> HttpConfig {
+    /// Clamp hostile values to the workable envelope (pub so the CLI
+    /// and the failure-injection suite share one clamping story).
+    pub fn normalized(self) -> HttpConfig {
         HttpConfig {
             max_body: self.max_body.max(1024),
             max_batch_items: self.max_batch_items.max(1),
@@ -66,6 +90,10 @@ impl HttpConfig {
             // cap nothing here.
             drain_timeout: self.drain_timeout,
             max_connections: self.max_connections.max(1),
+            probe_interval: self
+                .probe_interval
+                .clamp(Duration::from_millis(10), Duration::from_secs(60)),
+            faults: self.faults,
         }
     }
 }
@@ -76,6 +104,7 @@ pub struct HttpServer {
     addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
+    probe_thread: Option<JoinHandle<()>>,
     conns: Arc<ConnTracker>,
 }
 
@@ -98,7 +127,13 @@ impl HttpServer {
         let listener = TcpListener::bind(addr)
             .map_err(|e| Error::Runtime(format!("bind {addr}: {e}")))?;
         let local = listener.local_addr().map_err(Error::Io)?;
-        let ctx = Arc::new(Ctx::new(server, router, cfg.normalized()));
+        let cfg = cfg.normalized();
+        let probe_interval = cfg.probe_interval;
+        // The probe thread needs its own router handle; clones share
+        // one health table, so probe results and proxy results land in
+        // the same breakers.
+        let probe_router = router.clone();
+        let ctx = Arc::new(Ctx::new(server, router, cfg));
         let stop = Arc::new(AtomicBool::new(false));
         let conns = Arc::new(ConnTracker {
             live: AtomicUsize::new(0),
@@ -113,7 +148,27 @@ impl HttpServer {
             .spawn(move || accept_loop(listener, accept_ctx, accept_stop, accept_conns))
             .map_err(Error::Io)?;
 
-        Ok(HttpServer { ctx, addr: local, stop, accept_thread: Some(accept_thread), conns })
+        let probe_thread = match probe_router {
+            Some(router) if router.peers().len() > 1 => {
+                let probe_stop = stop.clone();
+                Some(
+                    std::thread::Builder::new()
+                        .name("http-probe".into())
+                        .spawn(move || probe_loop(router, probe_stop, probe_interval))
+                        .map_err(Error::Io)?,
+                )
+            }
+            _ => None,
+        };
+
+        Ok(HttpServer {
+            ctx,
+            addr: local,
+            stop,
+            accept_thread: Some(accept_thread),
+            probe_thread,
+            conns,
+        })
     }
 
     /// The bound address (resolves port 0).
@@ -149,6 +204,9 @@ impl HttpServer {
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
+        if let Some(t) = self.probe_thread.take() {
+            let _ = t.join();
+        }
         let handles: Vec<JoinHandle<()>> =
             std::mem::take(&mut *self.conns.handles.lock().expect("conn handles poisoned"));
         for h in handles {
@@ -160,6 +218,31 @@ impl HttpServer {
 impl Drop for HttpServer {
     fn drop(&mut self) {
         self.stop_listener();
+    }
+}
+
+/// Background peer-health loop: probe every non-self peer once per
+/// interval, sleeping in short slices so shutdown never waits out a
+/// long interval.
+fn probe_loop(router: ShardRouter, stop: Arc<AtomicBool>, interval: Duration) {
+    while !stop.load(Ordering::SeqCst) {
+        for shard in 0..router.peers().len() {
+            if stop.load(Ordering::SeqCst) {
+                return;
+            }
+            if shard != router.self_index() {
+                router.probe(shard);
+            }
+        }
+        let mut slept = Duration::ZERO;
+        while slept < interval {
+            if stop.load(Ordering::SeqCst) {
+                return;
+            }
+            let step = Duration::from_millis(20).min(interval - slept);
+            std::thread::sleep(step);
+            slept += step;
+        }
     }
 }
 
@@ -177,10 +260,30 @@ fn accept_loop(
             Ok(s) => s,
             Err(_) => continue,
         };
+        if let Some(faults) = &ctx.cfg.faults {
+            if faults.fire(FaultSite::Http503Burst) {
+                let e = ApiError::new(ErrorCode::ShedDraining, "injected 503 burst");
+                let mut s = stream;
+                let _ = write_response_with(
+                    &mut s,
+                    503,
+                    e.to_json().to_compact().as_bytes(),
+                    false,
+                    RETRY_AFTER_HEADER,
+                );
+                continue;
+            }
+        }
         if conns.live.load(Ordering::SeqCst) >= ctx.cfg.max_connections {
             let e = ApiError::new(ErrorCode::ShedDraining, "connection limit reached");
             let mut s = stream;
-            let _ = write_response(&mut s, 503, e.to_json().to_compact().as_bytes(), false);
+            let _ = write_response_with(
+                &mut s,
+                503,
+                e.to_json().to_compact().as_bytes(),
+                false,
+                RETRY_AFTER_HEADER,
+            );
             continue;
         }
         conns.live.fetch_add(1, Ordering::SeqCst);
@@ -209,7 +312,8 @@ fn accept_loop(
 /// One connection's request loop: frame, handle, respond, repeat while
 /// keep-alive holds. Framing failures answer with a structured error
 /// where the stream is still coherent (oversized body, malformed head)
-/// and close either way.
+/// and close either way. Every 429/503 carries `retry-after` so
+/// well-behaved clients back off instead of hammering.
 fn serve_connection(stream: TcpStream, ctx: &Ctx, stop: &AtomicBool) {
     let _ = stream.set_read_timeout(Some(ctx.cfg.read_timeout));
     let _ = stream.set_write_timeout(Some(ctx.cfg.read_timeout));
@@ -224,9 +328,32 @@ fn serve_connection(stream: TcpStream, ctx: &Ctx, stop: &AtomicBool) {
         match read_request(&mut reader, ctx.cfg.max_body) {
             Ok(req) => {
                 let keep_alive = req.keep_alive() && !stop.load(Ordering::SeqCst);
+                if let Some(faults) = &ctx.cfg.faults {
+                    if faults.fire(FaultSite::ReadStall) {
+                        // Injected slow peer: hold the parsed request
+                        // before handling it.
+                        std::thread::sleep(faults.stall());
+                    }
+                }
                 let (status, body) = handle(ctx, &req);
                 let bytes = body.to_compact().into_bytes();
-                if write_response(&mut writer, status, &bytes, keep_alive).is_err() {
+                if let Some(faults) = &ctx.cfg.faults {
+                    if faults.fire(FaultSite::ResponseTruncate) {
+                        // Serialize the full frame, send half, close:
+                        // the client must classify this as truncation.
+                        let mut frame = Vec::new();
+                        let _ = write_response(&mut frame, status, &bytes, false);
+                        let _ = writer.write_all(&frame[..frame.len() / 2]);
+                        let _ = writer.flush();
+                        return;
+                    }
+                }
+                let extra: &[(&str, &str)] = if status == 429 || status == 503 {
+                    RETRY_AFTER_HEADER
+                } else {
+                    &[]
+                };
+                if write_response_with(&mut writer, status, &bytes, keep_alive, extra).is_err() {
                     return;
                 }
                 if !keep_alive {

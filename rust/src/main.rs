@@ -77,7 +77,13 @@ fn app() -> App {
                 .opt_default("max-body-kib", "4096", "largest request body accepted, KiB")
                 .opt_default("read-timeout-ms", "10000", "per-socket read timeout")
                 .opt_default("request-timeout-ms", "60000", "bound on one request's serving wait")
-                .opt_default("drain-timeout-ms", "5000", "default /v1/drain (and shutdown) bound"),
+                .opt_default("drain-timeout-ms", "5000", "default /v1/drain (and shutdown) bound")
+                .opt_default("probe-interval-ms", "500", "peer health-probe cadence (fleets only)")
+                .opt(
+                    "fault-plan",
+                    "deterministic fault injection, e.g. seed=42,connect_refuse=0.1 \
+                     (overrides AIEBLAS_FAULT_PLAN)",
+                ),
         )
         .command(
             Command::new("serve-bench", "drive the serving layer with a synthetic workload")
@@ -93,6 +99,11 @@ fn app() -> App {
                 .opt_default("policy", "block", "admission policy: block | reject | watermark:<n>")
                 .opt("metrics-json", "write the batched run's ServeReport JSON to this path")
                 .opt("cache-dir", "persistent plan-store directory shared across runs")
+                .opt(
+                    "fault-plan",
+                    "deterministic fault injection for the plan store, e.g. \
+                     seed=42,store_write_fail=0.2 (overrides AIEBLAS_FAULT_PLAN)",
+                )
                 .flag(
                     "assert-warm",
                     "fail unless every run was served warm (zero lowerings, >0 disk hits)",
@@ -308,9 +319,10 @@ fn serve_cmd(m: &Matches) -> CliResult {
 
     use aieblas::arch::ArchConfig;
     use aieblas::http::{HttpConfig, HttpServer, ShardRouter};
-    use aieblas::pipeline::Pipeline;
+    use aieblas::pipeline::{Pipeline, PlanStore};
     use aieblas::runtime::{Backend, CpuBackend, ReferenceBackend, SimBackend};
     use aieblas::serve::{AdmissionPolicy, RoutineServer, ServeConfig};
+    use aieblas::util::faults::FaultPlan;
 
     let listen = m.get("listen").unwrap().to_string();
     let policy_str = m.get("policy").unwrap().to_string();
@@ -335,9 +347,23 @@ fn serve_cmd(m: &Matches) -> CliResult {
         }
     };
 
+    // flag wins over AIEBLAS_FAULT_PLAN; a present-but-invalid plan is an
+    // error either way (silently serving un-faulted would defeat a chaos run).
+    let faults = match m.get("fault-plan") {
+        Some(spec) => Some(FaultPlan::parse(spec)?),
+        None => FaultPlan::from_env()?,
+    };
+    if let Some(f) = &faults {
+        eprintln!("fault injection active: {}", f.to_json().to_compact());
+    }
+
     let mut pipeline = Pipeline::new(ArchConfig::vck5000());
     if let Some(dir) = m.get("cache-dir") {
-        pipeline = pipeline.with_disk_store(Path::new(dir));
+        let mut store = PlanStore::open(Path::new(dir));
+        if let Some(f) = &faults {
+            store = store.with_faults(f.clone());
+        }
+        pipeline = pipeline.with_store(store);
     }
     let serve_cfg = ServeConfig::builder()
         .max_batch(m.usize("batch")?)
@@ -352,6 +378,8 @@ fn serve_cmd(m: &Matches) -> CliResult {
         read_timeout: Duration::from_millis(m.usize("read-timeout-ms")? as u64),
         request_timeout: Duration::from_millis(m.usize("request-timeout-ms")? as u64),
         drain_timeout: Duration::from_millis(m.usize("drain-timeout-ms")? as u64),
+        probe_interval: Duration::from_millis(m.usize("probe-interval-ms")? as u64),
+        faults,
         ..Default::default()
     };
     let http = HttpServer::bind(&listen, server, router, http_cfg)?;
@@ -488,10 +516,11 @@ fn serve_bench(m: &Matches) -> CliResult {
     use std::time::Duration;
 
     use aieblas::arch::ArchConfig;
-    use aieblas::pipeline::Pipeline;
+    use aieblas::pipeline::{Pipeline, PlanStore};
     use aieblas::runtime::{
         Backend, CpuBackend, ExecInputs, ReferenceBackend, ShardedBackend, SimBackend,
     };
+    use aieblas::util::faults::FaultPlan;
     use aieblas::serve::{AdmissionPolicy, RoutineServer, ServeConfig, ServeReport};
     use aieblas::spec::DataSource;
 
@@ -513,6 +542,10 @@ fn serve_bench(m: &Matches) -> CliResult {
     if assert_warm && cache_dir.is_none() {
         return Err("--assert-warm needs --cache-dir".into());
     }
+    let faults = match m.get("fault-plan") {
+        Some(spec) => Some(FaultPlan::parse(spec)?),
+        None => FaultPlan::from_env()?,
+    };
 
     let specs: Vec<Spec> = (0..distinct)
         .map(|i| Spec::single(RoutineKind::Axpy, &format!("r{i}"), size, DataSource::Pl))
@@ -536,7 +569,11 @@ fn serve_bench(m: &Matches) -> CliResult {
     let run = |max_batch: usize, linger: Duration| -> Result<ServeReport, String> {
         let mut pipeline = Pipeline::new(ArchConfig::vck5000());
         if let Some(dir) = &cache_dir {
-            pipeline = pipeline.with_disk_store(dir);
+            let mut store = PlanStore::open(dir);
+            if let Some(f) = &faults {
+                store = store.with_faults(f.clone());
+            }
+            pipeline = pipeline.with_store(store);
         }
         let server = RoutineServer::new(
             Arc::new(pipeline),

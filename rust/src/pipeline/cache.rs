@@ -143,6 +143,12 @@ pub struct CacheStats {
     /// Tuned plans served from cache or disk without re-running the
     /// search (the warm-start path the persisted `tuned` field buys).
     pub tune_skipped: u64,
+    /// Stale temp files swept by `PlanStore::open` — crashed-writer
+    /// litter older than the sweep grace window (DESIGN.md §14).
+    pub tmp_swept: u64,
+    /// Store write-throughs that failed; the plan stayed memory-cached
+    /// and serving continued (degraded persistence, not an error).
+    pub store_fallbacks: u64,
 }
 
 impl CacheStats {
@@ -312,6 +318,8 @@ pub struct PlanCache {
     rejected: AtomicU64,
     tuned: AtomicU64,
     tune_skipped: AtomicU64,
+    tmp_swept: AtomicU64,
+    store_fallbacks: AtomicU64,
 }
 
 impl PlanCache {
@@ -340,6 +348,8 @@ impl PlanCache {
             rejected: AtomicU64::new(0),
             tuned: AtomicU64::new(0),
             tune_skipped: AtomicU64::new(0),
+            tmp_swept: AtomicU64::new(0),
+            store_fallbacks: AtomicU64::new(0),
         }
     }
 
@@ -414,6 +424,28 @@ impl PlanCache {
         self.tune_skipped.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record stale temp files swept by `PlanStore::open` (attached at
+    /// `Pipeline::with_store` time, once per store).
+    pub(crate) fn record_tmp_swept(&self, n: u64) {
+        if n > 0 {
+            self.tmp_swept.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Record a failed store write-through that fell back to memory-only
+    /// caching.
+    pub(crate) fn record_store_fallback(&self) {
+        self.store_fallbacks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Non-recording membership probe: no hit counted, no LRU refresh.
+    /// Observability only — the HTTP failover path uses it to classify
+    /// a failover as duplicate-lowering work vs already-warm; using
+    /// [`PlanCache::get`] there would skew `hits` and the LRU order.
+    pub fn contains(&self, key: &PlanKey) -> bool {
+        self.stripe(key).inner.lock().expect("plan cache poisoned").map.contains_key(key)
+    }
+
     /// Insert a freshly lowered plan, evicting the least recently used
     /// entry **within the key's stripe** when that stripe is at capacity.
     pub fn insert(&self, key: PlanKey, plan: Arc<ExecutablePlan>) {
@@ -460,6 +492,8 @@ impl PlanCache {
         self.rejected.store(0, Ordering::Relaxed);
         self.tuned.store(0, Ordering::Relaxed);
         self.tune_skipped.store(0, Ordering::Relaxed);
+        self.tmp_swept.store(0, Ordering::Relaxed);
+        self.store_fallbacks.store(0, Ordering::Relaxed);
     }
 
     /// Aggregate counters: per-stripe hit/eviction atomics summed with
@@ -484,6 +518,8 @@ impl PlanCache {
             rejected: self.rejected.load(Ordering::Relaxed),
             tuned: self.tuned.load(Ordering::Relaxed),
             tune_skipped: self.tune_skipped.load(Ordering::Relaxed),
+            tmp_swept: self.tmp_swept.load(Ordering::Relaxed),
+            store_fallbacks: self.store_fallbacks.load(Ordering::Relaxed),
         }
     }
 
@@ -601,6 +637,8 @@ mod tests {
         cache.record_rejected();
         cache.record_tuned();
         cache.record_tune_skipped();
+        cache.record_tmp_swept(2);
+        cache.record_store_fallback();
         let s = cache.stats();
         assert!(
             s.hits > 0
@@ -611,7 +649,9 @@ mod tests {
                 && s.disk_writes > 0
                 && s.rejected > 0
                 && s.tuned > 0
-                && s.tune_skipped > 0,
+                && s.tune_skipped > 0
+                && s.tmp_swept > 0
+                && s.store_fallbacks > 0,
             "precondition: every counter nonzero, got {s:?}"
         );
         cache.reset_stats();
@@ -621,6 +661,32 @@ mod tests {
             CacheStats::default(),
             "reset_stats + clear must zero every field, not just hits/misses"
         );
+    }
+
+    #[test]
+    fn contains_probes_without_recording() {
+        let cache = PlanCache::new(4);
+        cache.insert("a".into(), plan_for(64));
+        let before = cache.stats();
+        assert!(cache.contains(&"a".into()));
+        assert!(!cache.contains(&"missing".into()));
+        // neither probe moved any counter (no hit, no miss).
+        assert_eq!(cache.stats(), before);
+    }
+
+    #[test]
+    fn contains_does_not_refresh_lru_order() {
+        // single-stripe cache of 2: inserting c must evict the true LRU
+        // (a), even though contains() probed a just before.
+        let cache = PlanCache::new(2);
+        assert_eq!(cache.stripe_count(), 1);
+        cache.insert("a".into(), plan_for(64));
+        cache.insert("b".into(), plan_for(64));
+        assert!(cache.contains(&"a".into()));
+        cache.insert("c".into(), plan_for(64));
+        assert!(!cache.contains(&"a".into()), "a stays LRU despite the probe");
+        assert!(cache.contains(&"b".into()));
+        assert!(cache.contains(&"c".into()));
     }
 
     #[test]

@@ -279,8 +279,17 @@ impl Pipeline {
     /// Attach an on-disk [`PlanStore`] under `dir` (builder-style): cold
     /// lowerings lazily load persisted plans written by earlier processes
     /// (counted as `disk_hits`) and successful lowerings write through.
-    pub fn with_disk_store(mut self, dir: impl Into<PathBuf>) -> Pipeline {
-        self.store = Some(PlanStore::new(dir));
+    pub fn with_disk_store(self, dir: impl Into<PathBuf>) -> Pipeline {
+        self.with_store(PlanStore::open(dir))
+    }
+
+    /// Attach an already-constructed [`PlanStore`] (builder-style). Lets
+    /// callers pick the open mode — crash-recovery sweep, sweep grace,
+    /// fault injection — before handing the store over; the store's sweep
+    /// count is folded into this pipeline's cache stats as `tmp_swept`.
+    pub fn with_store(mut self, store: PlanStore) -> Pipeline {
+        self.cache.record_tmp_swept(store.swept());
+        self.store = Some(store);
         self
     }
 
@@ -414,6 +423,10 @@ impl Pipeline {
                     match store.save_tuned(key, &self.fingerprint, &plan, tuned.as_ref()) {
                         Ok(()) => self.cache.record_disk_write(),
                         Err(e) => {
+                            // the plan stays memory-resident either way:
+                            // count the fallback so operators can see a
+                            // store going dark (DESIGN.md §14).
+                            self.cache.record_store_fallback();
                             crate::log_warn!("plan store write-through failed: {e}")
                         }
                     }

@@ -22,6 +22,7 @@
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::time::{Duration, SystemTime};
 
 use super::{ExecutablePlan, PlacedGraph, PlanKey, RoutinePlan};
 use crate::arch::ArchConfig;
@@ -32,6 +33,7 @@ use crate::graph::place::{Location, Placement};
 use crate::graph::route::{check_routing, RoutedEdge, Routing};
 use crate::graph::{EdgeKind, Graph, NodeKind};
 use crate::spec::Spec;
+use crate::util::faults::{FaultPlan, FaultSite};
 use crate::util::fnv1a64;
 use crate::util::json::{obj, Json};
 use crate::{Error, Result};
@@ -43,6 +45,14 @@ pub const FORMAT_VERSION: u64 = 2;
 
 /// Filename suffix for store entries.
 const ENTRY_SUFFIX: &str = ".plan.json";
+
+/// How old a leftover `.tmp` file must be before [`PlanStore::open`] sweeps
+/// it. A writer crashes between `fs::write` and `fs::rename` rarely but
+/// predictably under chaos testing; the grace window keeps a sweep in one
+/// process from racing a *live* writer in another process sharing the
+/// directory (a healthy write-then-rename completes in well under a
+/// minute — usually milliseconds).
+pub const TMP_SWEEP_GRACE: Duration = Duration::from_secs(60);
 
 /// Fingerprint of a pipeline configuration: a hash of the default
 /// architecture's canonical JSON. Two pipelines share plans on disk iff
@@ -107,11 +117,55 @@ pub struct StoreStats {
 #[derive(Debug, Clone)]
 pub struct PlanStore {
     dir: PathBuf,
+    /// Stale temp files removed by the crash-recovery sweep at open time.
+    swept: u64,
+    /// Optional deterministic fault injection (chaos testing only).
+    faults: Option<FaultPlan>,
 }
 
 impl PlanStore {
+    /// A store handle with **no** crash-recovery sweep. Prefer
+    /// [`PlanStore::open`] for long-lived stores; `new` is for short-lived
+    /// handles (CLI inspection, tests) that must not race live writers.
     pub fn new(dir: impl Into<PathBuf>) -> PlanStore {
-        PlanStore { dir: dir.into() }
+        PlanStore {
+            dir: dir.into(),
+            swept: 0,
+            faults: None,
+        }
+    }
+
+    /// Open a store for serving: like [`PlanStore::new`], plus a one-shot
+    /// crash-recovery sweep that removes temp files a crashed writer left
+    /// behind, provided they are at least [`TMP_SWEEP_GRACE`] old (younger
+    /// temps may belong to a live writer in another process).
+    pub fn open(dir: impl Into<PathBuf>) -> PlanStore {
+        PlanStore::open_with_grace(dir, TMP_SWEEP_GRACE)
+    }
+
+    /// [`PlanStore::open`] with an explicit grace window (tests use
+    /// `Duration::ZERO` to sweep unconditionally).
+    pub fn open_with_grace(dir: impl Into<PathBuf>, grace: Duration) -> PlanStore {
+        let dir = dir.into();
+        let swept = sweep_stale_tmps(&dir, grace);
+        PlanStore {
+            dir,
+            swept,
+            faults: None,
+        }
+    }
+
+    /// Attach a fault plan; subsequent [`PlanStore::save`] calls may fail
+    /// with an injected error at the `store_write_fail` site.
+    pub fn with_faults(mut self, faults: FaultPlan) -> PlanStore {
+        self.faults = Some(faults);
+        self
+    }
+
+    /// Stale temp files removed when this store was opened (0 for
+    /// [`PlanStore::new`], which never sweeps).
+    pub fn swept(&self) -> u64 {
+        self.swept
     }
 
     pub fn dir(&self) -> &Path {
@@ -158,6 +212,13 @@ impl PlanStore {
         plan: &ExecutablePlan,
         tuned: Option<&TunedEntry>,
     ) -> Result<()> {
+        if let Some(f) = &self.faults {
+            if f.fire(FaultSite::StoreWriteFail) {
+                return Err(Error::Runtime(
+                    "plan store write failed (injected fault)".into(),
+                ));
+            }
+        }
         std::fs::create_dir_all(&self.dir)?;
         let entry = obj(vec![
             ("format_version", (FORMAT_VERSION as usize).into()),
@@ -233,6 +294,36 @@ impl PlanStore {
         paths.sort();
         paths
     }
+}
+
+/// Crash recovery: remove dot-prefixed `.tmp` files at least `grace` old,
+/// returning how many were deleted. Best-effort throughout — an unreadable
+/// directory, missing mtime, or racing unlink just skips that file; the
+/// sweep is hygiene, never a correctness dependency.
+fn sweep_stale_tmps(dir: &Path, grace: Duration) -> u64 {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return 0;
+    };
+    let now = SystemTime::now();
+    let mut swept = 0;
+    for path in entries.filter_map(|e| e.ok()).map(|e| e.path()) {
+        let is_tmp = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .is_some_and(|n| n.starts_with('.') && n.ends_with(".tmp"));
+        if !is_tmp {
+            continue;
+        }
+        let stale = std::fs::metadata(&path)
+            .and_then(|m| m.modified())
+            .ok()
+            .and_then(|mtime| now.duration_since(mtime).ok())
+            .is_some_and(|age| age >= grace);
+        if stale && std::fs::remove_file(&path).is_ok() {
+            swept += 1;
+        }
+    }
+    swept
 }
 
 /// Parse + validate one entry document against the expected key and
@@ -825,6 +916,46 @@ mod tests {
             LoadOutcome::Loaded(_, Some(back)) => assert_eq!(back, tuned),
             other => panic!("expected tuned Loaded, got {other:?}"),
         }
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn open_sweeps_stale_tmps_but_spares_fresh_ones() {
+        let dir = tmp_store("sweep").dir().to_path_buf();
+        std::fs::create_dir_all(&dir).unwrap();
+        let tmp = dir.join(".00000000deadbeef.1.tmp");
+        std::fs::write(&tmp, "half-written entry").unwrap();
+        // just-written tmp is younger than the default grace: survives.
+        let fresh = PlanStore::open(&dir);
+        assert_eq!(fresh.swept(), 0);
+        assert!(tmp.exists(), "fresh tmp must survive the graced sweep");
+        // zero grace: the same tmp is stale by definition and is removed.
+        let swept = PlanStore::open_with_grace(&dir, Duration::ZERO);
+        assert_eq!(swept.swept(), 1);
+        assert!(!tmp.exists(), "zero-grace sweep must remove the tmp");
+        // entries and non-dot files are never touched by the sweep.
+        let entry = dir.join(format!("{:016x}{ENTRY_SUFFIX}", 7u64));
+        std::fs::write(&entry, "{}").unwrap();
+        assert_eq!(PlanStore::open_with_grace(&dir, Duration::ZERO).swept(), 0);
+        assert!(entry.exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn injected_store_write_fault_fails_save_deterministically() {
+        let store = tmp_store("faulty");
+        let faulty = store
+            .clone()
+            .with_faults(FaultPlan::parse("seed=7,store_write_fail=1.0").unwrap());
+        let spec = Spec::single(RoutineKind::Scal, "s", 1024, DataSource::Pl);
+        let plan = lowered(&spec);
+        let fp = arch_fingerprint(&ArchConfig::vck5000());
+        let err = faulty.save(&PlanKey::of(&spec), &fp, &plan).unwrap_err();
+        assert!(err.to_string().contains("injected fault"), "got: {err}");
+        assert_eq!(faulty.stats().entries, 0, "injected failure writes nothing");
+        // the un-faulted handle on the same directory still works.
+        store.save(&PlanKey::of(&spec), &fp, &plan).unwrap();
+        assert_eq!(store.stats().entries, 1);
         let _ = std::fs::remove_dir_all(store.dir());
     }
 

@@ -328,6 +328,16 @@ pub struct ServeMetrics {
     pub pool_workers: usize,
     pub pool_min_workers: usize,
     pub pool_max_workers: usize,
+    /// Requests this process answered locally because the owning shard's
+    /// circuit breaker was open (HTTP layer; DESIGN.md §14).
+    pub failover_served: u64,
+    /// Failover requests that also had to lower the plan locally (neither
+    /// the memory cache nor the shared store had it warm).
+    pub failover_lowerings: u64,
+    /// Peer circuit breakers tripped open (HTTP layer).
+    pub breaker_trips: u64,
+    /// Peer circuit breakers closed again after a successful trial.
+    pub breaker_closes: u64,
     /// One entry per priority class (High, Normal, Background).
     pub priorities: Vec<PriorityLatency>,
     /// Completions per tenant (at most `TENANT_METRIC_CAP` + `<other>`).
@@ -380,6 +390,10 @@ impl ServeMetrics {
             ("pool_workers", self.pool_workers.into()),
             ("pool_min_workers", self.pool_min_workers.into()),
             ("pool_max_workers", self.pool_max_workers.into()),
+            ("failover_served", (self.failover_served as f64).into()),
+            ("failover_lowerings", (self.failover_lowerings as f64).into()),
+            ("breaker_trips", (self.breaker_trips as f64).into()),
+            ("breaker_closes", (self.breaker_closes as f64).into()),
             ("priorities", priorities),
             ("tenants", tenants),
         ])
@@ -450,6 +464,12 @@ impl ServeReport {
                 self.cache.tuned, self.cache.tune_skipped
             ));
         }
+        if self.cache.tmp_swept + self.cache.store_fallbacks > 0 {
+            s.push_str(&format!(
+                "\nstore recovery: {} stale tmp(s) swept at open, {} write fallback(s)",
+                self.cache.tmp_swept, self.cache.store_fallbacks
+            ));
+        }
         let m = &self.metrics;
         if m.shed_total() > 0 || m.deadline_missed > 0 || m.drain_purged > 0 {
             s.push_str(&format!(
@@ -473,6 +493,16 @@ impl ServeReport {
                 m.pool_max_workers,
                 m.pool_grown,
                 m.pool_shrunk,
+            ));
+        }
+        if m.failover_served + m.breaker_trips + m.breaker_closes > 0 {
+            s.push_str(&format!(
+                "\nfleet: {} failover request(s) ({} lowered locally), \
+                 breaker tripped {} time(s), closed {} time(s)",
+                m.failover_served,
+                m.failover_lowerings,
+                m.breaker_trips,
+                m.breaker_closes,
             ));
         }
         let classes_used = m.priorities.iter().filter(|p| p.completed > 0).count();
@@ -502,6 +532,8 @@ impl ServeReport {
             ("rejected", (self.cache.rejected as f64).into()),
             ("tuned", (self.cache.tuned as f64).into()),
             ("tune_skipped", (self.cache.tune_skipped as f64).into()),
+            ("tmp_swept", (self.cache.tmp_swept as f64).into()),
+            ("store_fallbacks", (self.cache.store_fallbacks as f64).into()),
         ]);
         obj(vec![
             ("requests", (self.requests as f64).into()),
@@ -571,6 +603,12 @@ pub(crate) fn build_report(
         pool_workers: pool.active.load(Ordering::Relaxed),
         pool_min_workers: cfg.min_workers,
         pool_max_workers: cfg.max_workers,
+        // fleet counters live in the HTTP layer; `http::handlers::statsz`
+        // overlays them onto this report before serializing.
+        failover_served: 0,
+        failover_lowerings: 0,
+        breaker_trips: 0,
+        breaker_closes: 0,
         priorities,
         tenants,
     };

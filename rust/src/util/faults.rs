@@ -1,0 +1,324 @@
+//! Deterministic fault injection for the serving fleet (DESIGN.md §14).
+//!
+//! A [`FaultPlan`] is a seeded, shareable source of "should this site
+//! fail now?" decisions, threaded through the HTTP client (connect
+//! refusal), the server accept loop (503 bursts), the per-connection
+//! path (read stalls, truncated responses) and [`PlanStore`] writes.
+//! Decisions come from the crate's deterministic [`Rng`], so a fixed
+//! seed replays the exact same fault sequence — the chaos suite and
+//! `tools/http_smoke.py` rely on that to make outage tests reproducible
+//! instead of flaky.
+//!
+//! Plans are parsed from a compact spec string (CLI `--fault-plan` or
+//! the `AIEBLAS_FAULT_PLAN` env var):
+//!
+//! ```text
+//! seed=42,connect_refuse=0.1,read_stall_ms=50,response_truncate=0.05,
+//! http_503=0.2,store_write_fail=0.5
+//! ```
+//!
+//! Unknown keys and non-numeric values are hard errors (a typo silently
+//! disabling chaos would defeat the point); out-of-range numbers are
+//! clamped (probabilities to `[0, 1]`, the stall to at most
+//! [`MAX_STALL`]) so hostile values degrade to the nearest sane plan.
+//!
+//! [`PlanStore`]: crate::pipeline::PlanStore
+//! [`Rng`]: crate::util::rng::Rng
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+use crate::{Error, Result};
+
+/// Environment variable consulted by [`FaultPlan::from_env`].
+pub const FAULT_PLAN_ENV: &str = "AIEBLAS_FAULT_PLAN";
+
+/// Ceiling for `read_stall_ms` (hostile-value clamp): long enough to
+/// trip any sane read timeout, short enough that a test can wait it out.
+pub const MAX_STALL: Duration = Duration::from_secs(5);
+
+/// Where a fault can be injected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Client side: fail the connect as if the peer refused it.
+    ConnectRefuse,
+    /// Server side: stall before handling a parsed request.
+    ReadStall,
+    /// Server side: write only half the response frame, then close.
+    ResponseTruncate,
+    /// Accept loop: answer the connection with a bare 503 burst.
+    Http503Burst,
+    /// Plan store: fail the write-through before touching disk.
+    StoreWriteFail,
+}
+
+impl FaultSite {
+    pub const ALL: [FaultSite; 5] = [
+        FaultSite::ConnectRefuse,
+        FaultSite::ReadStall,
+        FaultSite::ResponseTruncate,
+        FaultSite::Http503Burst,
+        FaultSite::StoreWriteFail,
+    ];
+
+    /// Spec-string key (also the wire name in `to_json`).
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::ConnectRefuse => "connect_refuse",
+            FaultSite::ReadStall => "read_stall",
+            FaultSite::ResponseTruncate => "response_truncate",
+            FaultSite::Http503Burst => "http_503",
+            FaultSite::StoreWriteFail => "store_write_fail",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            FaultSite::ConnectRefuse => 0,
+            FaultSite::ReadStall => 1,
+            FaultSite::ResponseTruncate => 2,
+            FaultSite::Http503Burst => 3,
+            FaultSite::StoreWriteFail => 4,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Inner {
+    seed: u64,
+    /// Per-site injection probability, clamped to `[0, 1]`.
+    probs: [f64; 5],
+    /// Sleep applied when a `ReadStall` fires.
+    stall: Duration,
+    rng: Mutex<Rng>,
+    /// Faults actually injected, per site (observability; surfaced on
+    /// `/v1/healthz` when a plan is active).
+    injected: [AtomicU64; 5],
+}
+
+/// A shared, seeded fault schedule. Cloning shares the underlying RNG
+/// and counters, so one plan threaded through client + server + store
+/// draws a single deterministic decision sequence.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    inner: Arc<Inner>,
+}
+
+impl FaultPlan {
+    /// Parse a `key=value,key=value` spec. See the module docs for the
+    /// grammar; an empty spec yields an inert plan.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut seed = 0u64;
+        let mut probs = [0.0f64; 5];
+        let mut stall = Duration::from_millis(50);
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, value) = part.split_once('=').ok_or_else(|| {
+                Error::Runtime(format!("fault plan: expected key=value, got {part:?}"))
+            })?;
+            let (key, value) = (key.trim(), value.trim());
+            if key == "seed" {
+                seed = value.parse().map_err(|_| {
+                    Error::Runtime(format!("fault plan: seed must be a u64, got {value:?}"))
+                })?;
+                continue;
+            }
+            let num: f64 = value.parse().map_err(|_| {
+                Error::Runtime(format!("fault plan: {key} must be numeric, got {value:?}"))
+            })?;
+            if !num.is_finite() {
+                return Err(Error::Runtime(format!("fault plan: {key} must be finite")));
+            }
+            if key == "read_stall_ms" {
+                // Clamp, don't reject: a hostile 10^12 ms stall becomes
+                // the max testable stall rather than a wedged server.
+                let ms = num.clamp(0.0, MAX_STALL.as_millis() as f64);
+                stall = Duration::from_millis(ms as u64);
+                continue;
+            }
+            let site = FaultSite::ALL
+                .iter()
+                .find(|s| s.name() == key)
+                .ok_or_else(|| Error::Runtime(format!("fault plan: unknown key {key:?}")))?;
+            probs[site.index()] = num.clamp(0.0, 1.0);
+        }
+        Ok(FaultPlan {
+            inner: Arc::new(Inner {
+                seed,
+                probs,
+                stall,
+                rng: Mutex::new(Rng::new(seed)),
+                injected: Default::default(),
+            }),
+        })
+    }
+
+    /// Plan from `AIEBLAS_FAULT_PLAN`, if set. A present-but-invalid
+    /// spec is an error — silently ignoring it would un-inject the
+    /// chaos a test asked for.
+    pub fn from_env() -> Result<Option<FaultPlan>> {
+        match std::env::var(FAULT_PLAN_ENV) {
+            Ok(spec) => Self::parse(&spec).map(Some),
+            Err(_) => Ok(None),
+        }
+    }
+
+    /// Decide whether `site` fails now. Draws from the shared RNG only
+    /// when the site has a nonzero rate, so inert sites never perturb
+    /// the decision sequence of active ones.
+    pub fn fire(&self, site: FaultSite) -> bool {
+        let p = self.inner.probs[site.index()];
+        if p <= 0.0 {
+            return false;
+        }
+        let hit = p >= 1.0
+            || self.inner.rng.lock().expect("fault plan rng poisoned").f64() < p;
+        if hit {
+            self.inner.injected[site.index()].fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// True when any site has a nonzero rate.
+    pub fn is_active(&self) -> bool {
+        self.inner.probs.iter().any(|&p| p > 0.0)
+    }
+
+    /// Configured rate for `site` (post-clamp).
+    pub fn rate(&self, site: FaultSite) -> f64 {
+        self.inner.probs[site.index()]
+    }
+
+    /// Sleep applied when a read stall fires.
+    pub fn stall(&self) -> Duration {
+        self.inner.stall
+    }
+
+    /// How many times `site` has actually fired.
+    pub fn injected(&self, site: FaultSite) -> u64 {
+        self.inner.injected[site.index()].load(Ordering::Relaxed)
+    }
+
+    /// Wire summary for `/v1/healthz`: seed, stall and, per active
+    /// site, the configured rate and the injected-so-far count.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{obj, Json};
+        let sites: Vec<(&str, Json)> = FaultSite::ALL
+            .iter()
+            .filter(|s| self.rate(**s) > 0.0)
+            .map(|s| {
+                (
+                    s.name(),
+                    obj(vec![
+                        ("rate", self.rate(*s).into()),
+                        ("injected", (self.injected(*s) as f64).into()),
+                    ]),
+                )
+            })
+            .collect();
+        obj(vec![
+            ("seed", (self.inner.seed as f64).into()),
+            ("stall_ms", (self.inner.stall.as_millis() as f64).into()),
+            ("sites", obj(sites)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_decision_sequence() {
+        let a = FaultPlan::parse("seed=42,http_503=0.3").unwrap();
+        let b = FaultPlan::parse("seed=42,http_503=0.3").unwrap();
+        let seq_a: Vec<bool> = (0..4096).map(|_| a.fire(FaultSite::Http503Burst)).collect();
+        let seq_b: Vec<bool> = (0..4096).map(|_| b.fire(FaultSite::Http503Burst)).collect();
+        assert_eq!(seq_a, seq_b);
+        assert_eq!(
+            a.injected(FaultSite::Http503Burst),
+            b.injected(FaultSite::Http503Burst)
+        );
+        let hits = a.injected(FaultSite::Http503Burst) as f64 / 4096.0;
+        assert!((hits - 0.3).abs() < 0.05, "rate {hits} too far from 0.3");
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = FaultPlan::parse("seed=1,connect_refuse=0.5").unwrap();
+        let b = FaultPlan::parse("seed=2,connect_refuse=0.5").unwrap();
+        let seq_a: Vec<bool> = (0..512).map(|_| a.fire(FaultSite::ConnectRefuse)).collect();
+        let seq_b: Vec<bool> = (0..512).map(|_| b.fire(FaultSite::ConnectRefuse)).collect();
+        assert_ne!(seq_a, seq_b);
+    }
+
+    #[test]
+    fn zero_rate_sites_never_fire_and_never_draw() {
+        let with_inert = FaultPlan::parse("seed=9,http_503=0.4,connect_refuse=0").unwrap();
+        let without = FaultPlan::parse("seed=9,http_503=0.4").unwrap();
+        for _ in 0..256 {
+            assert!(!with_inert.fire(FaultSite::ConnectRefuse));
+            // Interleaving inert draws must not shift the active site's
+            // sequence.
+            assert_eq!(
+                with_inert.fire(FaultSite::Http503Burst),
+                without.fire(FaultSite::Http503Burst)
+            );
+        }
+    }
+
+    #[test]
+    fn rate_one_always_fires() {
+        let plan = FaultPlan::parse("store_write_fail=1").unwrap();
+        for _ in 0..32 {
+            assert!(plan.fire(FaultSite::StoreWriteFail));
+        }
+        assert_eq!(plan.injected(FaultSite::StoreWriteFail), 32);
+    }
+
+    #[test]
+    fn hostile_values_clamp_and_typos_reject() {
+        let plan =
+            FaultPlan::parse("seed=7,connect_refuse=99.5,http_503=-3,read_stall_ms=1e18")
+                .unwrap();
+        assert_eq!(plan.rate(FaultSite::ConnectRefuse), 1.0);
+        assert_eq!(plan.rate(FaultSite::Http503Burst), 0.0);
+        assert_eq!(plan.stall(), MAX_STALL);
+
+        assert!(FaultPlan::parse("bogus_site=0.5").is_err());
+        assert!(FaultPlan::parse("connect_refuse=lots").is_err());
+        assert!(FaultPlan::parse("connect_refuse").is_err());
+        assert!(FaultPlan::parse("seed=minus-one").is_err());
+        assert!(FaultPlan::parse("read_stall_ms=nan").is_err());
+    }
+
+    #[test]
+    fn empty_spec_is_inert() {
+        let plan = FaultPlan::parse("").unwrap();
+        assert!(!plan.is_active());
+        for site in FaultSite::ALL {
+            assert!(!plan.fire(site));
+        }
+    }
+
+    #[test]
+    fn clones_share_rng_and_counters() {
+        let a = FaultPlan::parse("seed=5,http_503=1").unwrap();
+        let b = a.clone();
+        assert!(a.fire(FaultSite::Http503Burst));
+        assert!(b.fire(FaultSite::Http503Burst));
+        assert_eq!(a.injected(FaultSite::Http503Burst), 2);
+        assert_eq!(b.injected(FaultSite::Http503Burst), 2);
+    }
+
+    #[test]
+    fn to_json_lists_only_active_sites() {
+        let plan = FaultPlan::parse("seed=3,store_write_fail=0.25").unwrap();
+        let j = plan.to_json();
+        assert_eq!(j.get("seed").and_then(|v| v.as_u64()), Some(3));
+        let sites = j.get("sites").expect("sites object");
+        assert!(sites.get("store_write_fail").is_some());
+        assert!(sites.get("connect_refuse").is_none());
+    }
+}

@@ -6,6 +6,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod faults;
 pub mod json;
 pub mod logging;
 pub mod pool;

@@ -321,3 +321,44 @@ fn onchip_design_with_many_kernels_still_runs() {
     let rep = sys.run_spec_sim_only(&spec).unwrap();
     assert_eq!(rep.pl_to_aie_channels, 0);
 }
+
+#[test]
+fn fault_plan_clamps_hostile_values_and_rejects_garbage() {
+    use aieblas::util::faults::{FaultPlan, FaultSite, MAX_STALL};
+
+    // probabilities clamp to [0, 1]; stall clamps to [0, MAX_STALL].
+    let plan = FaultPlan::parse(
+        "seed=1,connect_refuse=7.5,http_503=-3,read_stall=1,read_stall_ms=999999",
+    )
+    .unwrap();
+    assert_eq!(plan.rate(FaultSite::ConnectRefuse), 1.0);
+    assert_eq!(plan.rate(FaultSite::Http503Burst), 0.0);
+    assert!(plan.stall() <= MAX_STALL);
+
+    // typos and garbage are errors, not silently inert chaos plans.
+    for bad in [
+        "seed=notanumber",
+        "connect_refused=0.5", // typo'd site name
+        "http_503=nan",
+        "read_stall_ms=abc",
+        "=0.5",
+    ] {
+        assert!(FaultPlan::parse(bad).is_err(), "{bad:?} should be rejected");
+    }
+}
+
+#[test]
+fn http_config_clamps_hostile_probe_interval() {
+    use std::time::Duration;
+
+    use aieblas::http::HttpConfig;
+
+    let fast = HttpConfig { probe_interval: Duration::ZERO, ..Default::default() }.normalized();
+    assert!(fast.probe_interval >= Duration::from_millis(10), "zero would spin the probe loop");
+    let slow = HttpConfig {
+        probe_interval: Duration::from_secs(1 << 20),
+        ..Default::default()
+    }
+    .normalized();
+    assert!(slow.probe_interval <= Duration::from_secs(60), "a dead peer must be noticed");
+}

@@ -1,0 +1,308 @@
+//! Fleet fault-tolerance chaos suite (ISSUE 10, DESIGN.md §14): real TCP
+//! fleets with shards killed mid-load, plus deterministic fault injection.
+//!
+//! Coverage pinned here:
+//! * kill one shard of a 3-shard fleet under traffic — every request
+//!   still resolves 200 (failover serves the dead shard's keys locally
+//!   from the shared store), the receiver's breaker trips open, and
+//!   restarting the shard closes the breaker and resumes proxying with
+//!   a disk-warm cache;
+//! * a seeded `FaultPlan` injecting 503 bursts is survived by a
+//!   retrying client, and two identical runs inject *identically* (the
+//!   reproducibility contract that makes chaos failures debuggable);
+//! * an injected plan-store write failure degrades to memory-only
+//!   serving (counted as `store_fallbacks`), never a request failure.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use aieblas::arch::ArchConfig;
+use aieblas::blas::RoutineKind;
+use aieblas::http::client::{self, ClientConfig, RetryPolicy};
+use aieblas::http::{HealthConfig, HttpConfig, HttpServer, ShardRouter};
+use aieblas::pipeline::{Pipeline, PlanKey, PlanStore};
+use aieblas::runtime::CpuBackend;
+use aieblas::serve::{RoutineServer, ServeConfig};
+use aieblas::spec::{DataSource, Spec};
+use aieblas::util::faults::{FaultPlan, FaultSite};
+use aieblas::util::json::{obj, Json};
+
+fn store_dir(tag: &str) -> PathBuf {
+    static NEXT: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let n = NEXT.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    std::env::temp_dir().join(format!("aieblas-chaos-{tag}-{}-{n}", std::process::id()))
+}
+
+fn spec_of(size: usize) -> Spec {
+    Spec::single(RoutineKind::Axpy, "a", size, DataSource::Pl)
+}
+
+fn run_body(spec: &Spec) -> Json {
+    obj(vec![("spec", spec.to_json())])
+}
+
+fn cc() -> ClientConfig {
+    ClientConfig {
+        connect_timeout: Duration::from_secs(2),
+        io_timeout: Duration::from_secs(30),
+        ..Default::default()
+    }
+}
+
+/// Poll `f` until it returns true or `deadline` elapses.
+fn wait_for(what: &str, deadline: Duration, mut f: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !f() {
+        assert!(t0.elapsed() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// Breaker state of `peer` as the receiver at `addr` reports it.
+fn breaker_of(addr: &str, peer: usize) -> String {
+    let (s, health) = client::get(addr, "/v1/healthz", &cc()).expect("healthz");
+    assert_eq!(s, 200);
+    health
+        .path("shards.peers")
+        .and_then(Json::as_arr)
+        .and_then(|p| p.get(peer))
+        .and_then(|p| p.get("breaker"))
+        .and_then(Json::as_str)
+        .expect("peer breaker field")
+        .to_string()
+}
+
+/// One shard process: bind `peers[i]` with fast probe/breaker/retry
+/// tuning so the whole trip→recover cycle fits a test run.
+fn bind_shard(peers: &[String], i: usize, dir: &std::path::Path) -> HttpServer {
+    let router = ShardRouter::new(peers.to_vec(), i)
+        .unwrap()
+        .with_health(HealthConfig {
+            trip_threshold: 2,
+            cooldown: Duration::from_millis(200),
+        })
+        .with_retry(RetryPolicy {
+            max_attempts: 2,
+            base_backoff: Duration::from_millis(5),
+            max_backoff: Duration::from_millis(20),
+            budget: Duration::from_millis(200),
+        })
+        .with_client(ClientConfig {
+            connect_timeout: Duration::from_millis(500),
+            io_timeout: Duration::from_secs(5),
+            ..Default::default()
+        });
+    let pipeline = Pipeline::new(ArchConfig::vck5000()).with_disk_store(dir);
+    let server = Arc::new(RoutineServer::new(
+        Arc::new(pipeline),
+        Arc::new(CpuBackend),
+        ServeConfig::default(),
+    ));
+    let cfg = HttpConfig {
+        read_timeout: Duration::from_millis(500),
+        drain_timeout: Duration::from_secs(5),
+        probe_interval: Duration::from_millis(50),
+        ..Default::default()
+    };
+    HttpServer::bind(&peers[i], server, Some(router), cfg).expect("bind shard")
+}
+
+/// The §14 availability contract, end to end: kill one shard of three
+/// under traffic, observe zero client-visible failures, breaker trip,
+/// recovery on restart, and disk-warm serving by the restarted shard.
+#[test]
+fn killed_shard_fails_over_then_recovers_when_restarted() {
+    let dir = store_dir("failover");
+    // Reserve three ports up front so the full shard map is known before
+    // any server starts (std binds with SO_REUSEADDR, so the reserved
+    // ports rebind cleanly).
+    let ports: Vec<u16> = {
+        let listeners: Vec<std::net::TcpListener> = (0..3)
+            .map(|_| std::net::TcpListener::bind("127.0.0.1:0").expect("reserve port"))
+            .collect();
+        listeners.iter().map(|l| l.local_addr().unwrap().port()).collect()
+    };
+    let peers: Vec<String> = ports.iter().map(|p| format!("127.0.0.1:{p}")).collect();
+    let mut servers: Vec<Option<HttpServer>> =
+        (0..3).map(|i| Some(bind_shard(&peers, i, &dir))).collect();
+
+    // Find a spec owned by a non-zero shard; shard 0 is the receiver all
+    // client traffic lands on.
+    let router = ShardRouter::new(peers.clone(), 0).unwrap();
+    let (victim, spec) = (1..64)
+        .map(|i| spec_of(64 + 16 * i))
+        .find_map(|s| {
+            let shard = router.shard_of(&PlanKey::of(&s));
+            (shard != 0).then_some((shard, s))
+        })
+        .expect("64 distinct specs cannot all hash to shard 0");
+
+    // Warm path: the receiver proxies to the live owner.
+    let (s, b) = client::post_json(&peers[0], "/v1/run", &run_body(&spec), &cc()).unwrap();
+    assert_eq!(s, 200, "{}", b.to_compact());
+    assert_eq!(breaker_of(&peers[0], victim), "closed");
+
+    // Kill the owner (graceful shutdown still closes the listener; the
+    // next dial refuses, which is what the breaker counts).
+    servers[victim].take().unwrap().shutdown();
+
+    // Every request for the dead shard's key must still resolve 200 —
+    // first via the transport-failure fallback, then (breaker open) via
+    // straight local failover with no dial at all.
+    for round in 0..6 {
+        let (s, b) = client::post_json(&peers[0], "/v1/run", &run_body(&spec), &cc()).unwrap();
+        assert_eq!(s, 200, "round {round}: {}", b.to_compact());
+    }
+    // Probes every 50 ms push the breaker open even without traffic.
+    wait_for("breaker to trip open", Duration::from_secs(10), || {
+        breaker_of(&peers[0], victim) == "open"
+    });
+
+    let (s, stats) = client::get(&peers[0], "/v1/statsz", &cc()).unwrap();
+    assert_eq!(s, 200);
+    let failover = stats.path("metrics.failover_served").and_then(Json::as_u64).unwrap();
+    assert!(failover >= 1, "failover_served = {failover}");
+    assert!(stats.path("metrics.breaker_trips").and_then(Json::as_u64).unwrap() >= 1);
+
+    // Restart the shard on its old port: probes must close the breaker.
+    servers[victim] = Some(bind_shard(&peers, victim, &dir));
+    wait_for("breaker to close after restart", Duration::from_secs(10), || {
+        breaker_of(&peers[0], victim) == "closed"
+    });
+    let (_, stats) = client::get(&peers[0], "/v1/statsz", &cc()).unwrap();
+    assert!(stats.path("metrics.breaker_closes").and_then(Json::as_u64).unwrap() >= 1);
+
+    // Proxying resumes, and the restarted owner is disk-warm: the run
+    // response's cache counters come from the executing process, which
+    // must have lowered nothing.
+    let (s, b) = client::post_json(&peers[0], "/v1/run", &run_body(&spec), &cc()).unwrap();
+    assert_eq!(s, 200, "{}", b.to_compact());
+    assert_eq!(b.path("cache.misses").and_then(Json::as_u64), Some(0), "restart served cold");
+    assert!(b.path("cache.disk_hits").and_then(Json::as_u64).unwrap() >= 1);
+    let (_, victim_stats) = client::get(&peers[victim], "/v1/statsz", &cc()).unwrap();
+    assert!(
+        victim_stats.get("requests").and_then(Json::as_f64).unwrap() >= 1.0,
+        "restarted owner served the proxied request"
+    );
+
+    for srv in servers.into_iter().flatten() {
+        srv.shutdown();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Seeded server-side 503 bursts: a retrying client survives every one,
+/// and two identical rounds inject identical fault counts — the
+/// reproducibility contract a chaos seed exists for.
+#[test]
+fn injected_503_bursts_are_survived_and_reproducible() {
+    let round = || -> u64 {
+        let faults = FaultPlan::parse("seed=42,http_503=0.4").unwrap();
+        let pipeline = Pipeline::new(ArchConfig::vck5000());
+        let server = Arc::new(RoutineServer::new(
+            Arc::new(pipeline),
+            Arc::new(CpuBackend),
+            ServeConfig::default(),
+        ));
+        let cfg = HttpConfig {
+            read_timeout: Duration::from_millis(500),
+            drain_timeout: Duration::from_secs(5),
+            faults: Some(faults.clone()),
+            ..Default::default()
+        };
+        let srv = HttpServer::bind("127.0.0.1:0", server, None, cfg).expect("bind");
+        let addr = srv.local_addr().to_string();
+
+        let policy = RetryPolicy {
+            max_attempts: 16,
+            base_backoff: Duration::from_millis(1),
+            max_backoff: Duration::from_millis(5),
+            budget: Duration::from_secs(10),
+        };
+        let body = run_body(&spec_of(128)).to_compact().into_bytes();
+        for i in 0..20 {
+            let resp = client::request_with_retry(
+                &addr,
+                "POST",
+                "/v1/run",
+                Some(&body),
+                &[],
+                &cc(),
+                &policy,
+                true,
+            )
+            .unwrap_or_else(|e| panic!("request {i} not survived: {e}"));
+            assert_eq!(resp.status, 200, "request {i}");
+        }
+        // read the count before shutdown adds stray connections.
+        let injected = faults.injected(FaultSite::Http503Burst);
+        srv.shutdown();
+        injected
+    };
+
+    let a = round();
+    let b = round();
+    assert!(a > 0, "p=0.4 over ≥20 connections injected nothing");
+    assert_eq!(a, b, "same seed, same traffic ⇒ same injections");
+}
+
+/// An always-on 503 fault: the refusal is structured (ApiError body)
+/// and carries the `retry-after` back-off hint §14 promises clients.
+#[test]
+fn injected_503_carries_retry_after_and_structured_body() {
+    let pipeline = Pipeline::new(ArchConfig::vck5000());
+    let server = Arc::new(RoutineServer::new(
+        Arc::new(pipeline),
+        Arc::new(CpuBackend),
+        ServeConfig::default(),
+    ));
+    let cfg = HttpConfig {
+        read_timeout: Duration::from_millis(500),
+        drain_timeout: Duration::from_secs(5),
+        faults: Some(FaultPlan::parse("http_503=1").unwrap()),
+        ..Default::default()
+    };
+    let srv = HttpServer::bind("127.0.0.1:0", server, None, cfg).expect("bind");
+    let addr = srv.local_addr().to_string();
+
+    let resp = client::request(&addr, "GET", "/v1/healthz", None, &[], &cc()).unwrap();
+    assert_eq!(resp.status, 503);
+    assert_eq!(resp.header("retry-after"), Some("1"), "back-off hint missing");
+    let json = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+    assert_eq!(json.path("error.code").and_then(Json::as_str), Some("shed_draining"));
+    assert_eq!(json.path("error.retryable").and_then(Json::as_bool), Some(true));
+
+    srv.shutdown();
+}
+
+/// An injected plan-store write failure must degrade to memory-only
+/// serving: the lowering succeeds, the fallback is counted, and nothing
+/// reaches disk.
+#[test]
+fn store_write_fault_degrades_to_memory_only_serving() {
+    let dir = store_dir("storefault");
+    let store = PlanStore::open(&dir)
+        .with_faults(FaultPlan::parse("seed=7,store_write_fail=1").unwrap());
+    let pipeline = Pipeline::new(ArchConfig::vck5000()).with_store(store);
+    let spec = spec_of(256);
+
+    let plan = pipeline.lower(&spec).expect("lowering survives the injected write failure");
+    let stats = pipeline.cache().stats();
+    assert_eq!(stats.misses, 1);
+    assert_eq!(stats.disk_writes, 0, "injected failure persisted nothing");
+    assert!(stats.store_fallbacks >= 1, "fallback must be counted");
+
+    // warm from memory as usual …
+    let again = pipeline.lower(&spec).unwrap();
+    assert!(Arc::ptr_eq(&plan, &again), "second lookup is a memory hit");
+    assert!(pipeline.cache().stats().hits >= 1);
+
+    // … but a fresh process finds an empty store and re-lowers.
+    let fresh = Pipeline::new(ArchConfig::vck5000()).with_disk_store(&dir);
+    fresh.lower(&spec).unwrap();
+    let s = fresh.cache().stats();
+    assert_eq!((s.misses, s.disk_hits), (1, 0), "nothing was persisted to warm from");
+
+    std::fs::remove_dir_all(&dir).ok();
+}

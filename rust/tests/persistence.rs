@@ -346,3 +346,40 @@ fn store_survives_missing_directory() {
     assert_eq!(pipeline.store().unwrap().stats().entries, 1);
     let _ = std::fs::remove_dir_all(&dir);
 }
+
+#[test]
+fn stale_tmp_sweep_is_surfaced_in_cache_stats() {
+    // A crash between tmp-write and rename leaves a `.<hash>.<n>.tmp`
+    // orphan behind. Opening the store past the grace window sweeps it,
+    // and the pipeline surfaces the count as `CacheStats.tmp_swept`.
+    use aieblas::pipeline::store::PlanStore;
+    use std::time::Duration;
+
+    let dir = store_dir("tmpsweep");
+    std::fs::create_dir_all(&dir).unwrap();
+    let orphan = dir.join(".00000000deadbeef.1.tmp");
+    std::fs::write(&orphan, b"{\"partial\":").unwrap();
+
+    // Default grace (60 s): a freshly written tmp is an in-flight write
+    // from a live peer, not a crash leftover — it must survive the open.
+    let fresh = Pipeline::new(ArchConfig::vck5000()).with_disk_store(&dir);
+    assert_eq!(fresh.cache().stats().tmp_swept, 0);
+    assert!(orphan.exists(), "fresh tmp must survive default-grace open");
+
+    // Zero grace: the orphan is stale by definition and gets swept.
+    let swept = Pipeline::new(ArchConfig::vck5000())
+        .with_store(PlanStore::open_with_grace(&dir, Duration::ZERO));
+    assert_eq!(swept.cache().stats().tmp_swept, 1);
+    assert!(!orphan.exists(), "stale tmp must be removed at open");
+
+    // The sweep never touches real entries: lower, drop, re-open.
+    let spec = Spec::single(RoutineKind::Axpy, "sweep", 512, DataSource::Pl);
+    swept.lower(&spec).unwrap();
+    drop(swept);
+    let reopened = Pipeline::new(ArchConfig::vck5000())
+        .with_store(PlanStore::open_with_grace(&dir, Duration::ZERO));
+    reopened.lower(&spec).unwrap();
+    let s = reopened.cache().stats();
+    assert_eq!((s.tmp_swept, s.disk_hits, s.misses), (0, 1, 0));
+    let _ = std::fs::remove_dir_all(&dir);
+}

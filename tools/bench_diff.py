@@ -43,8 +43,10 @@ def load(path):
 # Fields timing pinned-old engine configurations: informational context
 # for the speedup columns, never gated. ("untuned_" covers the autotuner
 # bench's no-search baseline; "shed_" covers the serve_stress admission
-# counters, which scale with offered load rather than engine speed.)
-BASELINE_FIELD_PREFIXES = ("pr2_", "naive_", "untuned_", "shed_")
+# counters, which scale with offered load rather than engine speed;
+# "degraded_" covers the fleet bench's one-shard-down phase, whose
+# latency includes breaker transients rather than engine speed.)
+BASELINE_FIELD_PREFIXES = ("pr2_", "naive_", "untuned_", "shed_", "degraded_")
 
 
 def median_fields(case):

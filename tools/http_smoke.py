@@ -16,6 +16,11 @@ Drives the real `aieblas serve` binary over loopback TCP, stdlib only:
    succeed, and each shard's `/v1/statsz` request count must match the
    routing rule `shard = fnv1a64(cache_key) % len(peers)` (replicated
    below) — proving wrong-shard requests were proxied to their owner.
+4. **Failover.** The same fleet shape, then SIGKILL one shard: the
+   survivor must answer the dead shard's keys `200` by serving them
+   locally from the shared store (`metrics.failover_served >= 1`), and
+   its health probes must trip the victim's circuit breaker `open`
+   (DESIGN.md §14).
 
 Usage:
   python3 tools/http_smoke.py --binary target/release/aieblas
@@ -30,6 +35,7 @@ import subprocess
 import sys
 import tempfile
 import threading
+import time
 import urllib.error
 import urllib.request
 
@@ -237,6 +243,78 @@ def phase_shards(binary, store):
             srv.kill()
 
 
+def phase_failover(binary, store):
+    print("== phase 4: kill one shard, breaker-gated local failover ==")
+    ports = free_ports(2)
+    peers = ["127.0.0.1:%d" % p for p in ports]
+    peer_flag = ",".join(peers)
+
+    # Specs owned by shard 1 — the shard we are about to kill — so the
+    # survivor cannot answer them without failing over.
+    victim_specs, size = [], 96
+    while len(victim_specs) < 2:
+        name = "kill%d" % size
+        if shard_of(name, size, 2) == 1:
+            victim_specs.append((name, size))
+        size += 16
+        if size > 96 + 64 * 16:
+            raise AssertionError("64 distinct specs all hashed to shard 0")
+
+    servers = []
+    try:
+        for i in range(2):
+            servers.append(
+                Server(
+                    binary,
+                    store,
+                    listen=peers[i],
+                    extra=[
+                        "--peers", peer_flag,
+                        "--shard-index", str(i),
+                        "--probe-interval-ms", "100",
+                    ],
+                )
+            )
+        a = servers[0].addr
+        # Warm the victim's keys through the fleet (proxied to shard 1),
+        # which also writes the plans through to the shared store.
+        for name, size in victim_specs:
+            status, _ = http(a, "POST", "/v1/run", body=run_body(name, size))
+            check(status == 200, "warm %s via its owner is 200" % name)
+
+        # SIGKILL, not drain: the survivor must *discover* the outage.
+        servers[1].kill()
+        print("  ok: shard 1 killed (no drain)")
+        for name, size in victim_specs:
+            status, body = http(a, "POST", "/v1/run", body=run_body(name, size))
+            check(status == 200, "dead shard's key %s still answers 200" % name)
+
+        status, stats = http(a, "GET", "/v1/statsz")
+        check(status == 200, "survivor statsz is 200")
+        check(
+            int(stats["metrics"]["failover_served"]) >= 1,
+            "survivor counted failover_served",
+        )
+
+        deadline = time.time() + 15
+        while True:
+            status, health = http(a, "GET", "/v1/healthz")
+            breaker = health["shards"]["peers"][1]["breaker"]
+            if breaker == "open":
+                break
+            if time.time() > deadline:
+                raise AssertionError(
+                    "victim breaker never opened (last: %r)" % breaker
+                )
+            time.sleep(0.2)
+        print("  ok: probes tripped the victim's breaker open")
+
+        servers[0].drain()
+    finally:
+        for srv in servers:
+            srv.kill()
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument(
@@ -248,13 +326,16 @@ def main():
 
     warm_store = tempfile.mkdtemp(prefix="aieblas-http-smoke-warm-")
     shard_store = tempfile.mkdtemp(prefix="aieblas-http-smoke-shard-")
+    failover_store = tempfile.mkdtemp(prefix="aieblas-http-smoke-failover-")
     try:
         phase_cold(args.binary, warm_store)
         phase_warm(args.binary, warm_store)
         phase_shards(args.binary, shard_store)
+        phase_failover(args.binary, failover_store)
     finally:
         shutil.rmtree(warm_store, ignore_errors=True)
         shutil.rmtree(shard_store, ignore_errors=True)
+        shutil.rmtree(failover_store, ignore_errors=True)
     print("http smoke: all phases passed")
 
 
